@@ -1,0 +1,62 @@
+//! Fault-tolerance sweep (the Fig-5 scenario as a standalone tool).
+//!
+//! Trains the §II ternary CNN on SynthDigits via PJRT, freezes it into
+//! the gate-level SC simulator and the binary baseline, and sweeps the
+//! bit-error rate, printing accuracy-loss curves for both designs and
+//! the average loss reduction (the paper reports ~70%).
+//!
+//! ```bash
+//! cargo run --release --example fault_sweep [-- steps=400 images=100]
+//! ```
+
+use scnn::data::SynthDigits;
+use scnn::fault::ber_sweep;
+use scnn::nn::model::ModelCfg;
+use scnn::nn::quant::QuantConfig;
+use scnn::nn::sc_exec::Prepared;
+use scnn::runtime::{trainer::Knobs, Runtime, Trainer};
+
+fn arg(name: &str, default: usize) -> usize {
+    std::env::args()
+        .find_map(|a| a.strip_prefix(&format!("{name}=")).and_then(|s| s.parse().ok()))
+        .unwrap_or(default)
+}
+
+fn main() -> scnn::Result<()> {
+    let steps = arg("steps", 400);
+    let images = arg("images", 100);
+    let data = SynthDigits::new();
+    let rt = Runtime::new("artifacts")?;
+    let knobs = Knobs::quantized(2).with_res_bsl(None);
+    let mut tr = Trainer::new(&rt, "tnn")?;
+    println!("training tnn for {steps} steps...");
+    tr.train_qat(&data, steps / 2, steps / 2, 0.1, knobs, |s, l| {
+        if s % 100 == 0 {
+            println!("  step {s:>4} loss {l:.3}");
+        }
+    })?;
+    let soft = tr.accuracy(&data, 512, knobs, false)?;
+    println!("soft accuracy {soft:.4}");
+
+    let prep = Prepared::new(
+        &ModelCfg::tnn(),
+        &tr.to_model_params(),
+        QuantConfig { act_bsl: Some(2), weight_ternary: true, residual_bsl: None },
+    );
+    let bers = [1e-5, 1e-4, 3e-4, 1e-3, 3e-3, 1e-2, 3e-2];
+    let sweep = ber_sweep(&prep, &data, &bers, images, 2, 7);
+    println!("\nSC-simulator soft accuracy {:.4}", sweep.soft_accuracy);
+    println!("{:<10} {:>10} {:>10} {:>11} {:>11}", "BER", "SC acc", "bin acc", "SC loss", "bin loss");
+    for p in &sweep.points {
+        println!(
+            "{:<10.0e} {:>10.4} {:>10.4} {:>11.4} {:>11.4}",
+            p.ber, p.acc_sc, p.acc_binary, p.loss_sc, p.loss_binary
+        );
+    }
+    println!(
+        "\naverage accuracy-loss reduction (SC vs binary): {:.0}%  (paper: ~70%)",
+        sweep.avg_loss_reduction() * 100.0
+    );
+    println!("fault_sweep OK");
+    Ok(())
+}

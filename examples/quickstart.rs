@@ -1,0 +1,89 @@
+//! Quickstart: the paper's datapath on one dot-product, end to end.
+//!
+//! Encodes ternary activations/weights as thermometer codes, multiplies
+//! with the 5-gate cell (Fig 3a), accumulates through a gate-level
+//! bitonic sorting network (Fig 3b), and applies a BN-fused ReLU via
+//! the selective interconnect — then checks the result against plain
+//! integer arithmetic.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use scnn::circuits::multiplier::TernaryMultiplier;
+use scnn::circuits::si::{ActivationFn, SelectiveInterconnect};
+use scnn::circuits::Bsn;
+use scnn::coding::{Ternary, ThermCode};
+
+fn main() {
+    // A toy 8-wide accumulation: activations and ternary weights.
+    let acts: [i64; 8] = [1, -1, 0, 1, 1, -1, 1, 0];
+    let weights = [
+        Ternary::Pos,
+        Ternary::Neg,
+        Ternary::Pos,
+        Ternary::Pos,
+        Ternary::Neg,
+        Ternary::Neg,
+        Ternary::Pos,
+        Ternary::Zero,
+    ];
+
+    println!("== 1. encode (thermometer, BSL 2 — Table II) ==");
+    let codes: Vec<ThermCode> = acts.iter().map(|&a| ThermCode::encode(a, 2)).collect();
+    for (a, c) in acts.iter().zip(&codes) {
+        println!("  {a:>2}  ->  {c}");
+    }
+
+    println!("\n== 2. multiply (5-gate ternary cells, Fig 3a) ==");
+    let products: Vec<ThermCode> = codes
+        .iter()
+        .zip(&weights)
+        .map(|(c, &w)| TernaryMultiplier::mult_therm(c, w))
+        .collect();
+    for ((c, w), p) in codes.iter().zip(&weights).zip(&products) {
+        println!("  {c} x {w:>5?} = {p}  (q={})", p.decode());
+    }
+
+    println!("\n== 3. accumulate (gate-level bitonic sorting network, Fig 3b) ==");
+    let bsn = Bsn::new(16);
+    let concat = Bsn::concat(&products);
+    let sorted = bsn.sort_gate_level(&concat);
+    println!("  concat: {concat}");
+    println!("  sorted: {sorted}");
+    let acc = ThermCode::from_bits(sorted.clone());
+    let expect: i64 = acts.iter().zip(&weights).map(|(&a, w)| a * w.to_i64()).sum();
+    println!("  accumulated q = {} (integer check: {expect})", acc.decode());
+    assert_eq!(acc.decode(), expect);
+
+    println!("\n== 4. activate (BN-fused ReLU via selective interconnect, Eq 1) ==");
+    let act = ActivationFn::BnRelu { gamma: 1.0, beta: 1.0, ratio: 1.0 };
+    let si = SelectiveInterconnect::for_activation(&act, 16, 8);
+    let out = si.apply_bits(&sorted);
+    let out_code = ThermCode::from_bits(out);
+    println!(
+        "  SI taps {:?}",
+        si.taps().iter().take(4).collect::<Vec<_>>()
+    );
+    println!("  output code: {out_code} -> q = {}", out_code.decode());
+    let ideal = if expect as f64 >= 1.0 { expect - 1 } else { 0 };
+    assert_eq!(out_code.decode(), ideal.clamp(-4, 4));
+
+    println!("\n== 5. hardware cost (28-nm calibrated model) ==");
+    let cost = bsn.cost();
+    println!(
+        "  16-bit BSN: {} comparators, {:.2} um2, {:.3} ns, ADP {:.2} um2*ns",
+        bsn.comparator_count(),
+        cost.area_um2,
+        cost.delay_ns,
+        cost.adp()
+    );
+    let big = Bsn::new(9216);
+    let bc = big.cost();
+    println!(
+        "  3x3x512-conv BSN (9216b): {:.3e} um2, {:.2} ns  (Table V baseline)",
+        bc.area_um2, bc.delay_ns
+    );
+
+    println!("\nquickstart OK");
+}

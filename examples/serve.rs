@@ -1,0 +1,77 @@
+//! Serving demo: the L3 coordinator batching concurrent requests into
+//! the PJRT serving path (integer codes through the Pallas kernel).
+//!
+//! Spawns a short warm-up training run, starts the coordinator, fires
+//! requests from several client threads, and reports throughput,
+//! latency percentiles and batch occupancy.
+//!
+//! ```bash
+//! cargo run --release --example serve [-- requests=2048 clients=8]
+//! ```
+
+use scnn::coordinator::{Coordinator, ServeConfig};
+use scnn::data::{Dataset, Split, SynthCifar};
+use scnn::runtime::{trainer::Knobs, Runtime, Trainer};
+
+fn arg(name: &str, default: usize) -> usize {
+    std::env::args()
+        .find_map(|a| a.strip_prefix(&format!("{name}=")).and_then(|s| s.parse().ok()))
+        .unwrap_or(default)
+}
+
+fn main() -> scnn::Result<()> {
+    let requests = arg("requests", 2048);
+    let clients = arg("clients", 8);
+    let warmup_steps = arg("warmup", 100);
+    let data = SynthCifar::new(10);
+    let knobs = Knobs::quantized(2).with_res_bsl(Some(16));
+
+    // Warm-up training so the served model is non-trivial.
+    let mut cfg = ServeConfig::new("artifacts", "scnet10");
+    cfg.knobs = knobs;
+    if warmup_steps > 0 {
+        println!("warm-up: training {warmup_steps} steps...");
+        let rt = Runtime::new("artifacts")?;
+        let mut tr = Trainer::new(&rt, "scnet10")?;
+        tr.train_qat(&data, warmup_steps / 2, warmup_steps / 2, 0.05, knobs, |_, _| {})?;
+        cfg.params = Some(tr.params().to_vec());
+    }
+
+    let coord = Coordinator::start(cfg)?;
+    println!("coordinator up; {clients} clients x {} reqs", requests / clients);
+    let t0 = std::time::Instant::now();
+    let mut handles = Vec::new();
+    for t in 0..clients {
+        let client = coord.client();
+        let n = requests / clients;
+        handles.push(std::thread::spawn(move || -> scnn::Result<usize> {
+            let data = SynthCifar::new(10);
+            let mut hits = 0;
+            for i in 0..n {
+                let (x, y) = data.sample(Split::Test, t * 1_000_000 + i);
+                if client.classify(x.into_vec())? == y {
+                    hits += 1;
+                }
+            }
+            Ok(hits)
+        }));
+    }
+    let mut hits = 0;
+    for h in handles {
+        hits += h.join().unwrap()?;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let m = coord.shutdown();
+    let served = (requests / clients) * clients;
+    println!(
+        "served {served} requests in {wall:.2}s -> {:.0} req/s (accuracy {:.3})",
+        served as f64 / wall,
+        hits as f64 / served as f64
+    );
+    println!(
+        "batches {}  occupancy {:.2}  latency p50 {:?}  p99 {:?}  mean {:?}",
+        m.batches, m.occupancy, m.p50, m.p99, m.mean
+    );
+    println!("serve OK");
+    Ok(())
+}

@@ -1,0 +1,93 @@
+//! End-to-end driver: proves all three layers compose.
+//!
+//! 1. Rust loads the AOT-exported `train_step` HLO (L2 JAX model with
+//!    the L1 Pallas kernel inside) and trains the SC-friendly network
+//!    on SynthCIFAR for several hundred steps via PJRT, logging the
+//!    loss curve — Python never runs.
+//! 2. The trained parameters are evaluated on the serving path (integer
+//!    codes through the Pallas kernel), and
+//! 3. frozen into the **bit-exact SC circuit simulator** (gate-level
+//!    multipliers/BSN/SI semantics) and the binary baseline executor,
+//!    whose fault-free logits must agree exactly.
+//!
+//! ```bash
+//! cargo run --release --example train_e2e [-- steps=300]
+//! ```
+//!
+//! Results are recorded in EXPERIMENTS.md §End-to-end.
+
+use scnn::data::{Dataset, Split, SynthCifar};
+use scnn::nn::binary_exec::BinaryExecutor;
+use scnn::nn::model::ModelCfg;
+use scnn::nn::quant::QuantConfig;
+use scnn::nn::sc_exec::{Prepared, ScExecutor};
+use scnn::runtime::{trainer::Knobs, Runtime, Trainer};
+
+fn main() -> scnn::Result<()> {
+    let steps: usize = std::env::args()
+        .find_map(|a| a.strip_prefix("steps=").and_then(|s| s.parse().ok()))
+        .unwrap_or(300);
+    let data = SynthCifar::new(10);
+    let rt = Runtime::new("artifacts")?;
+    println!("PJRT platform: {}", rt.platform());
+
+    let knobs = Knobs::quantized(2).with_res_bsl(Some(16)); // W2-A2-R16
+    let mut tr = Trainer::new(&rt, "scnet10")?;
+    println!(
+        "training scnet10 (W2-A2-R16): {} params, batch {}, {steps} steps",
+        tr.meta().total_elems(),
+        tr.meta().batch
+    );
+    let t0 = std::time::Instant::now();
+    // Two-phase QAT: float warm-up, activation-scale calibration, then
+    // quantized fine-tuning (see Trainer::train_qat).
+    let losses = tr.train_qat(&data, steps / 2, steps / 2, 0.05, knobs, |s, loss| {
+        if s % 25 == 0 {
+            println!("  step {s:>5}  loss {loss:.4}");
+        }
+    })?;
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "loss {:.4} -> {:.4} in {dt:.1}s ({:.1} steps/s)",
+        losses.first().unwrap(),
+        losses.last().unwrap(),
+        steps as f64 / dt
+    );
+    assert!(
+        losses.last().unwrap() < losses.first().unwrap(),
+        "training must reduce the loss"
+    );
+
+    // Serving path (Pallas kernel) vs fake-quant path.
+    let acc_fake = tr.accuracy(&data, 512, knobs, false)?;
+    let acc_serving = tr.accuracy(&data, 512, knobs, true)?;
+    println!("test accuracy: fake-quant {acc_fake:.4}, serving/Pallas {acc_serving:.4}");
+
+    // Freeze into the hardware simulators.
+    let params = tr.to_model_params();
+    let cfg = ModelCfg::scnet(10);
+    let prep = Prepared::new(&cfg, &params, QuantConfig::w2a2r16());
+    let sc = ScExecutor::new(prep.clone());
+    let bin = BinaryExecutor::new(prep);
+    let (images, labels) = data.batch(Split::Test, 0, 128);
+    let t1 = std::time::Instant::now();
+    let acc_sc = sc.accuracy(&images, &labels);
+    let sim_dt = t1.elapsed().as_secs_f64();
+    let acc_bin = bin.accuracy(&images, &labels);
+    println!(
+        "bit-exact SC simulator accuracy {acc_sc:.4} ({:.1} img/s); binary executor {acc_bin:.4}",
+        128.0 / sim_dt
+    );
+    // Fault-free, the SC bitstream machinery and the binary integer
+    // datapath compute the same network.
+    for i in 0..16 {
+        assert_eq!(
+            sc.forward(&images[i]),
+            bin.forward(&images[i]),
+            "SC and binary executors must agree fault-free (image {i})"
+        );
+    }
+    println!("SC == binary on 16/16 spot-checked images");
+    println!("train_e2e OK");
+    Ok(())
+}

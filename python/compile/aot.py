@@ -1,0 +1,129 @@
+"""AOT export: lower the L2 model to HLO text for the Rust runtime.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids which the xla
+crate's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text
+parser reassigns ids, so text round-trips cleanly. See
+/opt/xla-example/gen_hlo.py.
+
+Artifacts written to ``artifacts/`` (``make artifacts``):
+
+    <model>_train.hlo.txt      flat SGD+momentum step
+    <model>_eval.hlo.txt       serving path (Pallas kernel inside)
+    <model>_evalq.hlo.txt      fake-quant eval path (FP ablations)
+    <model>_calib.hlo.txt      activation-statistics pass (QAT re-seating)
+    <model>_meta.txt           flat input/output metadata + init values
+
+Meta format (line-oriented, parsed by rust/src/runtime/meta.rs):
+
+    model <name> classes <k> input <c> <h> <w> batch <b> params <n>
+    P <name> <dtype> <d0,d1,...>        one line per parameter
+    IN <role> <dtype> <dims>            extra inputs in order
+    INIT <name> <base64-less hex f32 little-endian...>
+"""
+
+import argparse
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import train as T
+
+# Fixed batch size baked into the exported HLO (the Rust batcher pads).
+BATCH = 32
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text (see module docs)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def export_model(cfg: M.ModelCfg, outdir: str, seed: int = 0) -> None:
+    """Export train/eval HLOs and metadata for one model config."""
+    names = cfg.param_names()
+    params = M.init_params(cfg, jax.random.PRNGKey(seed))
+    pspecs = [spec(params[n].shape) for n in names]
+    c, h, w = cfg.input
+    x_spec = spec((BATCH, c, h, w))
+    y_spec = spec((BATCH,), jnp.int32)
+    scalar = spec(())
+    knob_specs = [scalar] * 6
+
+    train_args = pspecs + pspecs + [x_spec, y_spec, scalar] + knob_specs
+    eval_args = pspecs + [x_spec] + knob_specs
+
+    train_fn = T.make_train_step(cfg)
+    eval_fn = T.make_eval_step(cfg)
+    evalq_fn = T.make_eval_train_path(cfg)
+    calib_fn = T.make_calib(cfg)
+    calib_args = pspecs + [x_spec]
+
+    jobs = [
+        (f"{cfg.name}_train", train_fn, train_args),
+        (f"{cfg.name}_eval", eval_fn, eval_args),
+        (f"{cfg.name}_evalq", evalq_fn, eval_args),
+        (f"{cfg.name}_calib", calib_fn, calib_args),
+    ]
+    for name, fn, args in jobs:
+        lowered = jax.jit(fn, keep_unused=True).lower(*args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(outdir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    meta_path = os.path.join(outdir, f"{cfg.name}_meta.txt")
+    with open(meta_path, "w") as f:
+        f.write(
+            f"model {cfg.name} classes {cfg.num_classes} "
+            f"input {c} {h} {w} batch {BATCH} params {len(names)}\n"
+        )
+        for n in names:
+            dims = ",".join(str(d) for d in params[n].shape)
+            f.write(f"P {n} f32 {dims}\n")
+        # Initial parameter values (hex-encoded f32 LE) so the Rust
+        # trainer starts from the same init as python.
+        for n in names:
+            flat = jnp.ravel(params[n]).astype(jnp.float32)
+            hexs = bytes(flat.tobytes()).hex()
+            f.write(f"INIT {n} {hexs}\n")
+    print(f"wrote {meta_path}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument(
+        "--models",
+        default="tnn,scnet10,scnet20",
+        help="comma-separated model list",
+    )
+    args = ap.parse_args()
+    outdir = args.out
+    os.makedirs(outdir, exist_ok=True)
+    for m in args.models.split(","):
+        m = m.strip()
+        if m == "tnn":
+            cfg = M.tnn()
+        elif m.startswith("scnet"):
+            cfg = M.scnet(int(m[len("scnet"):] or "10"))
+        else:
+            print(f"unknown model {m}", file=sys.stderr)
+            sys.exit(1)
+        export_model(cfg, outdir)
+
+
+if __name__ == "__main__":
+    main()

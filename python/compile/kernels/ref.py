@@ -1,0 +1,78 @@
+"""Pure-jnp oracle for the L1 Pallas kernel (the correctness signal).
+
+``sc_qmatmul_ref`` is the reference semantics of the SC datapath's
+hot-spot: a quantized matmul (im2col'd conv) fused with the paper's
+BN-ReLU activation (Eq 1), high-precision residual accumulation
+(§III.C) and thermometer re-quantization — everything the BSN + SI
+implement in hardware, expressed at tensor level.
+
+The Pallas kernel in ``sc_matmul.py`` must match this function exactly
+(pytest + hypothesis sweep shapes and parameters).
+"""
+
+import jax.numpy as jnp
+
+
+def fused_activation(acc, gamma, beta, alpha_out, out_half):
+    """BN-ReLU (paper Eq 1) + thermometer re-quantization.
+
+    ``acc`` is the real-valued accumulation; returns integer-valued
+    quantized outputs in ``[-out_half, out_half]`` (stored as f32, as
+    the datapath's codes are).
+    """
+    y = jnp.where(acc >= beta, gamma * (acc - beta), 0.0)
+    q = jnp.clip(jnp.round(y / alpha_out), -out_half, out_half)
+    return q
+
+
+def sc_qmatmul_ref(
+    x,
+    w,
+    gamma,
+    beta,
+    residual,
+    alpha_acc,
+    alpha_res,
+    alpha_out,
+    out_half,
+):
+    """Reference SC block matmul.
+
+    Args:
+      x: ``[P, K]`` quantized activations (integer-valued f32).
+      w: ``[K, O]`` ternary weights (values in {-1, 0, 1}, f32).
+      gamma, beta: ``[O]`` BN parameters (Eq 1).
+      residual: ``[P, O]`` quantized residual codes (integer-valued
+        f32) or zeros when the layer has no residual input.
+      alpha_acc: scalar — scale of one accumulated product
+        (``alpha_in * alpha_w``).
+      alpha_res: scalar — scale of the residual codes.
+      alpha_out: scalar — output quantization scale.
+      out_half: scalar — output clip range (``BSL/2``).
+
+    Returns:
+      ``[P, O]`` integer-valued quantized outputs.
+    """
+    acc = x @ w  # exact integer accumulation (the BSN)
+    real = acc * alpha_acc + residual * alpha_res
+    return fused_activation(real, gamma[None, :], beta[None, :], alpha_out, out_half)
+
+
+def im2col_ref(x, k, stride, pad):
+    """im2col for CHW input: returns ``[OH*OW, C*K*K]`` patches.
+
+    Column ordering matches the Rust substrate (`nn/layers.rs`):
+    channel-major, then kernel row, then kernel column.
+    """
+    c, h, w = x.shape
+    xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad)))
+    oh = (h + 2 * pad - k) // stride + 1
+    ow = (w + 2 * pad - k) // stride + 1
+    cols = []
+    for ky in range(k):
+        for kx in range(k):
+            patch = xp[:, ky : ky + oh * stride : stride, kx : kx + ow * stride : stride]
+            cols.append(patch.reshape(c, oh * ow))
+    # [k*k, c, P] -> [P, c, k*k]: channel-major then (ky, kx).
+    stacked = jnp.stack(cols, axis=0)
+    return jnp.transpose(stacked, (2, 1, 0)).reshape(oh * ow, c * k * k), oh, ow

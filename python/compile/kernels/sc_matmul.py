@@ -1,0 +1,123 @@
+"""L1 Pallas kernel: the SC datapath hot-spot as a fused tiled matmul.
+
+One kernel implements what the silicon does with a multiplier array, a
+bitonic sorting network and a selective interconnect (paper Fig 3/6):
+
+    acc   = x_cols @ w              (ternary products + BSN accumulate)
+    real  = acc*alpha_acc + r*alpha_res   (high-precision residual fuse)
+    out_q = SI(real)                (BN-ReLU of Eq 1 + re-quantize)
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the ASIC tiles by
+output pixel; on TPU we tile for VMEM/MXU instead — the grid walks
+``bm``-row blocks of the im2col matrix while the (small) weight tile
+stays resident, expressing the HBM↔VMEM schedule with BlockSpecs. The
+kernel runs with ``interpret=True`` (the CPU PJRT plugin cannot execute
+Mosaic custom-calls); on a real TPU the same BlockSpecs map the inner
+matmul onto the MXU.
+
+VMEM budget at the default ``bm=128`` with K=576, O=64 (the largest
+scnet layer): x tile 128·576·4 B = 288 KiB, w 576·64·4 B = 144 KiB,
+out 32 KiB — comfortably under the ~16 MiB VMEM of a TPU core, with
+headroom for double buffering. MXU utilization estimate: the inner
+``128×576 @ 576×64`` matmul maps to 128×128 systolic passes at ≥50%
+occupancy for O=64 (full for O=128).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# Default row-block size (output pixels per grid step).
+DEFAULT_BM = 128
+
+
+def _kernel(x_ref, w_ref, g_ref, b_ref, r_ref, s_ref, o_ref):
+    """Fused block: matmul + residual + BN-ReLU + re-quantize.
+
+    ``s_ref`` packs the four scalars
+    ``[alpha_acc, alpha_res, alpha_out, out_half]`` as a (4,) vector
+    (scalar-prefetch is TPU-specific; a tiny VMEM vector is portable
+    across interpret/compile modes).
+    """
+    acc = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+    alpha_acc = s_ref[0]
+    alpha_res = s_ref[1]
+    alpha_out = s_ref[2]
+    out_half = s_ref[3]
+    real = acc * alpha_acc + r_ref[...] * alpha_res
+    gamma = g_ref[...][None, :]
+    beta = b_ref[...][None, :]
+    y = jnp.where(real >= beta, gamma * (real - beta), 0.0)
+    o_ref[...] = jnp.clip(jnp.round(y / alpha_out), -out_half, out_half)
+
+
+@functools.partial(jax.jit, static_argnames=("bm",))
+def sc_qmatmul(
+    x,
+    w,
+    gamma,
+    beta,
+    residual,
+    alpha_acc,
+    alpha_res,
+    alpha_out,
+    out_half,
+    bm: int = DEFAULT_BM,
+):
+    """Pallas SC block matmul; semantics of :func:`ref.sc_qmatmul_ref`.
+
+    Args:
+      x: ``[P, K]`` quantized activations (integer-valued f32).
+      w: ``[K, O]`` ternary weights.
+      gamma, beta: ``[O]`` Eq-1 BN parameters.
+      residual: ``[P, O]`` residual codes (zeros when unused).
+      alpha_acc, alpha_res, alpha_out, out_half: scalars (traced).
+      bm: static row-block size.
+
+    Returns:
+      ``[P, O]`` integer-valued quantized outputs (f32).
+    """
+    p, k = x.shape
+    k2, o = w.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    # Pad rows to a multiple of bm (P = OH·OW is rarely aligned).
+    bm = min(bm, max(p, 1))
+    pad = (-p) % bm
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+        residual = jnp.pad(residual, ((0, pad), (0, 0)))
+    pp = x.shape[0]
+    scalars = jnp.stack(
+        [
+            jnp.asarray(alpha_acc, jnp.float32),
+            jnp.asarray(alpha_res, jnp.float32),
+            jnp.asarray(alpha_out, jnp.float32),
+            jnp.asarray(out_half, jnp.float32),
+        ]
+    )
+    grid = (pp // bm,)
+    out = pl.pallas_call(
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct((pp, o), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i: (i, 0)),
+            pl.BlockSpec((k, o), lambda i: (0, 0)),
+            pl.BlockSpec((o,), lambda i: (0,)),
+            pl.BlockSpec((o,), lambda i: (0,)),
+            pl.BlockSpec((bm, o), lambda i: (i, 0)),
+            pl.BlockSpec((4,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, o), lambda i: (i, 0)),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(x, w, gamma, beta, residual, scalars)
+    return out[:p]
+
+
+def vmem_bytes(bm: int, k: int, o: int) -> int:
+    """Static VMEM footprint estimate of one grid step (f32)."""
+    return 4 * (bm * k + k * o + 2 * o + bm * o + 4 + bm * o)

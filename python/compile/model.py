@@ -1,0 +1,301 @@
+"""L2: the SC-friendly model (paper §III) in JAX.
+
+Mirrors the Rust model substrate (`rust/src/nn/model.rs`) exactly:
+
+* same topologies (``tnn``, ``scnet``), same parameter names and order;
+* same quantization rules — ternary weights at ``alpha_w = mean|w|``,
+  thermometer activations at trained per-layer ``alpha_out``, and the
+  **high-precision residual tap** (BSL 16) of Fig 6b;
+* the BN-ReLU fusion of Eq 1 (``BN(x) = gamma·(x - beta)``).
+
+Two forward paths:
+
+* :func:`forward_train` — float fake-quant (LSQ-style STE) for QAT; all
+  quantization knobs are *traced scalars*, so one exported HLO serves
+  every ablation row (Table III, Fig 2, Fig 8, Table IV).
+* :func:`forward_eval` — the serving path: integer codes end-to-end,
+  with every conv running through the L1 Pallas kernel
+  (`kernels/sc_matmul.py`).
+"""
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels import ref as kref
+from .kernels.sc_matmul import sc_qmatmul
+
+# Residual tap BSL (paper §III: 16b residual).
+RES_BSL = 16
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvCfg:
+    """One conv layer (mirror of Rust `LayerCfg::Conv`)."""
+
+    cin: int
+    cout: int
+    k: int
+    stride: int
+    pad: int
+    bn: bool
+    relu: bool
+    res_in: bool
+    res_out: bool
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelCfg:
+    """Model topology (mirror of Rust `ModelCfg`)."""
+
+    name: str
+    input: Tuple[int, int, int]
+    convs: Tuple[ConvCfg, ...]
+    num_classes: int
+
+    def param_names(self) -> List[str]:
+        """Parameter names in export order (must match Rust)."""
+        names = ["input.alpha"]
+        for i, c in enumerate(self.convs):
+            names.append(f"conv{i}.w")
+            if c.bn:
+                names.append(f"conv{i}.gamma")
+                names.append(f"conv{i}.beta")
+            names.append(f"conv{i}.alpha_out")
+            if c.res_out:
+                names.append(f"conv{i}.alpha_res")
+        names.append("fc.w")
+        return names
+
+
+def tnn() -> ModelCfg:
+    """The §II ternary CNN for SynthDigits (28×28×1)."""
+    conv = lambda cin, cout, s: ConvCfg(cin, cout, 3, s, 1, False, True, False, False)
+    return ModelCfg(
+        name="tnn",
+        input=(1, 28, 28),
+        convs=(conv(1, 8, 2), conv(8, 16, 2), conv(16, 32, 2)),
+        num_classes=10,
+    )
+
+
+def scnet(num_classes: int = 10) -> ModelCfg:
+    """The §III SC-friendly residual network for SynthCIFAR (32×32×3)."""
+    c = ConvCfg
+    return ModelCfg(
+        name=f"scnet{num_classes}",
+        input=(3, 32, 32),
+        convs=(
+            c(3, 16, 3, 1, 1, True, True, False, True),
+            c(16, 16, 3, 1, 1, True, True, True, False),
+            c(16, 32, 3, 2, 1, True, True, False, True),
+            c(32, 32, 3, 1, 1, True, True, True, False),
+            c(32, 64, 3, 2, 1, True, True, False, True),
+            c(64, 64, 3, 1, 1, True, True, True, False),
+        ),
+        num_classes=num_classes,
+    )
+
+
+def init_params(cfg: ModelCfg, key) -> Dict[str, jnp.ndarray]:
+    """He-style init matching Rust `ModelParams::init` conventions."""
+    params: Dict[str, jnp.ndarray] = {"input.alpha": jnp.asarray([0.5], jnp.float32)}
+    for i, c in enumerate(cfg.convs):
+        key, sub = jax.random.split(key)
+        fan_in = c.k * c.k * c.cin
+        std = (2.0 / fan_in) ** 0.5
+        params[f"conv{i}.w"] = std * jax.random.normal(
+            sub, (c.cout, c.cin, c.k, c.k), jnp.float32
+        )
+        if c.bn:
+            params[f"conv{i}.gamma"] = jnp.ones((c.cout,), jnp.float32)
+            params[f"conv{i}.beta"] = jnp.zeros((c.cout,), jnp.float32)
+        params[f"conv{i}.alpha_out"] = jnp.asarray([0.5], jnp.float32)
+        if c.res_out:
+            params[f"conv{i}.alpha_res"] = jnp.asarray([0.125], jnp.float32)
+    key, sub = jax.random.split(key)
+    hid = cfg.convs[-1].cout
+    params["fc.w"] = (2.0 / hid) ** 0.5 * jax.random.normal(
+        sub, (cfg.num_classes, hid), jnp.float32
+    )
+    return params
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantKnobs:
+    """Traced quantization configuration (one HLO serves all ablations).
+
+    ``*_fp`` flags are 0/1 floats: 1 selects the float (un-quantized)
+    path. ``res_on`` gates the residual adds entirely.
+    """
+
+    act_half: jnp.ndarray
+    act_fp: jnp.ndarray
+    w_fp: jnp.ndarray
+    res_half: jnp.ndarray
+    res_fp: jnp.ndarray
+    res_on: jnp.ndarray
+
+    @staticmethod
+    def of(act_bsl=2, act_fp=0.0, w_fp=0.0, res_bsl=RES_BSL, res_fp=0.0, res_on=1.0):
+        """Concrete knobs (for tests / default tracing)."""
+        return QuantKnobs(
+            act_half=jnp.asarray(act_bsl / 2, jnp.float32),
+            act_fp=jnp.asarray(act_fp, jnp.float32),
+            w_fp=jnp.asarray(w_fp, jnp.float32),
+            res_half=jnp.asarray(res_bsl / 2, jnp.float32),
+            res_fp=jnp.asarray(res_fp, jnp.float32),
+            res_on=jnp.asarray(res_on, jnp.float32),
+        )
+
+    def flat(self):
+        """Scalars in export order."""
+        return [self.act_half, self.act_fp, self.w_fp, self.res_half, self.res_fp, self.res_on]
+
+    @staticmethod
+    def unflat(vals):
+        """Rebuild from export order."""
+        return QuantKnobs(*vals)
+
+
+def fq_act(x, alpha, half, fp_flag):
+    """LSQ-style fake-quant with STE; `fp_flag=1` bypasses."""
+    alpha = jnp.maximum(alpha, 1e-8)
+    xa = x / alpha
+    xc = jnp.clip(xa, -half, half)
+    xr = xc + lax.stop_gradient(jnp.round(xc) - xc)
+    return fp_flag * x + (1.0 - fp_flag) * xr * alpha
+
+
+def ternarize(w, fp_flag):
+    """Ternary fake-quant at ``alpha_w = mean|w|`` (Rust rule)."""
+    alpha = jnp.maximum(jnp.mean(jnp.abs(w)), 1e-8)
+    wq = jnp.clip(jnp.round(w / alpha), -1.0, 1.0)
+    q = w + lax.stop_gradient(wq * alpha - w)
+    return fp_flag * w + (1.0 - fp_flag) * q
+
+
+def w_alpha(w):
+    """Weight scale (shared rule)."""
+    return jnp.maximum(jnp.mean(jnp.abs(w)), 1e-8)
+
+
+def conv_nchw(x, w, stride, pad):
+    """Standard NCHW/OIHW convolution."""
+    return lax.conv_general_dilated(
+        x, w, (stride, stride), [(pad, pad), (pad, pad)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+
+
+def forward_train(cfg: ModelCfg, params, x, knobs: QuantKnobs):
+    """QAT fake-quant forward; returns logits ``[B, num_classes]``."""
+    a0 = params["input.alpha"][0]
+    x = fq_act(x, a0, knobs.act_half, knobs.act_fp)
+    res = None
+    for i, c in enumerate(cfg.convs):
+        w = ternarize(params[f"conv{i}.w"], knobs.w_fp)
+        y = conv_nchw(x, w, c.stride, c.pad)
+        if c.res_in and res is not None:
+            y = y + knobs.res_on * res
+        if c.bn:
+            g = params[f"conv{i}.gamma"][None, :, None, None]
+            b = params[f"conv{i}.beta"][None, :, None, None]
+            y = g * (y - b)
+        if c.relu:
+            y = jnp.maximum(y, 0.0)
+        if c.res_out:
+            ar = params[f"conv{i}.alpha_res"][0]
+            res = fq_act(y, ar, knobs.res_half, knobs.res_fp)
+        ao = params[f"conv{i}.alpha_out"][0]
+        x = fq_act(y, ao, knobs.act_half, knobs.act_fp)
+    feat = jnp.mean(x, axis=(2, 3))
+    wfc = ternarize(params["fc.w"], knobs.w_fp)
+    return feat @ wfc.T
+
+
+def forward_eval(cfg: ModelCfg, params, x, knobs: QuantKnobs):
+    """Serving path: integer codes end-to-end through the Pallas kernel.
+
+    Activations are integer-valued code tensors; each conv is an
+    im2col + :func:`sc_qmatmul` call fusing BSN accumulation, residual
+    and the Eq-1 SI activation, exactly as the silicon datapath.
+    """
+    b = x.shape[0]
+    a_in = params["input.alpha"][0]
+    q = jnp.clip(jnp.round(x / a_in), -knobs.act_half, knobs.act_half)
+    res_q = None
+    alpha_res_in = jnp.asarray(0.0, jnp.float32)
+    alpha_in = a_in
+    for i, c in enumerate(cfg.convs):
+        w = params[f"conv{i}.w"]
+        aw = w_alpha(w)
+        wq = jnp.clip(jnp.round(w / aw), -1.0, 1.0)
+        # [O, I, K, K] -> [I*K*K, O] to match im2col column order.
+        wmat = wq.reshape(c.cout, c.cin * c.k * c.k).T
+        cols = jax.vmap(lambda im: kref.im2col_ref(im, c.k, c.stride, c.pad)[0])(q)
+        _, oh, ow = kref.im2col_ref(q[0], c.k, c.stride, c.pad)
+        xmat = cols.reshape(b * oh * ow, c.cin * c.k * c.k)
+        alpha_acc = alpha_in * aw
+        if c.res_in and res_q is not None:
+            # Residual codes are spatially aligned (stride-1 blocks).
+            rmat = res_q.transpose(0, 2, 3, 1).reshape(b * oh * ow, c.cout)
+            a_res = alpha_res_in * knobs.res_on
+        else:
+            rmat = jnp.zeros((b * oh * ow, c.cout), jnp.float32)
+            a_res = jnp.asarray(0.0, jnp.float32)
+        gamma = params.get(f"conv{i}.gamma", jnp.ones((c.cout,), jnp.float32))
+        beta = params.get(f"conv{i}.beta", jnp.zeros((c.cout,), jnp.float32))
+        ao = params[f"conv{i}.alpha_out"][0]
+        out = sc_qmatmul(
+            xmat, wmat, gamma, beta, rmat,
+            alpha_acc, a_res, ao, knobs.act_half,
+        )
+        if c.res_out:
+            ar = params[f"conv{i}.alpha_res"][0]
+            acc_real = (xmat @ wmat) * alpha_acc + rmat * a_res
+            res_flat = kref.fused_activation(
+                acc_real, gamma[None, :], beta[None, :], ar, knobs.res_half
+            )
+            res_q = res_flat.reshape(b, oh, ow, c.cout).transpose(0, 3, 1, 2)
+            alpha_res_in = ar
+        q = out.reshape(b, oh, ow, c.cout).transpose(0, 3, 1, 2)
+        alpha_in = ao
+    feat = jnp.sum(q, axis=(2, 3))  # count-domain GAP (scale-free argmax)
+    wfc = params["fc.w"]
+    afc = w_alpha(wfc)
+    wfcq = jnp.clip(jnp.round(wfc / afc), -1.0, 1.0)
+    return feat @ wfcq.T
+
+
+def loss_fn(cfg: ModelCfg, params, x, y, knobs: QuantKnobs):
+    """Mean softmax cross-entropy."""
+    logits = forward_train(cfg, params, x, knobs)
+    logp = jax.nn.log_softmax(logits)
+    nll = -jnp.take_along_axis(logp, y[:, None], axis=1).mean()
+    return nll
+
+
+# Global gradient-norm clip: the paper's BN (Eq 1) is a pure affine
+# transform with no variance normalization, so deep non-residual
+# configurations can explode without it.
+GRAD_CLIP = 5.0
+
+
+def sgd_momentum_step(cfg: ModelCfg, params, moms, x, y, lr, knobs: QuantKnobs, mu=0.9):
+    """One SGD+momentum step with global-norm clipping; returns
+    (params, moms, loss)."""
+    loss, grads = jax.value_and_grad(lambda p: loss_fn(cfg, p, x, y, knobs))(params)
+    gnorm = jnp.sqrt(sum(jnp.sum(g * g) for g in grads.values()) + 1e-12)
+    scale = jnp.minimum(1.0, GRAD_CLIP / gnorm)
+    new_p = {}
+    new_m = {}
+    for k in params:
+        g = grads[k] * scale
+        m = mu * moms[k] + g
+        new_m[k] = m
+        new_p[k] = params[k] - lr * m
+    return new_p, new_m, loss

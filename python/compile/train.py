@@ -1,0 +1,120 @@
+"""Flat-signature train/eval functions for AOT export.
+
+The Rust coordinator drives training by executing the exported
+``train_step`` HLO in a loop (Python never runs at runtime), so the
+JAX functions here take and return *flat lists of arrays* in the
+deterministic order of ``ModelCfg.param_names()`` — the same order the
+Rust side reads from the metadata file.
+
+Signatures (all f32 unless noted):
+
+``train_step``:
+  inputs:  params..., moms..., x[B,C,H,W], y[B] (i32), lr,
+           act_half, act_fp, w_fp, res_half, res_fp, res_on
+  outputs: new_params..., new_moms..., loss
+
+``eval_step``:
+  inputs:  params..., x[B,C,H,W],
+           act_half, act_fp, w_fp, res_half, res_fp, res_on
+  outputs: logits[B, num_classes]
+
+``eval_step`` runs the **serving path** (integer codes through the
+Pallas kernel); ``train_step`` runs the fake-quant QAT path.
+"""
+
+from typing import List
+
+import jax.numpy as jnp
+
+from . import model as M
+
+
+def pack(cfg: M.ModelCfg, params: dict) -> List[jnp.ndarray]:
+    """Dict -> flat list in export order."""
+    return [params[n] for n in cfg.param_names()]
+
+
+def unpack(cfg: M.ModelCfg, flat) -> dict:
+    """Flat list -> dict."""
+    names = cfg.param_names()
+    assert len(flat) == len(names), f"{len(flat)} != {len(names)}"
+    return dict(zip(names, flat))
+
+
+def make_train_step(cfg: M.ModelCfg):
+    """Build the flat train-step function for `cfg`."""
+    n = len(cfg.param_names())
+
+    def train_step(*args):
+        params = unpack(cfg, args[:n])
+        moms = unpack(cfg, args[n : 2 * n])
+        x, y, lr = args[2 * n], args[2 * n + 1], args[2 * n + 2]
+        knobs = M.QuantKnobs.unflat(args[2 * n + 3 : 2 * n + 9])
+        new_p, new_m, loss = M.sgd_momentum_step(cfg, params, moms, x, y, lr, knobs)
+        return tuple(pack(cfg, new_p)) + tuple(pack(cfg, new_m)) + (loss,)
+
+    return train_step
+
+
+def make_eval_step(cfg: M.ModelCfg):
+    """Build the flat eval-step (serving) function for `cfg`."""
+    n = len(cfg.param_names())
+
+    def eval_step(*args):
+        params = unpack(cfg, args[:n])
+        x = args[n]
+        knobs = M.QuantKnobs.unflat(args[n + 1 : n + 7])
+        return (M.forward_eval(cfg, params, x, knobs),)
+
+    return eval_step
+
+
+def make_eval_train_path(cfg: M.ModelCfg):
+    """Flat eval using the *training* (fake-quant) path — used for the
+    ablation accuracy rows where the float/FP configurations cannot run
+    on the integer serving path."""
+    n = len(cfg.param_names())
+
+    def eval_step(*args):
+        params = unpack(cfg, args[:n])
+        x = args[n]
+        knobs = M.QuantKnobs.unflat(args[n + 1 : n + 7])
+        return (M.forward_train(cfg, params, x, knobs),)
+
+    return eval_step
+
+
+def make_calib(cfg: M.ModelCfg):
+    """Flat calibration pass: float forward returning per-layer
+    activation statistics used to re-seat the quantization scales
+    between the float warm-up and the QAT phase.
+
+    inputs:  params..., x[B,C,H,W]
+    outputs: stats[1 + n_convs] — mean |input| followed by the mean
+             absolute post-activation value of every conv layer.
+    """
+    n = len(cfg.param_names())
+
+    def calib(*args):
+        params = unpack(cfg, args[:n])
+        x = args[n]
+        stats = [jnp.mean(jnp.abs(x))]
+        res = None
+        for i, c in enumerate(cfg.convs):
+            w = params[f"conv{i}.w"]
+            y = M.conv_nchw(x, w, c.stride, c.pad)
+            if c.res_in and res is not None:
+                y = y + res
+            if c.bn:
+                g = params[f"conv{i}.gamma"][None, :, None, None]
+                b = params[f"conv{i}.beta"][None, :, None, None]
+                y = g * (y - b)
+            if c.relu:
+                y = jnp.maximum(y, 0.0)
+            if c.res_out:
+                res = y
+            stats.append(jnp.mean(jnp.abs(y)))
+            x = y
+        return (jnp.stack(stats),)
+
+    return calib

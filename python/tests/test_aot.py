@@ -1,0 +1,80 @@
+"""AOT export tests: HLO text artifacts + metadata round-trip."""
+
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from compile import aot
+from compile import model as M
+
+
+@pytest.fixture(scope="module")
+def exported(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    aot.export_model(M.tnn(), str(out))
+    return str(out)
+
+
+def test_artifacts_exist(exported):
+    for suffix in ("train", "eval", "evalq"):
+        p = os.path.join(exported, f"tnn_{suffix}.hlo.txt")
+        assert os.path.exists(p), p
+        text = open(p).read()
+        assert text.startswith("HloModule"), "must be HLO text, not proto"
+        assert "ENTRY" in text
+
+
+def test_meta_header_and_params(exported):
+    lines = open(os.path.join(exported, "tnn_meta.txt")).read().splitlines()
+    head = lines[0].split()
+    assert head[0] == "model" and head[1] == "tnn"
+    n_params = int(head[head.index("params") + 1])
+    p_lines = [l for l in lines if l.startswith("P ")]
+    init_lines = [l for l in lines if l.startswith("INIT ")]
+    assert len(p_lines) == n_params
+    assert len(init_lines) == n_params
+    names = [l.split()[1] for l in p_lines]
+    assert names == M.tnn().param_names()
+
+
+def test_init_values_roundtrip(exported):
+    # INIT hex blobs decode to the same values init_params produces.
+    import jax
+
+    params = M.init_params(M.tnn(), jax.random.PRNGKey(0))
+    lines = open(os.path.join(exported, "tnn_meta.txt")).read().splitlines()
+    for l in lines:
+        if not l.startswith("INIT "):
+            continue
+        _, name, hexs = l.split()
+        got = np.frombuffer(bytes.fromhex(hexs), dtype="<f4")
+        want = np.ravel(np.asarray(params[name], np.float32))
+        np.testing.assert_array_equal(got, want, err_msg=name)
+
+
+def test_hlo_parameter_count_matches_meta(exported):
+    # The train HLO has 2*n_params + 9 entry parameters (params, moms,
+    # x, y, lr, 6 knobs).
+    n = len(M.tnn().param_names())
+    text = open(os.path.join(exported, "tnn_train.hlo.txt")).read()
+    # Nested computations (reducers, fusions) declare their own
+    # parameters and are printed before ENTRY — count only the entry's.
+    entry = text[text.index("ENTRY "):]
+    n_args = entry.count("parameter(")
+    assert n_args == 2 * n + 9, f"{n_args} != {2 * n + 9}"
+
+
+def test_cli_runs(tmp_path):
+    env = dict(os.environ)
+    r = subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out", str(tmp_path), "--models", "tnn"],
+        capture_output=True,
+        text=True,
+        env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    )
+    assert r.returncode == 0, r.stderr
+    assert os.path.exists(tmp_path / "tnn_meta.txt")

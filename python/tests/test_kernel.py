@@ -1,0 +1,129 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracle.
+
+The CORE correctness signal of the compile path: `sc_qmatmul` (Pallas,
+interpret mode) must match `sc_qmatmul_ref` bit-exactly over a
+hypothesis sweep of shapes and quantization parameters.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import fused_activation, im2col_ref, sc_qmatmul_ref
+from compile.kernels.sc_matmul import sc_qmatmul, vmem_bytes
+
+
+def _rand_case(rng, p, k, o, act_half=1, res=True):
+    x = rng.integers(-act_half, act_half + 1, size=(p, k)).astype(np.float32)
+    w = rng.integers(-1, 2, size=(k, o)).astype(np.float32)
+    gamma = rng.uniform(0.5, 2.0, size=(o,)).astype(np.float32)
+    beta = rng.uniform(-2.0, 2.0, size=(o,)).astype(np.float32)
+    r = (
+        rng.integers(-8, 9, size=(p, o)).astype(np.float32)
+        if res
+        else np.zeros((p, o), np.float32)
+    )
+    return x, w, gamma, beta, r
+
+
+def _run_both(x, w, gamma, beta, r, aa, ar, ao, half, bm=32):
+    got = sc_qmatmul(x, w, gamma, beta, r, aa, ar, ao, half, bm=bm)
+    want = sc_qmatmul_ref(
+        jnp.asarray(x), jnp.asarray(w), jnp.asarray(gamma), jnp.asarray(beta),
+        jnp.asarray(r), aa, ar, ao, half,
+    )
+    return np.asarray(got), np.asarray(want)
+
+
+def test_kernel_matches_ref_basic():
+    rng = np.random.default_rng(0)
+    x, w, gamma, beta, r = _rand_case(rng, 96, 18, 8)
+    got, want = _run_both(x, w, gamma, beta, r, 0.03, 0.12, 0.5, 1.0)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_kernel_no_residual():
+    rng = np.random.default_rng(1)
+    x, w, gamma, beta, r = _rand_case(rng, 50, 27, 16, res=False)
+    got, want = _run_both(x, w, gamma, beta, r, 0.05, 0.0, 0.25, 8.0)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_kernel_row_padding():
+    # P not a multiple of bm exercises the padding path.
+    rng = np.random.default_rng(2)
+    x, w, gamma, beta, r = _rand_case(rng, 33, 9, 4)
+    got, want = _run_both(x, w, gamma, beta, r, 0.1, 0.1, 0.5, 8.0, bm=32)
+    assert got.shape == (33, 4)
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    p=st.integers(1, 80),
+    k=st.integers(1, 64),
+    o=st.integers(1, 24),
+    act_half=st.sampled_from([1, 2, 4, 8]),
+    out_half=st.sampled_from([1.0, 2.0, 8.0]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kernel_matches_ref_sweep(p, k, o, act_half, out_half, seed):
+    rng = np.random.default_rng(seed)
+    x, w, gamma, beta, r = _rand_case(rng, p, k, o, act_half=act_half)
+    aa = float(rng.uniform(0.01, 0.2))
+    ar = float(rng.uniform(0.0, 0.3))
+    ao = float(rng.uniform(0.1, 1.0))
+    got, want = _run_both(x, w, gamma, beta, r, aa, ar, ao, float(out_half))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_outputs_are_integer_codes_in_range():
+    rng = np.random.default_rng(3)
+    x, w, gamma, beta, r = _rand_case(rng, 64, 36, 8)
+    got, _ = _run_both(x, w, gamma, beta, r, 0.02, 0.05, 0.3, 8.0)
+    assert np.all(got == np.round(got)), "outputs must be integer codes"
+    assert got.min() >= -8 and got.max() <= 8
+    # BN-ReLU output is non-negative before quantization.
+    assert got.min() >= 0 or np.all(got[got < 0] == 0)
+
+
+def test_fused_activation_eq1():
+    # Eq 1: gamma(x - beta) above beta, 0 below.
+    acc = jnp.asarray([[-1.0, 0.0, 1.0, 3.0]])
+    out = fused_activation(acc, 2.0, 1.0, 0.5, 8.0)
+    np.testing.assert_array_equal(np.asarray(out), [[0.0, 0.0, 0.0, 8.0]])
+
+
+def test_im2col_matches_conv():
+    # im2col + matmul == lax.conv for random cases.
+    rng = np.random.default_rng(4)
+    x = rng.normal(size=(3, 8, 8)).astype(np.float32)
+    w = rng.normal(size=(5, 3, 3, 3)).astype(np.float32)
+    cols, oh, ow = im2col_ref(jnp.asarray(x), 3, 2, 1)
+    wmat = w.reshape(5, 27).T
+    got = (cols @ wmat).reshape(oh, ow, 5).transpose(2, 0, 1)
+    want = jax.lax.conv_general_dilated(
+        jnp.asarray(x)[None], jnp.asarray(w), (2, 2), [(1, 1), (1, 1)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )[0]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_vmem_budget_largest_layer():
+    # Largest scnet layer (K=576, O=64) at bm=128 must fit VMEM with
+    # double-buffering headroom (DESIGN.md §Perf).
+    assert vmem_bytes(128, 576, 64) < 4 * 1024 * 1024
+
+
+@pytest.mark.parametrize("bm", [8, 32, 128])
+def test_block_size_invariance(bm):
+    rng = np.random.default_rng(5)
+    x, w, gamma, beta, r = _rand_case(rng, 70, 12, 6)
+    a = sc_qmatmul(x, w, gamma, beta, r, 0.1, 0.1, 0.4, 8.0, bm=bm)
+    b = sc_qmatmul_ref(
+        jnp.asarray(x), jnp.asarray(w), jnp.asarray(gamma), jnp.asarray(beta),
+        jnp.asarray(r), 0.1, 0.1, 0.4, 8.0,
+    )
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

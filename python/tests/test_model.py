@@ -1,0 +1,141 @@
+"""L2 model tests: shapes, quantization semantics, train/eval parity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile import train as T
+
+
+@pytest.fixture(scope="module")
+def tnn_setup():
+    cfg = M.tnn()
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def scnet_setup():
+    cfg = M.scnet(10)
+    params = M.init_params(cfg, jax.random.PRNGKey(1))
+    return cfg, params
+
+
+def test_param_names_match_init(tnn_setup, scnet_setup):
+    for cfg, params in (tnn_setup, scnet_setup):
+        assert set(cfg.param_names()) == set(params.keys())
+
+
+def test_scnet_has_residual_taps():
+    cfg = M.scnet(10)
+    names = cfg.param_names()
+    assert "conv0.alpha_res" in names
+    assert "conv1.alpha_res" not in names
+    assert names[0] == "input.alpha"
+    assert names[-1] == "fc.w"
+
+
+def test_forward_train_shapes(scnet_setup):
+    cfg, params = scnet_setup
+    x = jax.random.normal(jax.random.PRNGKey(2), (4, 3, 32, 32))
+    logits = M.forward_train(cfg, params, x, M.QuantKnobs.of())
+    assert logits.shape == (4, 10)
+    assert np.all(np.isfinite(np.asarray(logits)))
+
+
+def test_forward_eval_shapes(scnet_setup):
+    cfg, params = scnet_setup
+    x = jax.random.normal(jax.random.PRNGKey(3), (2, 3, 32, 32))
+    logits = M.forward_eval(cfg, params, x, M.QuantKnobs.of())
+    assert logits.shape == (2, 10)
+    # Serving-path logits are integer-valued (ternary fc on codes).
+    a = np.asarray(logits)
+    np.testing.assert_array_equal(a, np.round(a))
+
+
+def test_fp_knobs_bypass_quantization(scnet_setup):
+    cfg, params = scnet_setup
+    x = jax.random.normal(jax.random.PRNGKey(4), (2, 3, 32, 32))
+    fp = M.QuantKnobs.of(act_fp=1.0, w_fp=1.0, res_fp=1.0)
+    q = M.QuantKnobs.of()
+    lf = M.forward_train(cfg, params, x, fp)
+    lq = M.forward_train(cfg, params, x, q)
+    # FP and quantized paths must differ (quantization does something).
+    assert not np.allclose(np.asarray(lf), np.asarray(lq))
+
+
+def test_fq_act_ste_grads():
+    # Gradient flows through the STE (non-zero), and alpha receives a
+    # gradient via the LSQ formulation.
+    def f(x, a):
+        return jnp.sum(M.fq_act(x, a, 4.0, 0.0) ** 2)
+
+    x = jnp.asarray([0.3, -1.2, 2.7])
+    gx, ga = jax.grad(f, argnums=(0, 1))(x, jnp.asarray(0.5))
+    assert np.any(np.asarray(gx) != 0.0)
+    assert np.asarray(ga) != 0.0
+
+
+def test_ternarize_values():
+    w = jnp.asarray([0.9, -0.8, 0.05, -0.1, 0.4])
+    out = np.asarray(M.ternarize(w, jnp.asarray(0.0)))
+    alpha = np.mean(np.abs(np.asarray(w)))
+    np.testing.assert_allclose(out, np.asarray([1, -1, 0, 0, 1]) * alpha, rtol=1e-6)
+
+
+def test_train_step_reduces_loss(tnn_setup):
+    cfg, _ = tnn_setup
+    params = M.init_params(cfg, jax.random.PRNGKey(5))
+    moms = {k: jnp.zeros_like(v) for k, v in params.items()}
+    key = jax.random.PRNGKey(6)
+    # A tiny separable task: class = sign pattern of a fixed direction.
+    x = jax.random.normal(key, (32, 1, 28, 28))
+    y = (x.mean(axis=(1, 2, 3)) > 0).astype(jnp.int32)
+    knobs = M.QuantKnobs.of(act_bsl=8)
+    step = jax.jit(
+        lambda p, m, x, y: M.sgd_momentum_step(cfg, p, m, x, y, 0.05, knobs)
+    )
+    first = None
+    last = None
+    for i in range(30):
+        params, moms, loss = step(params, moms, x, y)
+        if first is None:
+            first = float(loss)
+        last = float(loss)
+    assert last < first, f"loss did not decrease: {first} -> {last}"
+
+
+def test_flat_pack_roundtrip(scnet_setup):
+    cfg, params = scnet_setup
+    flat = T.pack(cfg, params)
+    back = T.unpack(cfg, flat)
+    for k in params:
+        np.testing.assert_array_equal(np.asarray(params[k]), np.asarray(back[k]))
+
+
+def test_flat_train_step_signature(tnn_setup):
+    cfg, _ = tnn_setup
+    params = M.init_params(cfg, jax.random.PRNGKey(7))
+    n = len(cfg.param_names())
+    flat_p = T.pack(cfg, params)
+    flat_m = [jnp.zeros_like(t) for t in flat_p]
+    x = jax.random.normal(jax.random.PRNGKey(8), (8, 1, 28, 28))
+    y = jnp.zeros((8,), jnp.int32)
+    knobs = M.QuantKnobs.of()
+    fn = T.make_train_step(cfg)
+    out = fn(*flat_p, *flat_m, x, y, jnp.asarray(0.01), *knobs.flat())
+    assert len(out) == 2 * n + 1
+    assert out[-1].shape == ()
+
+
+def test_eval_train_path_matches_forward_train(scnet_setup):
+    cfg, params = scnet_setup
+    x = jax.random.normal(jax.random.PRNGKey(9), (2, 3, 32, 32))
+    knobs = M.QuantKnobs.of()
+    fn = T.make_eval_train_path(cfg)
+    flat = T.pack(cfg, params)
+    (logits,) = fn(*flat, x, *knobs.flat())
+    want = M.forward_train(cfg, params, x, knobs)
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(want), rtol=1e-5)

@@ -1,0 +1,66 @@
+//! BSN benchmarks — regenerates the Table V / Fig 9 performance axis
+//! and measures the simulator's own throughput (§Perf L3 target:
+//! ≥ 10^7 sorted bits/s gate-level).
+
+use scnn::accel;
+use scnn::circuits::Bsn;
+use scnn::coding::BitVec;
+use scnn::util::bench::Bench;
+use scnn::util::Rng;
+
+fn main() {
+    let b = Bench::default();
+    println!("== BSN gate-level sort throughput ==");
+    let mut rng = Rng::new(1);
+    for width in [256usize, 1024, 4608, 9216] {
+        let bsn = Bsn::new(width);
+        let mut bits = BitVec::zeros(width);
+        for i in 0..width {
+            bits.set(i, rng.gen_bool(0.5));
+        }
+        b.run(&format!("bsn/gate_sort/{width}"), width as u64, || {
+            bsn.sort_gate_level(&bits)
+        });
+    }
+
+    println!("\n== functional accumulate (count domain) ==");
+    for width in [4608usize, 9216] {
+        let counts: Vec<usize> = (0..width / 64).map(|i| (i * 7) % 64).collect();
+        b.run(&format!("bsn/functional/{width}"), width as u64, || {
+            counts.iter().sum::<usize>()
+        });
+    }
+
+    println!("\n== approximate designs (Table V workloads) ==");
+    for width in [2304usize, 4608, 9216] {
+        let spatial = accel::design_spatial(width, 16);
+        let m0 = spatial.stages()[0].m;
+        let l0 = spatial.stages()[0].l;
+        let counts: Vec<usize> = (0..m0).map(|i| (i * 13) % (l0 + 1)).collect();
+        b.run(&format!("approx/spatial_counts/{width}"), m0 as u64, || {
+            spatial.eval_counts(&counts)
+        });
+        let mut rng2 = Rng::new(7);
+        b.run(&format!("approx/spatial_mse100/{width}"), 100, || {
+            spatial.mse(0.5, 100, &mut rng2)
+        });
+    }
+
+    println!("\n== cost model (used inside search loops) ==");
+    for width in [4608usize, 9216] {
+        b.run(&format!("cost/bsn_gate_count/{width}"), 1, || {
+            Bsn::new(width).gate_count()
+        });
+    }
+
+    println!("\n== fault-injected sort ==");
+    let bsn = Bsn::new(1024);
+    let mut bits = BitVec::zeros(1024);
+    for i in 0..1024 {
+        bits.set(i, rng.gen_bool(0.5));
+    }
+    let mut frng = Rng::new(3);
+    b.run("bsn/faulty_sort/1024@1e-3", 1024, || {
+        bsn.sort_with_faults(&bits, 1e-3, &mut frng)
+    });
+}

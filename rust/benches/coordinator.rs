@@ -1,0 +1,52 @@
+//! Coordinator / serving benchmarks: end-to-end request throughput and
+//! latency through the dynamic batcher + PJRT serving path.
+//!
+//! Requires `make artifacts`; skips gracefully otherwise.
+
+use std::time::Instant;
+
+use scnn::coordinator::{BatchPolicy, Coordinator, ServeConfig};
+use scnn::data::{Dataset, Split, SynthCifar};
+use scnn::runtime::trainer::Knobs;
+
+fn main() {
+    if !std::path::Path::new("artifacts/scnet10_meta.txt").exists() {
+        println!("coordinator bench skipped: run `make artifacts` first");
+        return;
+    }
+    for (label, clients, max_wait_ms) in
+        [("1-client", 1usize, 2u64), ("8-clients", 8, 2), ("32-clients", 32, 5)]
+    {
+        let mut cfg = ServeConfig::new("artifacts", "scnet10");
+        cfg.knobs = Knobs::quantized(2).with_res_bsl(Some(16));
+        cfg.policy = BatchPolicy { max_wait: std::time::Duration::from_millis(max_wait_ms) };
+        let coord = Coordinator::start(cfg).expect("start coordinator");
+        let requests_per_client = 192usize;
+        let t0 = Instant::now();
+        let mut handles = Vec::new();
+        for t in 0..clients {
+            let client = coord.client();
+            handles.push(std::thread::spawn(move || {
+                let data = SynthCifar::new(10);
+                for i in 0..requests_per_client {
+                    let (x, _) = data.sample(Split::Test, t * 10_000 + i);
+                    client.infer(x.into_vec()).expect("infer");
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let m = coord.shutdown();
+        let total = clients * requests_per_client;
+        println!(
+            "coordinator/{label:<12} {total:>6} reqs in {wall:>6.2}s -> {:>7.0} req/s  \
+             occupancy {:.2}  p50 {:?}  p99 {:?}",
+            total as f64 / wall,
+            m.occupancy,
+            m.p50,
+            m.p99
+        );
+    }
+}

@@ -1,0 +1,67 @@
+//! Conv-datapath benchmarks: the Table IV / Fig 2 cost units plus the
+//! SI synthesis cost (a per-layer setup operation in the executors).
+
+use scnn::circuits::si::{ActivationFn, SelectiveInterconnect};
+use scnn::circuits::{BsnKind, ConvDatapath, DatapathConfig};
+use scnn::coding::Ternary;
+use scnn::util::bench::Bench;
+use scnn::util::Rng;
+
+fn main() {
+    let b = Bench::default();
+    println!("== datapath functional eval (one output pixel) ==");
+    let mut rng = Rng::new(5);
+    for (label, acc_width, act_bsl) in
+        [("2-2", 576usize, 2usize), ("2-4", 576, 4), ("2-2-wide", 4608, 2)]
+    {
+        let dp = ConvDatapath::new(DatapathConfig {
+            acc_width,
+            act_bsl,
+            residual_bsl: None,
+            out_bsl: 16,
+            bsn: BsnKind::Exact,
+            activation: ActivationFn::Relu { ratio: 0.1 },
+        });
+        let half = (act_bsl / 2) as i64;
+        let acts: Vec<i64> = (0..acc_width).map(|_| rng.gen_range_i64(-half, half)).collect();
+        let ws: Vec<Ternary> =
+            (0..acc_width).map(|_| Ternary::from_i64(rng.gen_range_i64(-1, 1))).collect();
+        b.run(&format!("datapath/eval/{label}"), acc_width as u64, || {
+            dp.eval(&acts, &ws, None)
+        });
+    }
+
+    println!("\n== datapath cost roll-up (used by fig2/tab4 sweeps) ==");
+    for act_bsl in [2usize, 4, 8, 16] {
+        b.run(&format!("datapath/cost/a{act_bsl}"), 1, || {
+            ConvDatapath::new(DatapathConfig {
+                acc_width: 4608,
+                act_bsl,
+                residual_bsl: None,
+                out_bsl: 16,
+                bsn: BsnKind::Exact,
+                activation: ActivationFn::Relu { ratio: 0.1 },
+            })
+            .cost()
+        });
+    }
+
+    println!("\n== SI synthesis (per-channel, per-layer setup) ==");
+    for in_w in [1152usize, 9216] {
+        b.run(&format!("si/synthesize/{in_w}->16"), in_w as u64, || {
+            SelectiveInterconnect::for_activation(
+                &ActivationFn::BnRelu { gamma: 1.2, beta: 3.0, ratio: 0.05 },
+                in_w,
+                16,
+            )
+        });
+    }
+
+    println!("\n== SI apply ==");
+    let si = SelectiveInterconnect::for_activation(
+        &ActivationFn::Relu { ratio: 0.05 },
+        9216,
+        16,
+    );
+    b.run("si/apply_count/9216", 1, || si.apply_count(5000));
+}

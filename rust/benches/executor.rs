@@ -1,0 +1,57 @@
+//! Bit-exact SC executor benchmarks (§Perf L3 target: evaluate 1k
+//! SynthCIFAR images in < 60 s → ≥ 16.7 img/s on the fast count path).
+
+use scnn::data::{Dataset, Split, SynthCifar, SynthDigits};
+use scnn::nn::binary_exec::BinaryExecutor;
+use scnn::nn::model::{ModelCfg, ModelParams};
+use scnn::nn::quant::QuantConfig;
+use scnn::nn::sc_exec::{FaultCfg, Prepared, ScExecutor};
+use scnn::util::bench::Bench;
+use scnn::util::Rng;
+
+fn main() {
+    let b = Bench::default();
+    let mut rng = Rng::new(11);
+
+    println!("== tnn (SynthDigits) forward ==");
+    let cfg = ModelCfg::tnn();
+    let params = ModelParams::init(&cfg, &mut rng);
+    let prep = Prepared::new(
+        &cfg,
+        &params,
+        QuantConfig { act_bsl: Some(2), weight_ternary: true, residual_bsl: None },
+    );
+    let digits = SynthDigits::new();
+    let (dimg, _) = digits.sample(Split::Test, 0);
+    let sc = ScExecutor::new(prep.clone());
+    b.run("exec/sc/tnn_forward", 1, || sc.forward(&dimg));
+    let bin = BinaryExecutor::new(prep.clone());
+    b.run("exec/binary/tnn_forward", 1, || bin.forward(&dimg));
+    let faulty = ScExecutor::with_faults(prep, FaultCfg { ber: 1e-3, seed: 3 });
+    b.run("exec/sc_faulty/tnn_forward", 1, || faulty.forward(&dimg));
+
+    println!("\n== scnet10 (SynthCIFAR, residual) forward ==");
+    let cfg = ModelCfg::scnet(10);
+    let params = ModelParams::init(&cfg, &mut rng);
+    let prep = Prepared::new(&cfg, &params, QuantConfig::w2a2r16());
+    let cifar = SynthCifar::new(10);
+    let (cimg, _) = cifar.sample(Split::Test, 0);
+    let sc = ScExecutor::new(prep.clone());
+    let m = b.run("exec/sc/scnet_forward", 1, || sc.forward(&cimg));
+    println!(
+        "   -> {:.1} img/s ({:.0} img per 60 s; §Perf target >= 1000)",
+        1.0 / m.median_s,
+        60.0 / m.median_s
+    );
+    let bin = BinaryExecutor::new(prep.clone());
+    b.run("exec/binary/scnet_forward", 1, || bin.forward(&cimg));
+
+    println!("\n== executor setup (SI synthesis across layers) ==");
+    b.run("exec/prepare/scnet", 1, || {
+        Prepared::new(&cfg, &params, QuantConfig::w2a2r16())
+    });
+
+    println!("\n== dataset generation ==");
+    b.run("data/synthcifar_sample", 1, || cifar.sample(Split::Train, 1234));
+    b.run("data/synthdigits_sample", 1, || digits.sample(Split::Train, 1234));
+}

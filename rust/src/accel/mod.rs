@@ -1,0 +1,337 @@
+//! Accelerator model: maps network layers onto BSN configurations and
+//! rolls up per-layer hardware cost (paper §IV.C — Table V, Fig 13,
+//! Fig 9).
+//!
+//! * [`design_spatial`] — heuristic generator over the parameterized
+//!   BSN design space of Fig 10b (stage count, group sizes, clip &
+//!   stride per stage), biased by the Gaussian-input observation of
+//!   Fig 11 (clip ≈ l/4 at inner stages is safe).
+//! * [`design_st`] — folds a wide accumulation onto one small spatial
+//!   BSN (Fig 12).
+//! * [`search_spatial`] — small design-space search: minimize ADP
+//!   subject to an MSE budget (the ablation behind Table V's configs).
+//! * [`schedule`] — the flexible accelerator: one physical
+//!   spatial-temporal datapath serving every layer of a network with
+//!   per-layer cycle counts (Fig 13's four conv sizes).
+
+pub mod schedule;
+
+use crate::circuits::approx_bsn::{ApproxBsn, ApproxStage, SubSample};
+use crate::circuits::bsn::Bsn;
+use crate::circuits::st_bsn::SpatialTemporalBsn;
+use crate::cost::Cost;
+use crate::util::Rng;
+
+/// The four conv accumulation widths of ResNet-18's basic blocks
+/// (3×3×{64,128,256,512} products) — the paper's Fig 13 x-axis.
+pub const RESNET18_ACC_WIDTHS: [usize; 4] = [576, 1152, 2304, 4608];
+
+/// Largest sub-BSN the spatial designer will instantiate as a leaf.
+const MAX_LEAF: usize = 256;
+/// Preferred group input size for inner stages.
+const GROUP_TARGET: usize = 128;
+
+/// Smallest divisor of `n` that is `>= lo` (falls back to `n`).
+fn divisor_at_least(n: usize, lo: usize) -> usize {
+    for m in lo..=n {
+        if n % m == 0 {
+            return m;
+        }
+    }
+    n
+}
+
+/// Design a spatial approximate BSN for `width` input bits with an
+/// `out_bsl`-bit output, via [`design_spatial_with`]'s default knobs:
+/// inner stages clip a quarter of each sorted group and stride by 2
+/// (truncated quantization, safe for near-Gaussian inputs — Fig 11);
+/// the final stage strides down to exactly `out_bsl`.
+pub fn design_spatial(width: usize, out_bsl: usize) -> ApproxBsn {
+    design_spatial_with(width, out_bsl, 4, 2).expect("default spatial design must exist")
+}
+
+/// Final-stage sampler: largest power-of-two stride reaching exactly
+/// `out_bsl` output bits with symmetric clipping.
+fn final_sub(l: usize, out_bsl: usize) -> Option<SubSample> {
+    let mut s = 1usize;
+    while out_bsl * s * 2 <= l {
+        s *= 2;
+    }
+    let kept = out_bsl * s;
+    if kept > l || (l - kept) % 2 != 0 {
+        return None;
+    }
+    Some(SubSample { clip: (l - kept) / 2, stride: s })
+}
+
+/// Inner-stage sampler for an `l`-bit group: clip `l/clip_div` bits per
+/// end (rounded to keep the kept region stride-aligned and the output
+/// BSL even — zero-centering).
+fn inner_sub(l: usize, clip_div: usize, stride: usize) -> Option<SubSample> {
+    let mut clip = l / clip_div;
+    // Shrink the clip until the kept width is divisible by 2·stride so
+    // the output BSL is even.
+    while clip > 0 && (l - 2 * clip) % (2 * stride) != 0 {
+        clip -= 1;
+    }
+    let kept = l - 2 * clip;
+    if kept == 0 || kept % stride != 0 {
+        return None;
+    }
+    let sub = SubSample { clip, stride };
+    (sub.out_bsl(l) >= 2).then_some(sub)
+}
+
+/// Parameterized spatial designer over the Fig-10b space. Stages are
+/// built in *block units* so widths always chain: after a stage of `m`
+/// groups emitting `b` bits each, the next stage regroups whole blocks.
+pub fn design_spatial_with(
+    width: usize,
+    out_bsl: usize,
+    clip_div: usize,
+    inner_stride: usize,
+) -> Option<ApproxBsn> {
+    assert!(width >= out_bsl, "width {width} too small for out_bsl {out_bsl}");
+    if width <= MAX_LEAF {
+        let sub = final_sub(width, out_bsl)?;
+        return Some(ApproxBsn::new(vec![ApproxStage { m: 1, l: width, sub }]));
+    }
+    // Leaf stage: split into groups near GROUP_TARGET bits.
+    let m0 = divisor_at_least(width, width.div_ceil(GROUP_TARGET));
+    let l0 = width / m0;
+    let sub0 = inner_sub(l0, clip_div, inner_stride)?;
+    let mut stages = vec![ApproxStage { m: m0, l: l0, sub: sub0 }];
+    let mut blocks = m0;
+    let mut bsl = sub0.out_bsl(l0);
+    while blocks > 1 {
+        // Group as many whole blocks as fit under MAX_LEAF.
+        let mut g = 1usize;
+        for cand in (2..=blocks).rev() {
+            if blocks % cand == 0 && cand * bsl <= MAX_LEAF {
+                g = cand;
+                break;
+            }
+        }
+        if g == 1 {
+            // No divisor fits; take the smallest divisor >= 2 even if it
+            // exceeds MAX_LEAF (rare, still correct).
+            g = divisor_at_least(blocks, 2);
+        }
+        let m = blocks / g;
+        let l = g * bsl;
+        let sub = if m == 1 {
+            final_sub(l, out_bsl)?
+        } else {
+            inner_sub(l, clip_div, inner_stride)?
+        };
+        if m > 1 && m * sub.out_bsl(l) >= blocks * bsl {
+            return None; // not shrinking — this knob setting is useless
+        }
+        stages.push(ApproxStage { m, l, sub });
+        blocks = m;
+        bsl = sub.out_bsl(l);
+    }
+    (bsl == out_bsl).then(|| ApproxBsn::new(stages))
+}
+
+/// Design a spatial-temporal BSN: a single `inner_width`-bit sub-BSN
+/// (with sub-sampling to `partial_bsl`) reused over
+/// `total_width / inner_width` cycles, plus a merge stage producing
+/// `out_bsl` bits.
+pub fn design_st(
+    total_width: usize,
+    inner_width: usize,
+    partial_bsl: usize,
+    out_bsl: usize,
+) -> SpatialTemporalBsn {
+    assert_eq!(total_width % inner_width, 0);
+    let cycles = total_width / inner_width;
+    // Inner: single-stage sort + clip/stride to partial_bsl.
+    let mut s = 1usize;
+    while partial_bsl * s * 2 <= inner_width {
+        s *= 2;
+    }
+    let kept = partial_bsl * s;
+    let clip = (inner_width - kept) / 2;
+    let inner = ApproxBsn::new(vec![ApproxStage {
+        m: 1,
+        l: inner_width,
+        sub: SubSample { clip, stride: s },
+    }]);
+    // Merge: cycles × partial_bsl bits down to out_bsl.
+    let mw = cycles * partial_bsl;
+    let ms = (mw / out_bsl).max(1);
+    let mkept = out_bsl * ms;
+    let msub = SubSample { clip: (mw - mkept) / 2, stride: ms };
+    SpatialTemporalBsn::new(inner, total_width, msub)
+}
+
+/// One candidate from the spatial design-space search.
+#[derive(Clone, Debug)]
+pub struct SearchResult {
+    /// The chosen configuration.
+    pub config: ApproxBsn,
+    /// Hardware cost.
+    pub cost: Cost,
+    /// Measured MSE (normalized, as in [`ApproxBsn::mse`]).
+    pub mse: f64,
+}
+
+/// Grid-search the Fig-10b design space for `width` bits: vary the
+/// final-stage stride aggressiveness and inner clip fraction; keep the
+/// cheapest config whose MSE is within `mse_budget`.
+pub fn search_spatial(
+    width: usize,
+    out_bsl: usize,
+    mse_budget: f64,
+    trials: usize,
+    seed: u64,
+) -> SearchResult {
+    let mut rng = Rng::new(seed);
+    let exact = ApproxBsn::exact(width);
+    let mut best = SearchResult {
+        cost: exact.cost(),
+        mse: 0.0,
+        config: exact,
+    };
+    for clip_div in [8usize, 6, 4, 3] {
+        for stride in [1usize, 2, 4] {
+            let cand = design_spatial_with(width, out_bsl, clip_div, stride);
+            let Some(cand) = cand else { continue };
+            let mse = cand.mse(0.5, trials, &mut rng);
+            let cost = cand.cost();
+            if mse <= mse_budget && cost.adp() < best.cost.adp() {
+                best = SearchResult { config: cand, cost, mse };
+            }
+        }
+    }
+    best
+}
+
+/// Per-layer comparison of the three accumulator designs (Table V rows
+/// for one layer; Fig 13 across layers).
+#[derive(Clone, Debug)]
+pub struct LayerProfile {
+    /// Products accumulated (conv K·K·Cin).
+    pub acc_products: usize,
+    /// BSN input width in bits (products × act BSL).
+    pub width_bits: usize,
+    /// Exact baseline BSN.
+    pub exact: Cost,
+    /// Spatial approximate BSN.
+    pub spatial: Cost,
+    /// Spatial MSE.
+    pub spatial_mse: f64,
+    /// Spatial-temporal BSN (total, all cycles).
+    pub st: Cost,
+    /// ST throughput-normalized ADP (Table V footnote).
+    pub st_adp_norm: f64,
+    /// ST MSE.
+    pub st_mse: f64,
+    /// ST cycles.
+    pub st_cycles: usize,
+}
+
+/// Profile one accumulation width at a given activation BSL.
+pub fn profile_layer(
+    acc_products: usize,
+    act_bsl: usize,
+    inner_width_bits: usize,
+    mse_trials: usize,
+    seed: u64,
+) -> LayerProfile {
+    let width_bits = acc_products * act_bsl;
+    let mut rng = Rng::new(seed);
+    let exact = Bsn::new(width_bits).cost();
+    let spatial = design_spatial(width_bits, 16);
+    let spatial_mse = spatial.mse(0.5, mse_trials, &mut rng);
+    let st = design_st(width_bits, inner_width_bits.min(width_bits), 16, 16);
+    let st_mse = st.mse(0.5, mse_trials, &mut rng);
+    LayerProfile {
+        acc_products,
+        width_bits,
+        exact,
+        spatial: spatial.cost(),
+        spatial_mse,
+        st: st.total_cost(),
+        st_adp_norm: st.adp_throughput_normalized(exact.delay_ns),
+        st_mse,
+        st_cycles: st.total_cycles(),
+    }
+}
+
+/// Profile the four ResNet-18 conv sizes (Fig 13).
+pub fn profile_resnet18(act_bsl: usize, mse_trials: usize, seed: u64) -> Vec<LayerProfile> {
+    RESNET18_ACC_WIDTHS
+        .iter()
+        .map(|&wprod| {
+            profile_layer(wprod, act_bsl, RESNET18_ACC_WIDTHS[0] * act_bsl, mse_trials, seed)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spatial_designs_are_valid_and_cheaper() {
+        for w in [1152usize, 2304, 4608, 9216] {
+            let d = design_spatial(w, 16);
+            assert_eq!(d.in_width(), w);
+            assert_eq!(d.out_bsl(), 16);
+            let exact = Bsn::new(w).cost();
+            assert!(
+                d.cost().area_um2 < exact.area_um2,
+                "w={w}: {} !< {}",
+                d.cost().area_um2,
+                exact.area_um2
+            );
+        }
+    }
+
+    #[test]
+    fn spatial_mse_negligible_for_balanced_inputs() {
+        let d = design_spatial(9216, 16);
+        let mut rng = Rng::new(3);
+        let mse = d.mse(0.5, 200, &mut rng);
+        assert!(mse < 1e-2, "mse={mse}");
+    }
+
+    #[test]
+    fn st_designs_cycle_counts() {
+        // Fig 12's shape: 4608 bits on a 576-bit inner = 8 + 1 cycles.
+        let st = design_st(4608, 576, 16, 16);
+        assert_eq!(st.total_cycles(), 9);
+        // Fig 13: same inner serves all four sizes with varying cycles.
+        for (i, &w) in RESNET18_ACC_WIDTHS.iter().enumerate() {
+            let st = design_st(w * 2, 1152, 16, 16);
+            assert_eq!(st.data_cycles(), 1 << i);
+        }
+    }
+
+    #[test]
+    fn search_respects_budget() {
+        let r = search_spatial(2304, 16, 1e-3, 100, 7);
+        assert!(r.mse <= 1e-3);
+        assert_eq!(r.config.in_width(), 2304);
+    }
+
+    #[test]
+    fn profile_orders_match_paper() {
+        // Table V's ordering: exact > spatial > ST(normalized) in ADP,
+        // with ST cheapest in area.
+        let p = profile_layer(4608, 2, 1152, 50, 11);
+        assert!(p.spatial.adp() < p.exact.adp(), "spatial must beat exact");
+        assert!(p.st.area_um2 < p.spatial.area_um2, "ST must be smallest in area");
+        assert!(p.st_adp_norm < p.exact.adp(), "ST normalized ADP must beat exact");
+        assert!(p.st_cycles > 1);
+    }
+
+    #[test]
+    fn divisor_helper() {
+        assert_eq!(divisor_at_least(9216, 18), 18);
+        assert_eq!(divisor_at_least(100, 7), 10);
+        assert_eq!(divisor_at_least(13, 5), 13);
+    }
+}

@@ -1,0 +1,384 @@
+//! The approximate **spatial** sorting network (paper §IV.B, Fig 10b).
+//!
+//! The exact BSN's cost grows super-linearly with accumulation width
+//! (Fig 9a), yet the SI consumes only a handful of output bits — a large
+//! precision gap (Fig 10a). The paper exploits it with *progressive
+//! sorting and sub-sampling*: the network is split into `N` stages; in
+//! stage `i` there are `m_i` sub-BSNs, each sorting `l_i` bits, followed
+//! by a **sub-sampling block** implementing truncated quantization: clip
+//! `c_i` bits at each end of the sorted stream and keep 1 bit of every
+//! `s_i` of the remainder.
+//!
+//! Because the accumulated distribution is near-Gaussian with small
+//! variance (inputs come from many multipliers — Fig 11), aggressive
+//! clipping costs almost nothing, and striding divides the downstream
+//! width (and the represented scale) by `s_i`.
+
+use crate::coding::BitVec;
+use crate::cost::{cost_of, Cost};
+use crate::gates::{GateCount, GateKind};
+use crate::util::Rng;
+use super::bsn::Bsn;
+
+/// A clip-and-stride sub-sampling block on an `l`-bit sorted stream.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SubSample {
+    /// Bits clipped at *each* end of the sorted stream.
+    pub clip: usize,
+    /// Keep one bit of every `stride` remaining bits.
+    pub stride: usize,
+}
+
+impl SubSample {
+    /// Identity sampling.
+    pub const IDENTITY: SubSample = SubSample { clip: 0, stride: 1 };
+
+    /// Output BSL for an `l`-bit input.
+    pub fn out_bsl(&self, l: usize) -> usize {
+        assert!(2 * self.clip < l, "clip {} too large for l={l}", self.clip);
+        let kept = l - 2 * self.clip;
+        assert!(
+            kept % self.stride == 0,
+            "stride {} must divide kept width {kept}",
+            self.stride
+        );
+        kept / self.stride
+    }
+
+    /// Sampled positions: the **middle** bit of each stride group,
+    /// `p_j = clip + j·stride + stride/2` — tapping the centre bit
+    /// instead of the last realizes round-to-nearest quantization in
+    /// pure wiring, avoiding the `-stride/2` systematic bias a
+    /// last-bit tap (floor) would accumulate across stages.
+    pub fn positions(&self, l: usize) -> Vec<usize> {
+        (0..self.out_bsl(l))
+            .map(|j| self.clip + j * self.stride + self.stride / 2)
+            .collect()
+    }
+
+    /// Count-domain application: input count `k` of `l` bits maps to
+    /// `#{j : p_j < k}` over the tapped positions (round-to-nearest
+    /// with saturation at the clip boundaries).
+    pub fn apply_count(&self, k: usize, l: usize) -> usize {
+        let out = self.out_bsl(l);
+        let base = self.clip + self.stride / 2;
+        if k <= base {
+            return 0;
+        }
+        ((k - base - 1) / self.stride + 1).min(out)
+    }
+
+    /// Bit-level application on an actual sorted stream.
+    pub fn apply_bits(&self, sorted: &BitVec) -> BitVec {
+        let l = sorted.len();
+        let pos = self.positions(l);
+        let mut out = BitVec::zeros(pos.len());
+        for (j, &p) in pos.iter().enumerate() {
+            out.set(j, sorted.get(p));
+        }
+        out
+    }
+}
+
+/// One stage of the parameterized BSN: `m` sub-BSNs of `l`-bit inputs,
+/// each followed by the same sub-sampling block.
+#[derive(Clone, Copy, Debug)]
+pub struct ApproxStage {
+    /// Number of parallel sub-BSNs.
+    pub m: usize,
+    /// Input BSL per sub-BSN.
+    pub l: usize,
+    /// The truncated-quantization sampler.
+    pub sub: SubSample,
+}
+
+impl ApproxStage {
+    /// Input width of the stage.
+    pub fn in_width(&self) -> usize {
+        self.m * self.l
+    }
+
+    /// Output width of the stage.
+    pub fn out_width(&self) -> usize {
+        self.m * self.sub.out_bsl(self.l)
+    }
+}
+
+/// The full approximate spatial BSN: a pipeline of [`ApproxStage`]s.
+///
+/// The *scale divisor* is the product of all strides: the final count
+/// represents the exact accumulation divided by that factor (with
+/// clipping saturation) — downstream SI synthesis must fold it into its
+/// input scale.
+#[derive(Clone, Debug)]
+pub struct ApproxBsn {
+    stages: Vec<ApproxStage>,
+}
+
+impl ApproxBsn {
+    /// Build from stages; validates that widths chain and the final
+    /// stage has `m == 1`.
+    pub fn new(stages: Vec<ApproxStage>) -> Self {
+        assert!(!stages.is_empty());
+        for w in stages.windows(2) {
+            assert_eq!(
+                w[0].out_width(),
+                w[1].in_width(),
+                "stage widths must chain: {} -> {}",
+                w[0].out_width(),
+                w[1].in_width()
+            );
+        }
+        assert_eq!(stages.last().unwrap().m, 1, "final stage must merge to one BSN");
+        Self { stages }
+    }
+
+    /// The exact (single-stage, no sampling) BSN as a degenerate config.
+    pub fn exact(width: usize) -> Self {
+        Self::new(vec![ApproxStage { m: 1, l: width, sub: SubSample::IDENTITY }])
+    }
+
+    /// Stages.
+    pub fn stages(&self) -> &[ApproxStage] {
+        &self.stages
+    }
+
+    /// Total input width in bits.
+    pub fn in_width(&self) -> usize {
+        self.stages[0].in_width()
+    }
+
+    /// Final output BSL.
+    pub fn out_bsl(&self) -> usize {
+        let s = self.stages.last().unwrap();
+        s.sub.out_bsl(s.l)
+    }
+
+    /// Product of all strides — the factor by which the represented
+    /// scale was divided.
+    pub fn scale_divisor(&self) -> usize {
+        self.stages.iter().map(|s| s.sub.stride).product()
+    }
+
+    /// Count-domain evaluation from per-leaf-group counts. `counts[i]`
+    /// is the popcount of the `i`-th `l_0`-bit input group of stage 0
+    /// (`counts.len() == m_0`). Returns the final output count.
+    ///
+    /// Sorting a concatenation of groups merges their popcounts, so a
+    /// stage's group count is the sum of the child counts feeding it —
+    /// this is the exact functional semantics of the bit-level network
+    /// (property-tested against [`ApproxBsn::eval_bits`]).
+    pub fn eval_counts(&self, counts: &[usize]) -> usize {
+        assert_eq!(counts.len(), self.stages[0].m);
+        let mut cur: Vec<usize> = counts.to_vec();
+        let mut cur_bsl = self.stages[0].l;
+        for (i, st) in self.stages.iter().enumerate() {
+            if i > 0 {
+                // Regroup: each of the m_i groups of l_i bits is made of
+                // l_i / cur_bsl child blocks.
+                assert_eq!(st.l % cur_bsl, 0);
+                let per = st.l / cur_bsl;
+                assert_eq!(cur.len(), st.m * per);
+                cur = cur.chunks(per).map(|c| c.iter().sum()).collect();
+            }
+            cur = cur.iter().map(|&k| st.sub.apply_count(k, st.l)).collect();
+            cur_bsl = st.sub.out_bsl(st.l);
+        }
+        debug_assert_eq!(cur.len(), 1);
+        cur[0]
+    }
+
+    /// Bit-level evaluation: actually sorts every sub-BSN and samples
+    /// bits. Exact circuit semantics (slow; used for verification).
+    pub fn eval_bits(&self, input: &BitVec) -> BitVec {
+        assert_eq!(input.len(), self.in_width());
+        let mut cur = input.clone();
+        for st in &self.stages {
+            let mut next = BitVec::zeros(0);
+            let bsn = Bsn::new(st.l);
+            for g in 0..st.m {
+                let mut grp = BitVec::zeros(st.l);
+                for i in 0..st.l {
+                    grp.set(i, cur.get(g * st.l + i));
+                }
+                let sorted = bsn.sort_gate_level(&grp);
+                next.extend_from(&st.sub.apply_bits(&sorted));
+            }
+            cur = next;
+        }
+        cur
+    }
+
+    /// Exact reference: the un-approximated result re-expressed at the
+    /// output scale, `(k_total - W/2) / divisor` (real-valued).
+    pub fn exact_scaled_value(&self, counts: &[usize]) -> f64 {
+        let total: usize = counts.iter().sum();
+        let q = total as f64 - self.in_width() as f64 / 2.0;
+        q / self.scale_divisor() as f64
+    }
+
+    /// Decoded approximate value at the output scale.
+    pub fn approx_value(&self, counts: &[usize]) -> f64 {
+        self.eval_counts(counts) as f64 - self.out_bsl() as f64 / 2.0
+    }
+
+    /// Gate composition: stage 0 fully sorts its (unsorted) groups;
+    /// every later stage only **merges** already-sorted sub-sampled
+    /// blocks, so it uses a bitonic merge tree (see
+    /// [`Bsn::merge_tree_gate_count`]) — this is what makes progressive
+    /// sorting cheaper *and* shallower than one monolithic sort.
+    pub fn gate_count(&self) -> GateCount {
+        let mut total = GateCount::new();
+        let mut child_bsl = 0usize;
+        for (i, st) in self.stages.iter().enumerate() {
+            let stage_net = if i == 0 {
+                Bsn::new(st.l).gate_count().replicate(st.m as u64)
+            } else {
+                Bsn::merge_tree_gate_count(st.l / child_bsl, child_bsl)
+                    .replicate(st.m as u64)
+            };
+            let mut sample = GateCount::new();
+            sample.add(GateKind::Mux2, (st.m * st.sub.out_bsl(st.l)) as u64);
+            sample.depth = GateKind::Mux2.delay_eq();
+            total = total.series(&stage_net.series(&sample));
+            child_bsl = st.sub.out_bsl(st.l);
+        }
+        total
+    }
+
+    /// Physical cost.
+    pub fn cost(&self) -> Cost {
+        cost_of(&self.gate_count())
+    }
+
+    /// Mean-squared error versus the exact accumulation, evaluated over
+    /// random near-Gaussian inputs (each input bit Bernoulli(p)), in
+    /// units of the *output* quantization step, normalized by the output
+    /// range — comparable across configurations (Table V, Fig 13).
+    pub fn mse(&self, p_one: f64, trials: usize, rng: &mut Rng) -> f64 {
+        let m0 = self.stages[0].m;
+        let l0 = self.stages[0].l;
+        let mut se = 0.0;
+        for _ in 0..trials {
+            let counts: Vec<usize> = (0..m0)
+                .map(|_| (0..l0).filter(|_| rng.gen_bool(p_one)).count())
+                .collect();
+            let exact = self.exact_scaled_value(&counts);
+            let approx = self.approx_value(&counts);
+            let norm = self.in_width() as f64 / (2.0 * self.scale_divisor() as f64);
+            se += ((approx - exact) / norm).powi(2);
+        }
+        se / trials as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn subsample_identity() {
+        let s = SubSample::IDENTITY;
+        assert_eq!(s.out_bsl(16), 16);
+        for k in 0..=16 {
+            assert_eq!(s.apply_count(k, 16), k);
+        }
+    }
+
+    #[test]
+    fn subsample_clip_and_stride() {
+        let s = SubSample { clip: 4, stride: 2 };
+        assert_eq!(s.out_bsl(16), 4);
+        assert_eq!(s.positions(16), vec![5, 7, 9, 11]);
+        assert_eq!(s.apply_count(0, 16), 0);
+        assert_eq!(s.apply_count(4, 16), 0); // fully clipped
+        assert_eq!(s.apply_count(6, 16), 1);
+        assert_eq!(s.apply_count(12, 16), 4);
+        assert_eq!(s.apply_count(16, 16), 4); // saturates
+    }
+
+    #[test]
+    fn subsample_bits_equals_counts_on_sorted() {
+        let s = SubSample { clip: 2, stride: 2 };
+        for k in 0..=16usize {
+            let sorted = crate::coding::ThermCode::from_count(k, 16);
+            let bits = s.apply_bits(sorted.bits());
+            assert_eq!(bits.popcount(), s.apply_count(k, 16), "k={k}");
+        }
+    }
+
+    fn two_stage() -> ApproxBsn {
+        // 4 groups of 16 bits -> sample to 8 each -> one 32-bit merge ->
+        // 16-bit output.
+        ApproxBsn::new(vec![
+            ApproxStage { m: 4, l: 16, sub: SubSample { clip: 0, stride: 2 } },
+            ApproxStage { m: 1, l: 32, sub: SubSample { clip: 8, stride: 1 } },
+        ])
+    }
+
+    #[test]
+    fn widths_chain_and_scale() {
+        let a = two_stage();
+        assert_eq!(a.in_width(), 64);
+        assert_eq!(a.out_bsl(), 16);
+        assert_eq!(a.scale_divisor(), 2);
+    }
+
+    #[test]
+    fn counts_path_equals_bits_path() {
+        let a = two_stage();
+        let mut rng = Rng::new(5);
+        for _ in 0..50 {
+            let mut bits = BitVec::zeros(64);
+            for i in 0..64 {
+                bits.set(i, rng.gen_bool(0.5));
+            }
+            let counts: Vec<usize> = (0..4)
+                .map(|g| (0..16).filter(|&i| bits.get(g * 16 + i)).count())
+                .collect();
+            assert_eq!(
+                a.eval_bits(&bits).popcount(),
+                a.eval_counts(&counts),
+                "bits={bits}"
+            );
+        }
+    }
+
+    #[test]
+    fn exact_config_is_exact() {
+        let a = ApproxBsn::exact(64);
+        let counts = vec![40usize];
+        assert_eq!(a.eval_counts(&counts), 40);
+        assert_eq!(a.approx_value(&counts), a.exact_scaled_value(&counts));
+    }
+
+    #[test]
+    fn near_gaussian_inputs_small_error() {
+        // With balanced inputs the accumulated count concentrates near
+        // the center; clipping tails costs little (Fig 11's argument).
+        let a = two_stage();
+        let mut rng = Rng::new(9);
+        let mse = a.mse(0.5, 500, &mut rng);
+        assert!(mse < 1e-2, "mse={mse}");
+    }
+
+    #[test]
+    fn approx_is_cheaper_than_exact() {
+        let approx = ApproxBsn::new(vec![
+            ApproxStage { m: 16, l: 64, sub: SubSample { clip: 16, stride: 2 } },
+            ApproxStage { m: 1, l: 256, sub: SubSample { clip: 96, stride: 4 } },
+        ]);
+        let exact = Bsn::new(1024);
+        assert!(approx.cost().area_um2 < exact.cost().area_um2);
+        assert_eq!(approx.in_width(), 1024);
+    }
+
+    #[test]
+    #[should_panic(expected = "must chain")]
+    fn bad_chaining_rejected() {
+        ApproxBsn::new(vec![
+            ApproxStage { m: 2, l: 16, sub: SubSample::IDENTITY },
+            ApproxStage { m: 1, l: 16, sub: SubSample::IDENTITY },
+        ]);
+    }
+}

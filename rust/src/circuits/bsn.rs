@@ -1,0 +1,483 @@
+//! The bitonic sorting network (BSN) non-linear adder (paper §II.B,
+//! Fig 3b).
+//!
+//! All product bitstreams are concatenated and sorted descending by a
+//! Batcher bitonic network [13]; because thermometer decode depends only
+//! on the popcount, the sorted output *is* the exact accumulation result
+//! in thermometer coding — and feeding it to the selective interconnect
+//! realizes the activation function exactly.
+//!
+//! Each comparator is one AND + one OR (`max = a ∨ b`, `min = a ∧ b`),
+//! so for `n = 2^k` inputs the network has exactly `n·k(k+1)/4`
+//! comparators in `k(k+1)/2` stages — the super-linear growth that
+//! motivates §IV (Fig 9).
+//!
+//! Three views of the same circuit:
+//! * [`Bsn::sort_gate_level`] — compare-exchange simulation, bit-exact,
+//!   supports per-wire fault injection;
+//! * [`Bsn::accumulate`] — functional popcount model (property-tested
+//!   equal to the gate-level view);
+//! * [`Bsn::gate_count`] — exact combinatorics for the cost model.
+
+use crate::coding::{BitVec, ThermCode};
+use crate::cost::{cost_of, Cost};
+use crate::gates::{GateCount, GateKind};
+use crate::util::Rng;
+
+/// A bitonic sorting network over `width` bit-inputs (padded internally
+/// to the next power of two with 0s, which sort to the tail and leave
+/// the thermometer semantics untouched).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Bsn {
+    /// Requested input width in bits.
+    width: usize,
+    /// Padded power-of-two width.
+    padded: usize,
+}
+
+impl Bsn {
+    /// Build a BSN for `width` input bits.
+    pub fn new(width: usize) -> Self {
+        assert!(width >= 1, "BSN width must be >= 1");
+        Self { width, padded: width.next_power_of_two() }
+    }
+
+    /// Requested width.
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    /// Internal power-of-two width.
+    pub fn padded_width(&self) -> usize {
+        self.padded
+    }
+
+    /// Number of comparators after constant-pruning synthesis: the
+    /// padded network has `n·k(k+1)/4` comparators for `n = 2^k`, but a
+    /// comparator whose lanes are fed (directly or transitively) by
+    /// padding constants reduces to wires. We model pruning by counting
+    /// only compare-exchanges whose both lanes lie in the live region —
+    /// the standard const-propagation estimate, exact for powers of two.
+    pub fn comparator_count(&self) -> u64 {
+        let n = self.padded;
+        let w = self.width;
+        if n == w {
+            let k = (n as u64).trailing_zeros() as u64;
+            return n as u64 * k * (k + 1) / 4;
+        }
+        // Closed form per stage parameter j (a power of two): the live
+        // pairs are (i, i + j) with bit j of i clear and i + j < w, so
+        // their number is #{i < w - j : bit_j(i) = 0}
+        //             = floor((w-j) / 2j)·j + min((w-j) mod 2j, j).
+        let live_pairs = |j: usize| -> u64 {
+            if w <= j {
+                return 0;
+            }
+            let x = (w - j) as u64;
+            let j = j as u64;
+            (x / (2 * j)) * j + (x % (2 * j)).min(j)
+        };
+        let mut count = 0u64;
+        let mut k = 2usize;
+        while k <= n {
+            let mut j = k / 2;
+            while j >= 1 {
+                count += live_pairs(j);
+                j /= 2;
+            }
+            k *= 2;
+        }
+        count
+    }
+
+    /// Comparator stages on the critical path: `k(k+1)/2`.
+    pub fn depth_stages(&self) -> u64 {
+        let k = (self.padded as u64).trailing_zeros() as u64;
+        k * (k + 1) / 2
+    }
+
+    /// Exact gate composition: one AND + one OR per comparator.
+    pub fn gate_count(&self) -> GateCount {
+        let c = self.comparator_count();
+        let mut g = GateCount::new();
+        g.add(GateKind::And2, c);
+        g.add(GateKind::Or2, c);
+        g.depth = self.depth_stages() as f64;
+        g
+    }
+
+    /// Physical cost.
+    pub fn cost(&self) -> Cost {
+        cost_of(&self.gate_count())
+    }
+
+    /// Gate-level descending sort (1s first). Bit-exact simulation of
+    /// the compare-exchange network; the returned vector has the
+    /// *requested* width (padding stripped).
+    pub fn sort_gate_level(&self, bits: &BitVec) -> BitVec {
+        self.sort_impl(bits, None::<&mut fn() -> bool>)
+    }
+
+    /// Gate-level sort with per-comparator-output fault injection: each
+    /// of the two output wires of every comparator flips with
+    /// probability `ber`. Used by the Fig-5 fault-tolerance experiment.
+    pub fn sort_with_faults(&self, bits: &BitVec, ber: f64, rng: &mut Rng) -> BitVec {
+        let mut flip = || rng.gen_bool(ber);
+        self.sort_impl(bits, Some(&mut flip))
+    }
+
+    fn sort_impl<F: FnMut() -> bool>(&self, bits: &BitVec, mut fault: Option<&mut F>) -> BitVec {
+        assert_eq!(bits.len(), self.width, "BSN input width mismatch");
+        if fault.is_none() {
+            return self.sort_packed(bits);
+        }
+        let n = self.padded;
+        let mut v = vec![false; n];
+        v[..self.width].copy_from_slice(bits.as_slice());
+
+        // Batcher's bitonic sort, descending (ones first).
+        let mut k = 2usize;
+        while k <= n {
+            let mut j = k / 2;
+            while j >= 1 {
+                for i in 0..n {
+                    let l = i ^ j;
+                    if l > i {
+                        let descending = i & k == 0;
+                        let (a, b) = (v[i], v[l]);
+                        // Comparator: OR on the "greater" lane, AND on
+                        // the "lesser" lane.
+                        let (mut hi, mut lo) = (a || b, a && b);
+                        if let Some(f) = fault.as_deref_mut() {
+                            if f() {
+                                hi = !hi;
+                            }
+                            if f() {
+                                lo = !lo;
+                            }
+                        }
+                        if descending {
+                            v[i] = hi;
+                            v[l] = lo;
+                        } else {
+                            v[i] = lo;
+                            v[l] = hi;
+                        }
+                    }
+                }
+                j /= 2;
+            }
+            k *= 2;
+        }
+        BitVec::from_bits(&v[..self.width])
+    }
+
+    /// Bit-sliced (64-way word-parallel) bitonic sort — the fault-free
+    /// fast path of [`Bsn::sort_gate_level`]. Compare-exchange of a
+    /// whole word of independent pairs is two bitwise ops (`a|b`,
+    /// `a&b`), so the network runs at ~64 comparators per instruction.
+    /// Property-tested equal to the scalar compare-exchange network.
+    fn sort_packed(&self, bits: &BitVec) -> BitVec {
+        let n = self.padded;
+        let words = n.div_ceil(64);
+        let mut v = vec![0u64; words];
+        for (i, b) in bits.iter().enumerate() {
+            if b {
+                v[i / 64] |= 1 << (i % 64);
+            }
+        }
+        let mut k = 2usize;
+        while k <= n {
+            let mut j = k / 2;
+            while j >= 1 {
+                if j >= 64 {
+                    // Word-aligned pairs: word wi pairs with word
+                    // wi + j/64; direction constant per word (k > 64).
+                    let jw = j / 64;
+                    for wi in 0..words {
+                        let li = wi ^ jw;
+                        if li > wi {
+                            let (a, b) = (v[wi], v[li]);
+                            let (hi, lo) = (a | b, a & b);
+                            // descending iff (bit index & k) == 0; for
+                            // word-aligned blocks this is per-word.
+                            if (wi * 64) & k == 0 {
+                                v[wi] = hi;
+                                v[li] = lo;
+                            } else {
+                                v[wi] = lo;
+                                v[li] = hi;
+                            }
+                        }
+                    }
+                } else {
+                    // In-word pairs at stride j: mask of "low" lanes
+                    // (bit j of the in-word index clear), replicated.
+                    let m = Self::low_lane_mask(j);
+                    // Direction mask: 1 where the pair is descending
+                    // (index & k == 0). For k >= 64 it's constant per
+                    // word; below, a repeating 2k pattern.
+                    for (wi, w) in v.iter_mut().enumerate() {
+                        let a = *w & m;
+                        let b = (*w >> j) & m;
+                        let or_ = a | b;
+                        let and_ = a & b;
+                        let desc = (or_ & m) | ((and_ & m) << j);
+                        let asc = (and_ & m) | ((or_ & m) << j);
+                        let dmask = Self::desc_mask(wi, k);
+                        *w = (desc & dmask) | (asc & !dmask);
+                    }
+                }
+                j /= 2;
+            }
+            k *= 2;
+        }
+        let mut out = BitVec::zeros(self.width);
+        for i in 0..self.width {
+            if v[i / 64] >> (i % 64) & 1 == 1 {
+                out.set(i, true);
+            }
+        }
+        out
+    }
+
+    /// Mask selecting in-word lanes whose bit `j` of the index is 0
+    /// (the "low" element of each stride-`j` pair), for `j < 64`.
+    fn low_lane_mask(j: usize) -> u64 {
+        // Repeating pattern: j ones, j zeros.
+        let mut m = 0u64;
+        let mut i = 0;
+        while i < 64 {
+            if (i / j) % 2 == 0 {
+                m |= 1 << i;
+            }
+            i += 1;
+        }
+        m
+    }
+
+    /// Mask of bit positions in word `wi` whose global index `i`
+    /// satisfies `i & k == 0` (descending blocks), for any `k`.
+    fn desc_mask(wi: usize, k: usize) -> u64 {
+        if k >= 64 {
+            return if (wi * 64) & k == 0 { u64::MAX } else { 0 };
+        }
+        let mut m = 0u64;
+        for i in 0..64 {
+            if (wi * 64 + i) & k == 0 {
+                m |= 1 << i;
+            }
+        }
+        m
+    }
+
+    /// Functional accumulation: concatenate the product codes, "sort"
+    /// (popcount), and return the thermometer sum over the full width.
+    /// Exactly equals the gate-level path (see property tests).
+    pub fn accumulate(&self, products: &[ThermCode]) -> ThermCode {
+        let total: usize = products.iter().map(|p| p.count()).sum();
+        let w: usize = products.iter().map(|p| p.bsl()).sum();
+        assert_eq!(w, self.width, "BSN width mismatch: got {w} bits, expected {}", self.width);
+        ThermCode::from_count(total, self.width)
+    }
+
+    /// Gate composition of a **bitonic merge tree** combining `blocks`
+    /// already-sorted blocks of `block_bsl` bits each. Stage `i` merges
+    /// pairs of sorted sequences of `block_bsl·2^i` bits with a bitonic
+    /// merger (depth `log2(n)`, `n·log2(n)/2` comparators) — far
+    /// cheaper than a full sort, and exactly what the inner stages of
+    /// the progressive (approximate) BSN need, since sub-sampled
+    /// outputs of sorted groups are themselves sorted.
+    pub fn merge_tree_gate_count(blocks: usize, block_bsl: usize) -> GateCount {
+        let mut g = GateCount::new();
+        if blocks <= 1 {
+            return g;
+        }
+        let levels = (blocks as f64).log2().ceil() as u32;
+        let mut remaining = blocks as u64;
+        let mut size = block_bsl as u64;
+        for _ in 0..levels {
+            let pairs = remaining / 2;
+            let merged = 2 * size;
+            let n = merged.next_power_of_two();
+            let k = n.trailing_zeros() as u64;
+            // One bitonic merger: n/2 comparators per stage, k stages.
+            let comps = pairs * n / 2 * k;
+            g.add(GateKind::And2, comps);
+            g.add(GateKind::Or2, comps);
+            g.depth += k as f64;
+            remaining = remaining.div_ceil(2);
+            size = merged;
+        }
+        g
+    }
+
+    /// Convenience: concatenate product bit-streams for the gate-level
+    /// path.
+    pub fn concat(products: &[ThermCode]) -> BitVec {
+        let mut out = BitVec::zeros(0);
+        for p in products {
+            out.extend_from(p.bits());
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coding::Ternary;
+
+    #[test]
+    fn sorts_descending_small() {
+        let bsn = Bsn::new(8);
+        let out = bsn.sort_gate_level(&BitVec::from_str01("01010110"));
+        assert_eq!(out.to_str01(), "11110000");
+    }
+
+    #[test]
+    fn sort_preserves_popcount_and_is_thermometer() {
+        let mut rng = Rng::new(7);
+        for width in [1usize, 2, 3, 5, 8, 13, 16, 31, 64, 100] {
+            let bsn = Bsn::new(width);
+            for _ in 0..20 {
+                let mut b = BitVec::zeros(width);
+                for i in 0..width {
+                    b.set(i, rng.gen_bool(0.5));
+                }
+                let sorted = bsn.sort_gate_level(&b);
+                assert_eq!(sorted.len(), width);
+                assert_eq!(sorted.popcount(), b.popcount());
+                assert!(sorted.is_thermometer(), "{} -> {}", b, sorted);
+            }
+        }
+    }
+
+    #[test]
+    fn gate_level_equals_functional_accumulate() {
+        let mut rng = Rng::new(21);
+        for n_products in [1usize, 4, 9, 16] {
+            for bsl in [2usize, 4, 8] {
+                let products: Vec<ThermCode> = (0..n_products)
+                    .map(|_| {
+                        let (lo, hi) = ThermCode::range(bsl);
+                        ThermCode::encode(rng.gen_range_i64(lo, hi), bsl)
+                    })
+                    .collect();
+                let bsn = Bsn::new(n_products * bsl);
+                let functional = bsn.accumulate(&products);
+                let gate = bsn.sort_gate_level(&Bsn::concat(&products));
+                assert_eq!(gate.popcount(), functional.count());
+                // Accumulated value equals the integer sum of products.
+                let sum: i64 = products.iter().map(|p| p.decode()).sum();
+                assert_eq!(functional.decode(), sum);
+            }
+        }
+    }
+
+    #[test]
+    fn accumulate_ternary_products_exact() {
+        // 2-bit products a*w summed by the BSN must equal the integer
+        // dot product — the end-to-end §II claim at micro scale.
+        let acts = [1i64, -1, 0, 1, -1, 0, 1, 1];
+        let ws = [Ternary::Pos, Ternary::Pos, Ternary::Neg, Ternary::Neg,
+                  Ternary::Zero, Ternary::Pos, Ternary::Pos, Ternary::Neg];
+        let products: Vec<ThermCode> = acts
+            .iter()
+            .zip(ws)
+            .map(|(&a, w)| {
+                crate::circuits::multiplier::TernaryMultiplier::mult_therm(
+                    &ThermCode::encode(a, 2),
+                    w,
+                )
+            })
+            .collect();
+        let bsn = Bsn::new(16);
+        let acc = bsn.accumulate(&products);
+        let expect: i64 = acts.iter().zip(ws).map(|(&a, w)| a * w.to_i64()).sum();
+        assert_eq!(acc.decode(), expect);
+    }
+
+    #[test]
+    fn comparator_combinatorics() {
+        // n = 2^k -> n k(k+1)/4 comparators, k(k+1)/2 stages.
+        let bsn = Bsn::new(16); // k = 4
+        assert_eq!(bsn.comparator_count(), 16 * 4 * 5 / 4);
+        assert_eq!(bsn.depth_stages(), 10);
+        let bsn2 = Bsn::new(1024); // k = 10
+        assert_eq!(bsn2.comparator_count(), 1024 * 10 * 11 / 4);
+        assert_eq!(bsn2.depth_stages(), 55);
+    }
+
+    #[test]
+    fn padded_width() {
+        assert_eq!(Bsn::new(9216).padded_width(), 16384);
+        assert_eq!(Bsn::new(1024).padded_width(), 1024);
+    }
+
+    #[test]
+    fn table5_calibration_anchor() {
+        // The 3x3x512 conv: 4608 products x 2-bit = 9216 bits.
+        let bsn = Bsn::new(9216);
+        let c = bsn.cost();
+        // Calibrated to Table V baseline: 2.95e5 um^2, 4.33 ns.
+        assert!((c.area_um2 / 2.95e5 - 1.0).abs() < 0.02, "area {}", c.area_um2);
+        assert!((c.delay_ns / 4.33 - 1.0).abs() < 0.02, "delay {}", c.delay_ns);
+    }
+
+    #[test]
+    fn packed_sort_equals_scalar() {
+        // The word-parallel fast path must match the scalar network
+        // exactly for every width class and density.
+        let mut rng = Rng::new(99);
+        for width in [1usize, 7, 63, 64, 65, 127, 128, 200, 511, 1024] {
+            let bsn = Bsn::new(width);
+            for density in [0.1, 0.5, 0.9] {
+                for _ in 0..5 {
+                    let mut b = BitVec::zeros(width);
+                    for i in 0..width {
+                        b.set(i, rng.gen_bool(density));
+                    }
+                    let packed = bsn.sort_gate_level(&b);
+                    // Scalar path: force the fault machinery with a
+                    // never-firing injector.
+                    let mut never = || false;
+                    let scalar = bsn.sort_impl(&b, Some(&mut never));
+                    assert_eq!(packed, scalar, "width={width} in={b}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn zero_ber_faults_equals_clean() {
+        let mut rng = Rng::new(3);
+        let bsn = Bsn::new(32);
+        let mut b = BitVec::zeros(32);
+        for i in 0..32 {
+            b.set(i, rng.gen_bool(0.4));
+        }
+        let clean = bsn.sort_gate_level(&b);
+        let faulty = bsn.sort_with_faults(&b, 0.0, &mut rng);
+        assert_eq!(clean, faulty);
+    }
+
+    #[test]
+    fn fault_injection_bounded_impact() {
+        // With small BER the popcount error should be small relative to
+        // width — SC's graceful degradation (Fig 5's mechanism).
+        let mut rng = Rng::new(11);
+        let bsn = Bsn::new(256);
+        let mut b = BitVec::zeros(256);
+        for i in 0..256 {
+            b.set(i, rng.gen_bool(0.5));
+        }
+        let clean = bsn.sort_gate_level(&b).popcount() as i64;
+        let mut max_err = 0i64;
+        for _ in 0..10 {
+            let f = bsn.sort_with_faults(&b, 1e-3, &mut rng).popcount() as i64;
+            max_err = max_err.max((f - clean).abs());
+        }
+        assert!(max_err <= 16, "max_err={max_err}");
+    }
+}

@@ -1,0 +1,313 @@
+//! The complete SC convolution datapath (paper Figs 3/6; measured in
+//! Fig 2, Table IV, Table V, Fig 13).
+//!
+//! One output pixel of a conv layer with accumulation width `N`
+//! (= `K·K·C_in` products) is computed by:
+//!
+//! ```text
+//!  N × [ternary multiplier]  ──┐
+//!                              ├─→ [BSN variant] ─→ [SI] ─→ activation
+//!  residual ─→ [re-scale] ────┘        (exact / spatial / spatial-temporal)
+//! ```
+//!
+//! The BSN variant is the paper's §II→§IV progression; everything else
+//! is shared. [`ConvDatapath::cost`] rolls up area/delay/energy, and
+//! [`ConvDatapath::eval_counts`] gives the exact functional output used
+//! by the bit-exact network executor.
+
+use crate::coding::{Ternary, ThermCode};
+use crate::cost::{cost_of, Cost};
+use super::approx_bsn::ApproxBsn;
+use super::bsn::Bsn;
+use super::multiplier::TernaryMultiplier;
+use super::rescale::RescaleBlock;
+use super::si::{ActivationFn, SelectiveInterconnect};
+use super::st_bsn::SpatialTemporalBsn;
+
+/// Which accumulator implements the non-linear adder.
+#[derive(Clone, Debug)]
+pub enum BsnKind {
+    /// §II: one exact bitonic network over all bits.
+    Exact,
+    /// §IV.B: approximate spatial BSN.
+    Spatial(ApproxBsn),
+    /// §IV.B: spatial-temporal folding.
+    SpatialTemporal(SpatialTemporalBsn),
+}
+
+/// Static configuration of a conv datapath.
+#[derive(Clone, Debug)]
+pub struct DatapathConfig {
+    /// Number of products accumulated (K·K·C_in).
+    pub acc_width: usize,
+    /// Activation BSL (weights are always ternary / BSL 2).
+    pub act_bsl: usize,
+    /// Residual BSL; `None` disables the residual path (§II model).
+    pub residual_bsl: Option<usize>,
+    /// Output BSL after the SI.
+    pub out_bsl: usize,
+    /// The accumulator variant.
+    pub bsn: BsnKind,
+    /// The activation realized by the SI.
+    pub activation: ActivationFn,
+}
+
+/// An instantiated datapath with its synthesized SI.
+#[derive(Clone, Debug)]
+pub struct ConvDatapath {
+    cfg: DatapathConfig,
+    si: SelectiveInterconnect,
+    /// Width in bits entering the accumulator (products + residual).
+    acc_bits: usize,
+}
+
+impl ConvDatapath {
+    /// Build and synthesize. Panics if the BSN variant's width does not
+    /// match `acc_width·act_bsl (+ residual_bsl)`.
+    pub fn new(cfg: DatapathConfig) -> Self {
+        let acc_bits = cfg.acc_width * cfg.act_bsl + cfg.residual_bsl.unwrap_or(0);
+        let (si_in, divisor) = match &cfg.bsn {
+            BsnKind::Exact => (acc_bits, 1usize),
+            BsnKind::Spatial(a) => {
+                assert_eq!(a.in_width(), acc_bits, "spatial BSN width mismatch");
+                (a.out_bsl(), a.scale_divisor())
+            }
+            BsnKind::SpatialTemporal(st) => {
+                assert_eq!(st.total_width(), acc_bits, "ST BSN width mismatch");
+                (st.out_bsl(), st.scale_divisor())
+            }
+        };
+        // The SI sees counts at the (possibly divided) accumulator
+        // scale; fold the divisor into the activation's input step so
+        // the synthesized transfer function is unchanged.
+        let act = Self::rescaled_activation(&cfg.activation, divisor as f64);
+        let si = SelectiveInterconnect::for_activation(&act, si_in, cfg.out_bsl);
+        Self { cfg, si, acc_bits }
+    }
+
+    fn rescaled_activation(act: &ActivationFn, divisor: f64) -> ActivationFn {
+        match act {
+            ActivationFn::Identity => ActivationFn::Identity,
+            ActivationFn::Relu { ratio } => ActivationFn::Relu { ratio: ratio * divisor },
+            ActivationFn::BnRelu { gamma, beta, ratio } => ActivationFn::BnRelu {
+                gamma: *gamma,
+                beta: beta / divisor,
+                ratio: ratio * divisor,
+            },
+            ActivationFn::Tanh { gain } => ActivationFn::Tanh { gain: gain * divisor },
+            ActivationFn::TwoStep { t1, t2 } => ActivationFn::TwoStep {
+                t1: (*t1 as f64 / divisor).round() as usize,
+                t2: (*t2 as f64 / divisor).round() as usize,
+            },
+        }
+    }
+
+    /// Configuration.
+    pub fn config(&self) -> &DatapathConfig {
+        &self.cfg
+    }
+
+    /// The synthesized SI.
+    pub fn si(&self) -> &SelectiveInterconnect {
+        &self.si
+    }
+
+    /// Functional evaluation: activations (quantized, in
+    /// `[-act_bsl/2, act_bsl/2]`), ternary weights, optional residual
+    /// count at residual BSL. Returns the output [`ThermCode`].
+    pub fn eval(
+        &self,
+        acts: &[i64],
+        weights: &[Ternary],
+        residual: Option<&ThermCode>,
+    ) -> ThermCode {
+        assert_eq!(acts.len(), self.cfg.acc_width);
+        assert_eq!(weights.len(), self.cfg.acc_width);
+        let l = self.cfg.act_bsl;
+        let mut counts: Vec<usize> = acts
+            .iter()
+            .zip(weights)
+            .map(|(&a, &w)| {
+                TernaryMultiplier::mult_therm(&ThermCode::encode(a, l), w).count()
+            })
+            .collect();
+        match (self.cfg.residual_bsl, residual) {
+            (Some(rb), Some(r)) => {
+                assert_eq!(r.bsl(), rb);
+                counts.push(r.count());
+            }
+            (None, None) => {}
+            _ => panic!("residual presence must match the configuration"),
+        }
+        let out_count = self.accumulate_activate(&counts);
+        ThermCode::from_count(out_count, self.cfg.out_bsl)
+    }
+
+    /// Count-domain core: accumulate per-product counts through the BSN
+    /// variant and apply the SI.
+    pub fn accumulate_activate(&self, product_counts: &[usize]) -> usize {
+        let acc_count = match &self.cfg.bsn {
+            BsnKind::Exact => product_counts.iter().sum(),
+            BsnKind::Spatial(a) => {
+                let grouped = Self::regroup(product_counts, a.stages()[0].m, self.per_product_bits());
+                a.eval_counts(&grouped)
+            }
+            BsnKind::SpatialTemporal(st) => {
+                let m0 = st.inner().stages()[0].m * st.data_cycles();
+                let grouped = Self::regroup(product_counts, m0, self.per_product_bits());
+                st.eval_counts(&grouped)
+            }
+        };
+        self.si.apply_count(acc_count)
+    }
+
+    /// Bits contributed per product-slot (the residual slot is appended
+    /// with its own BSL, folded into the last group).
+    fn per_product_bits(&self) -> usize {
+        self.cfg.act_bsl
+    }
+
+    /// Regroup flat per-product counts into `m0` leaf groups of equal
+    /// bit width. The residual (if present) rides in the final group;
+    /// widths were validated at construction.
+    fn regroup(counts: &[usize], m0: usize, _bits_each: usize) -> Vec<usize> {
+        let per = counts.len().div_ceil(m0);
+        let mut out = vec![0usize; m0];
+        for (i, &c) in counts.iter().enumerate() {
+            out[(i / per).min(m0 - 1)] += c;
+        }
+        out
+    }
+
+    /// Full cost roll-up: multipliers ∥ (residual re-scale) → BSN → SI.
+    pub fn cost(&self) -> Cost {
+        let mult = cost_of(
+            &TernaryMultiplier::gate_count_lbit(self.cfg.act_bsl)
+                .replicate(self.cfg.acc_width as u64),
+        );
+        let resc = self
+            .cfg
+            .residual_bsl
+            .map(|b| RescaleBlock::new(b.max(16).min(16)).cost())
+            .unwrap_or_default();
+        let front = mult.parallel(&resc);
+        let acc = match &self.cfg.bsn {
+            BsnKind::Exact => Bsn::new(self.acc_bits).cost(),
+            BsnKind::Spatial(a) => a.cost(),
+            BsnKind::SpatialTemporal(st) => st.total_cost(),
+        };
+        front.series(&acc).series(&self.si.cost())
+    }
+
+    /// Accumulator-only cost (what Table V isolates).
+    pub fn bsn_cost(&self) -> Cost {
+        match &self.cfg.bsn {
+            BsnKind::Exact => Bsn::new(self.acc_bits).cost(),
+            BsnKind::Spatial(a) => a.cost(),
+            BsnKind::SpatialTemporal(st) => st.total_cost(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn relu_path(acc_width: usize, act_bsl: usize, out_bsl: usize) -> ConvDatapath {
+        ConvDatapath::new(DatapathConfig {
+            acc_width,
+            act_bsl,
+            residual_bsl: None,
+            out_bsl,
+            bsn: BsnKind::Exact,
+            activation: ActivationFn::Relu { ratio: 1.0 },
+        })
+    }
+
+    #[test]
+    fn exact_path_matches_integer_relu() {
+        let mut rng = Rng::new(31);
+        let dp = relu_path(9, 2, 16);
+        for _ in 0..100 {
+            let acts: Vec<i64> = (0..9).map(|_| rng.gen_range_i64(-1, 1)).collect();
+            let ws: Vec<Ternary> =
+                (0..9).map(|_| Ternary::from_i64(rng.gen_range_i64(-1, 1))).collect();
+            let out = dp.eval(&acts, &ws, None);
+            let dot: i64 = acts.iter().zip(&ws).map(|(&a, w)| a * w.to_i64()).sum();
+            assert_eq!(out.decode(), dot.max(0).min(8), "acts={acts:?}");
+        }
+    }
+
+    #[test]
+    fn residual_adds_into_accumulation() {
+        let dp = ConvDatapath::new(DatapathConfig {
+            acc_width: 4,
+            act_bsl: 2,
+            residual_bsl: Some(16),
+            out_bsl: 16,
+            bsn: BsnKind::Exact,
+            activation: ActivationFn::Identity,
+        });
+        let acts = vec![1i64, 1, -1, 0];
+        let ws = vec![Ternary::Pos, Ternary::Pos, Ternary::Pos, Ternary::Pos];
+        let res = ThermCode::encode(5, 16);
+        let out = dp.eval(&acts, &ws, Some(&res));
+        // dot = 1, residual = 5, total q = 6; Identity keeps q (the
+        // 24-bit accumulation saturates at the +-8 output range).
+        assert_eq!(out.decode(), 6);
+    }
+
+    #[test]
+    fn spatial_variant_close_to_exact() {
+        let mut rng = Rng::new(41);
+        let spatial = ApproxBsn::new(vec![
+            crate::circuits::ApproxStage {
+                m: 8,
+                l: 16,
+                sub: crate::circuits::SubSample { clip: 0, stride: 1 },
+            },
+            crate::circuits::ApproxStage {
+                m: 1,
+                l: 128,
+                sub: crate::circuits::SubSample { clip: 32, stride: 1 },
+            },
+        ]);
+        let dp_exact = relu_path(64, 2, 16);
+        let dp_approx = ConvDatapath::new(DatapathConfig {
+            acc_width: 64,
+            act_bsl: 2,
+            residual_bsl: None,
+            out_bsl: 16,
+            bsn: BsnKind::Spatial(spatial),
+            activation: ActivationFn::Relu { ratio: 1.0 },
+        });
+        let mut max_err = 0i64;
+        for _ in 0..50 {
+            let acts: Vec<i64> = (0..64).map(|_| rng.gen_range_i64(-1, 1)).collect();
+            let ws: Vec<Ternary> =
+                (0..64).map(|_| Ternary::from_i64(rng.gen_range_i64(-1, 1))).collect();
+            let e = dp_exact.eval(&acts, &ws, None).decode();
+            let a = dp_approx.eval(&acts, &ws, None).decode();
+            max_err = max_err.max((e - a).abs());
+        }
+        // Clipping at ±32 of a 128-bit accumulation of balanced ternary
+        // products almost never saturates.
+        assert!(max_err <= 1, "max_err={max_err}");
+    }
+
+    #[test]
+    fn cost_dominated_by_bsn_for_wide_acc() {
+        let dp = relu_path(4608, 2, 16);
+        let total = dp.cost();
+        let bsn = dp.bsn_cost();
+        assert!(bsn.area_um2 / total.area_um2 > 0.5);
+    }
+
+    #[test]
+    fn wider_act_bsl_costs_more() {
+        let c2 = relu_path(256, 2, 16).cost();
+        let c8 = relu_path(256, 8, 16).cost();
+        assert!(c8.adp() > 2.0 * c2.adp(), "Fig 2's efficiency overhead");
+    }
+}

@@ -1,0 +1,272 @@
+//! FSM-based stochastic activation baselines (paper Fig 1, refs
+//! [6]–[9]).
+//!
+//! The designs the paper argues *against*: serial finite-state machines
+//! over stochastic bipolar bitstreams. They are inherently inaccurate —
+//! the FSM consumes the stream serially, its output depends on bit
+//! order, and the stochastic input itself fluctuates — which is exactly
+//! what Fig 1 plots. We implement the two classic cells:
+//!
+//! * [`StanhFsm`] — Brown & Card's `Stanh(K, x) ≈ tanh(K/2 · x)`
+//!   saturating up/down counter.
+//! * [`ReluFsm`] — the FSM-based ReLU of [9]: tracks the running sign of
+//!   the accumulated input and passes the input bit when positive,
+//!   emitting the bipolar-zero pattern (alternating bits) otherwise.
+
+use crate::coding::stochastic::{bipolar_decode, Sng};
+use crate::coding::BitVec;
+use crate::cost::{cost_of, Cost};
+use crate::gates::{GateCount, GateKind};
+
+/// Saturating up/down counter FSM implementing stochastic tanh.
+#[derive(Clone, Debug)]
+pub struct StanhFsm {
+    states: u32,
+    state: u32,
+}
+
+impl StanhFsm {
+    /// `states` must be even; approximates `tanh(states/2 · x)`.
+    pub fn new(states: u32) -> Self {
+        assert!(states >= 2 && states % 2 == 0);
+        Self { states, state: states / 2 }
+    }
+
+    /// Reset to the central state.
+    pub fn reset(&mut self) {
+        self.state = self.states / 2;
+    }
+
+    /// Process one input bit, produce one output bit.
+    pub fn step(&mut self, bit: bool) -> bool {
+        if bit {
+            self.state = (self.state + 1).min(self.states - 1);
+        } else {
+            self.state = self.state.saturating_sub(1);
+        }
+        self.state >= self.states / 2
+    }
+
+    /// Run over a whole stream.
+    pub fn run(&mut self, input: &BitVec) -> BitVec {
+        let mut out = BitVec::zeros(input.len());
+        for i in 0..input.len() {
+            out.set(i, self.step(input.get(i)));
+        }
+        out
+    }
+
+    /// Gate cost: a `log2(K)`-bit saturating counter + comparator.
+    pub fn gate_count(&self) -> GateCount {
+        let bits = (self.states as f64).log2().ceil() as u64;
+        let mut g = GateCount::new();
+        g.add(GateKind::Dff, bits);
+        g.add(GateKind::Xor2, bits); // increment/decrement logic
+        g.add(GateKind::And2, 2 * bits);
+        g.add(GateKind::Or2, bits);
+        g.depth = bits as f64 + 2.0;
+        g
+    }
+
+    /// Physical cost.
+    pub fn cost(&self) -> Cost {
+        cost_of(&self.gate_count())
+    }
+}
+
+/// FSM-based ReLU cell after [9]: a saturating counter tracks the
+/// running estimate of the input sign; when the estimate is positive the
+/// input bit passes through, otherwise the cell emits alternating bits
+/// (bipolar zero).
+#[derive(Clone, Debug)]
+pub struct ReluFsm {
+    states: u32,
+    state: u32,
+    phase: bool,
+}
+
+impl ReluFsm {
+    /// Create with `states` counter states (even).
+    pub fn new(states: u32) -> Self {
+        assert!(states >= 2 && states % 2 == 0);
+        Self { states, state: states / 2, phase: false }
+    }
+
+    /// Reset state and output phase.
+    pub fn reset(&mut self) {
+        self.state = self.states / 2;
+        self.phase = false;
+    }
+
+    /// Process one bit.
+    pub fn step(&mut self, bit: bool) -> bool {
+        if bit {
+            self.state = (self.state + 1).min(self.states - 1);
+        } else {
+            self.state = self.state.saturating_sub(1);
+        }
+        if self.state >= self.states / 2 {
+            bit
+        } else {
+            self.phase = !self.phase;
+            self.phase
+        }
+    }
+
+    /// Run over a stream.
+    pub fn run(&mut self, input: &BitVec) -> BitVec {
+        let mut out = BitVec::zeros(input.len());
+        for i in 0..input.len() {
+            out.set(i, self.step(input.get(i)));
+        }
+        out
+    }
+
+    /// Gate cost (counter + mux + toggle).
+    pub fn gate_count(&self) -> GateCount {
+        let bits = (self.states as f64).log2().ceil() as u64;
+        let mut g = GateCount::new();
+        g.add(GateKind::Dff, bits + 1);
+        g.add(GateKind::Xor2, bits);
+        g.add(GateKind::And2, 2 * bits);
+        g.add(GateKind::Or2, bits);
+        g.add(GateKind::Mux2, 1);
+        g.depth = bits as f64 + 2.0;
+        g
+    }
+
+    /// Physical cost.
+    pub fn cost(&self) -> Cost {
+        cost_of(&self.gate_count())
+    }
+}
+
+/// Evaluate an FSM activation over a sweep of input values: for each
+/// `x`, encode a stochastic bipolar stream of length `bsl`, run the FSM,
+/// decode the output. Returns `(x, y)` pairs — the raw material of
+/// Fig 1.
+pub fn transfer_curve<F>(
+    mut make_fsm: F,
+    xs: &[f64],
+    bsl: usize,
+    seed: u16,
+) -> Vec<(f64, f64)>
+where
+    F: FnMut() -> Box<dyn FnMut(&BitVec) -> BitVec>,
+{
+    let mut out = Vec::with_capacity(xs.len());
+    for (i, &x) in xs.iter().enumerate() {
+        let mut sng = Sng::new(seed.wrapping_add(i as u16).max(1));
+        let stream = sng.bipolar(x, bsl);
+        let mut fsm = make_fsm();
+        let y = bipolar_decode(&fsm(&stream));
+        out.push((x, y));
+    }
+    out
+}
+
+/// Mean-squared error of a transfer curve against an exact function.
+pub fn curve_mse(curve: &[(f64, f64)], exact: impl Fn(f64) -> f64) -> f64 {
+    let n = curve.len().max(1) as f64;
+    curve.iter().map(|&(x, y)| (y - exact(x)).powi(2)).sum::<f64>() / n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sweep() -> Vec<f64> {
+        (0..41).map(|i| -1.0 + i as f64 * 0.05).collect()
+    }
+
+    #[test]
+    fn stanh_tracks_tanh_loosely() {
+        // The FSM approximates tanh(K/2 x) but with visible error at
+        // moderate BSL — that inaccuracy IS the paper's Fig 1 point.
+        let xs = sweep();
+        let curve = transfer_curve(
+            || {
+                let mut f = StanhFsm::new(8);
+                Box::new(move |b: &BitVec| {
+                    f.reset();
+                    f.run(b)
+                })
+            },
+            &xs,
+            1024,
+            0x5A5A,
+        );
+        let mse = curve_mse(&curve, |x| (4.0 * x).tanh());
+        assert!(mse < 0.05, "mse={mse}");
+        // And it is *not* exact even at 1024 bits.
+        assert!(mse > 1e-6, "FSM should not be exact, mse={mse}");
+    }
+
+    #[test]
+    fn stanh_saturates_at_extremes() {
+        let mut f = StanhFsm::new(8);
+        let ones = BitVec::from_bits(&vec![true; 256]);
+        let y = bipolar_decode(&f.run(&ones));
+        assert!(y > 0.9);
+        f.reset();
+        let zeros = BitVec::zeros(256);
+        let y = bipolar_decode(&f.run(&zeros));
+        assert!(y < -0.9);
+    }
+
+    #[test]
+    fn relu_fsm_shape() {
+        // Positive inputs roughly identity, negative inputs near zero —
+        // with substantial error at short BSL (Fig 1b).
+        let xs = sweep();
+        let curve = transfer_curve(
+            || {
+                let mut f = ReluFsm::new(16);
+                Box::new(move |b: &BitVec| {
+                    f.reset();
+                    f.run(b)
+                })
+            },
+            &xs,
+            1024,
+            0x1357,
+        );
+        let mse = curve_mse(&curve, |x| x.max(0.0));
+        assert!(mse < 0.1, "mse={mse}");
+        // Error grows as BSL shrinks — the latency/accuracy trade-off.
+        let short = transfer_curve(
+            || {
+                let mut f = ReluFsm::new(16);
+                Box::new(move |b: &BitVec| {
+                    f.reset();
+                    f.run(b)
+                })
+            },
+            &xs,
+            32,
+            0x1357,
+        );
+        let mse_short = curve_mse(&short, |x| x.max(0.0));
+        assert!(mse_short > mse, "short={mse_short} long={mse}");
+    }
+
+    #[test]
+    fn fsm_output_depends_on_bit_order() {
+        // The serial FSM is order-sensitive: a sorted stream and a
+        // shuffled stream with the same popcount give different outputs
+        // — the root cause of FSM inaccuracy (§II.A).
+        let mut f1 = StanhFsm::new(8);
+        let mut f2 = StanhFsm::new(8);
+        let a = BitVec::from_str01("1111000011110000");
+        let b = BitVec::from_str01("1010101010101010");
+        let ya = f1.run(&a).popcount();
+        let yb = f2.run(&b).popcount();
+        assert_ne!(ya, yb);
+    }
+
+    #[test]
+    fn fsm_cost_is_tiny() {
+        let c = StanhFsm::new(16).cost();
+        assert!(c.area_um2 < 50.0);
+    }
+}

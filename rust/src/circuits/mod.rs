@@ -1,0 +1,43 @@
+//! The paper's SC circuit blocks, gate-accurate where the paper is
+//! gate-accurate and functionally exact everywhere.
+//!
+//! * [`multiplier`] — the 5-gate ternary SC multiplier (Fig 3a) and its
+//!   generalization to `L`-bit thermometer activations.
+//! * [`bsn`] — the exact bitonic sorting network non-linear adder
+//!   (Fig 3b): gate-level compare-exchange simulation, functional
+//!   popcount model (property-tested equivalent), and exact Batcher
+//!   combinatorics for the cost model.
+//! * [`si`] — the selective interconnect: synthesis of arbitrary
+//!   monotone step activation functions (ReLU, quantized tanh, two-step,
+//!   BN-fused ReLU of Eq 1 / Fig 7) as bit-selections from the sorted
+//!   stream.
+//! * [`fsm`] — the FSM-based *stochastic* activation baselines the paper
+//!   compares against in Fig 1 (Stanh, FSM-ReLU).
+//! * [`rescale`] — the residual re-scaling block (§III.C): ×2^N by
+//!   buffer replication, ÷2^N by 1-of-2 selection with the paper's
+//!   `11110000` zero-padding.
+//! * [`approx_bsn`] — the approximate **spatial** BSN (§IV.B): staged
+//!   sub-BSNs with clip-and-stride sub-sampling (truncated
+//!   quantization).
+//! * [`st_bsn`] — the **spatial-temporal** BSN (Fig 12): multi-cycle
+//!   reuse of one small BSN with a final merge stage.
+//! * [`datapath`] — the full SC conv datapath: multiplier array + BSN +
+//!   SI (+ residual path), with cost roll-up. This is the unit Table IV,
+//!   Table V and Fig 13 measure.
+
+pub mod approx_bsn;
+pub mod bsn;
+pub mod datapath;
+pub mod fsm;
+pub mod multiplier;
+pub mod rescale;
+pub mod si;
+pub mod st_bsn;
+
+pub use approx_bsn::{ApproxBsn, ApproxStage, SubSample};
+pub use bsn::Bsn;
+pub use datapath::{BsnKind, ConvDatapath, DatapathConfig};
+pub use multiplier::TernaryMultiplier;
+pub use rescale::RescaleBlock;
+pub use si::{ActivationFn, SelectiveInterconnect};
+pub use st_bsn::SpatialTemporalBsn;

@@ -1,0 +1,193 @@
+//! The residual re-scaling block (paper §III.C).
+//!
+//! The high-precision residual and the convolution output carry
+//! different trained scale factors `alpha`; before they can be
+//! accumulated in one BSN their alphas must match. The paper aligns them
+//! by powers of two:
+//!
+//! * **multiply by 2^N** — replicate the residual bitstream `2^N` times
+//!   in the buffer (popcount, and hence the decoded value, scales by
+//!   `2^N`);
+//! * **divide by 2^N** — per cycle, select 1 out of every 2 bits and
+//!   append the 8-bit pattern `11110000` (which decodes to 0) to keep
+//!   the BSL constant; repeat for `N` cycles.
+//!
+//! The division step is cycle-accurate here, including the exact padding
+//! pattern, and is exact for even counts (odd counts floor — the same
+//! truncation the hardware exhibits).
+
+use crate::coding::{BitVec, ThermCode};
+use crate::cost::{cost_of, Cost};
+use crate::gates::{GateCount, GateKind};
+
+/// The paper's padding pattern appended per division cycle (decodes to
+/// zero: 4 ones in 8 bits).
+pub const DIV_PAD: &str = "11110000";
+
+/// Cycle-accurate residual re-scaling block for BSL-16 residuals (the
+/// configuration of Table IV's `2-2-16`).
+#[derive(Clone, Debug)]
+pub struct RescaleBlock {
+    bsl: usize,
+}
+
+impl RescaleBlock {
+    /// Create for a given residual BSL. Division requires `bsl == 16`
+    /// (8 selected bits + the 8-bit pad), the paper's configuration;
+    /// multiplication works for any BSL.
+    pub fn new(bsl: usize) -> Self {
+        assert!(bsl >= 2 && bsl % 2 == 0);
+        Self { bsl }
+    }
+
+    /// Residual BSL.
+    pub fn bsl(&self) -> usize {
+        self.bsl
+    }
+
+    /// Multiply by `2^n`: replicate the stream `2^n` times. Output BSL
+    /// is `bsl · 2^n`; decoded value scales exactly by `2^n`.
+    pub fn mul_pow2(&self, code: &ThermCode, n: u32) -> ThermCode {
+        assert_eq!(code.bsl(), self.bsl);
+        let reps = 1usize << n;
+        let mut bits = BitVec::zeros(0);
+        for _ in 0..reps {
+            bits.extend_from(code.bits());
+        }
+        ThermCode::from_bits(bits)
+    }
+
+    /// One division-by-2 cycle: select 1 of every 2 bits (even indices
+    /// of the *sorted* stream, so the selected popcount is `ceil(c/2)`),
+    /// then append `11110000` to restore the BSL. Requires BSL 16.
+    pub fn div2_cycle(&self, code: &ThermCode) -> ThermCode {
+        assert_eq!(self.bsl, 16, "the paper's divider pads 8 bits; BSL must be 16");
+        assert_eq!(code.bsl(), 16);
+        let mut bits = BitVec::zeros(0);
+        // Select every other bit. On a canonical (sorted) stream the
+        // even-index selection keeps ceil(count/2) ones.
+        for i in (0..16).step_by(2) {
+            bits.push(code.bits().get(i));
+        }
+        for ch in DIV_PAD.chars() {
+            bits.push(ch == '1');
+        }
+        ThermCode::from_bits(bits)
+    }
+
+    /// Divide by `2^n`: `n` division cycles.
+    pub fn div_pow2(&self, code: &ThermCode, n: u32) -> ThermCode {
+        let mut c = code.clone();
+        for _ in 0..n {
+            c = self.div2_cycle(&c);
+        }
+        c
+    }
+
+    /// Align a residual with scale `2^res_log2` to a target scale
+    /// `2^tgt_log2`: multiplies or divides as needed and reports the
+    /// number of cycles spent (division is `N` cycles; multiplication is
+    /// a buffer copy, 1 cycle).
+    pub fn align(
+        &self,
+        code: &ThermCode,
+        res_log2: i32,
+        tgt_log2: i32,
+    ) -> (ThermCode, u32) {
+        // Value = alpha * q with alpha = 2^res_log2. To express the same
+        // value at alpha' = 2^tgt_log2 the count must scale by
+        // 2^(res_log2 - tgt_log2).
+        let shift = res_log2 - tgt_log2;
+        if shift >= 0 {
+            (self.mul_pow2(code, shift as u32), 1)
+        } else {
+            let n = (-shift) as u32;
+            (self.div_pow2(code, n), n)
+        }
+    }
+
+    /// Gate cost: a BSL-wide register file (double buffer) plus the
+    /// select/append muxing.
+    pub fn gate_count(&self) -> GateCount {
+        let l = self.bsl as u64;
+        let mut g = GateCount::new();
+        g.add(GateKind::Dff, 2 * l);
+        g.add(GateKind::Mux2, l);
+        g.depth = 1.0 + GateKind::Mux2.delay_eq();
+        g
+    }
+
+    /// Physical cost.
+    pub fn cost(&self) -> Cost {
+        cost_of(&self.gate_count())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pad_pattern_decodes_to_zero() {
+        let pad = ThermCode::from_bits(BitVec::from_str01(DIV_PAD));
+        assert_eq!(pad.decode(), 0);
+    }
+
+    #[test]
+    fn mul_pow2_scales_value() {
+        let r = RescaleBlock::new(16);
+        for q in -8i64..=8 {
+            let c = ThermCode::encode(q, 16);
+            for n in 0..3u32 {
+                let m = r.mul_pow2(&c, n);
+                assert_eq!(m.decode(), q << n, "q={q} n={n}");
+                assert_eq!(m.bsl(), 16 << n);
+            }
+        }
+    }
+
+    #[test]
+    fn div2_exact_for_even_counts() {
+        let r = RescaleBlock::new(16);
+        for q in (-8i64..=8).filter(|q| q % 2 == 0) {
+            let c = ThermCode::encode(q, 16);
+            let d = r.div2_cycle(&c);
+            assert_eq!(d.bsl(), 16);
+            assert_eq!(d.decode(), q / 2, "q={q}");
+        }
+    }
+
+    #[test]
+    fn div2_truncates_odd_counts_by_at_most_one_level() {
+        let r = RescaleBlock::new(16);
+        for q in -8i64..=8 {
+            let c = ThermCode::encode(q, 16);
+            let d = r.div2_cycle(&c);
+            let err = (d.decode() as f64 - q as f64 / 2.0).abs();
+            assert!(err <= 0.5, "q={q} err={err}");
+        }
+    }
+
+    #[test]
+    fn div_pow2_multi_cycle() {
+        let r = RescaleBlock::new(16);
+        let c = ThermCode::encode(8, 16);
+        assert_eq!(r.div_pow2(&c, 2).decode(), 2);
+        assert_eq!(r.div_pow2(&c, 3).decode(), 1);
+    }
+
+    #[test]
+    fn align_reports_cycles() {
+        let r = RescaleBlock::new(16);
+        let c = ThermCode::encode(4, 16);
+        // Residual at alpha=2^0, conv at 2^-2: count must scale by 4.
+        let (up, cyc) = r.align(&c, 0, -2);
+        assert_eq!(cyc, 1);
+        assert_eq!(up.decode(), 16);
+        // Residual at 2^0, conv at 2^2: divide by 4 over 2 cycles.
+        let (down, cyc) = r.align(&c, 0, 2);
+        assert_eq!(cyc, 2);
+        assert_eq!(down.decode(), 1);
+        assert_eq!(down.bsl(), 16);
+    }
+}

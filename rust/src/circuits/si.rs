@@ -1,0 +1,306 @@
+//! The selective interconnect (SI) activation block (paper §II.B,
+//! Fig 3b; BN-fusion in §III.C, Fig 7).
+//!
+//! Because the BSN output is fully sorted, bit `p` of the sorted stream
+//! equals `1` iff the accumulated count `c > p`. Selecting bits of the
+//! sorted stream therefore realizes **any monotone non-decreasing step
+//! function** of the accumulation, deterministically: output bit `j`
+//! taps sorted bit `sel[j]`, giving `out_count(c) = #{j : c > sel[j]}`.
+//!
+//! This module synthesizes the tap configuration for the paper's
+//! activation functions:
+//!
+//! * plain ReLU (with re-scaling between input and output alphas),
+//! * the BN-fused ReLU of Eq 1: `f(x) = γ(x-β)` for `x ≥ β`, else 0,
+//! * quantized tanh (for the Fig 1 / Fig 10a accuracy comparisons),
+//! * the two-step function of Fig 3b,
+//! * arbitrary user closures (checked for monotonicity).
+
+use crate::coding::{BitVec, ThermCode};
+use crate::cost::{cost_of, Cost};
+use crate::gates::{GateCount, GateKind};
+
+/// One output tap of the SI: a constant or a sorted-stream bit index.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SelTap {
+    /// Constant 0 (count never reaches the threshold).
+    Zero,
+    /// Constant 1 (threshold 0 — always on).
+    One,
+    /// Tap sorted bit `p` (1 iff count > p).
+    Bit(usize),
+}
+
+/// The paper's activation functions, as synthesis recipes.
+#[derive(Clone, Debug)]
+pub enum ActivationFn {
+    /// Identity (pure accumulation, re-quantized to the output BSL).
+    Identity,
+    /// `max(0, x)` with input/output scale ratio `r = alpha_in/alpha_out`.
+    Relu {
+        /// Scale ratio applied before output quantization.
+        ratio: f64,
+    },
+    /// BN-fused ReLU (Eq 1): `γ(x-β)` for `x ≥ β`, else 0, in units of
+    /// the input quantization step (`x = q_in`, output re-quantized).
+    BnRelu {
+        /// BN scale `γ > 0`.
+        gamma: f64,
+        /// BN shift `β` in input-quant units.
+        beta: f64,
+        /// Input-to-output scale ratio.
+        ratio: f64,
+    },
+    /// `tanh(gain · q_in) · (L_out/2)` — the FSM comparison target.
+    Tanh {
+        /// Input gain (absorbs alpha_in).
+        gain: f64,
+    },
+    /// The two-step function of Fig 3b: thresholds in count domain.
+    TwoStep {
+        /// Count thresholds (sorted); output count = #{t <= c}.
+        t1: usize,
+        /// Second threshold.
+        t2: usize,
+    },
+}
+
+impl ActivationFn {
+    /// Evaluate as a count-domain function: accumulated count
+    /// `c ∈ [0, in_width]` to output count `∈ [0, out_bsl]`.
+    pub fn eval_count(&self, c: usize, in_width: usize, out_bsl: usize) -> usize {
+        let half_in = in_width as f64 / 2.0;
+        let half_out = out_bsl as f64 / 2.0;
+        let q = c as f64 - half_in;
+        let out_q = match self {
+            ActivationFn::Identity => q,
+            ActivationFn::Relu { ratio } => q.max(0.0) * ratio,
+            ActivationFn::BnRelu { gamma, beta, ratio } => {
+                if q >= *beta {
+                    gamma * (q - beta) * ratio
+                } else {
+                    0.0
+                }
+            }
+            ActivationFn::Tanh { gain } => (gain * q).tanh() * half_out,
+            ActivationFn::TwoStep { t1, t2 } => {
+                return (c >= *t1) as usize + (c >= *t2) as usize;
+            }
+        };
+        (out_q.round().clamp(-half_out, half_out) + half_out) as usize
+    }
+}
+
+/// A synthesized selective interconnect.
+#[derive(Clone, Debug)]
+pub struct SelectiveInterconnect {
+    taps: Vec<SelTap>,
+    in_width: usize,
+}
+
+impl SelectiveInterconnect {
+    /// Synthesize taps for a monotone count function `f(c)` mapping
+    /// `0..=in_width` to `0..=out_bsl`. Panics if `f` is not monotone
+    /// non-decreasing or exceeds the output range — non-monotone
+    /// functions are not realizable by bit selection (the paper's SI has
+    /// the same restriction).
+    pub fn synthesize(
+        f: impl Fn(usize) -> usize,
+        in_width: usize,
+        out_bsl: usize,
+    ) -> Self {
+        let mut prev = 0usize;
+        let mut values = Vec::with_capacity(in_width + 1);
+        for c in 0..=in_width {
+            let v = f(c);
+            assert!(v <= out_bsl, "SI target out of range: f({c}) = {v} > {out_bsl}");
+            assert!(v >= prev, "SI target not monotone at c={c}: {v} < {prev}");
+            values.push(v);
+            prev = v;
+        }
+        let taps = (0..out_bsl)
+            .map(|j| {
+                // Smallest count c with f(c) >= j+1.
+                match values.iter().position(|&v| v >= j + 1) {
+                    None => SelTap::Zero,
+                    Some(0) => SelTap::One,
+                    Some(t) => SelTap::Bit(t - 1),
+                }
+            })
+            .collect();
+        Self { taps, in_width }
+    }
+
+    /// Synthesize one of the named activation functions.
+    pub fn for_activation(act: &ActivationFn, in_width: usize, out_bsl: usize) -> Self {
+        Self::synthesize(|c| act.eval_count(c, in_width, out_bsl), in_width, out_bsl)
+    }
+
+    /// Output BSL.
+    pub fn out_bsl(&self) -> usize {
+        self.taps.len()
+    }
+
+    /// Input width.
+    pub fn in_width(&self) -> usize {
+        self.in_width
+    }
+
+    /// The tap configuration.
+    pub fn taps(&self) -> &[SelTap] {
+        &self.taps
+    }
+
+    /// Functional application in the count domain (the exact semantics
+    /// of tapping a perfectly sorted stream).
+    pub fn apply_count(&self, count: usize) -> usize {
+        self.taps
+            .iter()
+            .filter(|t| match t {
+                SelTap::Zero => false,
+                SelTap::One => true,
+                SelTap::Bit(p) => count > *p,
+            })
+            .count()
+    }
+
+    /// Bit-level application on an actual (possibly fault-corrupted)
+    /// sorted stream.
+    pub fn apply_bits(&self, sorted: &BitVec) -> BitVec {
+        assert_eq!(sorted.len(), self.in_width);
+        let mut out = BitVec::zeros(self.taps.len());
+        for (j, t) in self.taps.iter().enumerate() {
+            let v = match t {
+                SelTap::Zero => false,
+                SelTap::One => true,
+                SelTap::Bit(p) => sorted.get(*p),
+            };
+            out.set(j, v);
+        }
+        out
+    }
+
+    /// Apply to a thermometer accumulation result.
+    pub fn apply(&self, acc: &ThermCode) -> ThermCode {
+        assert_eq!(acc.bsl(), self.in_width);
+        ThermCode::from_count(self.apply_count(acc.count()), self.taps.len())
+    }
+
+    /// Gate composition: the SI is a configurable routing network [14];
+    /// we model one `log2(in_width)`-deep mux path per output bit.
+    pub fn gate_count(&self) -> GateCount {
+        let depth = (self.in_width.max(2) as f64).log2().ceil();
+        let mut g = GateCount::new();
+        g.add(GateKind::Mux2, self.taps.len() as u64 * depth as u64);
+        g.depth = depth * GateKind::Mux2.delay_eq();
+        g
+    }
+
+    /// Physical cost.
+    pub fn cost(&self) -> Cost {
+        cost_of(&self.gate_count())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn two_step_example_fig3b() {
+        // Fig 3b: SI taps the 3rd and 6th sorted bits -> out bit j = 1
+        // iff count > {2, 5}. TwoStep{t1:3, t2:6} == count >= 3, >= 6.
+        let si = SelectiveInterconnect::for_activation(
+            &ActivationFn::TwoStep { t1: 3, t2: 6 },
+            8,
+            2,
+        );
+        assert_eq!(si.taps(), &[SelTap::Bit(2), SelTap::Bit(5)]);
+        assert_eq!(si.apply_count(2), 0);
+        assert_eq!(si.apply_count(3), 1);
+        assert_eq!(si.apply_count(5), 1);
+        assert_eq!(si.apply_count(6), 2);
+        assert_eq!(si.apply_count(8), 2);
+    }
+
+    #[test]
+    fn synthesis_matches_target_everywhere() {
+        // Whatever monotone f we ask for, apply_count must reproduce it
+        // exactly at every possible count.
+        let in_w = 64;
+        let out = 16;
+        let act = ActivationFn::Relu { ratio: 0.25 };
+        let si = SelectiveInterconnect::for_activation(&act, in_w, out);
+        for c in 0..=in_w {
+            assert_eq!(
+                si.apply_count(c),
+                act.eval_count(c, in_w, out),
+                "c={c}"
+            );
+        }
+    }
+
+    #[test]
+    fn bn_relu_matches_eq1() {
+        // Eq 1: gamma(x - beta) above beta, 0 below; monotone for gamma>0.
+        let in_w = 32;
+        let out = 16;
+        let act = ActivationFn::BnRelu { gamma: 1.5, beta: 2.0, ratio: 0.5 };
+        let si = SelectiveInterconnect::for_activation(&act, in_w, out);
+        for c in 0..=in_w {
+            let q = c as f64 - 16.0;
+            let expect = if q >= 2.0 { (1.5 * (q - 2.0) * 0.5).round().min(8.0) } else { 0.0 };
+            let got = si.apply_count(c) as f64 - 8.0;
+            assert_eq!(got, expect, "c={c}");
+        }
+    }
+
+    #[test]
+    fn tanh_is_realizable_and_saturates() {
+        let si = SelectiveInterconnect::for_activation(
+            &ActivationFn::Tanh { gain: 0.25 },
+            64,
+            16,
+        );
+        assert_eq!(si.apply_count(0), 0); // tanh(-8) ~ -1 -> count 0
+        assert_eq!(si.apply_count(64), 16);
+        assert_eq!(si.apply_count(32), 8); // tanh(0) = 0 -> center
+    }
+
+    #[test]
+    #[should_panic(expected = "not monotone")]
+    fn non_monotone_rejected() {
+        SelectiveInterconnect::synthesize(|c| if c == 3 { 5 } else { 0 }, 8, 8);
+    }
+
+    #[test]
+    fn bits_path_equals_count_path_on_sorted() {
+        let act = ActivationFn::Relu { ratio: 1.0 };
+        let si = SelectiveInterconnect::for_activation(&act, 16, 16);
+        for c in 0..=16usize {
+            let sorted = ThermCode::from_count(c, 16);
+            let bits = si.apply_bits(sorted.bits());
+            assert_eq!(bits.popcount(), si.apply_count(c));
+            assert!(bits.is_thermometer());
+        }
+    }
+
+    #[test]
+    fn identity_is_requantization() {
+        let si = SelectiveInterconnect::for_activation(&ActivationFn::Identity, 16, 16);
+        for c in 0..=16 {
+            assert_eq!(si.apply_count(c), c);
+        }
+    }
+
+    #[test]
+    fn si_cost_is_small_vs_bsn() {
+        let si = SelectiveInterconnect::for_activation(
+            &ActivationFn::Relu { ratio: 1.0 },
+            9216,
+            16,
+        );
+        let bsn = crate::circuits::Bsn::new(9216);
+        assert!(si.cost().area_um2 < bsn.cost().area_um2 / 100.0);
+    }
+}

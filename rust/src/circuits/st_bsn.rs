@@ -1,0 +1,288 @@
+//! The **spatial-temporal** BSN (paper §IV.B, Fig 12).
+//!
+//! Because the approximate BSN's output BSL is much shorter than its
+//! input, a wide accumulation can be *folded in time*: one small
+//! spatial BSN is reused over multiple cycles, each cycle producing a
+//! short partial-sum code that is latched; a final merge cycle sorts the
+//! concatenated partials. Fig 12's example: a 576-bit BSN reused over
+//! 9 cycles (8 data + 1 merge) handles a 4608-bit accumulation.
+//!
+//! The approximation level (partial-sum BSL) and the reuse count are
+//! runtime control signals, which is what makes one physical datapath
+//! serve every layer of the network (Fig 13).
+
+use crate::coding::BitVec;
+use crate::cost::{cost_of, Cost};
+use crate::gates::{GateCount, GateKind};
+use crate::util::Rng;
+use super::approx_bsn::{ApproxBsn, SubSample};
+use super::bsn::Bsn;
+
+/// A spatial-temporal BSN: `inner` handles `inner.in_width()` bits per
+/// cycle; `data_cycles` cycles of input are latched and merged by a
+/// final merge BSN + sampler.
+#[derive(Clone, Debug)]
+pub struct SpatialTemporalBsn {
+    inner: ApproxBsn,
+    data_cycles: usize,
+    merge_sub: SubSample,
+}
+
+impl SpatialTemporalBsn {
+    /// Fold a `total_width`-bit accumulation onto `inner`. The merge
+    /// stage sorts `data_cycles × inner.out_bsl()` partial bits and
+    /// sub-samples them with `merge_sub`.
+    pub fn new(inner: ApproxBsn, total_width: usize, merge_sub: SubSample) -> Self {
+        let w0 = inner.in_width();
+        assert!(total_width >= w0, "total width smaller than the inner BSN");
+        assert_eq!(
+            total_width % w0,
+            0,
+            "total width {total_width} must be a multiple of the inner width {w0}"
+        );
+        let data_cycles = total_width / w0;
+        // Validate the merge sampler against the merge width.
+        let _ = merge_sub.out_bsl(data_cycles * inner.out_bsl());
+        Self { inner, data_cycles, merge_sub }
+    }
+
+    /// The per-cycle spatial network.
+    pub fn inner(&self) -> &ApproxBsn {
+        &self.inner
+    }
+
+    /// Data cycles (excluding the merge cycle).
+    pub fn data_cycles(&self) -> usize {
+        self.data_cycles
+    }
+
+    /// Total cycles including the final merge — Fig 12's "9 cycles".
+    pub fn total_cycles(&self) -> usize {
+        self.data_cycles + 1
+    }
+
+    /// Total accumulated width in bits.
+    pub fn total_width(&self) -> usize {
+        self.data_cycles * self.inner.in_width()
+    }
+
+    /// Width of the merge BSN.
+    pub fn merge_width(&self) -> usize {
+        self.data_cycles * self.inner.out_bsl()
+    }
+
+    /// Final output BSL.
+    pub fn out_bsl(&self) -> usize {
+        self.merge_sub.out_bsl(self.merge_width())
+    }
+
+    /// Combined scale divisor (inner strides × merge stride).
+    pub fn scale_divisor(&self) -> usize {
+        self.inner.scale_divisor() * self.merge_sub.stride
+    }
+
+    /// Count-domain evaluation: `counts` holds the per-leaf-group
+    /// popcounts for **all** cycles, i.e. `data_cycles × m_0` entries in
+    /// cycle order.
+    pub fn eval_counts(&self, counts: &[usize]) -> usize {
+        let m0 = self.inner.stages()[0].m;
+        assert_eq!(counts.len(), self.data_cycles * m0);
+        let merged: usize = counts
+            .chunks(m0)
+            .map(|cycle| self.inner.eval_counts(cycle))
+            .sum();
+        self.merge_sub.apply_count(merged, self.merge_width())
+    }
+
+    /// Bit-level evaluation over the full input stream (cycle-major).
+    pub fn eval_bits(&self, input: &BitVec) -> BitVec {
+        assert_eq!(input.len(), self.total_width());
+        let w0 = self.inner.in_width();
+        let mut partials = BitVec::zeros(0);
+        for c in 0..self.data_cycles {
+            let mut chunk = BitVec::zeros(w0);
+            for i in 0..w0 {
+                chunk.set(i, input.get(c * w0 + i));
+            }
+            partials.extend_from(&self.inner.eval_bits(&chunk));
+        }
+        let merge = Bsn::new(self.merge_width());
+        let sorted = merge.sort_gate_level(&partials);
+        self.merge_sub.apply_bits(&sorted)
+    }
+
+    /// Exact reference value at the output scale.
+    pub fn exact_scaled_value(&self, counts: &[usize]) -> f64 {
+        let total: usize = counts.iter().sum();
+        let q = total as f64 - self.total_width() as f64 / 2.0;
+        q / self.scale_divisor() as f64
+    }
+
+    /// Approximate decoded value at the output scale.
+    pub fn approx_value(&self, counts: &[usize]) -> f64 {
+        self.eval_counts(counts) as f64 - self.out_bsl() as f64 / 2.0
+    }
+
+    /// Gate composition: inner network + partial-sum registers + merge
+    /// BSN + merge sampler + the control counter.
+    pub fn gate_count(&self) -> GateCount {
+        let inner = self.inner.gate_count();
+        // Partials are sorted codes; the merge cycle is a merge tree,
+        // not a full sort.
+        let merge = Bsn::merge_tree_gate_count(self.data_cycles, self.inner.out_bsl());
+        let mut regs = GateCount::new();
+        regs.add(GateKind::Dff, self.merge_width() as u64);
+        let mut sample = GateCount::new();
+        sample.add(GateKind::Mux2, self.out_bsl() as u64);
+        let mut ctrl = GateCount::new();
+        ctrl.add(GateKind::Dff, 8);
+        ctrl.add(GateKind::And2, 16);
+        // Area of everything; critical path per cycle is the max of the
+        // inner network and the merge network (they run in different
+        // cycles on the same clock).
+        let mut g = inner
+            .parallel(&merge)
+            .parallel(&sample)
+            .series(&regs)
+            .series(&ctrl);
+        g.depth = inner.depth.max(merge.depth + sample.depth) + GateKind::Dff.delay_eq();
+        g
+    }
+
+    /// Per-cycle physical cost (area is total; delay/energy are for one
+    /// cycle).
+    pub fn cycle_cost(&self) -> Cost {
+        cost_of(&self.gate_count())
+    }
+
+    /// End-to-end cost for one full accumulation: area unchanged, delay
+    /// and energy over all cycles.
+    pub fn total_cost(&self) -> Cost {
+        self.cycle_cost().over_cycles(self.total_cycles() as u64)
+    }
+
+    /// Throughput-normalized ADP against a reference latency (Table V's
+    /// footnote: the spatial-temporal design is charged the replication
+    /// needed to match the single-cycle design's throughput).
+    pub fn adp_throughput_normalized(&self, ref_delay_ns: f64) -> f64 {
+        let c = self.cycle_cost();
+        let latency = c.delay_ns * self.total_cycles() as f64;
+        let replicas = (latency / ref_delay_ns).ceil();
+        c.area_um2 * replicas * c.delay_ns
+    }
+
+    /// MSE versus the exact accumulation over Bernoulli(p) inputs,
+    /// normalized like [`ApproxBsn::mse`].
+    pub fn mse(&self, p_one: f64, trials: usize, rng: &mut Rng) -> f64 {
+        let m0 = self.inner.stages()[0].m;
+        let l0 = self.inner.stages()[0].l;
+        let groups = self.data_cycles * m0;
+        let mut se = 0.0;
+        for _ in 0..trials {
+            let counts: Vec<usize> = (0..groups)
+                .map(|_| (0..l0).filter(|_| rng.gen_bool(p_one)).count())
+                .collect();
+            let exact = self.exact_scaled_value(&counts);
+            let approx = self.approx_value(&counts);
+            let norm = self.total_width() as f64 / (2.0 * self.scale_divisor() as f64);
+            se += ((approx - exact) / norm).powi(2);
+        }
+        se / trials as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::circuits::approx_bsn::ApproxStage;
+
+    /// Fig 12's example at full scale: 576-bit inner BSN, 4608-bit
+    /// accumulation, 8 data cycles + 1 merge = 9 cycles.
+    fn fig12() -> SpatialTemporalBsn {
+        let inner = ApproxBsn::new(vec![ApproxStage {
+            m: 1,
+            l: 576,
+            sub: SubSample { clip: 224, stride: 8 },
+        }]);
+        SpatialTemporalBsn::new(inner, 4608, SubSample { clip: 56, stride: 1 })
+    }
+
+    #[test]
+    fn fig12_is_nine_cycles() {
+        let st = fig12();
+        assert_eq!(st.data_cycles(), 8);
+        assert_eq!(st.total_cycles(), 9);
+        assert_eq!(st.total_width(), 4608);
+        assert_eq!(st.inner().in_width(), 576);
+    }
+
+    fn small() -> SpatialTemporalBsn {
+        // 32-bit inner, 128-bit total, 4 data cycles + merge.
+        let inner = ApproxBsn::new(vec![ApproxStage {
+            m: 1,
+            l: 32,
+            sub: SubSample { clip: 8, stride: 2 },
+        }]);
+        SpatialTemporalBsn::new(inner, 128, SubSample { clip: 8, stride: 1 })
+    }
+
+    #[test]
+    fn counts_equals_bits() {
+        let st = small();
+        let mut rng = Rng::new(17);
+        for _ in 0..20 {
+            let mut bits = BitVec::zeros(128);
+            for i in 0..128 {
+                bits.set(i, rng.gen_bool(0.5));
+            }
+            let counts: Vec<usize> = (0..4)
+                .map(|c| (0..32).filter(|&i| bits.get(c * 32 + i)).count())
+                .collect();
+            assert_eq!(st.eval_bits(&bits).popcount(), st.eval_counts(&counts));
+        }
+    }
+
+    #[test]
+    fn balanced_inputs_low_error() {
+        let st = small();
+        let mut rng = Rng::new(23);
+        let mse = st.mse(0.5, 500, &mut rng);
+        assert!(mse < 2e-2, "mse={mse}");
+    }
+
+    #[test]
+    fn st_area_much_smaller_than_flat_bsn() {
+        let st = fig12();
+        let flat = Bsn::new(4608);
+        let a_st = st.cycle_cost().area_um2;
+        let a_flat = flat.cost().area_um2;
+        assert!(
+            a_st < a_flat / 5.0,
+            "ST area {a_st} vs flat {a_flat} — folding must shrink area"
+        );
+    }
+
+    #[test]
+    fn total_cost_scales_delay_by_cycles() {
+        let st = small();
+        let c1 = st.cycle_cost();
+        let ct = st.total_cost();
+        assert_eq!(ct.area_um2, c1.area_um2);
+        assert!((ct.delay_ns - c1.delay_ns * 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn throughput_normalization_charges_replicas() {
+        let st = fig12();
+        let raw_adp = st.cycle_cost().adp();
+        let norm = st.adp_throughput_normalized(4.33);
+        assert!(norm > raw_adp, "normalization must charge replicas");
+    }
+
+    #[test]
+    #[should_panic(expected = "multiple")]
+    fn non_divisible_width_rejected() {
+        let inner = ApproxBsn::exact(100);
+        SpatialTemporalBsn::new(inner, 250, SubSample::IDENTITY);
+    }
+}

@@ -1,0 +1,170 @@
+//! Coding schemes for stochastic computing.
+//!
+//! The paper's central representational choice is **deterministic
+//! thermometer coding** (Table II): an `L`-bit stream in which all 1s
+//! appear first, representing the quantized value `q = popcount - L/2`
+//! with a trained scale factor `alpha`, i.e. `x = alpha * q`.
+//!
+//! Three sub-modules:
+//!
+//! * [`thermometer`] — general L-bit thermometer codes and arithmetic.
+//! * [`ternary`] — the 2-bit special case (`00 -> -1`, `10 -> 0`,
+//!   `11 -> +1`) used for weights and low-precision activations.
+//! * [`stochastic`] — conventional *stochastic* bipolar coding with
+//!   LFSR-based stochastic number generators; only used by the FSM
+//!   baseline designs the paper compares against (Fig 1).
+
+pub mod stochastic;
+pub mod ternary;
+pub mod thermometer;
+
+pub use ternary::{Ternary, TernaryCode};
+pub use thermometer::ThermCode;
+
+/// A plain bit vector, LSB-first in push order. Thermometer streams store
+/// their 1s at the *front* (low indices) per the paper's convention.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct BitVec {
+    bits: Vec<bool>,
+}
+
+impl BitVec {
+    /// An all-zero bit vector of length `len`.
+    pub fn zeros(len: usize) -> Self {
+        Self { bits: vec![false; len] }
+    }
+
+    /// Build from a bool slice.
+    pub fn from_bits(bits: &[bool]) -> Self {
+        Self { bits: bits.to_vec() }
+    }
+
+    /// Build from a `0`/`1` string, e.g. `"1100"`. Panics on other chars.
+    pub fn from_str01(s: &str) -> Self {
+        Self { bits: s.chars().map(|c| match c {
+            '0' => false,
+            '1' => true,
+            _ => panic!("BitVec::from_str01: invalid char {c:?}"),
+        }).collect() }
+    }
+
+    /// Render as a `0`/`1` string (index 0 first).
+    pub fn to_str01(&self) -> String {
+        self.bits.iter().map(|&b| if b { '1' } else { '0' }).collect()
+    }
+
+    /// Number of bits.
+    pub fn len(&self) -> usize {
+        self.bits.len()
+    }
+
+    /// True when the vector holds no bits.
+    pub fn is_empty(&self) -> bool {
+        self.bits.is_empty()
+    }
+
+    /// Bit at `i`.
+    pub fn get(&self, i: usize) -> bool {
+        self.bits[i]
+    }
+
+    /// Set bit `i`.
+    pub fn set(&mut self, i: usize, v: bool) {
+        self.bits[i] = v;
+    }
+
+    /// Flip bit `i` (used by fault injection).
+    pub fn flip(&mut self, i: usize) {
+        self.bits[i] = !self.bits[i];
+    }
+
+    /// Number of 1s.
+    pub fn popcount(&self) -> usize {
+        self.bits.iter().filter(|&&b| b).count()
+    }
+
+    /// Borrow the raw bits.
+    pub fn as_slice(&self) -> &[bool] {
+        &self.bits
+    }
+
+    /// Mutably borrow the raw bits.
+    pub fn as_mut_slice(&mut self) -> &mut [bool] {
+        &mut self.bits
+    }
+
+    /// Append a bit.
+    pub fn push(&mut self, b: bool) {
+        self.bits.push(b);
+    }
+
+    /// Concatenate another vector onto this one.
+    pub fn extend_from(&mut self, other: &BitVec) {
+        self.bits.extend_from_slice(&other.bits);
+    }
+
+    /// Iterate over bits.
+    pub fn iter(&self) -> impl Iterator<Item = bool> + '_ {
+        self.bits.iter().copied()
+    }
+
+    /// True iff the vector is a valid thermometer code (all 1s before
+    /// all 0s).
+    pub fn is_thermometer(&self) -> bool {
+        let mut seen_zero = false;
+        for &b in &self.bits {
+            if b && seen_zero {
+                return false;
+            }
+            if !b {
+                seen_zero = true;
+            }
+        }
+        true
+    }
+}
+
+impl std::fmt::Display for BitVec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.to_str01())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bitvec_roundtrip_str() {
+        let b = BitVec::from_str01("11010");
+        assert_eq!(b.to_str01(), "11010");
+        assert_eq!(b.len(), 5);
+        assert_eq!(b.popcount(), 3);
+    }
+
+    #[test]
+    fn bitvec_thermometer_check() {
+        assert!(BitVec::from_str01("11100").is_thermometer());
+        assert!(BitVec::from_str01("00000").is_thermometer());
+        assert!(BitVec::from_str01("11111").is_thermometer());
+        assert!(!BitVec::from_str01("11011").is_thermometer());
+        assert!(!BitVec::from_str01("01").is_thermometer());
+    }
+
+    #[test]
+    fn bitvec_flip_and_set() {
+        let mut b = BitVec::zeros(4);
+        b.set(2, true);
+        assert_eq!(b.to_str01(), "0010");
+        b.flip(2);
+        b.flip(0);
+        assert_eq!(b.to_str01(), "1000");
+    }
+
+    #[test]
+    fn bitvec_extend() {
+        let mut a = BitVec::from_str01("11");
+        a.extend_from(&BitVec::from_str01("00"));
+        assert_eq!(a.to_str01(), "1100");
+    }
+}

@@ -1,0 +1,165 @@
+//! Conventional *stochastic* coding substrate (paper §II.A, Fig 1).
+//!
+//! The FSM-based designs the paper compares against ([6]–[9]) use
+//! stochastic bipolar coding: a value `x in [-1, 1]` is a random
+//! bitstream with `P(bit = 1) = (x + 1) / 2`. Bitstreams are produced by
+//! stochastic number generators (SNGs): an LFSR pseudo-random source
+//! compared against the binary value.
+//!
+//! This module provides the LFSR, the SNG, and bipolar encode/decode —
+//! everything needed to reproduce Fig 1 and the FSM baselines, and
+//! nothing more: the paper's own designs are deterministic and never use
+//! this path.
+
+use super::BitVec;
+
+/// Maximal-length 16-bit Fibonacci LFSR (taps 16,15,13,4 — polynomial
+/// x^16 + x^15 + x^13 + x^4 + 1), the standard SNG random source.
+#[derive(Clone, Debug)]
+pub struct Lfsr16 {
+    state: u16,
+}
+
+impl Lfsr16 {
+    /// Create with a non-zero seed (0 is mapped to 1: the all-zero state
+    /// is the LFSR's single fixed point).
+    pub fn new(seed: u16) -> Self {
+        Self { state: if seed == 0 { 1 } else { seed } }
+    }
+
+    /// Advance one step and return the new state.
+    pub fn next_state(&mut self) -> u16 {
+        let b = ((self.state >> 15) ^ (self.state >> 14) ^ (self.state >> 12) ^ (self.state >> 3)) & 1;
+        self.state = (self.state << 1) | b;
+        self.state
+    }
+
+    /// Current state.
+    pub fn state(&self) -> u16 {
+        self.state
+    }
+
+    /// Period of the maximal-length sequence.
+    pub const PERIOD: usize = 65535;
+}
+
+/// Stochastic number generator: compares the LFSR state against a
+/// threshold to produce a unipolar bitstream with the given probability.
+#[derive(Clone, Debug)]
+pub struct Sng {
+    lfsr: Lfsr16,
+}
+
+impl Sng {
+    /// New SNG with the given LFSR seed.
+    pub fn new(seed: u16) -> Self {
+        Self { lfsr: Lfsr16::new(seed) }
+    }
+
+    /// Generate an `n`-bit unipolar stream with `P(1) = p`.
+    pub fn unipolar(&mut self, p: f64, n: usize) -> BitVec {
+        let thresh = (p.clamp(0.0, 1.0) * 65536.0) as u32;
+        let mut out = BitVec::zeros(n);
+        for i in 0..n {
+            let s = self.lfsr.next_state() as u32;
+            out.set(i, s < thresh);
+        }
+        out
+    }
+
+    /// Generate an `n`-bit **bipolar** stream for `x in [-1, 1]`:
+    /// `P(1) = (x + 1) / 2`.
+    pub fn bipolar(&mut self, x: f64, n: usize) -> BitVec {
+        self.unipolar((x.clamp(-1.0, 1.0) + 1.0) / 2.0, n)
+    }
+}
+
+/// Decode a bipolar stochastic stream: `x = 2 * popcount / n - 1`.
+pub fn bipolar_decode(bits: &BitVec) -> f64 {
+    if bits.is_empty() {
+        return 0.0;
+    }
+    2.0 * bits.popcount() as f64 / bits.len() as f64 - 1.0
+}
+
+/// Decode a unipolar stream: `p = popcount / n`.
+pub fn unipolar_decode(bits: &BitVec) -> f64 {
+    if bits.is_empty() {
+        return 0.0;
+    }
+    bits.popcount() as f64 / bits.len() as f64
+}
+
+/// XNOR bipolar multiplication — the classic stochastic multiplier used
+/// by the baselines: `E[xnor(a,b)] = a * b` for independent bipolar
+/// streams.
+pub fn xnor_mult(a: &BitVec, b: &BitVec) -> BitVec {
+    assert_eq!(a.len(), b.len());
+    let mut out = BitVec::zeros(a.len());
+    for i in 0..a.len() {
+        out.set(i, !(a.get(i) ^ b.get(i)));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lfsr_is_maximal_length() {
+        let mut l = Lfsr16::new(0xACE1);
+        let start = l.state();
+        let mut count = 0usize;
+        loop {
+            l.next_state();
+            count += 1;
+            if l.state() == start {
+                break;
+            }
+            assert!(count <= Lfsr16::PERIOD, "period exceeded");
+        }
+        assert_eq!(count, Lfsr16::PERIOD);
+    }
+
+    #[test]
+    fn lfsr_zero_seed_is_fixed() {
+        let l = Lfsr16::new(0);
+        assert_ne!(l.state(), 0);
+    }
+
+    #[test]
+    fn bipolar_encode_decode_statistics() {
+        let mut sng = Sng::new(0xBEEF);
+        for &x in &[-0.9, -0.5, 0.0, 0.3, 0.8] {
+            let bits = sng.bipolar(x, 4096);
+            let err = (bipolar_decode(&bits) - x).abs();
+            assert!(err < 0.05, "x={x} err={err}");
+        }
+    }
+
+    #[test]
+    fn unipolar_statistics() {
+        let mut sng = Sng::new(0x1234);
+        let bits = sng.unipolar(0.25, 8192);
+        assert!((unipolar_decode(&bits) - 0.25).abs() < 0.03);
+    }
+
+    #[test]
+    fn xnor_mult_expectation() {
+        // Independent seeds -> product in expectation.
+        let mut sa = Sng::new(0x1111);
+        let mut sb = Sng::new(0x7777);
+        let (x, y) = (0.6, -0.5);
+        let a = sa.bipolar(x, 16384);
+        let b = sb.bipolar(y, 16384);
+        let p = bipolar_decode(&xnor_mult(&a, &b));
+        assert!((p - x * y).abs() < 0.06, "p={p} expect={}", x * y);
+    }
+
+    #[test]
+    fn decode_empty_is_zero() {
+        assert_eq!(bipolar_decode(&BitVec::zeros(0)), 0.0);
+        assert_eq!(unipolar_decode(&BitVec::zeros(0)), 0.0);
+    }
+}

@@ -1,0 +1,157 @@
+//! 2-bit ternary thermometer coding (paper §II.B, Fig 3a).
+//!
+//! The 2-bit special case of thermometer coding represents the ternary
+//! set `{-1, 0, +1}` as `{00, 10, 11}`. Ternary is the paper's weight
+//! format throughout (weight BSL fixed to 2), and the activation format
+//! of the most efficient configurations.
+
+use super::thermometer::ThermCode;
+
+/// A ternary value `{-1, 0, +1}`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Ternary {
+    /// `-1`, coded `00`.
+    Neg,
+    /// `0`, coded `10`.
+    Zero,
+    /// `+1`, coded `11`.
+    Pos,
+}
+
+impl Ternary {
+    /// All three values, in ascending order.
+    pub const ALL: [Ternary; 3] = [Ternary::Neg, Ternary::Zero, Ternary::Pos];
+
+    /// From an integer (saturating outside `{-1,0,1}`).
+    pub fn from_i64(v: i64) -> Self {
+        match v {
+            i64::MIN..=-1 => Ternary::Neg,
+            0 => Ternary::Zero,
+            1.. => Ternary::Pos,
+        }
+    }
+
+    /// To an integer in `{-1, 0, 1}`.
+    pub fn to_i64(self) -> i64 {
+        match self {
+            Ternary::Neg => -1,
+            Ternary::Zero => 0,
+            Ternary::Pos => 1,
+        }
+    }
+
+    /// Exact ternary product.
+    pub fn mul(self, other: Ternary) -> Ternary {
+        Ternary::from_i64(self.to_i64() * other.to_i64())
+    }
+}
+
+/// The 2-bit thermometer encoding of a [`Ternary`], exposing the
+/// individual code bits `(t1, t0)` with the convention that the code
+/// string is `t1 t0` (so `+1 = 11`, `0 = 10`, `-1 = 00`; `01` is
+/// unused/invalid, as in the paper's truth table).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TernaryCode {
+    /// First (most significant in stream order) bit.
+    pub t1: bool,
+    /// Second bit.
+    pub t0: bool,
+}
+
+impl TernaryCode {
+    /// Encode a ternary value.
+    pub fn encode(v: Ternary) -> Self {
+        match v {
+            Ternary::Neg => Self { t1: false, t0: false },
+            Ternary::Zero => Self { t1: true, t0: false },
+            Ternary::Pos => Self { t1: true, t0: true },
+        }
+    }
+
+    /// Decode. The invalid code `01` decodes by popcount (`= 0`), which
+    /// is what the BSN accumulator would see.
+    pub fn decode(self) -> Ternary {
+        match (self.t1, self.t0) {
+            (false, false) => Ternary::Neg,
+            (true, true) => Ternary::Pos,
+            _ => Ternary::Zero,
+        }
+    }
+
+    /// Popcount of the 2-bit code.
+    pub fn count(self) -> usize {
+        self.t1 as usize + self.t0 as usize
+    }
+
+    /// As a [`ThermCode`] of BSL 2.
+    pub fn to_therm(self) -> ThermCode {
+        ThermCode::from_count(self.count(), 2)
+    }
+}
+
+/// Multiply an `L`-bit thermometer activation by a ternary weight,
+/// functionally (the generalized ternary multiplier):
+///
+/// * `w = +1` — pass the activation through.
+/// * `w = 0`  — output the zero code (`L/2` ones).
+/// * `w = -1` — negate (complement-reverse).
+///
+/// For `L = 2` this is exactly the 5-gate circuit of Fig 3a, which is
+/// verified gate-by-gate in [`crate::circuits::multiplier`].
+pub fn ternary_mult_therm(act: &ThermCode, w: Ternary) -> ThermCode {
+    match w {
+        Ternary::Pos => act.clone(),
+        Ternary::Zero => ThermCode::from_count(act.bsl() / 2, act.bsl()),
+        Ternary::Neg => act.negate(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn codes_match_paper() {
+        assert_eq!(TernaryCode::encode(Ternary::Neg).to_therm().to_string(), "00");
+        assert_eq!(TernaryCode::encode(Ternary::Zero).to_therm().to_string(), "10");
+        assert_eq!(TernaryCode::encode(Ternary::Pos).to_therm().to_string(), "11");
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        for v in Ternary::ALL {
+            assert_eq!(TernaryCode::encode(v).decode(), v);
+        }
+    }
+
+    #[test]
+    fn ternary_mul_table() {
+        for a in Ternary::ALL {
+            for b in Ternary::ALL {
+                assert_eq!(a.mul(b).to_i64(), a.to_i64() * b.to_i64());
+            }
+        }
+    }
+
+    #[test]
+    fn therm_mult_matches_integer_product() {
+        for bsl in [2usize, 4, 8, 16] {
+            let (lo, hi) = ThermCode::range(bsl);
+            for q in lo..=hi {
+                let act = ThermCode::encode(q, bsl);
+                for w in Ternary::ALL {
+                    let p = ternary_mult_therm(&act, w);
+                    assert_eq!(p.decode(), q * w.to_i64(), "bsl={bsl} q={q} w={w:?}");
+                    assert_eq!(p.bsl(), bsl);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn from_i64_saturates() {
+        assert_eq!(Ternary::from_i64(-7), Ternary::Neg);
+        assert_eq!(Ternary::from_i64(9), Ternary::Pos);
+        assert_eq!(Ternary::from_i64(0), Ternary::Zero);
+    }
+}

@@ -1,0 +1,244 @@
+//! Deterministic thermometer coding (paper §II.B, Table II).
+//!
+//! An `L`-bit thermometer code places all 1s at the beginning of the
+//! bitstream. A value `x` is represented as
+//!
+//! ```text
+//! x = alpha * x_q,     x_q = sum_i x[i] - L/2   in   [-L/2, L/2]
+//! ```
+//!
+//! so an `L`-bit stream encodes `L + 1` levels centred on zero, and the
+//! trained scale factor `alpha` carries the dynamic range. Table II:
+//!
+//! | BSL | binary precision | range          |
+//! |-----|------------------|----------------|
+//! | 2   | (ternary)        | -1, 0, 1       |
+//! | 4   | 2                | -2 ..= 2       |
+//! | 8   | 3                | -4 ..= 4       |
+//! | 16  | 4                | -8 ..= 8       |
+
+use super::BitVec;
+
+/// A thermometer-coded value: `L` bits, all 1s first.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ThermCode {
+    bits: BitVec,
+}
+
+impl ThermCode {
+    /// Encode quantized value `q` (in `[-L/2, L/2]`) as an `L`-bit
+    /// thermometer code. `L` must be even. Values outside the range are
+    /// saturated, matching the hardware behaviour of the SC datapath.
+    pub fn encode(q: i64, bsl: usize) -> Self {
+        assert!(bsl >= 2 && bsl % 2 == 0, "BSL must be even, got {bsl}");
+        let half = (bsl / 2) as i64;
+        let q = q.clamp(-half, half);
+        let ones = (q + half) as usize;
+        let mut bits = BitVec::zeros(bsl);
+        for i in 0..ones {
+            bits.set(i, true);
+        }
+        Self { bits }
+    }
+
+    /// Build directly from a count of ones (`0..=L`).
+    pub fn from_count(ones: usize, bsl: usize) -> Self {
+        assert!(ones <= bsl);
+        let mut bits = BitVec::zeros(bsl);
+        for i in 0..ones {
+            bits.set(i, true);
+        }
+        Self { bits }
+    }
+
+    /// Wrap an existing bit vector. Does *not* require the vector to be
+    /// sorted — decode only depends on the popcount, which is exactly why
+    /// the BSN accumulator is exact (§II.B).
+    pub fn from_bits(bits: BitVec) -> Self {
+        Self { bits }
+    }
+
+    /// The bitstream length (BSL).
+    pub fn bsl(&self) -> usize {
+        self.bits.len()
+    }
+
+    /// Decode to the quantized value `popcount - L/2`.
+    pub fn decode(&self) -> i64 {
+        self.bits.popcount() as i64 - (self.bits.len() / 2) as i64
+    }
+
+    /// Decode to a real value with scale `alpha`.
+    pub fn decode_scaled(&self, alpha: f64) -> f64 {
+        alpha * self.decode() as f64
+    }
+
+    /// Number of ones.
+    pub fn count(&self) -> usize {
+        self.bits.popcount()
+    }
+
+    /// Borrow the bits.
+    pub fn bits(&self) -> &BitVec {
+        &self.bits
+    }
+
+    /// Mutably borrow the bits (fault injection).
+    pub fn bits_mut(&mut self) -> &mut BitVec {
+        &mut self.bits
+    }
+
+    /// Consume into the underlying bits.
+    pub fn into_bits(self) -> BitVec {
+        self.bits
+    }
+
+    /// True iff the representation is canonical (1s first).
+    pub fn is_canonical(&self) -> bool {
+        self.bits.is_thermometer()
+    }
+
+    /// Negation: `-x` flips the count to `L - count`. In hardware this is
+    /// a bitwise complement plus reversal; functionally the popcount maps
+    /// `c -> L - c`, i.e. `q -> -q`.
+    pub fn negate(&self) -> Self {
+        let l = self.bsl();
+        // Complement-and-reverse keeps canonical codes canonical.
+        let mut bits = BitVec::zeros(l);
+        for i in 0..l {
+            bits.set(i, !self.bits.get(l - 1 - i));
+        }
+        Self { bits }
+    }
+
+    /// The representable range `[-L/2, L/2]` for a given BSL.
+    pub fn range(bsl: usize) -> (i64, i64) {
+        let half = (bsl / 2) as i64;
+        (-half, half)
+    }
+
+    /// Equivalent binary precision in bits for a BSL (Table II): an
+    /// `L`-bit thermometer code distinguishes `L + 1` levels; the paper
+    /// tabulates `log2(L)` for powers of two (BSL 4 -> 2b, 8 -> 3b,
+    /// 16 -> 4b).
+    pub fn binary_precision(bsl: usize) -> Option<u32> {
+        if bsl <= 2 {
+            return None; // ternary: the paper lists no binary equivalent
+        }
+        Some((bsl as f64).log2().floor() as u32)
+    }
+}
+
+impl std::fmt::Display for ThermCode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.bits)
+    }
+}
+
+/// Re-quantize a count from one BSL to another, rounding to nearest and
+/// saturating — used when the SI output BSL differs from the BSN input
+/// BSL (§IV.B, Fig 10a).
+pub fn requantize_count(count: usize, from_bsl: usize, to_bsl: usize) -> usize {
+    if from_bsl == to_bsl {
+        return count;
+    }
+    let q = count as i64 - (from_bsl / 2) as i64;
+    let scaled =
+        (q as f64 * to_bsl as f64 / from_bsl as f64).round() as i64;
+    let half = (to_bsl / 2) as i64;
+    (scaled.clamp(-half, half) + half) as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_bsl2() {
+        // BSL 2: -1 -> 00, 0 -> 10, 1 -> 11.
+        assert_eq!(ThermCode::encode(-1, 2).to_string(), "00");
+        assert_eq!(ThermCode::encode(0, 2).to_string(), "10");
+        assert_eq!(ThermCode::encode(1, 2).to_string(), "11");
+    }
+
+    #[test]
+    fn table2_bsl4() {
+        // BSL 4: -2..2 -> 0000, 1000, 1100, 1110, 1111.
+        let expect = ["0000", "1000", "1100", "1110", "1111"];
+        for (q, e) in (-2..=2).zip(expect) {
+            assert_eq!(ThermCode::encode(q, 4).to_string(), e);
+        }
+    }
+
+    #[test]
+    fn table2_bsl8_endpoints() {
+        assert_eq!(ThermCode::encode(-4, 8).to_string(), "00000000");
+        assert_eq!(ThermCode::encode(-3, 8).to_string(), "10000000");
+        assert_eq!(ThermCode::encode(3, 8).to_string(), "11111110");
+        assert_eq!(ThermCode::encode(4, 8).to_string(), "11111111");
+    }
+
+    #[test]
+    fn encode_decode_roundtrip_all_bsl() {
+        for bsl in [2usize, 4, 8, 16, 32, 64] {
+            let (lo, hi) = ThermCode::range(bsl);
+            for q in lo..=hi {
+                let c = ThermCode::encode(q, bsl);
+                assert_eq!(c.decode(), q, "bsl={bsl} q={q}");
+                assert!(c.is_canonical());
+            }
+        }
+    }
+
+    #[test]
+    fn encode_saturates() {
+        assert_eq!(ThermCode::encode(100, 8).decode(), 4);
+        assert_eq!(ThermCode::encode(-100, 8).decode(), -4);
+    }
+
+    #[test]
+    fn negate_is_involution() {
+        for bsl in [2usize, 4, 8, 16] {
+            let (lo, hi) = ThermCode::range(bsl);
+            for q in lo..=hi {
+                let c = ThermCode::encode(q, bsl);
+                assert_eq!(c.negate().decode(), -q);
+                assert_eq!(c.negate().negate(), c);
+                assert!(c.negate().is_canonical());
+            }
+        }
+    }
+
+    #[test]
+    fn decode_depends_only_on_popcount() {
+        // A shuffled (non-canonical) code decodes identically — the key
+        // property that makes the BSN accumulator exact.
+        let c = ThermCode::from_bits(BitVec::from_str01("01010101"));
+        assert_eq!(c.decode(), 0); // 4 ones - 4
+    }
+
+    #[test]
+    fn binary_precision_matches_table2() {
+        assert_eq!(ThermCode::binary_precision(2), None);
+        assert_eq!(ThermCode::binary_precision(4), Some(2));
+        assert_eq!(ThermCode::binary_precision(8), Some(3));
+        assert_eq!(ThermCode::binary_precision(16), Some(4));
+    }
+
+    #[test]
+    fn requantize_identity_and_halving() {
+        assert_eq!(requantize_count(5, 8, 8), 5);
+        // q=+4 at BSL8 -> q=+8 at BSL16 -> count 16
+        assert_eq!(requantize_count(8, 8, 16), 16);
+        // q=+4 at BSL8 -> q=+2 at BSL4 (scaled) -> count 4
+        assert_eq!(requantize_count(8, 8, 4), 4);
+        // center maps to center
+        assert_eq!(requantize_count(4, 8, 16), 8);
+    }
+
+    #[test]
+    fn scaled_decode() {
+        let c = ThermCode::encode(3, 8);
+        assert!((c.decode_scaled(0.5) - 1.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,242 @@
+//! Dynamic batcher + PJRT worker thread.
+//!
+//! Requests (single images) are coalesced into the fixed batch size of
+//! the AOT-compiled executable: the worker drains the queue until the
+//! batch is full or `max_wait` expires since the first request, pads
+//! the tail with zeros, executes once, and fans the logits back out.
+//!
+//! PJRT handles are not `Send` (the `xla` crate wraps raw pointers in
+//! `Rc`), so the worker thread owns its *own* [`Runtime`] and
+//! [`Trainer`]; trained parameters cross the thread boundary as plain
+//! `Vec<f32>` blobs and are installed with [`Trainer::set_params`].
+
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::runtime::{trainer::Knobs, Runtime, Trainer};
+use crate::Result;
+use anyhow::Context;
+
+use super::metrics::ServerMetrics;
+
+/// Batching policy.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    /// Max time to hold an open batch after its first request.
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        Self { max_wait: Duration::from_millis(5) }
+    }
+}
+
+struct Request {
+    x: Vec<f32>,
+    t0: Instant,
+    resp: mpsc::SyncSender<Result<Vec<f32>>>,
+}
+
+/// Client handle: submit images, receive logits. Cheap to clone.
+#[derive(Clone)]
+pub struct InferenceClient {
+    tx: mpsc::SyncSender<Request>,
+    image_len: usize,
+    classes: usize,
+}
+
+impl InferenceClient {
+    /// Blocking inference of one image (CHW flat). Returns logits.
+    pub fn infer(&self, x: Vec<f32>) -> Result<Vec<f32>> {
+        anyhow::ensure!(x.len() == self.image_len, "image length mismatch");
+        let (tx, rx) = mpsc::sync_channel(1);
+        self.tx
+            .send(Request { x, t0: Instant::now(), resp: tx })
+            .map_err(|_| anyhow::anyhow!("coordinator stopped"))?;
+        rx.recv().context("coordinator dropped the request")?
+    }
+
+    /// Classify one image.
+    pub fn classify(&self, x: Vec<f32>) -> Result<usize> {
+        let logits = self.infer(x)?;
+        Ok(logits
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.total_cmp(b.1))
+            .map(|(i, _)| i)
+            .unwrap_or(0))
+    }
+
+    /// Number of classes served.
+    pub fn classes(&self) -> usize {
+        self.classes
+    }
+}
+
+/// Everything the worker needs to build its own PJRT stack.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Artifacts directory.
+    pub artifacts: String,
+    /// Model name (artifact prefix).
+    pub model: String,
+    /// Trained parameters to install (None = exported init).
+    pub params: Option<Vec<Vec<f32>>>,
+    /// Quantization knobs for the serving path.
+    pub knobs: Knobs,
+    /// Batching policy.
+    pub policy: BatchPolicy,
+    /// Request queue depth (backpressure bound).
+    pub queue_depth: usize,
+}
+
+impl ServeConfig {
+    /// Defaults for a model.
+    pub fn new(artifacts: &str, model: &str) -> Self {
+        Self {
+            artifacts: artifacts.to_string(),
+            model: model.to_string(),
+            params: None,
+            knobs: Knobs::quantized(2),
+            policy: BatchPolicy::default(),
+            queue_depth: 1024,
+        }
+    }
+}
+
+/// The running coordinator (owns the worker thread).
+pub struct Coordinator {
+    client: InferenceClient,
+    worker: Option<JoinHandle<()>>,
+    metrics: Arc<ServerMetrics>,
+    batch: usize,
+}
+
+impl Coordinator {
+    /// Start a coordinator; blocks until the worker has compiled the
+    /// executable and is ready to serve (or failed).
+    pub fn start(cfg: ServeConfig) -> Result<Self> {
+        let (tx, rx) = mpsc::sync_channel::<Request>(cfg.queue_depth);
+        let (ready_tx, ready_rx) = mpsc::sync_channel::<Result<(usize, usize, usize)>>(1);
+        let metrics = Arc::new(ServerMetrics::new());
+        let metrics_w = metrics.clone();
+        let worker = std::thread::Builder::new()
+            .name("scnn-batcher".into())
+            .spawn(move || {
+                let setup = (|| -> Result<(Trainer, usize, usize, usize)> {
+                    let rt = Runtime::new(&cfg.artifacts)?;
+                    let mut tr = Trainer::new(&rt, &cfg.model)?;
+                    if let Some(p) = cfg.params {
+                        tr.set_params(p)?;
+                    }
+                    let (c, h, w) = tr.meta().input;
+                    let (batch, classes) = (tr.meta().batch, tr.meta().classes);
+                    Ok((tr, c * h * w, batch, classes))
+                })();
+                match setup {
+                    Ok((tr, image_len, batch, classes)) => {
+                        let _ = ready_tx.send(Ok((image_len, batch, classes)));
+                        Self::worker_loop(
+                            tr, cfg.knobs, cfg.policy, rx, metrics_w, image_len, batch, classes,
+                        );
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                    }
+                }
+            })
+            .context("spawning batcher thread")?;
+        let (image_len, batch, classes) =
+            ready_rx.recv().context("worker died during setup")??;
+        Ok(Self {
+            client: InferenceClient { tx, image_len, classes },
+            worker: Some(worker),
+            metrics,
+            batch,
+        })
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn worker_loop(
+        trainer: Trainer,
+        knobs: Knobs,
+        policy: BatchPolicy,
+        rx: mpsc::Receiver<Request>,
+        metrics: Arc<ServerMetrics>,
+        image_len: usize,
+        batch: usize,
+        classes: usize,
+    ) {
+        loop {
+            // Block for the first request of the batch.
+            let first = match rx.recv() {
+                Ok(r) => r,
+                Err(_) => return, // all senders gone
+            };
+            let deadline = Instant::now() + policy.max_wait;
+            let mut pending = vec![first];
+            while pending.len() < batch {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                match rx.recv_timeout(deadline - now) {
+                    Ok(r) => pending.push(r),
+                    Err(_) => break,
+                }
+            }
+            // Assemble the padded batch.
+            let mut x = vec![0.0f32; batch * image_len];
+            for (i, r) in pending.iter().enumerate() {
+                x[i * image_len..(i + 1) * image_len].copy_from_slice(&r.x);
+            }
+            match trainer.logits(&x, knobs, true) {
+                Ok(logits) => {
+                    let mut latencies = Vec::with_capacity(pending.len());
+                    for (i, r) in pending.into_iter().enumerate() {
+                        let row = logits[i * classes..(i + 1) * classes].to_vec();
+                        latencies.push(r.t0.elapsed());
+                        let _ = r.resp.send(Ok(row));
+                    }
+                    metrics.record_batch(&latencies, batch);
+                }
+                Err(e) => {
+                    let msg = format!("{e:#}");
+                    for r in pending {
+                        let _ = r.resp.send(Err(anyhow::anyhow!(msg.clone())));
+                    }
+                }
+            }
+        }
+    }
+
+    /// A cloneable client handle.
+    pub fn client(&self) -> InferenceClient {
+        self.client.clone()
+    }
+
+    /// Metrics snapshot.
+    pub fn metrics(&self) -> super::MetricsSnapshot {
+        self.metrics.snapshot(self.batch)
+    }
+
+    /// Stop the coordinator: returns the final metrics snapshot. The
+    /// worker thread exits once every [`InferenceClient`] clone is
+    /// dropped (the channel closes); outstanding requests error out.
+    pub fn shutdown(self) -> super::MetricsSnapshot {
+        self.metrics.snapshot(self.batch)
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        // Dropping our senders closes the channel once all client
+        // clones are gone; the worker then exits on its own. Joining
+        // here could hang if a client outlives the coordinator, so the
+        // thread is detached instead.
+        self.worker.take();
+    }
+}

@@ -1,0 +1,115 @@
+//! Serving metrics: request counts, latency percentiles, batch
+//! occupancy.
+
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Thread-safe metrics accumulator.
+#[derive(Debug, Default)]
+pub struct ServerMetrics {
+    inner: Mutex<Inner>,
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    requests: u64,
+    batches: u64,
+    padded_slots: u64,
+    latencies_us: Vec<u64>,
+}
+
+/// A point-in-time snapshot.
+#[derive(Clone, Debug)]
+pub struct MetricsSnapshot {
+    /// Completed requests.
+    pub requests: u64,
+    /// Executed batches.
+    pub batches: u64,
+    /// Mean batch occupancy in [0, 1].
+    pub occupancy: f64,
+    /// p50 request latency.
+    pub p50: Duration,
+    /// p99 request latency.
+    pub p99: Duration,
+    /// Mean request latency.
+    pub mean: Duration,
+}
+
+impl ServerMetrics {
+    /// New, empty.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one executed batch: `filled` live requests with their
+    /// end-to-end latencies, `capacity` total slots.
+    pub fn record_batch(&self, latencies: &[Duration], capacity: usize) {
+        let mut g = self.inner.lock().unwrap();
+        g.requests += latencies.len() as u64;
+        g.batches += 1;
+        g.padded_slots += (capacity - latencies.len()) as u64;
+        g.latencies_us
+            .extend(latencies.iter().map(|d| d.as_micros() as u64));
+    }
+
+    /// Snapshot (sorts latencies; intended for end-of-run reporting).
+    pub fn snapshot(&self, capacity: usize) -> MetricsSnapshot {
+        let mut g = self.inner.lock().unwrap();
+        g.latencies_us.sort_unstable();
+        let n = g.latencies_us.len();
+        let pick = |q: f64| -> Duration {
+            if n == 0 {
+                return Duration::ZERO;
+            }
+            let idx = ((n as f64 - 1.0) * q).round() as usize;
+            Duration::from_micros(g.latencies_us[idx])
+        };
+        let mean = if n == 0 {
+            Duration::ZERO
+        } else {
+            Duration::from_micros(g.latencies_us.iter().sum::<u64>() / n as u64)
+        };
+        let slots = g.batches * capacity as u64;
+        MetricsSnapshot {
+            requests: g.requests,
+            batches: g.batches,
+            occupancy: if slots == 0 {
+                0.0
+            } else {
+                1.0 - g.padded_slots as f64 / slots as f64
+            },
+            p50: pick(0.5),
+            p99: pick(0.99),
+            mean,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_snapshots() {
+        let m = ServerMetrics::new();
+        m.record_batch(
+            &[Duration::from_micros(100), Duration::from_micros(300)],
+            4,
+        );
+        m.record_batch(&[Duration::from_micros(200)], 4);
+        let s = m.snapshot(4);
+        assert_eq!(s.requests, 3);
+        assert_eq!(s.batches, 2);
+        assert!((s.occupancy - 3.0 / 8.0).abs() < 1e-9);
+        assert_eq!(s.p50, Duration::from_micros(200));
+        assert_eq!(s.mean, Duration::from_micros(200));
+    }
+
+    #[test]
+    fn empty_snapshot() {
+        let m = ServerMetrics::new();
+        let s = m.snapshot(8);
+        assert_eq!(s.requests, 0);
+        assert_eq!(s.p99, Duration::ZERO);
+    }
+}

@@ -1,0 +1,18 @@
+//! L3 inference coordinator: request queue → dynamic batcher → PJRT
+//! worker.
+//!
+//! The paper's contribution is the accelerator itself, so the
+//! coordinator is the thin-but-real serving layer around it: clients
+//! submit single images, the batcher coalesces them into the fixed
+//! batch the AOT-compiled executable expects (padding the tail), a
+//! worker thread executes the serving-path HLO (integer codes through
+//! the Pallas kernel), and per-request latency / batch-occupancy
+//! metrics are tracked. No async runtime is available offline, so the
+//! design is the classic thread + channel dynamic batcher (the same
+//! shape as vLLM's router).
+
+pub mod batcher;
+pub mod metrics;
+
+pub use batcher::{BatchPolicy, Coordinator, InferenceClient, ServeConfig};
+pub use metrics::{MetricsSnapshot, ServerMetrics};

@@ -1,0 +1,131 @@
+//! 28-nm-calibrated hardware cost library.
+//!
+//! Converts [`GateCount`] netlist summaries into physical area / delay /
+//! energy, and defines the **ADP** (area-delay product) figure of merit
+//! the paper reports throughout (Fig 2, Table IV, Table V, Fig 13).
+//!
+//! ## Calibration
+//!
+//! Two constants anchor the model to the paper's silicon:
+//!
+//! * `AREA_NAND2_UM2` — chosen so the baseline 16384-bit BSN (the
+//!   padded 3×3×512-conv accumulator of Table V) reports ≈ 2.95e5 µm².
+//! * `DELAY_GATE_NS` — chosen so the same BSN's 105-stage critical path
+//!   reports ≈ 4.33 ns.
+//!
+//! Everything else (energy scaling, leakage) is a textbook alpha-power
+//! model calibrated against the chip's reported 198.9 TOPS/W peak at
+//! 0.65 V / 200 MHz (Fig 4) — see [`power`].
+
+pub mod power;
+
+use crate::gates::GateCount;
+
+/// NAND2-equivalent cell area in µm² (28-nm high-density calibration;
+/// see module docs).
+pub const AREA_NAND2_UM2: f64 = 0.3101;
+
+/// Nominal 2-input gate delay in ns at 0.9 V.
+pub const DELAY_GATE_NS: f64 = 0.04124;
+
+/// Nominal gate switching energy in fJ at 0.9 V (per toggle).
+pub const ENERGY_GATE_FJ: f64 = 0.18;
+
+/// Average switching-activity factor applied to the activity=1 energy
+/// upper bound of [`GateCount::energy_eq`].
+pub const ACTIVITY_FACTOR: f64 = 0.22;
+
+/// Physical cost of a circuit block.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Cost {
+    /// Silicon area in µm².
+    pub area_um2: f64,
+    /// Combinational / total latency in ns.
+    pub delay_ns: f64,
+    /// Energy per operation in fJ.
+    pub energy_fj: f64,
+}
+
+impl Cost {
+    /// Area-delay product in µm²·ns — the paper's primary efficiency
+    /// metric (Table V uses µm²·ns; Table IV and Fig 2 use µm²·µs for
+    /// full-layer latencies).
+    pub fn adp(&self) -> f64 {
+        self.area_um2 * self.delay_ns
+    }
+
+    /// ADP expressed in µm²·µs.
+    pub fn adp_um2_us(&self) -> f64 {
+        self.adp() / 1000.0
+    }
+
+    /// Series composition: areas and energies add, delays add.
+    pub fn series(&self, other: &Cost) -> Cost {
+        Cost {
+            area_um2: self.area_um2 + other.area_um2,
+            delay_ns: self.delay_ns + other.delay_ns,
+            energy_fj: self.energy_fj + other.energy_fj,
+        }
+    }
+
+    /// Parallel composition: areas and energies add, delay is the max.
+    pub fn parallel(&self, other: &Cost) -> Cost {
+        Cost {
+            area_um2: self.area_um2 + other.area_um2,
+            delay_ns: self.delay_ns.max(other.delay_ns),
+            energy_fj: self.energy_fj + other.energy_fj,
+        }
+    }
+
+    /// A multi-cycle block: same area, `cycles ×` delay and energy (the
+    /// spatial-temporal BSN's reuse model, §IV.B).
+    pub fn over_cycles(&self, cycles: u64) -> Cost {
+        Cost {
+            area_um2: self.area_um2,
+            delay_ns: self.delay_ns * cycles as f64,
+            energy_fj: self.energy_fj * cycles as f64,
+        }
+    }
+}
+
+/// Convert a gate-count summary into physical cost at nominal voltage.
+pub fn cost_of(gates: &GateCount) -> Cost {
+    Cost {
+        area_um2: gates.nand2_eq() * AREA_NAND2_UM2,
+        delay_ns: gates.depth * DELAY_GATE_NS,
+        energy_fj: gates.energy_eq() * ENERGY_GATE_FJ * ACTIVITY_FACTOR,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gates::GateKind;
+
+    #[test]
+    fn cost_of_simple_block() {
+        let g = GateCount::new().with(GateKind::And2, 100);
+        let c = cost_of(&g);
+        assert!((c.area_um2 - 100.0 * AREA_NAND2_UM2).abs() < 1e-9);
+        assert_eq!(c.delay_ns, 0.0); // depth not set
+    }
+
+    #[test]
+    fn adp_units() {
+        let c = Cost { area_um2: 1000.0, delay_ns: 2.0, energy_fj: 0.0 };
+        assert!((c.adp() - 2000.0).abs() < 1e-12);
+        assert!((c.adp_um2_us() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn series_parallel_cycles() {
+        let a = Cost { area_um2: 10.0, delay_ns: 1.0, energy_fj: 5.0 };
+        let b = Cost { area_um2: 20.0, delay_ns: 3.0, energy_fj: 1.0 };
+        let s = a.series(&b);
+        assert_eq!((s.area_um2, s.delay_ns, s.energy_fj), (30.0, 4.0, 6.0));
+        let p = a.parallel(&b);
+        assert_eq!((p.area_um2, p.delay_ns, p.energy_fj), (30.0, 3.0, 6.0));
+        let m = a.over_cycles(4);
+        assert_eq!((m.area_um2, m.delay_ns, m.energy_fj), (10.0, 4.0, 20.0));
+    }
+}

@@ -1,0 +1,189 @@
+//! Chip-level voltage/frequency power model (paper Fig 4).
+//!
+//! The fabricated 28-nm chip [4] reports current and energy efficiency
+//! versus supply voltage at several clock frequencies, peaking at
+//! **198.9 TOPS/W at 200 MHz / 650 mV**. We reproduce the measurement
+//! with a standard alpha-power-law model:
+//!
+//! * gate delay `d(V) ∝ V / (V - Vth)^alpha` bounds the maximum
+//!   frequency at each voltage (the chip only *works* above `Vmin(f)`);
+//! * dynamic energy per op scales as `V²`;
+//! * leakage power scales super-linearly with `V` and is amortized over
+//!   fewer ops at low frequency — producing the efficiency roll-off that
+//!   makes (650 mV, 200 MHz) the sweet spot.
+//!
+//! Calibrated so the peak is 198.9 TOPS/W at exactly that point.
+
+/// Threshold voltage of the alpha-power delay model (V).
+pub const VTH: f64 = 0.35;
+/// Velocity-saturation exponent.
+pub const ALPHA: f64 = 1.7;
+/// Nominal supply (V).
+pub const VDD_NOM: f64 = 0.9;
+/// Maximum clock at nominal supply (MHz).
+pub const FMAX_NOM_MHZ: f64 = 405.0;
+
+/// Dynamic energy per operation at nominal supply (fJ/op). Calibrated —
+/// see [`ChipPowerModel::efficiency_tops_w`] docs.
+pub const E_OP_NOM_FJ: f64 = 8.39;
+/// Leakage power at nominal supply (mW).
+pub const P_LEAK_NOM_MW: f64 = 5.97;
+/// Leakage voltage sensitivity: `P_leak ∝ (V/0.9) · 10^((V-0.9)/S)`.
+pub const LEAK_S: f64 = 0.45;
+
+/// Operations per cycle of the modeled chip: 4608 MACs × 2 ops — the
+/// fully-parallel 3×3×512 SC conv engine.
+pub const OPS_PER_CYCLE: f64 = 9216.0;
+
+/// Minimum functional supply regardless of frequency (logic/SRAM
+/// retention floor — why the measured peak sits at 650 mV / 200 MHz
+/// rather than at ever-lower voltage).
+pub const VMIN_FUNC: f64 = 0.63;
+
+/// One (voltage, frequency) operating point evaluation.
+#[derive(Clone, Copy, Debug)]
+pub struct OperatingPoint {
+    /// Supply voltage (V).
+    pub vdd: f64,
+    /// Clock (MHz).
+    pub freq_mhz: f64,
+    /// Whether timing closes at this voltage.
+    pub functional: bool,
+    /// Total power (mW).
+    pub power_mw: f64,
+    /// Supply current (mA).
+    pub current_ma: f64,
+    /// Energy efficiency (TOPS/W); 0 when not functional.
+    pub tops_per_w: f64,
+}
+
+/// Alpha-power chip model.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ChipPowerModel;
+
+impl ChipPowerModel {
+    /// Relative gate-delay factor versus nominal supply.
+    pub fn delay_factor(vdd: f64) -> f64 {
+        let d = |v: f64| v / (v - VTH).max(1e-3).powf(ALPHA);
+        d(vdd) / d(VDD_NOM)
+    }
+
+    /// Maximum functional frequency at a supply voltage (MHz).
+    pub fn fmax_mhz(vdd: f64) -> f64 {
+        if vdd <= VTH {
+            return 0.0;
+        }
+        FMAX_NOM_MHZ / Self::delay_factor(vdd)
+    }
+
+    /// Dynamic energy per op at a supply (fJ).
+    pub fn e_op_fj(vdd: f64) -> f64 {
+        E_OP_NOM_FJ * (vdd / VDD_NOM).powi(2)
+    }
+
+    /// Leakage power at a supply (mW).
+    pub fn p_leak_mw(vdd: f64) -> f64 {
+        P_LEAK_NOM_MW * (vdd / VDD_NOM) * 10f64.powf((vdd - VDD_NOM) / LEAK_S)
+    }
+
+    /// Evaluate an operating point.
+    pub fn evaluate(vdd: f64, freq_mhz: f64) -> OperatingPoint {
+        let functional = vdd >= VMIN_FUNC && freq_mhz <= Self::fmax_mhz(vdd) + 1e-9;
+        let ops_per_s = OPS_PER_CYCLE * freq_mhz * 1e6;
+        // fJ/op * ops/s = 1e-15 J/op * ops/s W -> mW factor 1e-12
+        let p_dyn_mw = Self::e_op_fj(vdd) * ops_per_s * 1e-12;
+        let power_mw = p_dyn_mw + Self::p_leak_mw(vdd);
+        let current_ma = power_mw / vdd;
+        let tops = ops_per_s / 1e12;
+        let tops_per_w = if functional { tops / (power_mw / 1000.0) } else { 0.0 };
+        OperatingPoint { vdd, freq_mhz, functional, power_mw, current_ma, tops_per_w }
+    }
+
+    /// Sweep the Fig-4 grid: voltages 0.5–0.9 V at the given frequencies.
+    pub fn sweep(freqs_mhz: &[f64], v_steps: usize) -> Vec<OperatingPoint> {
+        let mut out = Vec::new();
+        for &f in freqs_mhz {
+            for i in 0..v_steps {
+                let vdd = 0.5 + 0.4 * i as f64 / (v_steps - 1) as f64;
+                out.push(Self::evaluate(vdd, f));
+            }
+        }
+        out
+    }
+
+    /// The peak efficiency over a sweep (the paper's headline number).
+    pub fn peak_efficiency(freqs_mhz: &[f64], v_steps: usize) -> OperatingPoint {
+        Self::sweep(freqs_mhz, v_steps)
+            .into_iter()
+            .filter(|p| p.functional)
+            .max_by(|a, b| a.tops_per_w.total_cmp(&b.tops_per_w))
+            .expect("no functional operating point")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn peak_is_198_9_tops_w_at_650mv_200mhz() {
+        let p = ChipPowerModel::evaluate(0.65, 200.0);
+        assert!(p.functional, "200 MHz must close timing at 650 mV");
+        assert!(
+            (p.tops_per_w - 198.9).abs() < 6.0,
+            "calibration drifted: {} TOPS/W",
+            p.tops_per_w
+        );
+    }
+
+    #[test]
+    fn fmax_monotone_in_vdd() {
+        let mut prev = 0.0;
+        for i in 0..20 {
+            let v = 0.45 + i as f64 * 0.025;
+            let f = ChipPowerModel::fmax_mhz(v);
+            assert!(f >= prev, "fmax must grow with vdd");
+            prev = f;
+        }
+    }
+
+    #[test]
+    fn not_functional_below_vmin() {
+        // 400 MHz can't run at 0.5 V in this model.
+        let p = ChipPowerModel::evaluate(0.5, 400.0);
+        assert!(!p.functional);
+        assert_eq!(p.tops_per_w, 0.0);
+        // ...and nothing runs below the functional floor.
+        assert!(!ChipPowerModel::evaluate(0.6, 50.0).functional);
+    }
+
+    #[test]
+    fn global_peak_is_at_650mv_200mhz() {
+        let peak = ChipPowerModel::peak_efficiency(&[50.0, 100.0, 200.0, 400.0], 41);
+        assert!((peak.vdd - 0.65).abs() < 0.011, "peak vdd {}", peak.vdd);
+        assert_eq!(peak.freq_mhz, 200.0);
+        assert!((peak.tops_per_w - 198.9).abs() < 3.0, "peak {}", peak.tops_per_w);
+    }
+
+    #[test]
+    fn current_grows_with_voltage_at_fixed_freq() {
+        let lo = ChipPowerModel::evaluate(0.7, 100.0);
+        let hi = ChipPowerModel::evaluate(0.9, 100.0);
+        assert!(hi.current_ma > lo.current_ma);
+    }
+
+    #[test]
+    fn efficiency_drops_at_high_voltage() {
+        let lo = ChipPowerModel::evaluate(0.65, 200.0);
+        let hi = ChipPowerModel::evaluate(0.9, 200.0);
+        assert!(lo.tops_per_w > hi.tops_per_w);
+    }
+
+    #[test]
+    fn sweep_covers_grid() {
+        let pts = ChipPowerModel::sweep(&[50.0, 100.0, 200.0, 400.0], 9);
+        assert_eq!(pts.len(), 36);
+        let peak = ChipPowerModel::peak_efficiency(&[50.0, 100.0, 200.0, 400.0], 41);
+        assert!(peak.tops_per_w > 150.0);
+    }
+}

@@ -1,0 +1,331 @@
+//! Deterministic synthetic datasets (DESIGN.md §Substitutions).
+//!
+//! The paper evaluates on MNIST (§II, Fig 5) and CIFAR-10/100 (§III);
+//! neither is available in this environment, so we generate procedural
+//! stand-ins that exercise the same code paths:
+//!
+//! * [`SynthDigits`] — 28×28 grayscale, 10 classes: a 7×5 bitmap font
+//!   rendered with random shift, scale jitter and Gaussian noise. A
+//!   small CNN separates it well, like MNIST.
+//! * [`SynthCifar`] — 32×32×3, `k` classes: class-conditional oriented
+//!   gratings + colored blobs + noise; harder than SynthDigits, and its
+//!   accuracy ordering under quantization ablations mirrors CIFAR's.
+//!
+//! Both are deterministic: `(split, index)` fully determines a sample.
+
+use crate::nn::tensor::Tensor;
+use crate::util::Rng;
+
+/// A labelled dataset generator.
+pub trait Dataset: Send + Sync {
+    /// Image shape (C, H, W).
+    fn shape(&self) -> (usize, usize, usize);
+    /// Number of classes.
+    fn num_classes(&self) -> usize;
+    /// Deterministically generate sample `idx` of the split.
+    fn sample(&self, split: Split, idx: usize) -> (Tensor, usize);
+
+    /// Generate a batch.
+    fn batch(&self, split: Split, start: usize, n: usize) -> (Vec<Tensor>, Vec<usize>) {
+        let mut xs = Vec::with_capacity(n);
+        let mut ys = Vec::with_capacity(n);
+        for i in 0..n {
+            let (x, y) = self.sample(split, start + i);
+            xs.push(x);
+            ys.push(y);
+        }
+        (xs, ys)
+    }
+
+    /// Flattened batch (NCHW) for the PJRT training path.
+    fn batch_flat(&self, split: Split, start: usize, n: usize) -> (Vec<f32>, Vec<i32>) {
+        let (xs, ys) = self.batch(split, start, n);
+        let mut data = Vec::with_capacity(n * xs[0].len());
+        for x in &xs {
+            data.extend_from_slice(x.data());
+        }
+        (data, ys.into_iter().map(|y| y as i32).collect())
+    }
+}
+
+/// Train/test split.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Split {
+    /// Training stream.
+    Train,
+    /// Held-out test stream.
+    Test,
+}
+
+impl Split {
+    fn seed_tag(self) -> u64 {
+        match self {
+            Split::Train => 0x7261_696e,
+            Split::Test => 0x7465_7374,
+        }
+    }
+}
+
+/// 7×5 bitmap digit font (classic seven-segment-ish glyphs).
+const DIGIT_FONT: [[u8; 7]; 10] = [
+    [0b01110, 0b10001, 0b10011, 0b10101, 0b11001, 0b10001, 0b01110], // 0
+    [0b00100, 0b01100, 0b00100, 0b00100, 0b00100, 0b00100, 0b01110], // 1
+    [0b01110, 0b10001, 0b00001, 0b00010, 0b00100, 0b01000, 0b11111], // 2
+    [0b11111, 0b00010, 0b00100, 0b00010, 0b00001, 0b10001, 0b01110], // 3
+    [0b00010, 0b00110, 0b01010, 0b10010, 0b11111, 0b00010, 0b00010], // 4
+    [0b11111, 0b10000, 0b11110, 0b00001, 0b00001, 0b10001, 0b01110], // 5
+    [0b00110, 0b01000, 0b10000, 0b11110, 0b10001, 0b10001, 0b01110], // 6
+    [0b11111, 0b00001, 0b00010, 0b00100, 0b01000, 0b01000, 0b01000], // 7
+    [0b01110, 0b10001, 0b10001, 0b01110, 0b10001, 0b10001, 0b01110], // 8
+    [0b01110, 0b10001, 0b10001, 0b01111, 0b00001, 0b00010, 0b01100], // 9
+];
+
+/// MNIST substitute.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SynthDigits {
+    /// Additive noise std.
+    pub noise: f32,
+}
+
+impl SynthDigits {
+    /// Standard configuration.
+    pub fn new() -> Self {
+        Self { noise: 0.15 }
+    }
+}
+
+impl Dataset for SynthDigits {
+    fn shape(&self) -> (usize, usize, usize) {
+        (1, 28, 28)
+    }
+
+    fn num_classes(&self) -> usize {
+        10
+    }
+
+    fn sample(&self, split: Split, idx: usize) -> (Tensor, usize) {
+        let mut rng = Rng::new(split.seed_tag().wrapping_mul(0x9E37).wrapping_add(idx as u64));
+        let label = rng.gen_index(10);
+        let glyph = &DIGIT_FONT[label];
+        let mut img = Tensor::zeros(&[1, 28, 28]);
+        // Scale the 7x5 glyph up 3x and place with jitter.
+        let scale = 3;
+        let oy = 3 + rng.gen_range_i64(-2, 2) as isize;
+        let ox = 6 + rng.gen_range_i64(-3, 3) as isize;
+        let intensity = 0.7 + 0.3 * rng.f64() as f32;
+        for (gy, row) in glyph.iter().enumerate() {
+            for gx in 0..5 {
+                if row >> (4 - gx) & 1 == 1 {
+                    for dy in 0..scale {
+                        for dx in 0..scale {
+                            let y = oy + (gy * scale + dy) as isize;
+                            let x = ox + (gx * scale + dx) as isize;
+                            if (0..28).contains(&y) && (0..28).contains(&x) {
+                                img.set3(0, y as usize, x as usize, intensity);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        for v in img.data_mut() {
+            *v += self.noise * rng.normal() as f32;
+        }
+        // Center roughly to zero mean (the chip's input encoder expects
+        // a symmetric range).
+        let mean: f32 = img.data().iter().sum::<f32>() / img.len() as f32;
+        let img = img.map(|v| v - mean);
+        (img, label)
+    }
+}
+
+/// CIFAR substitute: oriented gratings + class-colored blob + noise.
+#[derive(Clone, Copy, Debug)]
+pub struct SynthCifar {
+    /// Number of classes (10 for CIFAR10-like, 20 for CIFAR100-coarse-like).
+    pub classes: usize,
+    /// Additive noise std.
+    pub noise: f32,
+    /// Grating amplitude (signal strength).
+    pub amp: f32,
+    /// Amplitude of a random distractor grating (class-independent).
+    pub distractor: f32,
+}
+
+impl SynthCifar {
+    /// 10-class standard configuration.
+    pub fn new(classes: usize) -> Self {
+        Self { classes, noise: 0.25, amp: 0.6, distractor: 0.0 }
+    }
+
+    /// Harder variant used by the accuracy ablations: weaker signal,
+    /// stronger noise, and a class-independent distractor grating, so
+    /// low-precision activations measurably hurt (the Table III / Fig 8
+    /// regime).
+    pub fn hard(classes: usize) -> Self {
+        Self { classes, noise: 0.45, amp: 0.45, distractor: 0.25 }
+    }
+}
+
+impl Dataset for SynthCifar {
+    fn shape(&self) -> (usize, usize, usize) {
+        (3, 32, 32)
+    }
+
+    fn num_classes(&self) -> usize {
+        self.classes
+    }
+
+    fn sample(&self, split: Split, idx: usize) -> (Tensor, usize) {
+        let mut rng =
+            Rng::new(split.seed_tag().wrapping_mul(0xC1FA).wrapping_add(idx as u64));
+        let label = rng.gen_index(self.classes);
+        let mut img = Tensor::zeros(&[3, 32, 32]);
+        // Class-dependent grating orientation + frequency.
+        let theta = std::f64::consts::PI * label as f64 / self.classes as f64
+            + 0.08 * rng.normal();
+        let freq = 0.35 + 0.1 * ((label % 3) as f64) + 0.03 * rng.normal();
+        let phase = rng.f64() * std::f64::consts::TAU;
+        let (s, c) = theta.sin_cos();
+        // Class-independent distractor grating (forces the model to be
+        // orientation-selective rather than energy-detecting).
+        let dtheta = std::f64::consts::PI * rng.f64();
+        let (ds, dc) = dtheta.sin_cos();
+        let dfreq = 0.3 + 0.25 * rng.f64();
+        let dphase = rng.f64() * std::f64::consts::TAU;
+        // Class-dependent color balance.
+        let col = [
+            0.5 + 0.5 * ((label * 37) % 10) as f64 / 10.0,
+            0.5 + 0.5 * ((label * 53 + 3) % 10) as f64 / 10.0,
+            0.5 + 0.5 * ((label * 71 + 7) % 10) as f64 / 10.0,
+        ];
+        // Blob position jitters per sample but its size is class-tied.
+        let bx = 8.0 + 16.0 * rng.f64();
+        let by = 8.0 + 16.0 * rng.f64();
+        let br = 3.0 + (label % 5) as f64;
+        for y in 0..32 {
+            for x in 0..32 {
+                let u = x as f64 * c + y as f64 * s;
+                let g = (freq * u + phase).sin();
+                let du = x as f64 * dc + y as f64 * ds;
+                let dg = (dfreq * du + dphase).sin();
+                let d2 = ((x as f64 - bx).powi(2) + (y as f64 - by).powi(2)) / (br * br);
+                let blob = (-d2).exp();
+                for ch in 0..3 {
+                    let v = self.amp as f64 * g * col[ch]
+                        + self.distractor as f64 * dg
+                        + 0.8 * blob * (col[(ch + 1) % 3] - 0.5)
+                        + self.noise as f64 * rng.normal();
+                    img.set3(ch, y, x, v as f32);
+                }
+            }
+        }
+        (img, label)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn digits_deterministic() {
+        let d = SynthDigits::new();
+        let (a, la) = d.sample(Split::Train, 42);
+        let (b, lb) = d.sample(Split::Train, 42);
+        assert_eq!(la, lb);
+        assert_eq!(a.data(), b.data());
+        // Different index -> different image.
+        let (c, _) = d.sample(Split::Train, 43);
+        assert_ne!(a.data(), c.data());
+    }
+
+    #[test]
+    fn digits_splits_differ() {
+        let d = SynthDigits::new();
+        let (a, _) = d.sample(Split::Train, 7);
+        let (b, _) = d.sample(Split::Test, 7);
+        assert_ne!(a.data(), b.data());
+    }
+
+    #[test]
+    fn digits_glyph_visible_over_noise() {
+        let d = SynthDigits::new();
+        let (img, _) = d.sample(Split::Train, 1);
+        // Foreground pixels should exceed the noise floor.
+        assert!(img.max_abs() > 0.4);
+    }
+
+    #[test]
+    fn cifar_shapes_and_classes() {
+        let d = SynthCifar::new(10);
+        assert_eq!(d.shape(), (3, 32, 32));
+        let (x, y) = d.sample(Split::Test, 5);
+        assert_eq!(x.shape(), &[3, 32, 32]);
+        assert!(y < 10);
+        let d20 = SynthCifar::new(20);
+        let mut seen = vec![false; 20];
+        for i in 0..400 {
+            let (_, y) = d20.sample(Split::Train, i);
+            seen[y] = true;
+        }
+        assert!(seen.iter().filter(|&&s| s).count() >= 18, "labels should cover classes");
+    }
+
+    #[test]
+    fn batch_flat_layout() {
+        let d = SynthDigits::new();
+        let (data, labels) = d.batch_flat(Split::Train, 0, 3);
+        assert_eq!(data.len(), 3 * 784);
+        assert_eq!(labels.len(), 3);
+    }
+
+    #[test]
+    fn classes_are_separable_by_simple_statistic() {
+        // Nearest-class-mean on raw pixels should beat chance by a wide
+        // margin — sanity that the task is learnable.
+        let d = SynthDigits::new();
+        let k = 10;
+        let (c, h, w) = d.shape();
+        let dim = c * h * w;
+        let mut means = vec![vec![0.0f32; dim]; k];
+        let mut counts = vec![0usize; k];
+        for i in 0..400 {
+            let (x, y) = d.sample(Split::Train, i);
+            for (m, v) in means[y].iter_mut().zip(x.data()) {
+                *m += v;
+            }
+            counts[y] += 1;
+        }
+        for (m, &n) in means.iter_mut().zip(&counts) {
+            for v in m.iter_mut() {
+                *v /= n.max(1) as f32;
+            }
+        }
+        let mut hits = 0;
+        let total = 200;
+        for i in 0..total {
+            let (x, y) = d.sample(Split::Test, i);
+            let best = (0..k)
+                .min_by(|&a, &b| {
+                    let da: f32 = means[a]
+                        .iter()
+                        .zip(x.data())
+                        .map(|(m, v)| (m - v).powi(2))
+                        .sum();
+                    let db: f32 = means[b]
+                        .iter()
+                        .zip(x.data())
+                        .map(|(m, v)| (m - v).powi(2))
+                        .sum();
+                    da.total_cmp(&db)
+                })
+                .unwrap();
+            if best == y {
+                hits += 1;
+            }
+        }
+        let acc = hits as f64 / total as f64;
+        assert!(acc > 0.5, "nearest-mean accuracy {acc} too low — task not learnable");
+    }
+}

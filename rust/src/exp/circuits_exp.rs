@@ -1,0 +1,403 @@
+//! Circuit-level experiments (no PJRT required): Tables II & V,
+//! Figs 1, 4, 7, 9–13.
+
+use crate::accel::{self, schedule::Schedule, RESNET18_ACC_WIDTHS};
+use crate::circuits::bsn::Bsn;
+use crate::circuits::fsm::{curve_mse, transfer_curve, ReluFsm, StanhFsm};
+use crate::circuits::si::{ActivationFn, SelectiveInterconnect};
+use crate::coding::{BitVec, ThermCode};
+use crate::cost::power::ChipPowerModel;
+use crate::util::{Rng, Stats};
+use crate::Result;
+
+use super::{banner, Opts, Report};
+
+/// Table II: thermometer codes and ranges per BSL.
+pub fn tab2(_opts: &Opts) -> Result<Report> {
+    banner("Table II — thermometer coding");
+    let mut rep = Report::new("tab2");
+    println!("{:<5} {:>10} {:>14}   example codes", "BSL", "bin prec", "range");
+    for bsl in [2usize, 4, 8, 16] {
+        let (lo, hi) = ThermCode::range(bsl);
+        let prec = ThermCode::binary_precision(bsl)
+            .map(|p| p.to_string())
+            .unwrap_or_else(|| "-".into());
+        let lo_c = ThermCode::encode(lo, bsl);
+        let mid_c = ThermCode::encode(0, bsl);
+        let hi_c = ThermCode::encode(hi, bsl);
+        println!(
+            "{bsl:<5} {prec:>10} {:>14}   {lo_c} / {mid_c} / {hi_c}",
+            format!("{lo}..{hi}")
+        );
+        rep.push(&bsl.to_string(), "levels", (bsl + 1) as f64);
+    }
+    Ok(rep)
+}
+
+/// Fig 1: FSM-based tanh/ReLU vs exact — transfer-curve MSE per BSL,
+/// with the proposed SI design (exact by construction) as reference.
+pub fn fig1(opts: &Opts) -> Result<Report> {
+    banner("Fig 1 — FSM activation inaccuracy vs exact");
+    let mut rep = Report::new("fig1");
+    let xs: Vec<f64> = (0..41).map(|i| -1.0 + i as f64 * 0.05).collect();
+    let bsls = if opts.quick { vec![32usize, 128, 1024] } else { vec![16, 32, 64, 128, 256, 1024] };
+    println!("{:<8} {:>14} {:>14} {:>14}", "BSL", "tanh MSE", "ReLU MSE", "SI (proposed)");
+    for bsl in bsls {
+        let tanh_curve = transfer_curve(
+            || {
+                let mut f = StanhFsm::new(8);
+                Box::new(move |b: &BitVec| {
+                    f.reset();
+                    f.run(b)
+                })
+            },
+            &xs,
+            bsl,
+            0x5A5A,
+        );
+        let mse_tanh = curve_mse(&tanh_curve, |x| (4.0 * x).tanh());
+        let relu_curve = transfer_curve(
+            || {
+                let mut f = ReluFsm::new(16);
+                Box::new(move |b: &BitVec| {
+                    f.reset();
+                    f.run(b)
+                })
+            },
+            &xs,
+            bsl,
+            0x1357,
+        );
+        let mse_relu = curve_mse(&relu_curve, |x| x.max(0.0));
+        // Proposed design: deterministic SI synthesis of the same tanh
+        // over a 64-bit accumulation — exact at every representable
+        // point, so the only error is quantization.
+        let si = SelectiveInterconnect::for_activation(&ActivationFn::Tanh { gain: 0.125 }, 64, 64);
+        let mut se = 0.0;
+        for c in 0..=64usize {
+            let x = (c as f64 - 32.0) / 32.0; // map to [-1, 1]
+            let got = (si.apply_count(c) as f64 - 32.0) / 32.0;
+            se += (got - (4.0 * x).tanh()).powi(2);
+        }
+        let mse_si = se / 65.0;
+        println!("{bsl:<8} {mse_tanh:>14.6} {mse_relu:>14.6} {mse_si:>14.6}");
+        rep.push(&bsl.to_string(), "mse_tanh_fsm", mse_tanh);
+        rep.push(&bsl.to_string(), "mse_relu_fsm", mse_relu);
+        rep.push(&bsl.to_string(), "mse_si", mse_si);
+    }
+    Ok(rep)
+}
+
+/// Fig 4: chip current and energy efficiency vs supply voltage.
+pub fn fig4(_opts: &Opts) -> Result<Report> {
+    banner("Fig 4 — current & TOPS/W vs supply voltage");
+    let mut rep = Report::new("fig4");
+    let freqs = [50.0, 100.0, 200.0, 400.0];
+    println!("{:<8} {:>8} {:>12} {:>12} {:>12}", "f (MHz)", "Vdd", "I (mA)", "TOPS/W", "ok");
+    for &f in &freqs {
+        for i in 0..9 {
+            let v = 0.5 + 0.05 * i as f64;
+            let p = ChipPowerModel::evaluate(v, f);
+            println!(
+                "{f:<8} {v:>8.2} {:>12.2} {:>12.1} {:>12}",
+                p.current_ma,
+                p.tops_per_w,
+                if p.functional { "yes" } else { "-" }
+            );
+            rep.push(&format!("{f}MHz@{v:.2}V"), "tops_per_w", p.tops_per_w);
+            rep.push(&format!("{f}MHz@{v:.2}V"), "current_ma", p.current_ma);
+        }
+    }
+    let peak = ChipPowerModel::peak_efficiency(&freqs, 41);
+    println!(
+        "peak: {:.1} TOPS/W at {:.0} mV / {:.0} MHz  (paper: 198.9 @ 650 mV / 200 MHz)",
+        peak.tops_per_w,
+        peak.vdd * 1000.0,
+        peak.freq_mhz
+    );
+    rep.push("peak", "tops_per_w", peak.tops_per_w);
+    rep.push("peak", "vdd_mv", peak.vdd * 1000.0);
+    Ok(rep)
+}
+
+/// Fig 7: BN-fused ReLU realized by the SI with 16-bit output BSL.
+pub fn fig7(_opts: &Opts) -> Result<Report> {
+    banner("Fig 7 — BN-fused activation via selective interconnect");
+    let mut rep = Report::new("fig7");
+    let in_w = 64usize;
+    let out = 16usize;
+    println!("{:<24} {:>12} {:>12}", "(gamma, beta)", "max |err|", "mean |err|");
+    for (gamma, beta) in [(0.5f64, -4.0f64), (1.0, 0.0), (1.5, 2.0), (2.0, 6.0)] {
+        let act = ActivationFn::BnRelu { gamma, beta, ratio: 0.5 };
+        let si = SelectiveInterconnect::for_activation(&act, in_w, out);
+        let mut stats = Stats::new();
+        for c in 0..=in_w {
+            let q = c as f64 - in_w as f64 / 2.0;
+            let ideal = if q >= beta { gamma * (q - beta) * 0.5 } else { 0.0 };
+            let ideal_q = ideal.round().clamp(-(out as f64) / 2.0, out as f64 / 2.0);
+            let got = si.apply_count(c) as f64 - out as f64 / 2.0;
+            stats.push((got - ideal_q).abs());
+        }
+        println!("({gamma:>4}, {beta:>5})          {:>12.3} {:>12.4}", stats.max(), stats.mean());
+        rep.push(&format!("g{gamma}b{beta}"), "max_err", stats.max());
+    }
+    println!("(the SI reproduces the BN-fused ReLU exactly at every count)");
+    Ok(rep)
+}
+
+/// Fig 9: (a) BSN cost vs accumulation width; (b) ADP overhead of the
+/// monolithic worst-case BSN on small layers.
+pub fn fig9(_opts: &Opts) -> Result<Report> {
+    banner("Fig 9 — BSN cost scaling & big-BSN overhead");
+    let mut rep = Report::new("fig9");
+    let widths = [64usize, 128, 256, 512, 1024, 2304, 4608, 9216];
+    println!("{:<8} {:>14} {:>10} {:>14} {:>12}", "width", "area um2", "delay ns", "ADP um2*ns", "area/width");
+    let mut per_bit_first = 0.0;
+    for (i, &w) in widths.iter().enumerate() {
+        let c = Bsn::new(w).cost();
+        let per_bit = c.area_um2 / w as f64;
+        if i == 0 {
+            per_bit_first = per_bit;
+        }
+        println!(
+            "{w:<8} {:>14.0} {:>10.2} {:>14.0} {:>12.3}",
+            c.area_um2,
+            c.delay_ns,
+            c.adp(),
+            per_bit
+        );
+        rep.push(&w.to_string(), "area", c.area_um2);
+        rep.push(&w.to_string(), "adp", c.adp());
+    }
+    let super_linear = (Bsn::new(9216).cost().area_um2 / 9216.0) / per_bit_first;
+    println!("per-bit area grows {super_linear:.1}x from 64b to 9216b (super-linear)");
+    rep.push("scaling", "per_bit_growth", super_linear);
+
+    println!("\n(b) monolithic 9216-bit BSN serving small widths:");
+    let mono = Bsn::new(9216).cost();
+    println!("{:<8} {:>14} {:>12}", "width", "right-sized", "overhead x");
+    for &w in &widths[..7] {
+        let right = Bsn::new(w).cost();
+        let overhead = mono.adp() / right.adp();
+        println!("{w:<8} {:>14.0} {:>12.1}", right.adp(), overhead);
+        rep.push(&w.to_string(), "mono_overhead", overhead);
+    }
+    Ok(rep)
+}
+
+/// Fig 10a: effect of reducing the BSN output BSL on SI accuracy;
+/// Fig 10b: the parameterized design space.
+pub fn fig10(opts: &Opts) -> Result<Report> {
+    banner("Fig 10 — output-BSL reduction & parameterized BSN space");
+    let mut rep = Report::new("fig10");
+    let in_w = 1152usize;
+    let trials = if opts.quick { 2000 } else { 20000 };
+    let mut rng = Rng::new(opts.seed);
+    println!("{:<10} {:>14} {:>14}", "out BSL", "ReLU MSE", "tanh MSE");
+    for out in [64usize, 32, 16, 8, 4] {
+        // Random near-Gaussian accumulations (ternary products).
+        let relu_si = SelectiveInterconnect::for_activation(
+            &ActivationFn::Relu { ratio: out as f64 / 64.0 },
+            in_w,
+            out,
+        );
+        let tanh_si = SelectiveInterconnect::for_activation(
+            &ActivationFn::Tanh { gain: 0.06 },
+            in_w,
+            out,
+        );
+        let (mut se_r, mut se_t) = (0.0f64, 0.0f64);
+        for _ in 0..trials {
+            let count: usize = (0..in_w).filter(|_| rng.gen_bool(0.5)).count();
+            let q = count as f64 - in_w as f64 / 2.0;
+            // Reference: full-precision activation normalized to [0,1].
+            let ref_r = (q.max(0.0) * (out as f64 / 64.0)).min(out as f64 / 2.0);
+            let got_r = relu_si.apply_count(count) as f64 - out as f64 / 2.0;
+            se_r += ((got_r - ref_r) / (out as f64 / 2.0)).powi(2);
+            let ref_t = (0.06 * q).tanh();
+            let got_t = (tanh_si.apply_count(count) as f64 - out as f64 / 2.0) / (out as f64 / 2.0);
+            se_t += (got_t - ref_t).powi(2);
+        }
+        let (mse_r, mse_t) = (se_r / trials as f64, se_t / trials as f64);
+        println!("{out:<10} {mse_r:>14.6} {mse_t:>14.6}");
+        rep.push(&out.to_string(), "mse_relu", mse_r);
+        rep.push(&out.to_string(), "mse_tanh", mse_t);
+    }
+
+    println!("\n(b) design space for 2304-bit accumulation:");
+    println!("{:<12} {:<10} {:>12} {:>12} {:>10}", "clip_div", "stride", "area um2", "ADP", "MSE");
+    for clip_div in [8usize, 4, 3] {
+        for stride in [1usize, 2] {
+            if let Some(d) = accel::design_spatial_with(2304, 16, clip_div, stride) {
+                let c = d.cost();
+                let mse = d.mse(0.5, trials / 4, &mut rng);
+                println!(
+                    "{clip_div:<12} {stride:<10} {:>12.0} {:>12.0} {:>10.2e}",
+                    c.area_um2,
+                    c.adp(),
+                    mse
+                );
+                rep.push(&format!("c{clip_div}s{stride}"), "adp", c.adp());
+            }
+        }
+    }
+    Ok(rep)
+}
+
+/// Fig 11: input distributions at the sub-sampling stages.
+pub fn fig11(opts: &Opts) -> Result<Report> {
+    banner("Fig 11 — per-stage count distributions (clipping opportunity)");
+    let mut rep = Report::new("fig11");
+    let design = accel::design_spatial(9216, 16);
+    let trials = if opts.quick { 400 } else { 4000 };
+    let mut rng = Rng::new(opts.seed ^ 0xF16);
+    // Track the distribution of group counts entering each stage.
+    let m0 = design.stages()[0].m;
+    let l0 = design.stages()[0].l;
+    for (si, st) in design.stages().iter().enumerate() {
+        let mut stats = Stats::new();
+        for _ in 0..trials {
+            // Simulate fresh leaf inputs and propagate to stage si.
+            let mut counts: Vec<usize> =
+                (0..m0).map(|_| (0..l0).filter(|_| rng.gen_bool(0.5)).count()).collect();
+            let mut bsl;
+            for (sj, stj) in design.stages().iter().enumerate() {
+                if sj == si {
+                    break;
+                }
+                counts = counts
+                    .iter()
+                    .map(|&k| stj.sub.apply_count(k, stj.l))
+                    .collect();
+                bsl = stj.sub.out_bsl(stj.l);
+                let per = design.stages()[sj + 1].l / bsl;
+                counts = counts.chunks(per).map(|c| c.iter().sum()).collect();
+            }
+            for &c in &counts {
+                stats.push(c as f64);
+            }
+        }
+        let center = st.l as f64 / 2.0;
+        let spread = stats.std();
+        let clip_sigma = (center - st.sub.clip as f64) / spread.max(1e-9);
+        println!(
+            "stage {si}: m={} l={} clip={}  count mean={:.1} std={:.1}  clip at {:.1} sigma",
+            st.m, st.l, st.sub.clip, stats.mean(), spread, clip_sigma
+        );
+        rep.push(&format!("stage{si}"), "clip_sigma", clip_sigma);
+    }
+    println!("(clip boundaries sit many sigma out -> truncation error negligible)");
+    Ok(rep)
+}
+
+/// Fig 12: spatial-temporal BSN cycle-by-cycle trace.
+pub fn fig12(opts: &Opts) -> Result<Report> {
+    banner("Fig 12 — 576-bit BSN reused over 9 cycles for 4608b");
+    let mut rep = Report::new("fig12");
+    let st = accel::design_st(4608, 576, 16, 16);
+    println!(
+        "inner width = {}b, data cycles = {}, total cycles = {} (paper: 9)",
+        st.inner().in_width(),
+        st.data_cycles(),
+        st.total_cycles()
+    );
+    let mut rng = Rng::new(opts.seed ^ 0x12);
+    let counts: Vec<usize> =
+        (0..st.data_cycles()).map(|_| (0..576).filter(|_| rng.gen_bool(0.5)).count()).collect();
+    for (cyc, &k) in counts.iter().enumerate() {
+        let partial = st.inner().eval_counts(&[k]);
+        println!("cycle {cyc}: input count {k:>4} -> partial code count {partial:>3}");
+    }
+    let out = st.eval_counts(&counts);
+    let exact = st.exact_scaled_value(&counts);
+    let approx = st.approx_value(&counts);
+    println!(
+        "merge cycle: output count {out} -> value {approx} (exact {exact:.2}, divisor {})",
+        st.scale_divisor()
+    );
+    rep.push("st", "cycles", st.total_cycles() as f64);
+    rep.push("st", "abs_err", (approx - exact).abs());
+    Ok(rep)
+}
+
+/// Table V: the 3×3×512 convolution — baseline vs spatial vs
+/// spatial-temporal approximate BSN.
+pub fn tab5(opts: &Opts) -> Result<Report> {
+    banner("Table V — 3x3x512 conv accumulator designs");
+    let mut rep = Report::new("tab5");
+    let width = 4608 * 2; // 4608 ternary products x 2-bit codes
+    let trials = if opts.quick { 2000 } else { 50000 };
+    let mut rng = Rng::new(opts.seed ^ 0x75);
+
+    let base = Bsn::new(width).cost();
+    let spatial = accel::design_spatial(width, 16);
+    let sp_cost = spatial.cost();
+    let sp_mse = spatial.mse(0.5, trials, &mut rng);
+    let st = accel::design_st(width, 1152, 16, 16);
+    let st_cost = st.cycle_cost();
+    let st_adp = st.adp_throughput_normalized(base.delay_ns);
+    let st_mse = st.mse(0.5, trials, &mut rng);
+
+    println!(
+        "{:<26} {:>12} {:>10} {:>14} {:>12}",
+        "design", "area um2", "delay ns", "ADP um2*ns", "MSE"
+    );
+    println!(
+        "{:<26} {:>12.3e} {:>10.2} {:>14.3e} {:>12}",
+        "Baseline BSN", base.area_um2, base.delay_ns, base.adp(), "-"
+    );
+    println!(
+        "{:<26} {:>12.3e} {:>10.2} {:>14.3e} {:>12.2e}",
+        "Spatial Appr. BSN", sp_cost.area_um2, sp_cost.delay_ns, sp_cost.adp(), sp_mse
+    );
+    println!(
+        "{:<26} {:>12.3e} {:>10.2} {:>14.3e} {:>12.2e}",
+        "Spatial-Temporal Appr. BSN", st_cost.area_um2, st_cost.delay_ns, st_adp, st_mse
+    );
+    let r_sp = base.adp() / sp_cost.adp();
+    let r_st = base.adp() / st_adp;
+    println!("ADP reduction: spatial {r_sp:.1}x (paper 2.8x), spatial-temporal {r_st:.1}x (paper 4.1x)");
+
+    rep.push("baseline", "area", base.area_um2);
+    rep.push("baseline", "adp", base.adp());
+    rep.push("spatial", "adp", sp_cost.adp());
+    rep.push("spatial", "mse", sp_mse);
+    rep.push("st", "adp_norm", st_adp);
+    rep.push("st", "area", st_cost.area_um2);
+    rep.push("st", "mse", st_mse);
+    rep.push("ratio", "spatial_x", r_sp);
+    rep.push("ratio", "st_x", r_st);
+    Ok(rep)
+}
+
+/// Fig 13: ADP and MSE across the four ResNet-18 conv sizes.
+pub fn fig13(opts: &Opts) -> Result<Report> {
+    banner("Fig 13 — ADP & MSE across ResNet-18 conv sizes");
+    let mut rep = Report::new("fig13");
+    let trials = if opts.quick { 1000 } else { 20000 };
+    let widths_bits: Vec<usize> = RESNET18_ACC_WIDTHS.iter().map(|w| w * 2).collect();
+    let sched = Schedule::new(&widths_bits, 1152);
+    println!(
+        "{:<10} {:>8} {:>14} {:>14} {:>10} {:>10}",
+        "products", "cycles", "mono ADP", "ST ADP", "reduction", "MSE"
+    );
+    let mut rng = Rng::new(opts.seed ^ 0x13);
+    for (i, l) in sched.layers.iter().enumerate() {
+        let st = sched.st_for(l.width_bits);
+        let mse = st.mse(0.5, trials, &mut rng);
+        println!(
+            "{:<10} {:>8} {:>14.3e} {:>14.3e} {:>9.1}x {:>10.2e}",
+            RESNET18_ACC_WIDTHS[i], l.cycles, l.adp_exact, l.adp_st, l.reduction, mse
+        );
+        rep.push(&RESNET18_ACC_WIDTHS[i].to_string(), "reduction", l.reduction);
+        rep.push(&RESNET18_ACC_WIDTHS[i].to_string(), "mse", mse);
+    }
+    println!(
+        "avg ADP reduction {:.1}x (paper 8.5x, range 8.2-23.3x); datapath area reduction {:.1}x (paper 2.2x)",
+        sched.avg_adp_reduction(),
+        sched.area_reduction()
+    );
+    rep.push("avg", "adp_reduction", sched.avg_adp_reduction());
+    rep.push("avg", "area_reduction", sched.area_reduction());
+    Ok(rep)
+}

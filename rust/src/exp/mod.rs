@@ -1,0 +1,110 @@
+//! Experiment registry: one runner per paper table/figure.
+//!
+//! `scnn exp <id>` regenerates the table/figure data; `scnn exp all`
+//! runs everything. Each runner prints the same rows/series the paper
+//! reports and returns them as a [`Report`] so integration tests can
+//! assert the *shape* of the results (who wins, by roughly what
+//! factor) without depending on absolute numbers.
+//!
+//! | id    | paper artifact                                   | module |
+//! |-------|--------------------------------------------------|--------|
+//! | tab2  | Table II thermometer codes                       | [`circuits_exp`] |
+//! | fig1  | FSM tanh/ReLU transfer error                     | [`circuits_exp`] |
+//! | fig4  | chip current & TOPS/W vs voltage                 | [`circuits_exp`] |
+//! | fig7  | BN-fused activation via SI                       | [`circuits_exp`] |
+//! | fig9  | BSN cost scaling + big-BSN overhead              | [`circuits_exp`] |
+//! | fig10 | SI accuracy vs output BSL + design space         | [`circuits_exp`] |
+//! | fig11 | sub-sampling stage input distributions           | [`circuits_exp`] |
+//! | fig12 | spatial-temporal BSN cycle trace                 | [`circuits_exp`] |
+//! | tab5  | 3×3×512 conv: baseline/spatial/ST                | [`circuits_exp`] |
+//! | fig13 | ADP + MSE on 4 ResNet-18 layers                  | [`circuits_exp`] |
+//! | fig2  | accuracy vs ADP trade-off (act BSL sweep)        | [`accuracy_exp`] |
+//! | fig5  | accuracy loss vs BER, SC vs binary               | [`accuracy_exp`] |
+//! | tab3  | quantization ablation                            | [`accuracy_exp`] |
+//! | fig8  | high-precision-residual ablation                 | [`accuracy_exp`] |
+//! | tab4  | W-A-R configs: area/ADP/accuracy                 | [`accuracy_exp`] |
+
+pub mod accuracy_exp;
+pub mod circuits_exp;
+
+use crate::Result;
+
+/// Options shared by all experiment runners.
+#[derive(Clone, Debug)]
+pub struct Opts {
+    /// Reduced workloads for CI (fewer train steps / trials).
+    pub quick: bool,
+    /// Artifact directory (PJRT-backed experiments).
+    pub artifacts: String,
+    /// Deterministic seed.
+    pub seed: u64,
+}
+
+impl Default for Opts {
+    fn default() -> Self {
+        Self { quick: true, artifacts: "artifacts".into(), seed: 42 }
+    }
+}
+
+/// A generated report: named rows of key=value measurements, plus the
+/// printed rendering.
+#[derive(Clone, Debug, Default)]
+pub struct Report {
+    /// Experiment id.
+    pub id: String,
+    /// Metric rows: (row label, metric name, value).
+    pub values: Vec<(String, String, f64)>,
+}
+
+impl Report {
+    /// New report.
+    pub fn new(id: &str) -> Self {
+        Self { id: id.to_string(), values: Vec::new() }
+    }
+
+    /// Record a value (also available to tests).
+    pub fn push(&mut self, row: &str, metric: &str, value: f64) {
+        self.values.push((row.to_string(), metric.to_string(), value));
+    }
+
+    /// Look up a recorded value.
+    pub fn get(&self, row: &str, metric: &str) -> Option<f64> {
+        self.values
+            .iter()
+            .find(|(r, m, _)| r == row && m == metric)
+            .map(|(_, _, v)| *v)
+    }
+}
+
+/// All experiment ids in run order.
+pub const ALL_IDS: [&str; 15] = [
+    "tab2", "fig1", "fig4", "fig7", "fig9", "fig10", "fig11", "fig12", "tab5",
+    "fig13", "fig2", "fig5", "tab3", "fig8", "tab4",
+];
+
+/// Run one experiment by id.
+pub fn run(id: &str, opts: &Opts) -> Result<Report> {
+    match id {
+        "tab2" => circuits_exp::tab2(opts),
+        "fig1" => circuits_exp::fig1(opts),
+        "fig4" => circuits_exp::fig4(opts),
+        "fig7" => circuits_exp::fig7(opts),
+        "fig9" => circuits_exp::fig9(opts),
+        "fig10" => circuits_exp::fig10(opts),
+        "fig11" => circuits_exp::fig11(opts),
+        "fig12" => circuits_exp::fig12(opts),
+        "tab5" => circuits_exp::tab5(opts),
+        "fig13" => circuits_exp::fig13(opts),
+        "fig2" => accuracy_exp::fig2(opts),
+        "fig5" => accuracy_exp::fig5(opts),
+        "tab3" => accuracy_exp::tab3(opts),
+        "fig8" => accuracy_exp::fig8(opts),
+        "tab4" => accuracy_exp::tab4(opts),
+        other => anyhow::bail!("unknown experiment id {other}; known: {ALL_IDS:?}"),
+    }
+}
+
+/// Print a horizontal rule + title.
+pub(crate) fn banner(title: &str) {
+    println!("\n=== {title} ===");
+}

@@ -1,0 +1,140 @@
+//! Fault-tolerance experiment harness (paper Fig 5).
+//!
+//! Sweeps bit-error rate over both executors on the same frozen network
+//! and reports accuracy loss relative to the fault-free ("soft")
+//! accuracy. The paper's claim: SC reduces average accuracy loss by
+//! ~70% versus the conventional binary design, because an SC bit flip
+//! perturbs the result by one quantization step while a binary MSB flip
+//! perturbs it by half the range.
+
+use crate::data::{Dataset, Split};
+use crate::nn::binary_exec::BinaryExecutor;
+use crate::nn::sc_exec::{FaultCfg, Prepared, ScExecutor};
+use crate::nn::tensor::Tensor;
+
+/// One row of the Fig 5 sweep.
+#[derive(Clone, Copy, Debug)]
+pub struct BerPoint {
+    /// Bit-error rate.
+    pub ber: f64,
+    /// SC accuracy at this BER.
+    pub acc_sc: f64,
+    /// Binary accuracy at this BER.
+    pub acc_binary: f64,
+    /// Accuracy loss (soft − faulty) of the SC design.
+    pub loss_sc: f64,
+    /// Accuracy loss of the binary design.
+    pub loss_binary: f64,
+}
+
+/// Full sweep result.
+#[derive(Clone, Debug)]
+pub struct BerSweep {
+    /// Fault-free accuracy (both executors agree fault-free).
+    pub soft_accuracy: f64,
+    /// Points in BER order.
+    pub points: Vec<BerPoint>,
+}
+
+impl BerSweep {
+    /// Average accuracy-loss reduction of SC vs binary (the paper's
+    /// "70%"): `1 - mean(loss_sc) / mean(loss_binary)`.
+    pub fn avg_loss_reduction(&self) -> f64 {
+        let (mut ls, mut lb) = (0.0, 0.0);
+        for p in &self.points {
+            ls += p.loss_sc.max(0.0);
+            lb += p.loss_binary.max(0.0);
+        }
+        if lb <= 0.0 {
+            return 0.0;
+        }
+        1.0 - ls / lb
+    }
+}
+
+/// Run the Fig-5 sweep: evaluate `n_eval` test images at each BER with
+/// `repeats` fault seeds and average.
+pub fn ber_sweep(
+    prep: &Prepared,
+    data: &dyn Dataset,
+    bers: &[f64],
+    n_eval: usize,
+    repeats: usize,
+    seed: u64,
+) -> BerSweep {
+    let (images, labels) = data.batch(Split::Test, 0, n_eval);
+    let clean = ScExecutor::new(prep.clone());
+    let soft = clean.accuracy(&images, &labels);
+    let mut points = Vec::with_capacity(bers.len());
+    for (bi, &ber) in bers.iter().enumerate() {
+        let mut acc_sc = 0.0;
+        let mut acc_bin = 0.0;
+        for r in 0..repeats {
+            let fc = FaultCfg { ber, seed: seed ^ ((bi as u64) << 32) ^ r as u64 };
+            acc_sc += ScExecutor::with_faults(prep.clone(), fc).accuracy(&images, &labels);
+            acc_bin +=
+                BinaryExecutor::with_faults(prep.clone(), fc).accuracy(&images, &labels);
+        }
+        acc_sc /= repeats as f64;
+        acc_bin /= repeats as f64;
+        points.push(BerPoint {
+            ber,
+            acc_sc,
+            acc_binary: acc_bin,
+            loss_sc: soft - acc_sc,
+            loss_binary: soft - acc_bin,
+        });
+    }
+    BerSweep { soft_accuracy: soft, points }
+}
+
+/// Flip bits across a whole image's worth of activation codes — utility
+/// for targeted robustness tests.
+pub fn perturb_image(img: &Tensor, flip_fraction: f64, rng: &mut crate::util::Rng) -> Tensor {
+    let mut out = img.clone();
+    for v in out.data_mut() {
+        if rng.gen_bool(flip_fraction) {
+            *v = -*v;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SynthDigits;
+    use crate::nn::model::{ModelCfg, ModelParams};
+    use crate::nn::quant::QuantConfig;
+    use crate::util::Rng;
+
+    #[test]
+    fn sweep_structure_and_monotonicity() {
+        let cfg = ModelCfg::tnn();
+        let mut rng = Rng::new(8);
+        let params = ModelParams::init(&cfg, &mut rng);
+        let prep = Prepared::new(
+            &cfg,
+            &params,
+            QuantConfig { act_bsl: Some(2), weight_ternary: true, residual_bsl: None },
+        );
+        let data = SynthDigits::new();
+        let sweep = ber_sweep(&prep, &data, &[1e-4, 1e-2], 12, 1, 42);
+        assert_eq!(sweep.points.len(), 2);
+        // Low BER should hurt no more than high BER (within noise we
+        // allow equality).
+        assert!(sweep.points[0].loss_sc <= sweep.points[1].loss_sc + 0.2);
+        for p in &sweep.points {
+            assert!((0.0..=1.0).contains(&p.acc_sc));
+            assert!((0.0..=1.0).contains(&p.acc_binary));
+        }
+    }
+
+    #[test]
+    fn perturb_fraction_zero_is_identity() {
+        let mut rng = Rng::new(1);
+        let img = Tensor::from_vec(&[4], vec![1.0, -2.0, 3.0, -4.0]);
+        let same = perturb_image(&img, 0.0, &mut rng);
+        assert_eq!(img.data(), same.data());
+    }
+}

@@ -1,0 +1,59 @@
+//! # scnn — End-to-End Stochastic-Computing NN Acceleration
+//!
+//! Reproduction of *"Efficient yet Accurate End-to-End SC Accelerator
+//! Design"* (Li, Hu, et al., 2024) as a three-layer Rust + JAX + Pallas
+//! stack.
+//!
+//! The crate contains, at Layer 3 (this Rust library):
+//!
+//! * [`coding`] — deterministic **thermometer coding** (paper Table II),
+//!   2-bit ternary coding, and the stochastic (LFSR/SNG bipolar) coding
+//!   substrate used by the FSM baselines.
+//! * [`gates`] — gate primitives and netlists with a 28-nm-calibrated
+//!   area/delay/energy library.
+//! * [`circuits`] — the paper's circuit contributions: the 5-gate ternary
+//!   SC multiplier (Fig 3a), the exact bitonic sorting network non-linear
+//!   adder (Fig 3b), the selective-interconnect activation synthesizer
+//!   (ReLU / tanh / BN-fused ReLU, Fig 7), the residual re-scaling block
+//!   (§III.C), the approximate **spatial** BSN (§IV.B, Fig 10b) and the
+//!   **spatial-temporal** BSN (Fig 12), plus FSM-based stochastic
+//!   activation baselines (Fig 1).
+//! * [`cost`] — hardware cost roll-up (area, delay, ADP, energy) and the
+//!   voltage/frequency power model behind Fig 4.
+//! * [`nn`] — the NN substrate: tensors, conv/BN/linear layers, ternary /
+//!   thermometer quantization, a **bit-exact SC executor** that runs
+//!   quantized networks through the circuit simulators, and a binary
+//!   integer baseline executor.
+//! * [`fault`] — bit-error-rate fault injection for SC and binary
+//!   datapaths (Fig 5).
+//! * [`data`] — deterministic synthetic datasets standing in for MNIST /
+//!   CIFAR (see DESIGN.md §Substitutions).
+//! * [`accel`] — the accelerator model: maps network layers onto BSN
+//!   configurations, searches the approximate-BSN design space, and rolls
+//!   up per-layer ADP/energy (Fig 13, Table V).
+//! * [`runtime`] — PJRT client wrapper that loads the AOT-compiled JAX
+//!   artifacts (HLO text) and executes them from Rust.
+//! * [`coordinator`] — async inference coordinator: request queue,
+//!   dynamic batcher, PJRT worker, metrics.
+//! * [`exp`] — one runner per paper table/figure (the benchmark harness).
+//!
+//! Layers 1–2 (Pallas kernel and the SC-friendly JAX model with
+//! high-precision residual fusion) live in `python/compile/` and are run
+//! once at build time (`make artifacts`); Python is never on the request
+//! path.
+
+pub mod accel;
+pub mod coding;
+pub mod coordinator;
+pub mod circuits;
+pub mod cost;
+pub mod data;
+pub mod exp;
+pub mod fault;
+pub mod gates;
+pub mod nn;
+pub mod runtime;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

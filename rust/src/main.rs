@@ -1,0 +1,210 @@
+//! `scnn` — CLI for the end-to-end SC accelerator reproduction.
+//!
+//! ```text
+//! scnn exp <id>|all [--full] [--artifacts DIR] [--seed N]
+//! scnn train --model NAME [--steps N] [--act-bsl B] [--artifacts DIR]
+//! scnn serve --model NAME [--requests N] [--artifacts DIR]
+//! scnn info
+//! ```
+//!
+//! (The offline environment has no clap; arguments are parsed by hand.)
+
+use std::collections::HashMap;
+
+use scnn::coordinator::{Coordinator, ServeConfig};
+use scnn::data::{Dataset, Split, SynthCifar, SynthDigits};
+use scnn::exp;
+use scnn::runtime::{trainer::Knobs, Runtime, Trainer};
+use scnn::Result;
+
+fn parse_flags(args: &[String]) -> (Vec<String>, HashMap<String, String>) {
+    let mut pos = Vec::new();
+    let mut flags = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        if let Some(name) = a.strip_prefix("--") {
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                flags.insert(name.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                flags.insert(name.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            pos.push(a.clone());
+            i += 1;
+        }
+    }
+    (pos, flags)
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let (pos, flags) = parse_flags(&args);
+    let cmd = pos.first().map(String::as_str).unwrap_or("help");
+    let artifacts = flags.get("artifacts").cloned().unwrap_or_else(|| "artifacts".into());
+    let seed: u64 = flags.get("seed").and_then(|s| s.parse().ok()).unwrap_or(42);
+    match cmd {
+        "exp" => {
+            let id = pos.get(1).map(String::as_str).unwrap_or("all");
+            let opts = exp::Opts {
+                quick: !flags.contains_key("full"),
+                artifacts,
+                seed,
+            };
+            if id == "all" {
+                for id in exp::ALL_IDS {
+                    exp::run(id, &opts)?;
+                }
+            } else {
+                exp::run(id, &opts)?;
+            }
+            Ok(())
+        }
+        "train" => cmd_train(&flags, &artifacts),
+        "serve" => cmd_serve(&flags, &artifacts),
+        "info" => cmd_info(&artifacts),
+        _ => {
+            println!(
+                "usage: scnn <exp|train|serve|info> [...]\n\
+                 \n  exp <id>|all [--full] [--artifacts DIR] [--seed N]\n\
+                 \n      ids: {}\n\
+                 \n  train --model tnn|scnet10|scnet20 [--steps N] [--act-bsl B] [--res-bsl B]\n\
+                 \n  serve --model NAME [--requests N] [--steps N]\n\
+                 \n  info   print runtime/artifact status",
+                exp::ALL_IDS.join(" ")
+            );
+            Ok(())
+        }
+    }
+}
+
+fn dataset_for(model: &str) -> Box<dyn Dataset> {
+    if model == "tnn" {
+        Box::new(SynthDigits::new())
+    } else if model == "scnet20" {
+        Box::new(SynthCifar::new(20))
+    } else {
+        Box::new(SynthCifar::new(10))
+    }
+}
+
+fn knobs_from_flags(flags: &HashMap<String, String>) -> Knobs {
+    let act_bsl: usize = flags.get("act-bsl").and_then(|s| s.parse().ok()).unwrap_or(2);
+    let res_bsl: Option<usize> = match flags.get("res-bsl").map(String::as_str) {
+        Some("none") => None,
+        Some(s) => s.parse().ok(),
+        None => Some(16),
+    };
+    Knobs::quantized(act_bsl).with_res_bsl(res_bsl)
+}
+
+fn cmd_train(flags: &HashMap<String, String>, artifacts: &str) -> Result<()> {
+    let model = flags.get("model").cloned().unwrap_or_else(|| "scnet10".into());
+    let steps: usize = flags.get("steps").and_then(|s| s.parse().ok()).unwrap_or(200);
+    let lr: f32 = flags.get("lr").and_then(|s| s.parse().ok()).unwrap_or(0.02);
+    let knobs = knobs_from_flags(flags);
+    let rt = Runtime::new(artifacts)?;
+    println!("platform: {}", rt.platform());
+    let data = dataset_for(&model);
+    let mut tr = Trainer::new(&rt, &model)?;
+    println!(
+        "training {model}: {} params, batch {}, {} steps, knobs {:?}",
+        tr.meta().total_elems(),
+        tr.meta().batch,
+        steps,
+        knobs
+    );
+    let t0 = std::time::Instant::now();
+    tr.train_qat(data.as_ref(), steps / 2, steps / 2, lr, knobs, |s, loss| {
+        if s % 20 == 0 {
+            println!("step {s:>5}  loss {loss:.4}");
+        }
+    })?;
+    let dt = t0.elapsed();
+    let acc_q = tr.accuracy(data.as_ref(), 512, knobs, false)?;
+    let acc_s = tr.accuracy(data.as_ref(), 512, knobs, true)?;
+    println!(
+        "done in {:.1}s ({:.1} steps/s); accuracy fake-quant {acc_q:.4}, serving (Pallas) {acc_s:.4}",
+        dt.as_secs_f64(),
+        steps as f64 / dt.as_secs_f64()
+    );
+    Ok(())
+}
+
+fn cmd_serve(flags: &HashMap<String, String>, artifacts: &str) -> Result<()> {
+    let model = flags.get("model").cloned().unwrap_or_else(|| "scnet10".into());
+    let requests: usize = flags.get("requests").and_then(|s| s.parse().ok()).unwrap_or(512);
+    let steps: usize = flags.get("steps").and_then(|s| s.parse().ok()).unwrap_or(0);
+    let knobs = knobs_from_flags(flags);
+    let data = dataset_for(&model);
+    let mut cfg = ServeConfig::new(artifacts, &model);
+    cfg.knobs = knobs;
+    if steps > 0 {
+        println!("warm-up training for {steps} steps...");
+        let rt = Runtime::new(artifacts)?;
+        let mut tr = Trainer::new(&rt, &model)?;
+        tr.train_qat(data.as_ref(), steps / 2, steps / 2, 0.05, knobs, |_, _| {})?;
+        cfg.params = Some(tr.params().to_vec());
+    }
+    let coord = Coordinator::start(cfg)?;
+    let client = coord.client();
+    let (c, h, w) = data.shape();
+    println!("serving {model} ({c}x{h}x{w}); issuing {requests} requests from 4 threads");
+    let t0 = std::time::Instant::now();
+    let mut handles = Vec::new();
+    for t in 0..4usize {
+        let client = client.clone();
+        let data = dataset_for(&model);
+        let n = requests / 4;
+        handles.push(std::thread::spawn(move || -> Result<usize> {
+            let mut hits = 0usize;
+            for i in 0..n {
+                let (x, y) = data.sample(Split::Test, t * 100_000 + i);
+                let pred = client.classify(x.into_vec())?;
+                if pred == y {
+                    hits += 1;
+                }
+            }
+            Ok(hits)
+        }));
+    }
+    let mut hits = 0usize;
+    for h in handles {
+        hits += h.join().unwrap()?;
+    }
+    let dt = t0.elapsed();
+    let m = coord.shutdown();
+    println!(
+        "served {} requests in {:.2}s -> {:.0} req/s; accuracy {:.4}",
+        m.requests,
+        dt.as_secs_f64(),
+        m.requests as f64 / dt.as_secs_f64(),
+        hits as f64 / (requests / 4 * 4) as f64
+    );
+    println!(
+        "batches {} (occupancy {:.2}), latency p50 {:?} p99 {:?}",
+        m.batches, m.occupancy, m.p50, m.p99
+    );
+    Ok(())
+}
+
+fn cmd_info(artifacts: &str) -> Result<()> {
+    let rt = Runtime::new(artifacts)?;
+    println!("PJRT platform: {}", rt.platform());
+    for model in ["tnn", "scnet10", "scnet20"] {
+        match rt.load_meta(model) {
+            Ok(m) => println!(
+                "{model}: {} classes, input {:?}, batch {}, {} params ({} scalars)",
+                m.classes,
+                m.input,
+                m.batch,
+                m.params.len(),
+                m.total_elems()
+            ),
+            Err(e) => println!("{model}: unavailable ({e})"),
+        }
+    }
+    Ok(())
+}

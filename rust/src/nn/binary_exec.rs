@@ -1,0 +1,378 @@
+//! Conventional binary (fixed-point / float) executors — the baselines
+//! the paper compares against.
+//!
+//! Two roles:
+//!
+//! 1. **Reference semantics** ([`forward_float`]): float forward with
+//!    optional fake-quantization, used for the Table III ablations
+//!    (FP/2b weight × FP/2b activation) and as the oracle the SC
+//!    executor is validated against.
+//! 2. **Binary fault baseline** ([`BinaryExecutor`]): the same quantized
+//!    network on a conventional two's-complement datapath where bit
+//!    errors flip *weighted* bits — an MSB flip corrupts the result
+//!    catastrophically, which is exactly why Fig 5 shows binary designs
+//!    degrading much faster than SC at equal BER.
+
+use crate::util::Rng;
+use super::layers;
+use super::model::{LayerCfg, ModelCfg, ModelParams};
+use super::quant::{fake_quant_act, fake_quant_weight, QuantConfig};
+use super::sc_exec::{CodeMap, FaultCfg, Prepared};
+use super::tensor::Tensor;
+
+/// Float reference forward with optional fake-quant (Table III / Fig 8
+/// ablations). Residual taps follow the same high-precision rule as the
+/// SC model.
+pub fn forward_float(
+    cfg: &ModelCfg,
+    params: &ModelParams,
+    quant: QuantConfig,
+    image: &Tensor,
+) -> Vec<f32> {
+    let mut x = image.clone();
+    // Input quantization (when activations are quantized).
+    if let Some(bsl) = quant.act_bsl {
+        let a = params.scalar("input.alpha").unwrap();
+        x = fake_quant_act(&x, a, bsl);
+    }
+    let mut res: Option<Tensor> = None;
+    let mut ci = 0usize;
+    let mut gap: Option<Tensor> = None;
+    for l in &cfg.layers {
+        match l {
+            LayerCfg::Conv { shape, bn, relu, res_in, res_out } => {
+                let mut w = params.get(&format!("conv{ci}.w")).unwrap().clone();
+                if quant.weight_ternary {
+                    w = fake_quant_weight(&w);
+                }
+                let mut y = layers::conv2d(&x, &w, shape);
+                if *res_in {
+                    let r = res.as_ref().expect("residual tap missing");
+                    assert_eq!(r.shape(), y.shape());
+                    for (yv, rv) in y.data_mut().iter_mut().zip(r.data()) {
+                        *yv += rv;
+                    }
+                }
+                if *bn {
+                    let g = params.get(&format!("conv{ci}.gamma")).unwrap().data();
+                    let b = params.get(&format!("conv{ci}.beta")).unwrap().data();
+                    y = layers::bn(&y, g, b);
+                }
+                if *relu {
+                    y = layers::relu(&y);
+                }
+                if *res_out {
+                    let mut tap = y.clone();
+                    if let Some(rbsl) = quant.residual_bsl {
+                        let a = params.scalar(&format!("conv{ci}.alpha_res")).unwrap();
+                        tap = fake_quant_act(&tap, a, rbsl);
+                    }
+                    res = Some(tap);
+                }
+                if let Some(bsl) = quant.act_bsl {
+                    let a = params.scalar(&format!("conv{ci}.alpha_out")).unwrap();
+                    y = fake_quant_act(&y, a, bsl);
+                }
+                x = y;
+                ci += 1;
+            }
+            LayerCfg::GlobalAvgPool => {
+                gap = Some(layers::global_avgpool(&x));
+            }
+            LayerCfg::Linear { in_dim, out_dim } => {
+                let input = gap.clone().unwrap_or_else(|| {
+                    x.clone().reshape(&[x.len()])
+                });
+                assert_eq!(input.len(), *in_dim);
+                let mut w = params.get("fc.w").unwrap().clone();
+                if quant.weight_ternary {
+                    w = fake_quant_weight(&w);
+                }
+                let _ = out_dim;
+                return layers::linear(&input, &w).into_vec();
+            }
+        }
+    }
+    panic!("model has no classifier");
+}
+
+/// Accuracy of the float/fake-quant reference.
+pub fn accuracy_float(
+    cfg: &ModelCfg,
+    params: &ModelParams,
+    quant: QuantConfig,
+    images: &[Tensor],
+    labels: &[usize],
+) -> f64 {
+    let hits = images
+        .iter()
+        .zip(labels)
+        .filter(|(im, &l)| {
+            let logits = forward_float(cfg, params, quant, im);
+            Tensor::from_vec(&[logits.len()], logits.clone()).argmax() == l
+        })
+        .count();
+    hits as f64 / labels.len().max(1) as f64
+}
+
+/// Binary fixed-point executor over the same frozen network as the SC
+/// executor, with faults injected into two's-complement words.
+pub struct BinaryExecutor {
+    prep: Prepared,
+    fault: Option<FaultCfg>,
+}
+
+impl BinaryExecutor {
+    /// Fault-free.
+    pub fn new(prep: Prepared) -> Self {
+        Self { prep, fault: None }
+    }
+
+    /// With word-level fault injection.
+    pub fn with_faults(prep: Prepared, fault: FaultCfg) -> Self {
+        Self { prep, fault: Some(fault) }
+    }
+
+    /// Forward one image → integer class scores. Fault-free, this is
+    /// numerically identical to [`super::sc_exec::ScExecutor::forward`]
+    /// (asserted in `rust/tests/sc_pipeline.rs`): the binary chip
+    /// computes the same quantized network, just in binary words.
+    pub fn forward(&self, image: &Tensor) -> Vec<i64> {
+        let mut rng = self.fault.map(|f| Rng::new(f.seed));
+        let act_bsl = self.prep.act_bsl();
+        let half = (act_bsl / 2) as f32;
+        let mut main = CodeMap {
+            q: image
+                .data()
+                .iter()
+                .map(|&v| (v / self.prep.input_alpha).round().clamp(-half, half) as i32)
+                .collect(),
+            dims: self.prep.cfg.input,
+            bsl: act_bsl,
+        };
+        let mut res: Option<CodeMap> = None;
+        let mut li = 0usize;
+        let mut gap: Option<Vec<i64>> = None;
+        for l in &self.prep.cfg.layers.clone() {
+            match l {
+                LayerCfg::Conv { .. } => {
+                    let pc = &self.prep.convs[li];
+                    let (m, r) = self.conv_layer(pc, &main, res.as_ref(), rng.as_mut());
+                    main = m;
+                    if r.is_some() {
+                        res = r;
+                    }
+                    li += 1;
+                }
+                LayerCfg::GlobalAvgPool => {
+                    let (c, h, w) = main.dims;
+                    let mut sums = vec![0i64; c];
+                    for ci in 0..c {
+                        for p in 0..h * w {
+                            sums[ci] += main.q[ci * h * w + p] as i64;
+                        }
+                    }
+                    gap = Some(sums);
+                }
+                LayerCfg::Linear { in_dim, out_dim } => {
+                    let x = gap
+                        .clone()
+                        .unwrap_or_else(|| main.q.iter().map(|&v| v as i64).collect());
+                    let mut logits = vec![0i64; *out_dim];
+                    for o in 0..*out_dim {
+                        for i in 0..*in_dim {
+                            logits[o] += x[i] * self.prep.fc.values[o * in_dim + i] as i64;
+                        }
+                    }
+                    return logits;
+                }
+            }
+        }
+        panic!("model has no classifier");
+    }
+
+    fn conv_layer(
+        &self,
+        pc: &super::sc_exec::PreparedConv,
+        main: &CodeMap,
+        res: Option<&CodeMap>,
+        mut rng: Option<&mut Rng>,
+    ) -> (CodeMap, Option<CodeMap>) {
+        let (cin, h, w) = main.dims;
+        let xf = Tensor::from_vec(&[cin, h, w], main.q.iter().map(|&v| v as f32).collect());
+        let (cols, oh, ow) = layers::im2col(&xf, &pc.shape);
+        let acc_w = pc.shape.acc_width();
+        let npix = oh * ow;
+        // Accumulator word width for fault injection: enough for the
+        // worst-case accumulation.
+        let acc_bits = (64 - (pc.bsn_width as u64).leading_zeros()).max(8) as u32;
+        let ber = self.fault.map(|f| f.ber).unwrap_or(0.0);
+
+        let mut out_main = vec![0i32; pc.shape.cout * npix];
+        let mut out_res = pc.si_res.as_ref().map(|_| vec![0i32; pc.shape.cout * npix]);
+        let half = (main.bsl / 2) as i64;
+        for co in 0..pc.shape.cout {
+            let wrow = &pc.wq.values[co * acc_w..(co + 1) * acc_w];
+            for p in 0..npix {
+                let xr = &cols[p * acc_w..(p + 1) * acc_w];
+                let mut acc: i64 = 0;
+                for i in 0..acc_w {
+                    let mut q = (xr[i] as i64).clamp(-half, half);
+                    if let Some(r) = rng.as_deref_mut() {
+                        // Activation word faults (sign + 3 magnitude bits).
+                        q = flip_word(q, 4, ber, r);
+                    }
+                    acc += q * wrow[i] as i64;
+                }
+                // Count-domain offset identical to the SC path.
+                let mut count = acc + (acc_w as i64) * half;
+                if pc.res_in {
+                    let rm = res.expect("residual map");
+                    let rhalf = (rm.bsl / 2) as i64;
+                    let rq = rm.q[co * oh * ow + p] as i64;
+                    let rcount =
+                        super::sc_exec::align_res_count((rq + rhalf) as usize, rm.bsl, pc.res_shift);
+                    count += rcount as i64;
+                }
+                if let Some(r) = rng.as_deref_mut() {
+                    // Accumulator word faults — the binary killer: a
+                    // flipped MSB shifts the result by half the range.
+                    count = flip_word(count, acc_bits, ber, r);
+                }
+                let count = count.clamp(0, pc.bsn_width as i64) as usize;
+                let cmain = pc.si_main[co].apply_count(count);
+                out_main[co * npix + p] =
+                    cmain as i32 - (pc.si_main[co].out_bsl() / 2) as i32;
+                if let Some(ref sis) = pc.si_res {
+                    let cres = sis[co].apply_count(count);
+                    out_res.as_mut().unwrap()[co * npix + p] =
+                        cres as i32 - (sis[co].out_bsl() / 2) as i32;
+                }
+            }
+        }
+        let mm = CodeMap { q: out_main, dims: (pc.shape.cout, oh, ow), bsl: main.bsl };
+        let rm = out_res.map(|q| CodeMap { q, dims: (pc.shape.cout, oh, ow), bsl: self.prep.res_bsl() });
+        (mm, rm)
+    }
+
+    /// Predicted classes.
+    pub fn predict(&self, images: &[Tensor]) -> Vec<usize> {
+        images
+            .iter()
+            .map(|im| {
+                let l = self.forward(im);
+                l.iter().enumerate().max_by_key(|(_, &v)| v).map(|(i, _)| i).unwrap()
+            })
+            .collect()
+    }
+
+    /// Accuracy.
+    pub fn accuracy(&self, images: &[Tensor], labels: &[usize]) -> f64 {
+        let preds = self.predict(images);
+        preds.iter().zip(labels).filter(|(p, l)| p == l).count() as f64
+            / labels.len().max(1) as f64
+    }
+}
+
+/// Flip bits of a two's-complement word of `bits` width with per-bit
+/// probability `ber`.
+pub fn flip_word(v: i64, bits: u32, ber: f64, rng: &mut Rng) -> i64 {
+    if ber <= 0.0 {
+        return v;
+    }
+    let mut u = (v as u64) & ((1u64 << bits) - 1);
+    for b in 0..bits {
+        if rng.gen_bool(ber) {
+            u ^= 1 << b;
+        }
+    }
+    // Sign-extend back.
+    let sign = 1u64 << (bits - 1);
+    if u & sign != 0 {
+        (u as i64) - (1i64 << bits)
+    } else {
+        u as i64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::model::ModelCfg;
+    use crate::nn::sc_exec::ScExecutor;
+
+    #[test]
+    fn float_forward_shapes() {
+        let cfg = ModelCfg::scnet(10);
+        let mut rng = Rng::new(2);
+        let params = ModelParams::init(&cfg, &mut rng);
+        let img = Tensor::from_vec(
+            &[3, 32, 32],
+            (0..3 * 32 * 32).map(|_| rng.normal() as f32 * 0.3).collect(),
+        );
+        let fp = forward_float(&cfg, &params, QuantConfig::float(), &img);
+        assert_eq!(fp.len(), 10);
+        let q = forward_float(&cfg, &params, QuantConfig::w2a2r16(), &img);
+        assert_eq!(q.len(), 10);
+    }
+
+    #[test]
+    fn binary_matches_sc_fault_free() {
+        // The central parity check: identical logits from the SC
+        // bitstream machinery and the binary integer datapath.
+        let cfg = ModelCfg::scnet(10);
+        let mut rng = Rng::new(4);
+        let params = ModelParams::init(&cfg, &mut rng);
+        let prep = Prepared::new(&cfg, &params, QuantConfig::w2a2r16());
+        let sc = ScExecutor::new(prep.clone());
+        let bin = BinaryExecutor::new(prep);
+        for s in 0..3 {
+            let mut r2 = Rng::new(100 + s);
+            let img = Tensor::from_vec(
+                &[3, 32, 32],
+                (0..3 * 32 * 32).map(|_| r2.normal() as f32 * 0.4).collect(),
+            );
+            assert_eq!(sc.forward(&img), bin.forward(&img), "seed {s}");
+        }
+    }
+
+    #[test]
+    fn flip_word_sign_extension() {
+        let mut rng = Rng::new(1);
+        // ber=0 identity.
+        assert_eq!(flip_word(-5, 8, 0.0, &mut rng), -5);
+        // ber=1 flips everything: ~v within the window.
+        let v = flip_word(0, 4, 1.0, &mut rng);
+        assert_eq!(v, -1); // 0b1111 sign-extended
+    }
+
+    #[test]
+    fn faults_degrade_binary_more_than_sc() {
+        // Micro version of Fig 5's claim at one BER point.
+        let cfg = ModelCfg::tnn();
+        let mut rng = Rng::new(6);
+        let params = ModelParams::init(&cfg, &mut rng);
+        let prep = Prepared::new(
+            &cfg,
+            &params,
+            QuantConfig { act_bsl: Some(2), weight_ternary: true, residual_bsl: None },
+        );
+        let clean = BinaryExecutor::new(prep.clone());
+        let imgs: Vec<Tensor> = (0..24)
+            .map(|i| {
+                let mut r = Rng::new(1000 + i);
+                Tensor::from_vec(&[1, 28, 28], (0..784).map(|_| r.normal() as f32).collect())
+            })
+            .collect();
+        let labels = clean.predict(&imgs); // self-labels: measure drift
+        let ber = 0.02;
+        let sc_f = ScExecutor::with_faults(prep.clone(), FaultCfg { ber, seed: 9 });
+        let bin_f = BinaryExecutor::with_faults(prep, FaultCfg { ber, seed: 9 });
+        let acc_sc = sc_f.accuracy(&imgs, &labels);
+        let acc_bin = bin_f.accuracy(&imgs, &labels);
+        assert!(
+            acc_sc >= acc_bin,
+            "SC ({acc_sc}) should tolerate faults at least as well as binary ({acc_bin})"
+        );
+    }
+}

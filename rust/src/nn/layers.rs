@@ -1,0 +1,262 @@
+//! Layer primitives: im2col convolution, linear, pooling, BN folding.
+//!
+//! Convolutions are expressed through im2col so that one output pixel is
+//! exactly one accumulation of width `K·K·C_in` — the unit the paper's
+//! datapath (multiplier array → BSN → SI) processes, and the width that
+//! drives the BSN cost model (Fig 9, Fig 13).
+
+use super::tensor::Tensor;
+
+/// Static shape of a conv layer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ConvShape {
+    /// Input channels.
+    pub cin: usize,
+    /// Output channels.
+    pub cout: usize,
+    /// Square kernel size.
+    pub k: usize,
+    /// Stride.
+    pub stride: usize,
+    /// Symmetric zero padding.
+    pub pad: usize,
+}
+
+impl ConvShape {
+    /// Accumulation width (products per output pixel) — the paper's
+    /// "accumulation width".
+    pub fn acc_width(&self) -> usize {
+        self.k * self.k * self.cin
+    }
+
+    /// Output spatial size for an input of `h × w`.
+    pub fn out_hw(&self, h: usize, w: usize) -> (usize, usize) {
+        (
+            (h + 2 * self.pad - self.k) / self.stride + 1,
+            (w + 2 * self.pad - self.k) / self.stride + 1,
+        )
+    }
+}
+
+/// im2col: unfold a CHW image into rows of length `k·k·cin`, one row per
+/// output pixel (row-major over output h, w). Padding contributes zeros.
+pub fn im2col(x: &Tensor, cs: &ConvShape) -> (Vec<f32>, usize, usize) {
+    let (c, h, w) = (x.shape()[0], x.shape()[1], x.shape()[2]);
+    assert_eq!(c, cs.cin);
+    let (oh, ow) = cs.out_hw(h, w);
+    let cols = cs.acc_width();
+    let mut out = vec![0.0f32; oh * ow * cols];
+    for oy in 0..oh {
+        for ox in 0..ow {
+            let row = (oy * ow + ox) * cols;
+            let mut idx = 0;
+            for ci in 0..c {
+                for ky in 0..cs.k {
+                    for kx in 0..cs.k {
+                        let iy = (oy * cs.stride + ky) as isize - cs.pad as isize;
+                        let ix = (ox * cs.stride + kx) as isize - cs.pad as isize;
+                        if iy >= 0 && ix >= 0 && (iy as usize) < h && (ix as usize) < w {
+                            out[row + idx] = x.at3(ci, iy as usize, ix as usize);
+                        }
+                        idx += 1;
+                    }
+                }
+            }
+        }
+    }
+    (out, oh, ow)
+}
+
+/// Float conv2d via im2col (the reference semantics both executors are
+/// checked against). Weights are (O, I, K, K) row-major.
+pub fn conv2d(x: &Tensor, w: &Tensor, cs: &ConvShape) -> Tensor {
+    let (cols, oh, ow) = im2col(x, cs);
+    let acc = cs.acc_width();
+    assert_eq!(w.shape(), &[cs.cout, cs.cin, cs.k, cs.k]);
+    let mut out = Tensor::zeros(&[cs.cout, oh, ow]);
+    for co in 0..cs.cout {
+        let wrow = &w.data()[co * acc..(co + 1) * acc];
+        for p in 0..oh * ow {
+            let xr = &cols[p * acc..(p + 1) * acc];
+            let mut s = 0.0f32;
+            for i in 0..acc {
+                s += xr[i] * wrow[i];
+            }
+            out.data_mut()[co * oh * ow + p] = s;
+        }
+    }
+    out
+}
+
+/// Integer conv2d on pre-quantized values: `x_q` (len = cin·h·w),
+/// ternary `w_q` (len = cout·acc). Returns per-pixel integer sums.
+pub fn conv2d_int(
+    x_q: &[i32],
+    (cin, h, w): (usize, usize, usize),
+    w_q: &[i8],
+    cs: &ConvShape,
+) -> (Vec<i64>, usize, usize) {
+    assert_eq!(x_q.len(), cin * h * w);
+    let xf = Tensor::from_vec(&[cin, h, w], x_q.iter().map(|&v| v as f32).collect());
+    let (cols, oh, ow) = im2col(&xf, cs);
+    let acc = cs.acc_width();
+    let mut out = vec![0i64; cs.cout * oh * ow];
+    for co in 0..cs.cout {
+        let wrow = &w_q[co * acc..(co + 1) * acc];
+        for p in 0..oh * ow {
+            let xr = &cols[p * acc..(p + 1) * acc];
+            let mut s = 0i64;
+            for i in 0..acc {
+                s += xr[i] as i64 * wrow[i] as i64;
+            }
+            out[co * oh * ow + p] = s;
+        }
+    }
+    (out, oh, ow)
+}
+
+/// 2×2 average pooling (stride 2) on CHW.
+pub fn avgpool2(x: &Tensor) -> Tensor {
+    let (c, h, w) = (x.shape()[0], x.shape()[1], x.shape()[2]);
+    let (oh, ow) = (h / 2, w / 2);
+    let mut out = Tensor::zeros(&[c, oh, ow]);
+    for ci in 0..c {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let s = x.at3(ci, 2 * oy, 2 * ox)
+                    + x.at3(ci, 2 * oy, 2 * ox + 1)
+                    + x.at3(ci, 2 * oy + 1, 2 * ox)
+                    + x.at3(ci, 2 * oy + 1, 2 * ox + 1);
+                out.set3(ci, oy, ox, s / 4.0);
+            }
+        }
+    }
+    out
+}
+
+/// Global average pooling: CHW → C.
+pub fn global_avgpool(x: &Tensor) -> Tensor {
+    let (c, h, w) = (x.shape()[0], x.shape()[1], x.shape()[2]);
+    let mut out = Tensor::zeros(&[c]);
+    for ci in 0..c {
+        let mut s = 0.0;
+        for y in 0..h {
+            for xx in 0..w {
+                s += x.at3(ci, y, xx);
+            }
+        }
+        out.data_mut()[ci] = s / (h * w) as f32;
+    }
+    out
+}
+
+/// Linear layer: `y = W x` with W of shape (O, I).
+pub fn linear(x: &Tensor, w: &Tensor) -> Tensor {
+    let i = x.len();
+    let o = w.shape()[0];
+    assert_eq!(w.shape()[1], i);
+    let mut out = Tensor::zeros(&[o]);
+    for oo in 0..o {
+        let mut s = 0.0;
+        for ii in 0..i {
+            s += w.data()[oo * i + ii] * x.data()[ii];
+        }
+        out.data_mut()[oo] = s;
+    }
+    out
+}
+
+/// The paper's BN form (Eq 1): `BN(x) = γ(x - β)` per channel, fused
+/// with ReLU downstream. Applies to CHW.
+pub fn bn(x: &Tensor, gamma: &[f32], beta: &[f32]) -> Tensor {
+    let (c, h, w) = (x.shape()[0], x.shape()[1], x.shape()[2]);
+    assert_eq!(gamma.len(), c);
+    assert_eq!(beta.len(), c);
+    let mut out = x.clone();
+    for ci in 0..c {
+        for y in 0..h {
+            for xx in 0..w {
+                out.set3(ci, y, xx, gamma[ci] * (x.at3(ci, y, xx) - beta[ci]));
+            }
+        }
+    }
+    out
+}
+
+/// ReLU.
+pub fn relu(x: &Tensor) -> Tensor {
+    x.clone().map(|v| v.max(0.0))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_identity_kernel() {
+        // 1x1 kernel with weight 1 reproduces the input.
+        let x = Tensor::from_vec(&[1, 2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let w = Tensor::from_vec(&[1, 1, 1, 1], vec![1.0]);
+        let cs = ConvShape { cin: 1, cout: 1, k: 1, stride: 1, pad: 0 };
+        let y = conv2d(&x, &w, &cs);
+        assert_eq!(y.data(), x.data());
+    }
+
+    #[test]
+    fn conv_3x3_known_value() {
+        // All-ones 3x3 input and kernel, no pad: sum = 9.
+        let x = Tensor::from_vec(&[1, 3, 3], vec![1.0; 9]);
+        let w = Tensor::from_vec(&[1, 1, 3, 3], vec![1.0; 9]);
+        let cs = ConvShape { cin: 1, cout: 1, k: 3, stride: 1, pad: 0 };
+        let y = conv2d(&x, &w, &cs);
+        assert_eq!(y.shape(), &[1, 1, 1]);
+        assert_eq!(y.data()[0], 9.0);
+    }
+
+    #[test]
+    fn conv_padding_shapes() {
+        let cs = ConvShape { cin: 3, cout: 8, k: 3, stride: 1, pad: 1 };
+        assert_eq!(cs.out_hw(32, 32), (32, 32));
+        assert_eq!(cs.acc_width(), 27);
+        let cs2 = ConvShape { cin: 3, cout: 8, k: 3, stride: 2, pad: 1 };
+        assert_eq!(cs2.out_hw(32, 32), (16, 16));
+    }
+
+    #[test]
+    fn conv_int_matches_float_on_integers() {
+        let cs = ConvShape { cin: 2, cout: 3, k: 3, stride: 1, pad: 1 };
+        let xq: Vec<i32> = (0..2 * 5 * 5).map(|i| (i as i32 % 5) - 2).collect();
+        let wq: Vec<i8> = (0..3 * 18).map(|i| ((i as i32 % 3) - 1) as i8).collect();
+        let (yi, oh, ow) = conv2d_int(&xq, (2, 5, 5), &wq, &cs);
+        let xf = Tensor::from_vec(&[2, 5, 5], xq.iter().map(|&v| v as f32).collect());
+        let wf = Tensor::from_vec(&[3, 2, 3, 3], wq.iter().map(|&v| v as f32).collect());
+        let yf = conv2d(&xf, &wf, &cs);
+        assert_eq!((oh, ow), (5, 5));
+        for (a, b) in yi.iter().zip(yf.data()) {
+            assert_eq!(*a as f32, *b);
+        }
+    }
+
+    #[test]
+    fn pooling() {
+        let x = Tensor::from_vec(&[1, 2, 2], vec![1.0, 3.0, 5.0, 7.0]);
+        let y = avgpool2(&x);
+        assert_eq!(y.data(), &[4.0]);
+        let g = global_avgpool(&x);
+        assert_eq!(g.data(), &[4.0]);
+    }
+
+    #[test]
+    fn bn_eq1_form() {
+        let x = Tensor::from_vec(&[1, 1, 2], vec![3.0, 5.0]);
+        let y = bn(&x, &[2.0], &[1.0]);
+        assert_eq!(y.data(), &[4.0, 8.0]);
+    }
+
+    #[test]
+    fn linear_matvec() {
+        let x = Tensor::from_vec(&[2], vec![1.0, 2.0]);
+        let w = Tensor::from_vec(&[2, 2], vec![1.0, 0.0, 0.0, 1.0]);
+        assert_eq!(linear(&x, &w).data(), &[1.0, 2.0]);
+    }
+}

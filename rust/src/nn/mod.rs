@@ -1,0 +1,22 @@
+//! Neural-network substrate: tensors, layers, quantization, model
+//! configurations, and the two executors the paper compares —
+//! the **bit-exact SC executor** (runs the quantized network through the
+//! circuit simulators of [`crate::circuits`]) and the **binary integer
+//! baseline** (a conventional fixed-point datapath).
+//!
+//! The quantization semantics here *must* match `python/compile/model.py`
+//! exactly: the JAX side trains with fake-quant straight-through
+//! estimators, and the Rust side re-quantizes the trained weights with
+//! the same rules so that the SC simulation evaluates the very network
+//! that was trained (verified end-to-end in `rust/tests/sc_pipeline.rs`).
+
+pub mod binary_exec;
+pub mod layers;
+pub mod model;
+pub mod quant;
+pub mod sc_exec;
+pub mod tensor;
+
+pub use model::{LayerCfg, ModelCfg};
+pub use quant::QuantConfig;
+pub use tensor::Tensor;

@@ -1,0 +1,314 @@
+//! Model configurations and parameter containers.
+//!
+//! Two networks reproduce the paper's benchmarks (DESIGN.md
+//! §Substitutions):
+//!
+//! * [`ModelCfg::tnn`] — the §II ternary CNN (conv + ReLU only, no
+//!   BN/residual), for the SynthDigits (MNIST-substitute) experiments.
+//! * [`ModelCfg::scnet`] — the §III SC-friendly network: ternary-weight
+//!   convs, low-BSL activations, per-channel BN fused into the SI
+//!   (Eq 1), and the **high-precision residual** path (Fig 6b): each
+//!   residual conv consumes a BSL-16 tap of its input alongside the
+//!   low-BSL main code.
+//!
+//! The dataflow is code-to-code: a layer's SI output *is* the next
+//! layer's input code (scales `alpha_out` are trained parameters,
+//! exported from JAX). Nothing is ever de-quantized on the datapath —
+//! exactly the end-to-end SC property the paper claims.
+//!
+//! Parameter naming matches `python/compile/aot.py`'s metadata export:
+//! `conv{i}.w`, `conv{i}.gamma`, `conv{i}.beta`, `conv{i}.alpha_out`,
+//! `conv{i}.alpha_res`, plus `input.alpha` and `fc.w`.
+
+use super::layers::ConvShape;
+use super::tensor::Tensor;
+
+/// One layer of the model.
+#[derive(Clone, Debug)]
+pub enum LayerCfg {
+    /// Ternary-weight convolution with optional fused BN-ReLU and
+    /// residual ports.
+    Conv {
+        /// Shape.
+        shape: ConvShape,
+        /// Fuse per-channel BN (Eq 1) into the activation.
+        bn: bool,
+        /// ReLU (fused with BN when both set).
+        relu: bool,
+        /// Consume the high-precision residual tap of the input.
+        res_in: bool,
+        /// Produce a high-precision (BSL-16) residual tap of the output.
+        res_out: bool,
+    },
+    /// Global average pooling (count-domain sum; scale-free for the
+    /// classifier).
+    GlobalAvgPool,
+    /// Final ternary linear classifier.
+    Linear {
+        /// Input features.
+        in_dim: usize,
+        /// Classes.
+        out_dim: usize,
+    },
+}
+
+/// A full model configuration.
+#[derive(Clone, Debug)]
+pub struct ModelCfg {
+    /// Model name (artifact prefix).
+    pub name: String,
+    /// Input (C, H, W).
+    pub input: (usize, usize, usize),
+    /// Layers in order.
+    pub layers: Vec<LayerCfg>,
+    /// Number of classes.
+    pub num_classes: usize,
+}
+
+impl ModelCfg {
+    /// §II ternary CNN for SynthDigits (28×28×1, 10 classes). Stride-2
+    /// convs replace pooling so every layer is an SC datapath.
+    pub fn tnn() -> Self {
+        let conv = |cin, cout, stride| LayerCfg::Conv {
+            shape: ConvShape { cin, cout, k: 3, stride, pad: 1 },
+            bn: false,
+            relu: true,
+            res_in: false,
+            res_out: false,
+        };
+        Self {
+            name: "tnn".into(),
+            input: (1, 28, 28),
+            layers: vec![
+                conv(1, 8, 2),   // 14x14, acc width 9
+                conv(8, 16, 2),  // 7x7,  acc width 72
+                conv(16, 32, 2), // 4x4,  acc width 144
+                LayerCfg::GlobalAvgPool,
+                LayerCfg::Linear { in_dim: 32, out_dim: 10 },
+            ],
+            num_classes: 10,
+        }
+    }
+
+    /// §III SC-friendly residual network for SynthCIFAR (32×32×3).
+    pub fn scnet(num_classes: usize) -> Self {
+        let conv = |cin, cout, stride, res_in, res_out| LayerCfg::Conv {
+            shape: ConvShape { cin, cout, k: 3, stride, pad: 1 },
+            bn: true,
+            relu: true,
+            res_in,
+            res_out,
+        };
+        Self {
+            name: "scnet".into(),
+            input: (3, 32, 32),
+            layers: vec![
+                conv(3, 16, 1, false, true),   // stem          32x32
+                conv(16, 16, 1, true, false),  // res block 1   32x32, acc 144
+                conv(16, 32, 2, false, true),  // transition    16x16
+                conv(32, 32, 1, true, false),  // res block 2   16x16, acc 288
+                conv(32, 64, 2, false, true),  // transition    8x8
+                conv(64, 64, 1, true, false),  // res block 3   8x8,  acc 576
+                LayerCfg::GlobalAvgPool,
+                LayerCfg::Linear { in_dim: 64, out_dim: num_classes },
+            ],
+            num_classes,
+        }
+    }
+
+    /// Conv layer indices (for naming).
+    pub fn conv_indices(&self) -> Vec<usize> {
+        self.layers
+            .iter()
+            .enumerate()
+            .filter(|(_, l)| matches!(l, LayerCfg::Conv { .. }))
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Parameter names in export order (must match aot.py).
+    pub fn param_names(&self) -> Vec<String> {
+        let mut names = vec!["input.alpha".to_string()];
+        let mut ci = 0usize;
+        for l in &self.layers {
+            match l {
+                LayerCfg::Conv { bn, res_out, .. } => {
+                    names.push(format!("conv{ci}.w"));
+                    if *bn {
+                        names.push(format!("conv{ci}.gamma"));
+                        names.push(format!("conv{ci}.beta"));
+                    }
+                    names.push(format!("conv{ci}.alpha_out"));
+                    if *res_out {
+                        names.push(format!("conv{ci}.alpha_res"));
+                    }
+                    ci += 1;
+                }
+                LayerCfg::Linear { .. } => names.push("fc.w".to_string()),
+                LayerCfg::GlobalAvgPool => {}
+            }
+        }
+        names
+    }
+
+    /// Total accumulation widths of all conv layers (drives the BSN
+    /// sizing — Fig 9 / Fig 13).
+    pub fn acc_widths(&self) -> Vec<usize> {
+        self.layers
+            .iter()
+            .filter_map(|l| match l {
+                LayerCfg::Conv { shape, .. } => Some(shape.acc_width()),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// Rough parameter count.
+    pub fn param_count(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| match l {
+                LayerCfg::Conv { shape, bn, .. } => {
+                    shape.cout * shape.cin * shape.k * shape.k
+                        + if *bn { 2 * shape.cout } else { 0 }
+                }
+                LayerCfg::Linear { in_dim, out_dim } => in_dim * out_dim,
+                LayerCfg::GlobalAvgPool => 0,
+            })
+            .sum()
+    }
+}
+
+/// Named parameter store.
+#[derive(Clone, Debug, Default)]
+pub struct ModelParams {
+    entries: Vec<(String, Tensor)>,
+}
+
+impl ModelParams {
+    /// Empty store.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Build from (name, tensor) pairs.
+    pub fn from_pairs(pairs: Vec<(String, Tensor)>) -> Self {
+        Self { entries: pairs }
+    }
+
+    /// Insert (replacing an existing entry of the same name).
+    pub fn insert(&mut self, name: &str, t: Tensor) {
+        if let Some(e) = self.entries.iter_mut().find(|(n, _)| n == name) {
+            e.1 = t;
+        } else {
+            self.entries.push((name.to_string(), t));
+        }
+    }
+
+    /// Look up by name.
+    pub fn get(&self, name: &str) -> Option<&Tensor> {
+        self.entries.iter().find(|(n, _)| n == name).map(|(_, t)| t)
+    }
+
+    /// Scalar parameter.
+    pub fn scalar(&self, name: &str) -> Option<f32> {
+        self.get(name).map(|t| t.data()[0])
+    }
+
+    /// All entries in insertion order.
+    pub fn entries(&self) -> &[(String, Tensor)] {
+        &self.entries
+    }
+
+    /// Initialize random parameters for a config (He-style for weights,
+    /// 1/0 for BN, small positive alphas) — used by tests and the pure
+    /// Rust fallback when no trained artifact is available.
+    pub fn init(cfg: &ModelCfg, rng: &mut crate::util::Rng) -> Self {
+        let mut p = Self::new();
+        p.insert("input.alpha", Tensor::from_vec(&[1], vec![0.5]));
+        let mut ci = 0usize;
+        for l in &cfg.layers {
+            match l {
+                LayerCfg::Conv { shape, bn, res_out, .. } => {
+                    let fan_in = shape.acc_width() as f64;
+                    let std = (2.0 / fan_in).sqrt();
+                    let n = shape.cout * shape.cin * shape.k * shape.k;
+                    let w: Vec<f32> =
+                        (0..n).map(|_| rng.normal_ms(0.0, std) as f32).collect();
+                    p.insert(
+                        &format!("conv{ci}.w"),
+                        Tensor::from_vec(&[shape.cout, shape.cin, shape.k, shape.k], w),
+                    );
+                    if *bn {
+                        p.insert(
+                            &format!("conv{ci}.gamma"),
+                            Tensor::from_vec(&[shape.cout], vec![1.0; shape.cout]),
+                        );
+                        p.insert(
+                            &format!("conv{ci}.beta"),
+                            Tensor::from_vec(&[shape.cout], vec![0.0; shape.cout]),
+                        );
+                    }
+                    p.insert(&format!("conv{ci}.alpha_out"), Tensor::from_vec(&[1], vec![0.5]));
+                    if *res_out {
+                        p.insert(&format!("conv{ci}.alpha_res"), Tensor::from_vec(&[1], vec![0.125]));
+                    }
+                    ci += 1;
+                }
+                LayerCfg::Linear { in_dim, out_dim } => {
+                    let std = (2.0 / *in_dim as f64).sqrt();
+                    let w: Vec<f32> = (0..in_dim * out_dim)
+                        .map(|_| rng.normal_ms(0.0, std) as f32)
+                        .collect();
+                    p.insert("fc.w", Tensor::from_vec(&[*out_dim, *in_dim], w));
+                }
+                LayerCfg::GlobalAvgPool => {}
+            }
+        }
+        p
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tnn_structure() {
+        let m = ModelCfg::tnn();
+        assert_eq!(m.acc_widths(), vec![9, 72, 144]);
+        assert_eq!(m.num_classes, 10);
+        assert!(m.param_count() > 1000);
+    }
+
+    #[test]
+    fn scnet_structure() {
+        let m = ModelCfg::scnet(10);
+        assert_eq!(m.acc_widths(), vec![27, 144, 144, 288, 288, 576]);
+        // Names include residual alphas only where res_out is set.
+        let names = m.param_names();
+        assert!(names.contains(&"conv0.alpha_res".to_string()));
+        assert!(!names.contains(&"conv1.alpha_res".to_string()));
+        assert!(names.contains(&"fc.w".to_string()));
+        assert_eq!(names[0], "input.alpha");
+    }
+
+    #[test]
+    fn params_init_covers_all_names() {
+        let m = ModelCfg::scnet(10);
+        let mut rng = crate::util::Rng::new(1);
+        let p = ModelParams::init(&m, &mut rng);
+        for n in m.param_names() {
+            assert!(p.get(&n).is_some(), "missing {n}");
+        }
+    }
+
+    #[test]
+    fn insert_replaces() {
+        let mut p = ModelParams::new();
+        p.insert("a", Tensor::from_vec(&[1], vec![1.0]));
+        p.insert("a", Tensor::from_vec(&[1], vec![2.0]));
+        assert_eq!(p.scalar("a"), Some(2.0));
+        assert_eq!(p.entries().len(), 1);
+    }
+}

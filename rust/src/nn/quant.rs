@@ -1,0 +1,177 @@
+//! Quantization rules shared with the JAX QAT model.
+//!
+//! These functions are the Rust mirror of the fake-quant operators in
+//! `python/compile/model.py`; both sides must round identically so the
+//! bit-exact SC executor evaluates exactly the trained network.
+//!
+//! * **Weights** (ternary, BSL 2): per-tensor scale `alpha_w = mean|w|`;
+//!   `w_q = clamp(round(w / alpha_w), -1, 1)`.
+//! * **Activations** (thermometer, BSL `L`): per-layer scale `alpha_a`
+//!   (a trained parameter); `x_q = clamp(round(x / alpha_a), -L/2, L/2)`.
+//! * **Residuals** — same rule at the residual BSL (§III.B's
+//!   high-precision residual uses BSL 16 → range ±8).
+
+use super::tensor::Tensor;
+use crate::coding::Ternary;
+
+/// Quantization configuration of one network variant — the paper's
+/// `W-A-R/BSL` triple (Table IV).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct QuantConfig {
+    /// Activation BSL (2, 4, 8, 16) or `None` for float (ablations).
+    pub act_bsl: Option<usize>,
+    /// Ternary weights when true; float weights otherwise.
+    pub weight_ternary: bool,
+    /// Residual BSL; `None` = no residual path or float residual.
+    pub residual_bsl: Option<usize>,
+}
+
+impl QuantConfig {
+    /// The paper's headline config: W2-A2-R16.
+    pub fn w2a2r16() -> Self {
+        Self { act_bsl: Some(2), weight_ternary: true, residual_bsl: Some(16) }
+    }
+
+    /// Fully float baseline.
+    pub fn float() -> Self {
+        Self { act_bsl: None, weight_ternary: false, residual_bsl: None }
+    }
+}
+
+/// A ternarized weight tensor.
+#[derive(Clone, Debug)]
+pub struct TernaryTensor {
+    /// Quantized values.
+    pub values: Vec<i8>,
+    /// Shape (O, I, Kh, Kw) for conv, (O, I) for linear.
+    pub shape: Vec<usize>,
+    /// Scale factor: `w ≈ alpha * w_q`.
+    pub alpha: f32,
+}
+
+impl TernaryTensor {
+    /// Ternarize with the shared rule.
+    pub fn quantize(w: &Tensor) -> Self {
+        let alpha = w.mean_abs().max(1e-8);
+        let values = w
+            .data()
+            .iter()
+            .map(|&x| (x / alpha).round().clamp(-1.0, 1.0) as i8)
+            .collect();
+        Self { values, shape: w.shape().to_vec(), alpha }
+    }
+
+    /// As [`Ternary`] symbols.
+    pub fn ternary(&self, i: usize) -> Ternary {
+        Ternary::from_i64(self.values[i] as i64)
+    }
+
+    /// Dequantized view.
+    pub fn dequantize(&self) -> Tensor {
+        Tensor::from_vec(
+            &self.shape,
+            self.values.iter().map(|&v| v as f32 * self.alpha).collect(),
+        )
+    }
+}
+
+/// A thermometer-quantized activation tensor.
+#[derive(Clone, Debug)]
+pub struct QuantTensor {
+    /// Quantized integer values in `[-bsl/2, bsl/2]`.
+    pub values: Vec<i32>,
+    /// Shape.
+    pub shape: Vec<usize>,
+    /// BSL.
+    pub bsl: usize,
+    /// Scale factor.
+    pub alpha: f32,
+}
+
+impl QuantTensor {
+    /// Quantize activations at scale `alpha` and the given BSL.
+    pub fn quantize(x: &Tensor, alpha: f32, bsl: usize) -> Self {
+        let half = (bsl / 2) as f32;
+        let a = alpha.max(1e-8);
+        let values = x
+            .data()
+            .iter()
+            .map(|&v| (v / a).round().clamp(-half, half) as i32)
+            .collect();
+        Self { values, shape: x.shape().to_vec(), bsl, alpha: a }
+    }
+
+    /// Dequantized view.
+    pub fn dequantize(&self) -> Tensor {
+        Tensor::from_vec(
+            &self.shape,
+            self.values.iter().map(|&v| v as f32 * self.alpha).collect(),
+        )
+    }
+
+    /// Quantization levels available (`bsl + 1`).
+    pub fn levels(&self) -> usize {
+        self.bsl + 1
+    }
+}
+
+/// Fake-quant (quantize → dequantize) for activations — the exact STE
+/// forward the JAX model uses.
+pub fn fake_quant_act(x: &Tensor, alpha: f32, bsl: usize) -> Tensor {
+    QuantTensor::quantize(x, alpha, bsl).dequantize()
+}
+
+/// Fake-quant for weights.
+pub fn fake_quant_weight(w: &Tensor) -> Tensor {
+    TernaryTensor::quantize(w).dequantize()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ternarize_signs_and_zeros() {
+        let w = Tensor::from_vec(&[5], vec![0.9, -0.8, 0.05, -0.1, 0.4]);
+        let t = TernaryTensor::quantize(&w);
+        // alpha = mean|w| = 0.45; round(w/0.45) -> 2,-2,0,0,1 clamped.
+        assert_eq!(t.values, vec![1, -1, 0, 0, 1]);
+        assert!((t.alpha - 0.45).abs() < 1e-6);
+    }
+
+    #[test]
+    fn act_quant_ranges() {
+        let x = Tensor::from_vec(&[5], vec![3.0, -3.0, 0.4, 1.1, -0.6]);
+        let q = QuantTensor::quantize(&x, 1.0, 4);
+        assert_eq!(q.values, vec![2, -2, 0, 1, -1]);
+        assert_eq!(q.levels(), 5);
+    }
+
+    #[test]
+    fn fake_quant_roundtrip_error_bounded() {
+        let x = Tensor::from_vec(&[4], vec![0.3, -0.7, 1.4, -2.9]);
+        let fq = fake_quant_act(&x, 0.5, 16);
+        for (a, b) in x.data().iter().zip(fq.data()) {
+            assert!((a - b).abs() <= 0.25 + 1e-6, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn dequantize_roundtrip() {
+        let w = Tensor::from_vec(&[3], vec![0.5, -0.5, 0.0]);
+        let t = TernaryTensor::quantize(&w);
+        let d = t.dequantize();
+        assert_eq!(d.shape(), &[3]);
+        for (orig, deq) in w.data().iter().zip(d.data()) {
+            assert!((orig - deq).abs() <= t.alpha);
+        }
+    }
+
+    #[test]
+    fn headline_config() {
+        let c = QuantConfig::w2a2r16();
+        assert_eq!(c.act_bsl, Some(2));
+        assert!(c.weight_ternary);
+        assert_eq!(c.residual_bsl, Some(16));
+    }
+}

@@ -1,0 +1,535 @@
+//! Bit-exact SC executor: runs a quantized network through the paper's
+//! circuit blocks.
+//!
+//! [`Prepared`] freezes a trained [`ModelParams`] into hardware form:
+//! ternarized weights, per-channel selective interconnects (BN-ReLU
+//! fused, Eq 1), residual alignment shifts (powers of two, §III.C) and
+//! per-layer BSN widths. [`ScExecutor::forward`] then evaluates images
+//! code-to-code:
+//!
+//! * activations are thermometer codes (counts) at each layer's trained
+//!   scale — nothing is de-quantized between layers;
+//! * products go through [`TernaryMultiplier`] semantics (proven equal
+//!   to the 5-gate cell), accumulation through BSN popcount semantics
+//!   (proven equal to the gate-level sorter), activation through SI tap
+//!   semantics (proven equal to bit selection on the sorted stream);
+//! * with a [`FaultCfg`], every bitstream bit flips with probability
+//!   `ber` — the Fig 5 experiment — using actual [`ThermCode`] bit
+//!   vectors rather than count shortcuts.
+
+use crate::circuits::multiplier::TernaryMultiplier;
+use crate::circuits::rescale::RescaleBlock;
+use crate::circuits::si::{ActivationFn, SelectiveInterconnect};
+use crate::coding::{Ternary, ThermCode};
+use crate::util::Rng;
+use super::layers::{ConvShape, im2col};
+use super::model::{LayerCfg, ModelCfg, ModelParams};
+use super::quant::{QuantConfig, TernaryTensor};
+use super::tensor::Tensor;
+
+/// Fault-injection configuration (Fig 5).
+#[derive(Clone, Copy, Debug)]
+pub struct FaultCfg {
+    /// Per-bit flip probability on every SC bitstream.
+    pub ber: f64,
+    /// RNG seed.
+    pub seed: u64,
+}
+
+/// A conv layer frozen into hardware form.
+#[derive(Clone, Debug)]
+pub struct PreparedConv {
+    /// Geometry.
+    pub shape: ConvShape,
+    /// Ternarized weights.
+    pub wq: TernaryTensor,
+    /// Scale of the accumulated products (`alpha_in · alpha_w`).
+    pub alpha_acc: f32,
+    /// Output scale (trained).
+    pub alpha_out: f32,
+    /// Residual-tap output scale (when `res_out`).
+    pub alpha_res_out: Option<f32>,
+    /// Power-of-two shift aligning the incoming residual to
+    /// `alpha_acc` (§III.C): `res count scale ×2^shift`.
+    pub res_shift: i32,
+    /// Per-channel SI for the main (low-BSL) output.
+    pub si_main: Vec<SelectiveInterconnect>,
+    /// Per-channel SI for the residual (BSL-16) tap.
+    pub si_res: Option<Vec<SelectiveInterconnect>>,
+    /// Total BSN input width in bits.
+    pub bsn_width: usize,
+    /// Whether this layer consumes a residual.
+    pub res_in: bool,
+}
+
+/// The frozen network.
+#[derive(Clone, Debug)]
+pub struct Prepared {
+    /// Source configuration.
+    pub cfg: ModelCfg,
+    /// Quantization variant.
+    pub quant: QuantConfig,
+    /// Input quantization scale.
+    pub input_alpha: f32,
+    /// Frozen conv layers (in network order).
+    pub convs: Vec<PreparedConv>,
+    /// Ternarized classifier.
+    pub fc: TernaryTensor,
+}
+
+/// Residual BSL used by the high-precision tap.
+pub const RES_BSL: usize = 16;
+
+impl Prepared {
+    /// Freeze a trained parameter set. `quant.act_bsl` must be set (the
+    /// SC datapath is always quantized).
+    pub fn new(cfg: &ModelCfg, params: &ModelParams, quant: QuantConfig) -> Self {
+        let act_bsl = quant.act_bsl.expect("SC executor requires quantized activations");
+        let res_bsl = quant.residual_bsl.unwrap_or(RES_BSL);
+        let mut convs = Vec::new();
+        let mut alpha_in = params.scalar("input.alpha").expect("input.alpha");
+        let mut alpha_res_in: Option<f32> = None;
+        let mut ci = 0usize;
+        for l in &cfg.layers {
+            match l {
+                LayerCfg::Conv { shape, bn, relu, res_in, res_out } => {
+                    let w = params.get(&format!("conv{ci}.w")).expect("conv weight");
+                    let wq = TernaryTensor::quantize(w);
+                    let alpha_acc = alpha_in * wq.alpha;
+                    let alpha_out =
+                        params.scalar(&format!("conv{ci}.alpha_out")).expect("alpha_out");
+                    let alpha_res_out = if *res_out {
+                        Some(params.scalar(&format!("conv{ci}.alpha_res")).expect("alpha_res"))
+                    } else {
+                        None
+                    };
+                    // Residual alignment: the incoming residual code (at
+                    // alpha_res_in) is scaled by 2^shift so that
+                    // alpha_res_in / 2^shift ≈ alpha_acc; i.e. its count
+                    // is replicated (shift>0) or divided (shift<0).
+                    let res_shift = if *res_in {
+                        let ar = alpha_res_in.expect("res_in layer without a residual tap");
+                        (ar / alpha_acc).log2().round() as i32
+                    } else {
+                        0
+                    };
+                    let res_bits = if *res_in {
+                        if res_shift >= 0 {
+                            res_bsl << res_shift
+                        } else {
+                            res_bsl // divided in place, BSL constant (§III.C)
+                        }
+                    } else {
+                        0
+                    };
+                    let bsn_width = shape.acc_width() * act_bsl + res_bits;
+                    let (gamma, beta) = if *bn {
+                        (
+                            params.get(&format!("conv{ci}.gamma")).expect("gamma").data().to_vec(),
+                            params.get(&format!("conv{ci}.beta")).expect("beta").data().to_vec(),
+                        )
+                    } else {
+                        (vec![1.0; shape.cout], vec![0.0; shape.cout])
+                    };
+                    let mk_si = |alpha_tgt: f32, out_bsl: usize| -> Vec<SelectiveInterconnect> {
+                        (0..shape.cout)
+                            .map(|c| {
+                                let act = if *relu {
+                                    ActivationFn::BnRelu {
+                                        gamma: gamma[c] as f64,
+                                        beta: beta[c] as f64 / alpha_acc as f64,
+                                        ratio: alpha_acc as f64 / alpha_tgt as f64,
+                                    }
+                                } else {
+                                    ActivationFn::Relu { ratio: alpha_acc as f64 / alpha_tgt as f64 }
+                                };
+                                SelectiveInterconnect::for_activation(&act, bsn_width, out_bsl)
+                            })
+                            .collect()
+                    };
+                    let si_main = mk_si(alpha_out, act_bsl);
+                    let si_res = alpha_res_out.map(|a| mk_si(a, res_bsl));
+                    convs.push(PreparedConv {
+                        shape: *shape,
+                        wq,
+                        alpha_acc,
+                        alpha_out,
+                        alpha_res_out,
+                        res_shift,
+                        si_main,
+                        si_res,
+                        bsn_width,
+                        res_in: *res_in,
+                    });
+                    alpha_in = alpha_out;
+                    alpha_res_in = alpha_res_out.or(alpha_res_in);
+                    ci += 1;
+                }
+                LayerCfg::Linear { .. } => {}
+                LayerCfg::GlobalAvgPool => {}
+            }
+        }
+        let fc = TernaryTensor::quantize(params.get("fc.w").expect("fc.w"));
+        Self {
+            cfg: cfg.clone(),
+            quant,
+            input_alpha: params.scalar("input.alpha").unwrap(),
+            convs,
+            fc,
+        }
+    }
+
+    /// Activation BSL.
+    pub fn act_bsl(&self) -> usize {
+        self.quant.act_bsl.unwrap()
+    }
+
+    /// Residual BSL.
+    pub fn res_bsl(&self) -> usize {
+        self.quant.residual_bsl.unwrap_or(RES_BSL)
+    }
+}
+
+/// Quantized activation map flowing between layers: integer codes plus
+/// geometry.
+#[derive(Clone, Debug)]
+pub struct CodeMap {
+    /// Quantized values `q ∈ [-bsl/2, bsl/2]`, CHW order.
+    pub q: Vec<i32>,
+    /// (C, H, W).
+    pub dims: (usize, usize, usize),
+    /// BSL of the codes.
+    pub bsl: usize,
+}
+
+/// The SC executor.
+pub struct ScExecutor {
+    prep: Prepared,
+    fault: Option<FaultCfg>,
+}
+
+impl ScExecutor {
+    /// New fault-free executor.
+    pub fn new(prep: Prepared) -> Self {
+        Self { prep, fault: None }
+    }
+
+    /// With fault injection.
+    pub fn with_faults(prep: Prepared, fault: FaultCfg) -> Self {
+        Self { prep, fault: Some(fault) }
+    }
+
+    /// The frozen network.
+    pub fn prepared(&self) -> &Prepared {
+        &self.prep
+    }
+
+    /// Forward one CHW image; returns per-class integer scores.
+    pub fn forward(&self, image: &Tensor) -> Vec<i64> {
+        let mut rng = self.fault.map(|f| Rng::new(f.seed));
+        let act_bsl = self.prep.act_bsl();
+        // Input encoding.
+        let half = (act_bsl / 2) as f32;
+        let mut main = CodeMap {
+            q: image
+                .data()
+                .iter()
+                .map(|&v| (v / self.prep.input_alpha).round().clamp(-half, half) as i32)
+                .collect(),
+            dims: self.prep.cfg.input,
+            bsl: act_bsl,
+        };
+        let mut res: Option<CodeMap> = None;
+        // First residual tap comes from the input itself when the first
+        // res_in layer appears before any res_out: our configs always
+        // emit res_out first, so `res` starts empty.
+        let mut li = 0usize;
+        let mut gap: Option<Vec<i64>> = None;
+        for l in &self.prep.cfg.layers {
+            match l {
+                LayerCfg::Conv { .. } => {
+                    let pc = &self.prep.convs[li];
+                    let (m, r) = self.conv_layer(pc, &main, res.as_ref(), rng.as_mut());
+                    main = m;
+                    if r.is_some() {
+                        res = r;
+                    }
+                    li += 1;
+                }
+                LayerCfg::GlobalAvgPool => {
+                    let (c, h, w) = main.dims;
+                    let mut sums = vec![0i64; c];
+                    for ci in 0..c {
+                        for p in 0..h * w {
+                            sums[ci] += main.q[ci * h * w + p] as i64;
+                        }
+                    }
+                    gap = Some(sums);
+                }
+                LayerCfg::Linear { in_dim, out_dim } => {
+                    let x = gap.clone().unwrap_or_else(|| {
+                        main.q.iter().map(|&v| v as i64).collect()
+                    });
+                    assert_eq!(x.len(), *in_dim);
+                    let mut logits = vec![0i64; *out_dim];
+                    for o in 0..*out_dim {
+                        for i in 0..*in_dim {
+                            logits[o] +=
+                                x[i] * self.prep.fc.values[o * in_dim + i] as i64;
+                        }
+                    }
+                    return logits;
+                }
+            }
+        }
+        panic!("model has no classifier layer");
+    }
+
+    /// Classify a batch; returns predicted classes.
+    pub fn predict(&self, images: &[Tensor]) -> Vec<usize> {
+        images
+            .iter()
+            .map(|im| {
+                let l = self.forward(im);
+                l.iter()
+                    .enumerate()
+                    .max_by_key(|(_, &v)| v)
+                    .map(|(i, _)| i)
+                    .unwrap()
+            })
+            .collect()
+    }
+
+    /// Accuracy over a labelled set.
+    pub fn accuracy(&self, images: &[Tensor], labels: &[usize]) -> f64 {
+        let preds = self.predict(images);
+        let hits = preds.iter().zip(labels).filter(|(p, l)| p == l).count();
+        hits as f64 / labels.len().max(1) as f64
+    }
+
+    /// One conv layer in the count domain (or bit domain under faults).
+    fn conv_layer(
+        &self,
+        pc: &PreparedConv,
+        main: &CodeMap,
+        res: Option<&CodeMap>,
+        mut rng: Option<&mut Rng>,
+    ) -> (CodeMap, Option<CodeMap>) {
+        let act_bsl = main.bsl;
+        let (cin, h, w) = main.dims;
+        assert_eq!(cin, pc.shape.cin);
+        // im2col over the quantized values.
+        let xf = Tensor::from_vec(
+            &[cin, h, w],
+            main.q.iter().map(|&v| v as f32).collect(),
+        );
+        let (cols, oh, ow) = im2col(&xf, &pc.shape);
+        let acc_w = pc.shape.acc_width();
+        let npix = oh * ow;
+        let half = (act_bsl / 2) as i64;
+
+        let mut out_main = vec![0i32; pc.shape.cout * npix];
+        let mut out_res = pc
+            .si_res
+            .as_ref()
+            .map(|_| vec![0i32; pc.shape.cout * npix]);
+
+        for co in 0..pc.shape.cout {
+            let wrow = &pc.wq.values[co * acc_w..(co + 1) * acc_w];
+            for p in 0..npix {
+                let xr = &cols[p * acc_w..(p + 1) * acc_w];
+                // Product counts through the ternary multiplier.
+                let mut count: i64 = 0;
+                if let Some(r) = rng.as_deref_mut() {
+                    // Bit-faithful path with fault injection.
+                    let ber = self.fault.unwrap().ber;
+                    for i in 0..acc_w {
+                        let a = ThermCode::encode(xr[i] as i64, act_bsl);
+                        let mut prod = TernaryMultiplier::mult_therm(
+                            &a,
+                            Ternary::from_i64(wrow[i] as i64),
+                        );
+                        flip_bits(&mut prod, ber, r);
+                        count += prod.count() as i64;
+                    }
+                } else {
+                    // Fast count arithmetic: count(a·w) = a·w + L/2
+                    // (proven equal to the code path in unit tests).
+                    for i in 0..acc_w {
+                        let q = (xr[i] as i64).clamp(-half, half);
+                        count += q * wrow[i] as i64 + half;
+                    }
+                }
+                // Residual contribution (§III.C alignment).
+                if pc.res_in {
+                    let rm = res.expect("residual map required");
+                    let rhalf = (rm.bsl / 2) as i64;
+                    let rq = rm.q[co_res_index(rm, co, p, oh, ow)] as i64;
+                    let rcount = (rq + rhalf) as usize;
+                    let aligned = align_res_count(rcount, rm.bsl, pc.res_shift);
+                    count += aligned as i64;
+                }
+                let count = count.max(0) as usize;
+                // SI taps.
+                let cmain = if let Some(r) = rng.as_deref_mut() {
+                    apply_si_faulty(&pc.si_main[co], count, self.fault.unwrap().ber, r)
+                } else {
+                    pc.si_main[co].apply_count(count.min(pc.bsn_width))
+                };
+                out_main[co * npix + p] =
+                    cmain as i32 - (pc.si_main[co].out_bsl() / 2) as i32;
+                if let Some(ref sis) = pc.si_res {
+                    let cres = if let Some(r) = rng.as_deref_mut() {
+                        apply_si_faulty(&sis[co], count, self.fault.unwrap().ber, r)
+                    } else {
+                        sis[co].apply_count(count.min(pc.bsn_width))
+                    };
+                    out_res.as_mut().unwrap()[co * npix + p] =
+                        cres as i32 - (sis[co].out_bsl() / 2) as i32;
+                }
+            }
+        }
+        let main_map = CodeMap { q: out_main, dims: (pc.shape.cout, oh, ow), bsl: act_bsl };
+        let res_map = out_res.map(|q| CodeMap {
+            q,
+            dims: (pc.shape.cout, oh, ow),
+            bsl: self.prep.res_bsl(),
+        });
+        (main_map, res_map)
+    }
+}
+
+/// Residual maps are spatially aligned with the conv output (residual
+/// layers are stride-1, cin == cout).
+fn co_res_index(rm: &CodeMap, co: usize, p: usize, oh: usize, ow: usize) -> usize {
+    let (_, h, w) = rm.dims;
+    debug_assert_eq!((h, w), (oh, ow), "residual must match conv output size");
+    co * h * w + p
+}
+
+/// Align a residual count by a power-of-two shift, with the exact
+/// semantics of the re-scaling block: replication for `shift > 0`,
+/// `⌈c/2⌉ + pad` selection cycles for `shift < 0`.
+pub fn align_res_count(count: usize, bsl: usize, shift: i32) -> usize {
+    if shift >= 0 {
+        count << shift
+    } else {
+        let block = RescaleBlock::new(bsl.max(16).min(16));
+        let mut code = ThermCode::from_count(count.min(bsl), bsl);
+        code = block.div_pow2(&code, (-shift) as u32);
+        code.count()
+    }
+}
+
+/// Flip each bit of a code with probability `ber`.
+pub fn flip_bits(code: &mut ThermCode, ber: f64, rng: &mut Rng) {
+    if ber <= 0.0 {
+        return;
+    }
+    let l = code.bsl();
+    let bits = code.bits_mut();
+    for i in 0..l {
+        if rng.gen_bool(ber) {
+            bits.flip(i);
+        }
+    }
+}
+
+/// SI application on a fault-corrupted sorted stream: build the sorted
+/// code from the count, flip stream bits, then tap.
+fn apply_si_faulty(
+    si: &SelectiveInterconnect,
+    count: usize,
+    ber: f64,
+    rng: &mut Rng,
+) -> usize {
+    let mut sorted = ThermCode::from_count(count.min(si.in_width()), si.in_width());
+    flip_bits(&mut sorted, ber, rng);
+    si.apply_bits(sorted.bits()).popcount()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::model::{ModelCfg, ModelParams};
+
+    fn tiny_prep(act_bsl: usize) -> Prepared {
+        let cfg = ModelCfg::tnn();
+        let mut rng = Rng::new(3);
+        let params = ModelParams::init(&cfg, &mut rng);
+        Prepared::new(
+            &cfg,
+            &params,
+            QuantConfig { act_bsl: Some(act_bsl), weight_ternary: true, residual_bsl: None },
+        )
+    }
+
+    #[test]
+    fn forward_shapes_and_determinism() {
+        let prep = tiny_prep(2);
+        let exec = ScExecutor::new(prep);
+        let mut rng = Rng::new(7);
+        let img = Tensor::from_vec(
+            &[1, 28, 28],
+            (0..784).map(|_| rng.normal() as f32).collect(),
+        );
+        let a = exec.forward(&img);
+        let b = exec.forward(&img);
+        assert_eq!(a.len(), 10);
+        assert_eq!(a, b, "fault-free forward must be deterministic");
+    }
+
+    #[test]
+    fn residual_network_runs() {
+        let cfg = ModelCfg::scnet(10);
+        let mut rng = Rng::new(5);
+        let params = ModelParams::init(&cfg, &mut rng);
+        let prep = Prepared::new(&cfg, &params, QuantConfig::w2a2r16());
+        let exec = ScExecutor::new(prep);
+        let img = Tensor::from_vec(
+            &[3, 32, 32],
+            (0..3 * 32 * 32).map(|_| rng.normal() as f32 * 0.5).collect(),
+        );
+        let logits = exec.forward(&img);
+        assert_eq!(logits.len(), 10);
+    }
+
+    #[test]
+    fn faults_perturb_but_zero_ber_matches_clean() {
+        let prep = tiny_prep(2);
+        let clean = ScExecutor::new(prep.clone());
+        let faulty0 = ScExecutor::with_faults(prep.clone(), FaultCfg { ber: 0.0, seed: 1 });
+        let mut rng = Rng::new(11);
+        let img = Tensor::from_vec(
+            &[1, 28, 28],
+            (0..784).map(|_| rng.normal() as f32).collect(),
+        );
+        assert_eq!(clean.forward(&img), faulty0.forward(&img));
+        // High BER produces different logits (overwhelmingly likely).
+        let faulty = ScExecutor::with_faults(prep, FaultCfg { ber: 0.2, seed: 1 });
+        assert_ne!(clean.forward(&img), faulty.forward(&img));
+    }
+
+    #[test]
+    fn align_res_count_shift_semantics() {
+        assert_eq!(align_res_count(5, 16, 0), 5);
+        assert_eq!(align_res_count(5, 16, 2), 20);
+        // One divide cycle: ceil(12/2) + 4 (pad '11110000') = 10.
+        assert_eq!(align_res_count(12, 16, -1), 10);
+    }
+
+    #[test]
+    fn accuracy_on_labels() {
+        let prep = tiny_prep(2);
+        let exec = ScExecutor::new(prep);
+        let mut rng = Rng::new(13);
+        let imgs: Vec<Tensor> = (0..4)
+            .map(|_| {
+                Tensor::from_vec(&[1, 28, 28], (0..784).map(|_| rng.normal() as f32).collect())
+            })
+            .collect();
+        let preds = exec.predict(&imgs);
+        let acc = exec.accuracy(&imgs, &preds);
+        assert_eq!(acc, 1.0);
+    }
+}

@@ -1,0 +1,139 @@
+//! Minimal dense f32 tensor (CHW layout for images).
+
+/// A dense row-major f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    /// All-zero tensor.
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n: usize = shape.iter().product();
+        Self { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    /// Wrap existing data.
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Self { shape: shape.to_vec(), data }
+    }
+
+    /// Shape.
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    /// Total elements.
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// True when empty.
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Raw data.
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Mutable raw data.
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// Consume into the raw vector.
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// 3-D (C,H,W) accessor.
+    pub fn at3(&self, c: usize, h: usize, w: usize) -> f32 {
+        debug_assert_eq!(self.shape.len(), 3);
+        self.data[(c * self.shape[1] + h) * self.shape[2] + w]
+    }
+
+    /// 3-D (C,H,W) setter.
+    pub fn set3(&mut self, c: usize, h: usize, w: usize, v: f32) {
+        debug_assert_eq!(self.shape.len(), 3);
+        self.data[(c * self.shape[1] + h) * self.shape[2] + w] = v;
+    }
+
+    /// Reshape in place (same element count).
+    pub fn reshape(mut self, shape: &[usize]) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), self.data.len());
+        self.shape = shape.to_vec();
+        self
+    }
+
+    /// Element-wise map.
+    pub fn map(mut self, f: impl Fn(f32) -> f32) -> Self {
+        for v in &mut self.data {
+            *v = f(*v);
+        }
+        self
+    }
+
+    /// Index of the maximum element (argmax over the flat data).
+    pub fn argmax(&self) -> usize {
+        self.data
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.total_cmp(b.1))
+            .map(|(i, _)| i)
+            .unwrap_or(0)
+    }
+
+    /// Mean of absolute values.
+    pub fn mean_abs(&self) -> f32 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.data.iter().map(|v| v.abs()).sum::<f32>() / self.data.len() as f32
+    }
+
+    /// Maximum absolute value.
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, v| m.max(v.abs()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_and_shape() {
+        let t = Tensor::zeros(&[2, 3, 4]);
+        assert_eq!(t.len(), 24);
+        assert_eq!(t.shape(), &[2, 3, 4]);
+    }
+
+    #[test]
+    fn at3_row_major() {
+        let mut t = Tensor::zeros(&[2, 2, 2]);
+        t.set3(1, 0, 1, 5.0);
+        assert_eq!(t.at3(1, 0, 1), 5.0);
+        assert_eq!(t.data()[5], 5.0);
+    }
+
+    #[test]
+    fn argmax_and_stats() {
+        let t = Tensor::from_vec(&[4], vec![-3.0, 1.0, 2.0, -0.5]);
+        assert_eq!(t.argmax(), 2);
+        assert!((t.mean_abs() - 1.625).abs() < 1e-6);
+        assert_eq!(t.max_abs(), 3.0);
+    }
+
+    #[test]
+    fn reshape_and_map() {
+        let t = Tensor::from_vec(&[4], vec![1.0, 2.0, 3.0, 4.0])
+            .reshape(&[2, 2])
+            .map(|x| x * 2.0);
+        assert_eq!(t.shape(), &[2, 2]);
+        assert_eq!(t.data(), &[2.0, 4.0, 6.0, 8.0]);
+    }
+}

@@ -1,0 +1,214 @@
+//! Artifact metadata parser (the line-oriented format written by
+//! `python/compile/aot.py`).
+//!
+//! ```text
+//! model <name> classes <k> input <c> <h> <w> batch <b> params <n>
+//! P <name> f32 <d0,d1,...>
+//! INIT <name> <hex f32 LE>
+//! ```
+
+use std::path::Path;
+
+use crate::Result;
+use anyhow::{bail, Context};
+
+/// One parameter entry.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParamMeta {
+    /// Parameter name (e.g. `conv0.w`).
+    pub name: String,
+    /// Shape.
+    pub dims: Vec<usize>,
+}
+
+impl ParamMeta {
+    /// Element count.
+    pub fn len(&self) -> usize {
+        self.dims.iter().product::<usize>().max(1)
+    }
+
+    /// True when scalar-shaped.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Parsed model metadata.
+#[derive(Clone, Debug)]
+pub struct ModelMeta {
+    /// Model name.
+    pub name: String,
+    /// Classes.
+    pub classes: usize,
+    /// Input (C, H, W).
+    pub input: (usize, usize, usize),
+    /// Exported batch size.
+    pub batch: usize,
+    /// Parameters in flat-signature order.
+    pub params: Vec<ParamMeta>,
+    /// Initial values (python init, same order as `params`).
+    pub init: Vec<Vec<f32>>,
+}
+
+impl ModelMeta {
+    /// Parse from a file.
+    pub fn from_file(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        Self::parse(&text)
+    }
+
+    /// Parse from text.
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut lines = text.lines();
+        let head = lines.next().context("empty meta file")?;
+        let toks: Vec<&str> = head.split_whitespace().collect();
+        let field = |key: &str| -> Result<usize> {
+            let i = toks
+                .iter()
+                .position(|&t| t == key)
+                .with_context(|| format!("missing {key} in header"))?;
+            Ok(toks[i + 1].parse()?)
+        };
+        if toks.first() != Some(&"model") {
+            bail!("bad meta header: {head}");
+        }
+        let name = toks[1].to_string();
+        let classes = field("classes")?;
+        let input_i = toks.iter().position(|&t| t == "input").context("input")?;
+        let input = (
+            toks[input_i + 1].parse()?,
+            toks[input_i + 2].parse()?,
+            toks[input_i + 3].parse()?,
+        );
+        let batch = field("batch")?;
+        let n_params = field("params")?;
+
+        let mut params = Vec::new();
+        let mut init_map: Vec<(String, Vec<f32>)> = Vec::new();
+        for line in lines {
+            let mut it = line.split_whitespace();
+            match it.next() {
+                Some("P") => {
+                    let name = it.next().context("P name")?.to_string();
+                    let _dtype = it.next().context("P dtype")?;
+                    let dims_s = it.next().unwrap_or("");
+                    let dims = if dims_s.is_empty() {
+                        vec![]
+                    } else {
+                        dims_s
+                            .split(',')
+                            .map(|d| d.parse::<usize>().map_err(Into::into))
+                            .collect::<Result<Vec<_>>>()?
+                    };
+                    params.push(ParamMeta { name, dims });
+                }
+                Some("INIT") => {
+                    let name = it.next().context("INIT name")?.to_string();
+                    let hexs = it.next().context("INIT hex")?;
+                    init_map.push((name, decode_hex_f32(hexs)?));
+                }
+                _ => {}
+            }
+        }
+        if params.len() != n_params {
+            bail!("meta declares {n_params} params, found {}", params.len());
+        }
+        // Order INIT blobs by the parameter order.
+        let mut init = Vec::with_capacity(params.len());
+        for p in &params {
+            let (_, v) = init_map
+                .iter()
+                .find(|(n, _)| n == &p.name)
+                .with_context(|| format!("missing INIT for {}", p.name))?;
+            if v.len() != p.len() {
+                bail!("INIT {} has {} values, expected {}", p.name, v.len(), p.len());
+            }
+            init.push(v.clone());
+        }
+        Ok(Self { name, classes, input, batch, params, init })
+    }
+
+    /// Index of a parameter by name.
+    pub fn index_of(&self, name: &str) -> Option<usize> {
+        self.params.iter().position(|p| p.name == name)
+    }
+
+    /// Total trainable scalars.
+    pub fn total_elems(&self) -> usize {
+        self.params.iter().map(|p| p.len()).sum()
+    }
+}
+
+/// Decode a little-endian f32 hex blob.
+pub fn decode_hex_f32(hexs: &str) -> Result<Vec<f32>> {
+    anyhow::ensure!(hexs.len() % 8 == 0, "hex length {} not multiple of 8", hexs.len());
+    let mut out = Vec::with_capacity(hexs.len() / 8);
+    let bytes = hexs.as_bytes();
+    let nib = |b: u8| -> Result<u8> {
+        Ok(match b {
+            b'0'..=b'9' => b - b'0',
+            b'a'..=b'f' => b - b'a' + 10,
+            b'A'..=b'F' => b - b'A' + 10,
+            _ => bail!("bad hex char {}", b as char),
+        })
+    };
+    for chunk in bytes.chunks(8) {
+        let mut w = [0u8; 4];
+        for (i, pair) in chunk.chunks(2).enumerate() {
+            w[i] = (nib(pair[0])? << 4) | nib(pair[1])?;
+        }
+        out.push(f32::from_le_bytes(w));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+model tiny classes 3 input 1 4 4 batch 8 params 2
+P input.alpha f32 1
+P fc.w f32 3,4
+INIT input.alpha 0000003f
+INIT fc.w 0000803f0000803f0000803f0000803f0000803f0000803f0000803f0000803f0000803f0000803f0000803f000080bf
+";
+
+    #[test]
+    fn parse_sample() {
+        let m = ModelMeta::parse(SAMPLE).unwrap();
+        assert_eq!(m.name, "tiny");
+        assert_eq!(m.classes, 3);
+        assert_eq!(m.input, (1, 4, 4));
+        assert_eq!(m.batch, 8);
+        assert_eq!(m.params.len(), 2);
+        assert_eq!(m.params[1].dims, vec![3, 4]);
+        assert_eq!(m.init[0], vec![0.5]);
+        assert_eq!(m.init[1][11], -1.0);
+        assert_eq!(m.index_of("fc.w"), Some(1));
+        assert_eq!(m.total_elems(), 13);
+    }
+
+    #[test]
+    fn decode_hex_roundtrip() {
+        let vals = [1.5f32, -2.25, 0.0, 1e-7];
+        let hexs: String = vals
+            .iter()
+            .flat_map(|v| v.to_le_bytes())
+            .map(|b| format!("{b:02x}"))
+            .collect();
+        assert_eq!(decode_hex_f32(&hexs).unwrap(), vals);
+    }
+
+    #[test]
+    fn bad_header_rejected() {
+        assert!(ModelMeta::parse("nonsense").is_err());
+    }
+
+    #[test]
+    fn param_count_mismatch_rejected() {
+        let bad = SAMPLE.replace("params 2", "params 3");
+        assert!(ModelMeta::parse(&bad).is_err());
+    }
+}

@@ -1,0 +1,120 @@
+//! PJRT runtime: load AOT-compiled JAX artifacts (HLO text) and execute
+//! them from Rust. Python never runs on this path.
+//!
+//! Pattern from /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! HLO *text* is the interchange format (the crate's xla_extension
+//! 0.5.1 rejects jax≥0.5's 64-bit-id serialized protos).
+
+pub mod meta;
+pub mod trainer;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use crate::Result;
+use anyhow::{bail, Context};
+
+pub use meta::ModelMeta;
+pub use trainer::Trainer;
+
+/// A PJRT runtime holding the CPU client and a compiled-executable
+/// cache keyed by artifact path.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<PathBuf, Arc<xla::PjRtLoadedExecutable>>>,
+    artifacts_dir: PathBuf,
+}
+
+impl Runtime {
+    /// Create a CPU-backed runtime rooted at an artifacts directory.
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self {
+            client,
+            cache: Mutex::new(HashMap::new()),
+            artifacts_dir: artifacts_dir.as_ref().to_path_buf(),
+        })
+    }
+
+    /// Platform string (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Artifacts directory.
+    pub fn artifacts_dir(&self) -> &Path {
+        &self.artifacts_dir
+    }
+
+    /// Load (or fetch from cache) an executable from an HLO text file
+    /// under the artifacts directory.
+    pub fn load(&self, file_name: &str) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        let path = self.artifacts_dir.join(file_name);
+        if let Some(exe) = self.cache.lock().unwrap().get(&path) {
+            return Ok(exe.clone());
+        }
+        if !path.exists() {
+            bail!(
+                "artifact {} not found — run `make artifacts` first",
+                path.display()
+            );
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Arc::new(
+            self.client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", path.display()))?,
+        );
+        self.cache.lock().unwrap().insert(path, exe.clone());
+        Ok(exe)
+    }
+
+    /// Load the metadata file of a model.
+    pub fn load_meta(&self, model: &str) -> Result<ModelMeta> {
+        meta::ModelMeta::from_file(self.artifacts_dir.join(format!("{model}_meta.txt")))
+    }
+
+    /// Execute an executable whose module returns a tuple (jax lowering
+    /// uses `return_tuple=True`): returns the unpacked output literals.
+    pub fn run(
+        exe: &xla::PjRtLoadedExecutable,
+        args: &[xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        let out = exe.execute::<xla::Literal>(args).context("PJRT execute")?;
+        let lit = out[0][0].to_literal_sync().context("device -> host")?;
+        Ok(lit.to_tuple().context("unpacking output tuple")?)
+    }
+}
+
+/// Build an f32 literal of the given shape from a flat slice.
+pub fn literal_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product::<usize>().max(1);
+    anyhow::ensure!(n == data.len(), "shape {:?} != len {}", dims, data.len());
+    if dims.is_empty() {
+        return Ok(xla::Literal::scalar(data[0]));
+    }
+    let d: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&d)?)
+}
+
+/// Build an i32 literal of the given shape.
+pub fn literal_i32(data: &[i32], dims: &[usize]) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product::<usize>().max(1);
+    anyhow::ensure!(n == data.len(), "shape {:?} != len {}", dims, data.len());
+    if dims.is_empty() {
+        return Ok(xla::Literal::scalar(data[0]));
+    }
+    let d: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&d)?)
+}
+
+/// Scalar f32 literal.
+pub fn scalar_f32(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}

@@ -1,0 +1,333 @@
+//! Rust-driven training and evaluation over the exported HLOs.
+//!
+//! The end-to-end loop the paper's experiments need (Table III, Fig 2,
+//! Fig 8, Table IV): Rust generates synthetic batches, executes the
+//! exported `train_step` via PJRT, tracks parameters/momenta as host
+//! vectors, and freezes the trained parameters into [`ModelParams`] for
+//! the bit-exact SC simulator. One HLO serves every ablation because
+//! the quantization knobs are runtime scalars.
+
+use std::sync::Arc;
+
+use crate::data::{Dataset, Split};
+use crate::nn::model::ModelParams;
+use crate::nn::tensor::Tensor;
+use crate::Result;
+use anyhow::{ensure, Context};
+
+use super::{literal_f32, literal_i32, scalar_f32, ModelMeta, Runtime};
+
+/// Runtime quantization knobs (mirror of python `QuantKnobs`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Knobs {
+    /// Activation clip half-range (`BSL/2`).
+    pub act_half: f32,
+    /// 1.0 = float activations (ablations).
+    pub act_fp: f32,
+    /// 1.0 = float weights.
+    pub w_fp: f32,
+    /// Residual clip half-range.
+    pub res_half: f32,
+    /// 1.0 = float residual.
+    pub res_fp: f32,
+    /// 0.0 disables residual adds entirely.
+    pub res_on: f32,
+}
+
+impl Knobs {
+    /// Fully-quantized W2-A{bsl}-R16 configuration.
+    pub fn quantized(act_bsl: usize) -> Self {
+        Self {
+            act_half: act_bsl as f32 / 2.0,
+            act_fp: 0.0,
+            w_fp: 0.0,
+            res_half: 8.0,
+            res_fp: 0.0,
+            res_on: 1.0,
+        }
+    }
+
+    /// Float baseline.
+    pub fn float() -> Self {
+        Self { act_half: 1.0, act_fp: 1.0, w_fp: 1.0, res_half: 8.0, res_fp: 1.0, res_on: 1.0 }
+    }
+
+    /// Residual BSL override (paper Fig 8: residual precision sweep).
+    pub fn with_res_bsl(mut self, bsl: Option<usize>) -> Self {
+        match bsl {
+            Some(b) => {
+                self.res_half = b as f32 / 2.0;
+                self.res_fp = 0.0;
+                self.res_on = 1.0;
+            }
+            None => self.res_on = 0.0,
+        }
+        self
+    }
+
+    /// Float residual (Fig 8's "floating point residual" point).
+    pub fn with_float_res(mut self) -> Self {
+        self.res_fp = 1.0;
+        self.res_on = 1.0;
+        self
+    }
+
+    /// As the 6 exported scalars.
+    pub fn flat(&self) -> [f32; 6] {
+        [self.act_half, self.act_fp, self.w_fp, self.res_half, self.res_fp, self.res_on]
+    }
+}
+
+/// A PJRT-backed trainer for one exported model.
+pub struct Trainer {
+    meta: ModelMeta,
+    train_exe: Arc<xla::PjRtLoadedExecutable>,
+    eval_exe: Arc<xla::PjRtLoadedExecutable>,
+    evalq_exe: Arc<xla::PjRtLoadedExecutable>,
+    calib_exe: Arc<xla::PjRtLoadedExecutable>,
+    params: Vec<Vec<f32>>,
+    moms: Vec<Vec<f32>>,
+}
+
+impl Trainer {
+    /// Load the three executables + metadata for `model` and start from
+    /// the exported python init.
+    pub fn new(rt: &Runtime, model: &str) -> Result<Self> {
+        let meta = rt.load_meta(model)?;
+        let train_exe = rt.load(&format!("{model}_train.hlo.txt"))?;
+        let eval_exe = rt.load(&format!("{model}_eval.hlo.txt"))?;
+        let evalq_exe = rt.load(&format!("{model}_evalq.hlo.txt"))?;
+        let calib_exe = rt.load(&format!("{model}_calib.hlo.txt"))?;
+        let params = meta.init.clone();
+        let moms = meta.params.iter().map(|p| vec![0.0; p.len()]).collect();
+        Ok(Self { meta, train_exe, eval_exe, evalq_exe, calib_exe, params, moms })
+    }
+
+    /// Model metadata.
+    pub fn meta(&self) -> &ModelMeta {
+        &self.meta
+    }
+
+    /// Current parameters (flat order).
+    pub fn params(&self) -> &[Vec<f32>] {
+        &self.params
+    }
+
+    /// Install trained parameters (flat order; lengths must match).
+    pub fn set_params(&mut self, params: Vec<Vec<f32>>) -> Result<()> {
+        ensure!(params.len() == self.meta.params.len(), "param count mismatch");
+        for (p, m) in params.iter().zip(&self.meta.params) {
+            ensure!(p.len() == m.len(), "param {} length mismatch", m.name);
+        }
+        self.params = params;
+        for m in &mut self.moms {
+            m.iter_mut().for_each(|v| *v = 0.0);
+        }
+        Ok(())
+    }
+
+    /// Reset parameters/momenta to the exported init.
+    pub fn reset(&mut self) {
+        self.params = self.meta.init.clone();
+        for m in &mut self.moms {
+            m.iter_mut().for_each(|v| *v = 0.0);
+        }
+    }
+
+    /// One SGD+momentum step on a batch; returns the loss.
+    pub fn step(&mut self, x: &[f32], y: &[i32], lr: f32, knobs: Knobs) -> Result<f32> {
+        let (c, h, w) = self.meta.input;
+        let b = self.meta.batch;
+        ensure!(x.len() == b * c * h * w, "x batch shape mismatch");
+        ensure!(y.len() == b, "y batch shape mismatch");
+        let n = self.meta.params.len();
+        let mut args: Vec<xla::Literal> = Vec::with_capacity(2 * n + 9);
+        for (p, m) in self.params.iter().zip(&self.meta.params) {
+            args.push(literal_f32(p, &m.dims)?);
+        }
+        for (p, m) in self.moms.iter().zip(&self.meta.params) {
+            args.push(literal_f32(p, &m.dims)?);
+        }
+        args.push(literal_f32(x, &[b, c, h, w])?);
+        args.push(literal_i32(y, &[b])?);
+        args.push(scalar_f32(lr));
+        for s in knobs.flat() {
+            args.push(scalar_f32(s));
+        }
+        let out = Runtime::run(&self.train_exe, &args)?;
+        ensure!(out.len() == 2 * n + 1, "train outputs {} != {}", out.len(), 2 * n + 1);
+        for i in 0..n {
+            self.params[i] = out[i].to_vec::<f32>().context("param out")?;
+            self.moms[i] = out[n + i].to_vec::<f32>().context("mom out")?;
+        }
+        let loss = out[2 * n]
+            .get_first_element::<f32>()
+            .context("loss out")?;
+        Ok(loss)
+    }
+
+    /// Evaluate logits for a full batch. `serving = true` uses the
+    /// integer-code Pallas path; `false` uses the fake-quant path
+    /// (required for FP ablation rows).
+    pub fn logits(&self, x: &[f32], knobs: Knobs, serving: bool) -> Result<Vec<f32>> {
+        let (c, h, w) = self.meta.input;
+        let b = self.meta.batch;
+        ensure!(x.len() == b * c * h * w, "x batch shape mismatch");
+        let mut args: Vec<xla::Literal> = Vec::new();
+        for (p, m) in self.params.iter().zip(&self.meta.params) {
+            args.push(literal_f32(p, &m.dims)?);
+        }
+        args.push(literal_f32(x, &[b, c, h, w])?);
+        for s in knobs.flat() {
+            args.push(scalar_f32(s));
+        }
+        let exe = if serving { &self.eval_exe } else { &self.evalq_exe };
+        let out = Runtime::run(exe, &args)?;
+        ensure!(out.len() == 1, "eval outputs {}", out.len());
+        Ok(out[0].to_vec::<f32>()?)
+    }
+
+    /// Train for `steps` mini-batches drawn from the dataset; returns
+    /// the loss curve.
+    pub fn train(
+        &mut self,
+        data: &dyn Dataset,
+        steps: usize,
+        lr: f32,
+        knobs: Knobs,
+        mut log: impl FnMut(usize, f32),
+    ) -> Result<Vec<f32>> {
+        let b = self.meta.batch;
+        let mut losses = Vec::with_capacity(steps);
+        for s in 0..steps {
+            let (x, y) = data.batch_flat(Split::Train, s * b, b);
+            // Cosine decay keeps late steps stable for QAT.
+            let prog = s as f32 / steps.max(1) as f32;
+            let lr_s = lr * 0.5 * (1.0 + (std::f32::consts::PI * prog).cos());
+            let loss = self.step(&x, &y, lr_s, knobs)?;
+            losses.push(loss);
+            log(s, loss);
+        }
+        Ok(losses)
+    }
+
+    /// Test accuracy over `n` examples (rounded up to whole batches).
+    pub fn accuracy(
+        &self,
+        data: &dyn Dataset,
+        n: usize,
+        knobs: Knobs,
+        serving: bool,
+    ) -> Result<f64> {
+        let b = self.meta.batch;
+        let k = self.meta.classes;
+        let batches = n.div_ceil(b);
+        let mut hits = 0usize;
+        let mut total = 0usize;
+        for bi in 0..batches {
+            let (x, y) = data.batch_flat(Split::Test, bi * b, b);
+            let logits = self.logits(&x, knobs, serving)?;
+            for (i, &label) in y.iter().enumerate() {
+                let row = &logits[i * k..(i + 1) * k];
+                let pred = row
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.total_cmp(b.1))
+                    .map(|(j, _)| j)
+                    .unwrap();
+                if pred == label as usize {
+                    hits += 1;
+                }
+                total += 1;
+            }
+        }
+        Ok(hits as f64 / total.max(1) as f64)
+    }
+
+    /// Activation-statistics calibration pass: runs the float forward
+    /// on one batch, then re-seats every quantization scale so the
+    /// quantizer's range covers the live activation distribution —
+    /// the standard warm-start between float pre-training and QAT
+    /// fine-tuning. `alpha = K · mean|y| / half` with `K = 2.5`.
+    pub fn calibrate(&mut self, data: &dyn Dataset, knobs: Knobs) -> Result<()> {
+        const K: f32 = 2.5;
+        let (c, h, w) = self.meta.input;
+        let b = self.meta.batch;
+        let (x, _) = data.batch_flat(Split::Train, 0, b);
+        let mut args: Vec<xla::Literal> = Vec::new();
+        for (p, m) in self.params.iter().zip(&self.meta.params) {
+            args.push(literal_f32(p, &m.dims)?);
+        }
+        args.push(literal_f32(&x, &[b, c, h, w])?);
+        let out = Runtime::run(&self.calib_exe, &args)?;
+        ensure!(out.len() == 1, "calib outputs {}", out.len());
+        let stats = out[0].to_vec::<f32>()?;
+        // stats[0] = mean|input|; stats[1 + i] = mean|y_i| per conv.
+        let meta = self.meta.clone();
+        let mut set = |name: &str, value: f32| {
+            if let Some(i) = meta.index_of(name) {
+                self.params[i] = vec![value.max(1e-6)];
+            }
+        };
+        set("input.alpha", K * stats[0] / knobs.act_half);
+        for (ci, s) in stats[1..].iter().enumerate() {
+            set(&format!("conv{ci}.alpha_out"), K * s / knobs.act_half);
+            set(&format!("conv{ci}.alpha_res"), K * s / knobs.res_half);
+        }
+        Ok(())
+    }
+
+    /// Standard two-phase QAT: float warm-up, scale calibration, then
+    /// quantized fine-tuning with the target knobs. Returns the
+    /// concatenated loss curve. When the knobs are already float this
+    /// is a single full-length float run.
+    pub fn train_qat(
+        &mut self,
+        data: &dyn Dataset,
+        steps_fp: usize,
+        steps_q: usize,
+        lr: f32,
+        knobs: Knobs,
+        mut log: impl FnMut(usize, f32),
+    ) -> Result<Vec<f32>> {
+        let is_float = knobs.act_fp >= 0.5 && knobs.w_fp >= 0.5;
+        if is_float {
+            return self.train(data, steps_fp + steps_q, lr, knobs, log);
+        }
+        let mut fp = Knobs::float();
+        fp.res_on = knobs.res_on;
+        let mut losses = self.train(data, steps_fp, lr, fp, |s, l| log(s, l))?;
+        self.calibrate(data, knobs)?;
+        let tail = self.train(data, steps_q, lr * 0.5, knobs, |s, l| log(steps_fp + s, l))?;
+        losses.extend(tail);
+        Ok(losses)
+    }
+
+    /// Freeze the current parameters into the Rust-side [`ModelParams`]
+    /// (for the bit-exact SC executor / fault injection).
+    pub fn to_model_params(&self) -> ModelParams {
+        let mut mp = ModelParams::new();
+        for (vals, m) in self.params.iter().zip(&self.meta.params) {
+            let dims = if m.dims.is_empty() { vec![1] } else { m.dims.clone() };
+            mp.insert(&m.name, Tensor::from_vec(&dims, vals.clone()));
+        }
+        mp
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn knobs_flat_order() {
+        let k = Knobs::quantized(4);
+        assert_eq!(k.flat(), [2.0, 0.0, 0.0, 8.0, 0.0, 1.0]);
+        let f = Knobs::float();
+        assert_eq!(f.flat()[1], 1.0);
+        let no_res = Knobs::quantized(2).with_res_bsl(None);
+        assert_eq!(no_res.flat()[5], 0.0);
+        let r4 = Knobs::quantized(2).with_res_bsl(Some(4));
+        assert_eq!(r4.flat()[3], 2.0);
+    }
+}

@@ -1,0 +1,127 @@
+//! Minimal benchmark harness (criterion is unavailable offline).
+//!
+//! `cargo bench` runs the `harness = false` bench binaries under
+//! `rust/benches/`, each of which uses [`Bench`] to time closures with
+//! warm-up, repetition and simple statistics, printing one aligned row
+//! per case. Output format:
+//!
+//! ```text
+//! name                                  median        mean      throughput
+//! bsn/gate_level/4608            1.234 ms     1.240 ms     3.73 Mbit/s
+//! ```
+
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+/// One benchmark runner.
+pub struct Bench {
+    /// Minimum measurement time per case.
+    pub min_time: Duration,
+    /// Maximum iterations per case.
+    pub max_iters: u64,
+    /// Warm-up iterations.
+    pub warmup: u64,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self { min_time: Duration::from_millis(300), max_iters: 100_000, warmup: 3 }
+    }
+}
+
+/// A single measured result.
+#[derive(Clone, Copy, Debug)]
+pub struct Measurement {
+    /// Median per-iteration time in seconds.
+    pub median_s: f64,
+    /// Mean per-iteration time in seconds.
+    pub mean_s: f64,
+    /// Iterations measured.
+    pub iters: u64,
+}
+
+impl Bench {
+    /// Quick-running configuration for CI / tests.
+    pub fn quick() -> Self {
+        Self { min_time: Duration::from_millis(50), max_iters: 1000, warmup: 1 }
+    }
+
+    /// Time `f`, printing a row labelled `name`. `work_items` (if
+    /// non-zero) adds a throughput column in items/s.
+    pub fn run<T>(&self, name: &str, work_items: u64, mut f: impl FnMut() -> T) -> Measurement {
+        for _ in 0..self.warmup {
+            black_box(f());
+        }
+        let mut samples: Vec<f64> = Vec::new();
+        let start = Instant::now();
+        let mut iters = 0u64;
+        while start.elapsed() < self.min_time && iters < self.max_iters {
+            let t0 = Instant::now();
+            black_box(f());
+            samples.push(t0.elapsed().as_secs_f64());
+            iters += 1;
+        }
+        samples.sort_by(|a, b| a.total_cmp(b));
+        let median_s = samples[samples.len() / 2];
+        let mean_s = samples.iter().sum::<f64>() / samples.len() as f64;
+        let m = Measurement { median_s, mean_s, iters };
+        let tp = if work_items > 0 {
+            format!("  {}/s", human(work_items as f64 / median_s))
+        } else {
+            String::new()
+        };
+        println!(
+            "{name:<48} {:>12}  {:>12}  x{iters}{tp}",
+            human_time(median_s),
+            human_time(mean_s),
+        );
+        m
+    }
+}
+
+/// Human-readable seconds.
+pub fn human_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} us", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Human-readable count.
+pub fn human(x: f64) -> String {
+    if x >= 1e9 {
+        format!("{:.2} G", x / 1e9)
+    } else if x >= 1e6 {
+        format!("{:.2} M", x / 1e6)
+    } else if x >= 1e3 {
+        format!("{:.2} k", x / 1e3)
+    } else {
+        format!("{x:.1}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let b = Bench::quick();
+        let m = b.run("test/noop", 0, || 1 + 1);
+        assert!(m.iters >= 1);
+        assert!(m.median_s >= 0.0);
+    }
+
+    #[test]
+    fn human_units() {
+        assert_eq!(human_time(2.0), "2.000 s");
+        assert_eq!(human_time(2e-3), "2.000 ms");
+        assert_eq!(human_time(2e-6), "2.000 us");
+        assert!(human(5e6).starts_with("5.00 M"));
+    }
+}

@@ -1,0 +1,107 @@
+//! Tiny property-testing helper (proptest is unavailable offline).
+//!
+//! [`check`] runs a property over `n` random cases drawn from a
+//! generator closure; on failure it greedily shrinks the case via the
+//! provided `shrink` closure before panicking with the minimal
+//! counterexample. Deterministic: every failure reproduces from the
+//! seed embedded in the panic message.
+
+use super::rng::Rng;
+
+/// Run `prop` over `n` cases from `gen`. Panics on the first failing
+/// case after shrinking.
+pub fn check<T: std::fmt::Debug + Clone>(
+    seed: u64,
+    n: usize,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut shrink: impl FnMut(&T) -> Vec<T>,
+    mut prop: impl FnMut(&T) -> bool,
+) {
+    let mut rng = Rng::new(seed);
+    for i in 0..n {
+        let case = gen(&mut rng);
+        if !prop(&case) {
+            // Greedy shrink.
+            let mut cur = case;
+            'outer: loop {
+                for cand in shrink(&cur) {
+                    if !prop(&cand) {
+                        cur = cand;
+                        continue 'outer;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property failed (seed={seed}, case #{i}); minimal counterexample: {cur:?}"
+            );
+        }
+    }
+}
+
+/// Run a property with no shrinking.
+pub fn check_simple<T: std::fmt::Debug + Clone>(
+    seed: u64,
+    n: usize,
+    gen: impl FnMut(&mut Rng) -> T,
+    prop: impl FnMut(&T) -> bool,
+) {
+    check(seed, n, gen, |_| Vec::new(), prop);
+}
+
+/// Shrinker for vectors: halves, removes one element, or simplifies one
+/// element with `elem_shrink`.
+pub fn shrink_vec<T: Clone>(
+    v: &[T],
+    elem_shrink: impl Fn(&T) -> Vec<T>,
+) -> Vec<Vec<T>> {
+    let mut out = Vec::new();
+    if v.len() > 1 {
+        out.push(v[..v.len() / 2].to_vec());
+        out.push(v[v.len() / 2..].to_vec());
+        for i in 0..v.len() {
+            let mut w = v.to_vec();
+            w.remove(i);
+            out.push(w);
+        }
+    }
+    for i in 0..v.len() {
+        for e in elem_shrink(&v[i]) {
+            let mut w = v.to_vec();
+            w[i] = e;
+            out.push(w);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check_simple(1, 100, |r| r.gen_range_i64(0, 100), |&x| x >= 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "minimal counterexample")]
+    fn failing_property_shrinks() {
+        check(
+            2,
+            100,
+            |r| r.gen_range_i64(0, 1000),
+            |&x| if x > 0 { vec![x / 2, x - 1] } else { vec![] },
+            |&x| x < 500,
+        );
+    }
+
+    #[test]
+    fn shrink_vec_variants() {
+        let v = vec![3, 4];
+        let shrunk = shrink_vec(&v, |&x| if x > 0 { vec![0] } else { vec![] });
+        assert!(shrunk.contains(&vec![3]));
+        assert!(shrunk.contains(&vec![4]));
+        assert!(shrunk.contains(&vec![0, 4]));
+    }
+}

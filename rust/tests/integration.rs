@@ -1,0 +1,217 @@
+//! Cross-module integration tests (no PJRT; see `runtime_hlo.rs` for
+//! the artifact-backed path).
+
+use scnn::accel::{self, schedule::Schedule, RESNET18_ACC_WIDTHS};
+use scnn::circuits::multiplier::TernaryMultiplier;
+use scnn::circuits::si::{ActivationFn, SelectiveInterconnect};
+use scnn::circuits::{Bsn, RescaleBlock};
+use scnn::coding::{Ternary, ThermCode};
+use scnn::cost::power::ChipPowerModel;
+use scnn::data::{Dataset, Split, SynthCifar, SynthDigits};
+use scnn::exp::{self, Opts};
+use scnn::nn::binary_exec::{accuracy_float, BinaryExecutor};
+use scnn::nn::model::{ModelCfg, ModelParams};
+use scnn::nn::quant::QuantConfig;
+use scnn::nn::sc_exec::{FaultCfg, Prepared, ScExecutor};
+use scnn::util::Rng;
+
+/// §II micro-pipeline: encode → 5-gate multiply → gate-level BSN → SI,
+/// against integer arithmetic, across widths and BSLs.
+#[test]
+fn sc_dot_product_pipeline_exact() {
+    let mut rng = Rng::new(1);
+    for bsl in [2usize, 4, 8] {
+        for n in [4usize, 9, 16, 27] {
+            let half = (bsl / 2) as i64;
+            let acts: Vec<i64> = (0..n).map(|_| rng.gen_range_i64(-half, half)).collect();
+            let ws: Vec<Ternary> =
+                (0..n).map(|_| Ternary::from_i64(rng.gen_range_i64(-1, 1))).collect();
+            let products: Vec<ThermCode> = acts
+                .iter()
+                .zip(&ws)
+                .map(|(&a, &w)| TernaryMultiplier::mult_therm(&ThermCode::encode(a, bsl), w))
+                .collect();
+            let bsn = Bsn::new(n * bsl);
+            let sorted = bsn.sort_gate_level(&Bsn::concat(&products));
+            let acc = ThermCode::from_bits(sorted.clone());
+            let expect: i64 = acts.iter().zip(&ws).map(|(&a, w)| a * w.to_i64()).sum();
+            assert_eq!(acc.decode(), expect, "bsl={bsl} n={n}");
+
+            // ReLU via SI on the sorted stream.
+            let si = SelectiveInterconnect::for_activation(
+                &ActivationFn::Relu { ratio: 1.0 },
+                n * bsl,
+                16,
+            );
+            let out = ThermCode::from_bits(si.apply_bits(&sorted));
+            assert_eq!(out.decode(), expect.max(0).min(8), "relu bsl={bsl} n={n}");
+        }
+    }
+}
+
+/// §III residual path: rescale block + BSN accumulation of residual +
+/// conv products at mismatched scales.
+#[test]
+fn residual_rescale_alignment() {
+    let block = RescaleBlock::new(16);
+    // Residual q=6 at alpha 2^0; conv products at alpha 2^-2: the
+    // residual count must be multiplied by 4.
+    let res = ThermCode::encode(6, 16);
+    let (aligned, cycles) = block.align(&res, 0, -2);
+    assert_eq!(cycles, 1);
+    assert_eq!(aligned.decode(), 24);
+    // And with alpha 2^1 target: divide by 2 over 1 cycle, BSL kept.
+    let (divided, cycles) = block.align(&res, 0, 1);
+    assert_eq!(cycles, 1);
+    assert_eq!(divided.bsl(), 16);
+    assert_eq!(divided.decode(), 3);
+}
+
+/// The full SC executor equals the binary executor on every config that
+/// both support (fault-free) — across models and BSLs.
+#[test]
+fn executors_agree_across_configs() {
+    let mut rng = Rng::new(33);
+    for (cfg, c, h, w) in [
+        (ModelCfg::tnn(), 1usize, 28usize, 28usize),
+        (ModelCfg::scnet(10), 3, 32, 32),
+    ] {
+        let params = ModelParams::init(&cfg, &mut rng);
+        for act_bsl in [2usize, 4] {
+            let has_res = cfg.name == "scnet";
+            let quant = QuantConfig {
+                act_bsl: Some(act_bsl),
+                weight_ternary: true,
+                residual_bsl: if has_res { Some(16) } else { None },
+            };
+            let prep = Prepared::new(&cfg, &params, quant);
+            let sc = ScExecutor::new(prep.clone());
+            let bin = BinaryExecutor::new(prep);
+            for s in 0..2 {
+                let mut r = Rng::new(1000 + s);
+                let img = scnn::nn::tensor::Tensor::from_vec(
+                    &[c, h, w],
+                    (0..c * h * w).map(|_| r.normal() as f32 * 0.5).collect(),
+                );
+                assert_eq!(
+                    sc.forward(&img),
+                    bin.forward(&img),
+                    "{} bsl={act_bsl} seed={s}",
+                    cfg.name
+                );
+            }
+        }
+    }
+}
+
+/// Fault injection preserves determinism per seed and zero-BER equals
+/// clean, through the full network.
+#[test]
+fn fault_injection_determinism() {
+    let cfg = ModelCfg::tnn();
+    let mut rng = Rng::new(5);
+    let params = ModelParams::init(&cfg, &mut rng);
+    let prep = Prepared::new(
+        &cfg,
+        &params,
+        QuantConfig { act_bsl: Some(2), weight_ternary: true, residual_bsl: None },
+    );
+    let data = SynthDigits::new();
+    let (imgs, _) = data.batch(Split::Test, 0, 4);
+    let a = ScExecutor::with_faults(prep.clone(), FaultCfg { ber: 0.01, seed: 9 });
+    let b = ScExecutor::with_faults(prep.clone(), FaultCfg { ber: 0.01, seed: 9 });
+    for img in &imgs {
+        assert_eq!(a.forward(img), b.forward(img));
+    }
+    let clean = ScExecutor::new(prep.clone());
+    let zero = ScExecutor::with_faults(prep, FaultCfg { ber: 0.0, seed: 1 });
+    for img in &imgs {
+        assert_eq!(clean.forward(img), zero.forward(img));
+    }
+}
+
+/// Float-reference executor runs every ablation row of Table III.
+#[test]
+fn float_reference_all_quant_configs() {
+    let cfg = ModelCfg::scnet(10);
+    let mut rng = Rng::new(8);
+    let params = ModelParams::init(&cfg, &mut rng);
+    let data = SynthCifar::new(10);
+    let (imgs, labels) = data.batch(Split::Test, 0, 8);
+    for quant in [
+        QuantConfig::float(),
+        QuantConfig { act_bsl: None, weight_ternary: true, residual_bsl: None },
+        QuantConfig { act_bsl: Some(2), weight_ternary: false, residual_bsl: None },
+        QuantConfig::w2a2r16(),
+    ] {
+        let acc = accuracy_float(&cfg, &params, quant, &imgs, &labels);
+        assert!((0.0..=1.0).contains(&acc), "{quant:?}");
+    }
+}
+
+/// The accelerator schedule covers every ResNet-18 layer and the
+/// paper's headline ratios hold in *shape* (all reductions > 1, small
+/// layers win more than large ones).
+#[test]
+fn schedule_shape_matches_paper() {
+    let widths: Vec<usize> = RESNET18_ACC_WIDTHS.iter().map(|w| w * 2).collect();
+    let s = Schedule::new(&widths, 1152);
+    let reductions: Vec<f64> = s.layers.iter().map(|l| l.reduction).collect();
+    for w in reductions.windows(2) {
+        assert!(w[0] >= w[1], "smaller layers must win more: {reductions:?}");
+    }
+    assert!(s.avg_adp_reduction() > 3.0);
+    assert!(s.area_reduction() > 2.0);
+}
+
+/// Spatial/ST designs stay within an MSE budget across all paper
+/// widths (the Table V / Fig 13 quality gate).
+#[test]
+fn approx_designs_quality_gate() {
+    let mut rng = Rng::new(77);
+    for &wprod in &RESNET18_ACC_WIDTHS {
+        let bits = wprod * 2;
+        let sp = accel::design_spatial(bits, 16);
+        assert!(sp.mse(0.5, 400, &mut rng) < 5e-3, "spatial {wprod}");
+        let st = accel::design_st(bits, 1152.min(bits), 16, 16);
+        assert!(st.mse(0.5, 400, &mut rng) < 5e-3, "st {wprod}");
+    }
+}
+
+/// The chip power model hits the paper's headline at the paper's
+/// operating point and degrades away from it.
+#[test]
+fn power_model_headline() {
+    let p = ChipPowerModel::evaluate(0.65, 200.0);
+    assert!(p.functional);
+    assert!((p.tops_per_w - 198.9).abs() < 6.0);
+    assert!(ChipPowerModel::evaluate(0.9, 200.0).tops_per_w < p.tops_per_w);
+}
+
+/// Circuit-level experiments run end-to-end in quick mode and report
+/// paper-shaped results.
+#[test]
+fn circuit_experiments_quick() {
+    let opts = Opts { quick: true, artifacts: "artifacts".into(), seed: 3 };
+    // tab5: spatial and ST must beat the baseline.
+    let r = exp::run("tab5", &opts).unwrap();
+    assert!(r.get("ratio", "spatial_x").unwrap() > 1.5);
+    assert!(r.get("ratio", "st_x").unwrap() > 1.5);
+    // fig9: super-linear per-bit growth.
+    let r = exp::run("fig9", &opts).unwrap();
+    assert!(r.get("scaling", "per_bit_growth").unwrap() > 1.5);
+    // fig1: FSM error decreases with BSL but never reaches the SI.
+    let r = exp::run("fig1", &opts).unwrap();
+    let long = r.get("1024", "mse_relu_fsm").unwrap();
+    let short = r.get("32", "mse_relu_fsm").unwrap();
+    assert!(short > long);
+    // fig13: avg ADP reduction > 3x.
+    let r = exp::run("fig13", &opts).unwrap();
+    assert!(r.get("avg", "adp_reduction").unwrap() > 3.0);
+    // fig4: peak close to the paper's headline.
+    let r = exp::run("fig4", &opts).unwrap();
+    assert!((r.get("peak", "tops_per_w").unwrap() - 198.9).abs() < 10.0);
+    // fig7: SI reproduces BN-ReLU exactly.
+    let r = exp::run("fig7", &opts).unwrap();
+    assert_eq!(r.get("g1b0", "max_err").unwrap(), 0.0);
+}

@@ -1,0 +1,225 @@
+//! Property-based tests over the circuit invariants (in-tree shrinking
+//! property harness — proptest is unavailable offline).
+
+use scnn::circuits::approx_bsn::{ApproxBsn, ApproxStage, SubSample};
+use scnn::circuits::multiplier::TernaryMultiplier;
+use scnn::circuits::si::SelectiveInterconnect;
+use scnn::circuits::Bsn;
+use scnn::coding::{BitVec, Ternary, ThermCode};
+use scnn::nn::quant::{QuantTensor, TernaryTensor};
+use scnn::nn::tensor::Tensor;
+use scnn::util::prop::{check, check_simple, shrink_vec};
+use scnn::util::Rng;
+
+fn random_bits(rng: &mut Rng, n: usize, p: f64) -> Vec<bool> {
+    (0..n).map(|_| rng.gen_bool(p)).collect()
+}
+
+/// Sorting any bit vector preserves popcount and yields a thermometer
+/// code — the invariant that makes BSN accumulation exact.
+#[test]
+fn prop_bsn_sort_invariants() {
+    check(
+        11,
+        200,
+        |rng| {
+            let n = 1 + rng.gen_index(96);
+            let p_one = rng.f64();
+            random_bits(rng, n, p_one)
+        },
+        |v| shrink_vec(v, |&b| if b { vec![false] } else { vec![] }),
+        |bits| {
+            let bv = BitVec::from_bits(bits);
+            let sorted = Bsn::new(bits.len()).sort_gate_level(&bv);
+            sorted.popcount() == bv.popcount() && sorted.is_thermometer()
+        },
+    );
+}
+
+/// Gate-level sort == functional accumulate for arbitrary product
+/// mixes.
+#[test]
+fn prop_gate_equals_functional() {
+    check_simple(
+        13,
+        100,
+        |rng| {
+            let n = 1 + rng.gen_index(24);
+            let bsl = [2usize, 4, 8][rng.gen_index(3)];
+            (0..n)
+                .map(|_| {
+                    let half = (bsl / 2) as i64;
+                    rng.gen_range_i64(-half, half)
+                })
+                .map(|q| ThermCode::encode(q, bsl))
+                .collect::<Vec<_>>()
+        },
+        |codes| {
+            let w: usize = codes.iter().map(|c| c.bsl()).sum();
+            let bsn = Bsn::new(w);
+            let gate = bsn.sort_gate_level(&Bsn::concat(codes)).popcount();
+            let func = bsn.accumulate(codes).count();
+            gate == func
+        },
+    );
+}
+
+/// Ternary multiplication: code path == integer path for every BSL.
+#[test]
+fn prop_multiplier_exact() {
+    check_simple(
+        17,
+        300,
+        |rng| {
+            let bsl = [2usize, 4, 8, 16][rng.gen_index(4)];
+            let half = (bsl / 2) as i64;
+            (bsl, rng.gen_range_i64(-half, half), rng.gen_range_i64(-1, 1))
+        },
+        |&(bsl, a, w)| {
+            let code = TernaryMultiplier::mult_therm(
+                &ThermCode::encode(a, bsl),
+                Ternary::from_i64(w),
+            );
+            code.decode() == a * w && code.bsl() == bsl
+        },
+    );
+}
+
+/// SI synthesis is exact for any random monotone step function.
+#[test]
+fn prop_si_synthesizes_any_monotone_fn() {
+    check_simple(
+        19,
+        100,
+        |rng| {
+            let in_w = 4 + rng.gen_index(60);
+            let out = 2 + rng.gen_index(16);
+            // Random monotone table 0..=out over 0..=in_w.
+            let mut table = Vec::with_capacity(in_w + 1);
+            let mut cur = 0usize;
+            for _ in 0..=in_w {
+                if rng.gen_bool(0.3) && cur < out {
+                    cur += 1;
+                }
+                table.push(cur);
+            }
+            (in_w, out, table)
+        },
+        |(in_w, out, table)| {
+            let t = table.clone();
+            let si = SelectiveInterconnect::synthesize(|c| t[c], *in_w, *out);
+            (0..=*in_w).all(|c| si.apply_count(c) == table[c])
+        },
+    );
+}
+
+/// Sub-sampling: count path == bit path on sorted streams; output is
+/// monotone in the input count.
+#[test]
+fn prop_subsample_consistency() {
+    check_simple(
+        23,
+        200,
+        |rng| {
+            let stride = 1 + rng.gen_index(4);
+            let out = 2 + rng.gen_index(16);
+            let clip = rng.gen_index(16);
+            let l = out * stride + 2 * clip;
+            (l, SubSample { clip, stride })
+        },
+        |&(l, sub)| {
+            let mut prev = 0usize;
+            for k in 0..=l {
+                let via_count = sub.apply_count(k, l);
+                let via_bits = sub.apply_bits(ThermCode::from_count(k, l).bits()).popcount();
+                if via_count != via_bits || via_count < prev {
+                    return false;
+                }
+                prev = via_count;
+            }
+            true
+        },
+    );
+}
+
+/// Approximate BSN never *increases* the represented error beyond the
+/// quantization step bound when inputs stay within the clip window.
+#[test]
+fn prop_approx_bsn_error_bound() {
+    check_simple(
+        29,
+        60,
+        |rng| {
+            let m = 2 + rng.gen_index(6);
+            let counts: Vec<usize> = (0..m).map(|_| 8 + rng.gen_index(17)).collect();
+            (m, counts)
+        },
+        |(m, counts)| {
+            // One stage: groups of 32, clip 4, stride 2 -> 12-bit codes,
+            // then exact merge.
+            let a = ApproxBsn::new(vec![
+                ApproxStage { m: *m, l: 32, sub: SubSample { clip: 4, stride: 2 } },
+                ApproxStage { m: 1, l: m * 12, sub: SubSample::IDENTITY },
+            ]);
+            let exact = a.exact_scaled_value(counts);
+            let approx = a.approx_value(counts);
+            // Each group quantizes by stride 2 with rounding: error
+            // <= 0.5 per group (in divided units) plus merge exactness.
+            (approx - exact).abs() <= 0.5 * *m as f64 + 1e-9
+        },
+    );
+}
+
+/// Quantize→dequantize is idempotent (a fixed point) for both weight
+/// and activation quantizers.
+#[test]
+fn prop_quantizers_idempotent() {
+    check_simple(
+        31,
+        100,
+        |rng| {
+            let n = 1 + rng.gen_index(64);
+            (0..n).map(|_| rng.normal() as f32).collect::<Vec<f32>>()
+        },
+        |vals| {
+            let t = Tensor::from_vec(&[vals.len()], vals.clone());
+            // Ternarization preserves the sign/zero pattern under
+            // re-quantization (the scale renormalizes, the symbols
+            // cannot change sign).
+            let t1 = TernaryTensor::quantize(&t);
+            let t2 = TernaryTensor::quantize(&t1.dequantize());
+            let aw = t1
+                .values
+                .iter()
+                .zip(&t2.values)
+                .all(|(a, b)| a.signum() == b.signum());
+
+            // Activation fake-quant at a fixed alpha is idempotent.
+            let q1 = QuantTensor::quantize(&t, 0.5, 8).dequantize();
+            let q2 = QuantTensor::quantize(&q1, 0.5, 8).dequantize();
+            let aq = q1.data().iter().zip(q2.data()).all(|(a, b)| (a - b).abs() < 1e-5);
+            aw && aq
+        },
+    );
+}
+
+/// Thermometer negate/encode/decode laws under composition.
+#[test]
+fn prop_thermometer_algebra() {
+    check_simple(
+        37,
+        300,
+        |rng| {
+            let bsl = 2 * (1 + rng.gen_index(16));
+            let half = (bsl / 2) as i64;
+            (bsl, rng.gen_range_i64(-half, half))
+        },
+        |&(bsl, q)| {
+            let c = ThermCode::encode(q, bsl);
+            c.decode() == q
+                && c.negate().decode() == -q
+                && c.negate().negate() == c
+                && c.is_canonical()
+        },
+    );
+}

@@ -1,0 +1,107 @@
+//! PJRT runtime integration: loads the real AOT artifacts, trains, and
+//! cross-checks the serving path. Requires `make artifacts`.
+
+use scnn::data::{Dataset, Split, SynthDigits};
+use scnn::runtime::{trainer::Knobs, Runtime, Trainer};
+
+fn artifacts_available() -> bool {
+    std::path::Path::new("artifacts/tnn_meta.txt").exists()
+}
+
+#[test]
+fn meta_parses_and_matches_model() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let rt = Runtime::new("artifacts").unwrap();
+    let meta = rt.load_meta("tnn").unwrap();
+    assert_eq!(meta.name, "tnn");
+    assert_eq!(meta.classes, 10);
+    assert_eq!(meta.input, (1, 28, 28));
+    // Parameter names match the Rust model config order.
+    let cfg = scnn::nn::model::ModelCfg::tnn();
+    let names: Vec<String> = meta.params.iter().map(|p| p.name.clone()).collect();
+    assert_eq!(names, cfg.param_names());
+}
+
+#[test]
+fn train_step_reduces_loss_via_pjrt() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let rt = Runtime::new("artifacts").unwrap();
+    let data = SynthDigits::new();
+    let mut tr = Trainer::new(&rt, "tnn").unwrap();
+    let knobs = Knobs::quantized(8).with_res_bsl(None);
+    let losses = tr.train(&data, 60, 0.1, knobs, |_, _| {}).unwrap();
+    let head: f32 = losses[..10].iter().sum::<f32>() / 10.0;
+    let tail: f32 = losses[losses.len() - 10..].iter().sum::<f32>() / 10.0;
+    assert!(tail < head, "loss must decrease: {head} -> {tail}");
+}
+
+#[test]
+fn serving_path_agrees_with_fake_quant() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let rt = Runtime::new("artifacts").unwrap();
+    let data = SynthDigits::new();
+    let mut tr = Trainer::new(&rt, "tnn").unwrap();
+    let knobs = Knobs::quantized(2).with_res_bsl(None);
+    tr.train_qat(&data, 120, 120, 0.1, knobs, |_, _| {}).unwrap();
+    // The integer serving path (Pallas kernel) and the fake-quant path
+    // must produce near-identical accuracies (identical rounding on
+    // almost all inputs).
+    let a = tr.accuracy(&data, 256, knobs, true).unwrap();
+    let b = tr.accuracy(&data, 256, knobs, false).unwrap();
+    assert!((a - b).abs() < 0.05, "serving {a} vs fake-quant {b}");
+}
+
+#[test]
+fn frozen_params_run_in_sc_simulator() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let rt = Runtime::new("artifacts").unwrap();
+    let data = SynthDigits::new();
+    let mut tr = Trainer::new(&rt, "tnn").unwrap();
+    let knobs = Knobs::quantized(2).with_res_bsl(None);
+    tr.train_qat(&data, 350, 350, 0.1, knobs, |_, _| {}).unwrap();
+    let params = tr.to_model_params();
+    let prep = scnn::nn::sc_exec::Prepared::new(
+        &scnn::nn::model::ModelCfg::tnn(),
+        &params,
+        scnn::nn::quant::QuantConfig {
+            act_bsl: Some(2),
+            weight_ternary: true,
+            residual_bsl: None,
+        },
+    );
+    let sc = scnn::nn::sc_exec::ScExecutor::new(prep.clone());
+    let bin = scnn::nn::binary_exec::BinaryExecutor::new(prep);
+    let (imgs, labels) = data.batch(Split::Test, 0, 48);
+    let acc_sc = sc.accuracy(&imgs, &labels);
+    let acc_bin = bin.accuracy(&imgs, &labels);
+    assert_eq!(acc_sc, acc_bin, "executors must agree fault-free");
+    // The trained network must beat chance decisively in the SC sim.
+    assert!(acc_sc > 0.25, "SC-sim accuracy too low: {acc_sc}");
+}
+
+#[test]
+fn set_params_roundtrip() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let rt = Runtime::new("artifacts").unwrap();
+    let mut tr = Trainer::new(&rt, "tnn").unwrap();
+    let blob = tr.params().to_vec();
+    tr.set_params(blob.clone()).unwrap();
+    assert_eq!(tr.params(), &blob[..]);
+    // Wrong arity must fail.
+    assert!(tr.set_params(vec![vec![0.0]]).is_err());
+}
