@@ -1,0 +1,17 @@
+# Convenience targets. `make artifacts` is what the runtime error
+# messages and docs refer to: it AOT-exports the JAX models to HLO
+# text + metadata (requires JAX; see DESIGN.md §Substitutions).
+
+artifacts:
+	cd python/compile && python aot.py --out ../../artifacts
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+bench:
+	cargo bench
+
+.PHONY: artifacts build test bench

@@ -1,17 +1,19 @@
-//! Serving demo: the L3 coordinator batching concurrent requests into
-//! the PJRT serving path (integer codes through the Pallas kernel).
+//! Serving demo: the L3 coordinator pool batching concurrent requests
+//! into the serving path (integer codes through the Pallas kernel when
+//! AOT artifacts are present, a deterministic synthetic model
+//! otherwise).
 //!
-//! Spawns a short warm-up training run, starts the coordinator, fires
-//! requests from several client threads, and reports throughput,
-//! latency percentiles and batch occupancy.
+//! Spawns an optional warm-up training run, starts an `N`-worker pool,
+//! fires requests from several client threads, and reports throughput,
+//! latency percentiles, batch occupancy and the per-worker breakdown.
 //!
 //! ```bash
-//! cargo run --release --example serve [-- requests=2048 clients=8]
+//! cargo run --release --example serve [-- requests=2048 clients=8 workers=4]
 //! ```
 
 use scnn::coordinator::{Coordinator, ServeConfig};
 use scnn::data::{Dataset, Split, SynthCifar};
-use scnn::runtime::{trainer::Knobs, Runtime, Trainer};
+use scnn::runtime::{artifacts_ready, trainer::Knobs, Runtime, Trainer};
 
 fn arg(name: &str, default: usize) -> usize {
     std::env::args()
@@ -20,25 +22,36 @@ fn arg(name: &str, default: usize) -> usize {
 }
 
 fn main() -> scnn::Result<()> {
-    let requests = arg("requests", 2048);
-    let clients = arg("clients", 8);
+    let clients = arg("clients", 8).max(1);
+    let requests = arg("requests", 2048).max(clients);
+    let workers = arg("workers", 4).max(1);
     let warmup_steps = arg("warmup", 100);
     let data = SynthCifar::new(10);
     let knobs = Knobs::quantized(2).with_res_bsl(Some(16));
 
-    // Warm-up training so the served model is non-trivial.
     let mut cfg = ServeConfig::new("artifacts", "scnet10");
     cfg.knobs = knobs;
-    if warmup_steps > 0 {
-        println!("warm-up: training {warmup_steps} steps...");
-        let rt = Runtime::new("artifacts")?;
-        let mut tr = Trainer::new(&rt, "scnet10")?;
-        tr.train_qat(&data, warmup_steps / 2, warmup_steps / 2, 0.05, knobs, |_, _| {})?;
-        cfg.params = Some(tr.params().to_vec());
+    cfg.workers = workers;
+    if artifacts_ready("artifacts", "scnet10") {
+        // Real serving path; warm-up training so the model is non-trivial.
+        if warmup_steps > 0 {
+            println!("warm-up: training {warmup_steps} steps...");
+            let rt = Runtime::new("artifacts")?;
+            let mut tr = Trainer::new(&rt, "scnet10")?;
+            tr.train_qat(&data, warmup_steps / 2, warmup_steps / 2, 0.05, knobs, |_, _| {})?;
+            cfg.params = Some(tr.params().to_vec());
+        }
+    } else {
+        println!("artifacts missing -> synthetic backend (run `make artifacts` for PJRT)");
     }
+    let (c, h, w) = data.shape();
+    let coord = Coordinator::start_auto(cfg, (c * h * w, data.num_classes()))?;
 
-    let coord = Coordinator::start(cfg)?;
-    println!("coordinator up; {clients} clients x {} reqs", requests / clients);
+    println!(
+        "coordinator up; {} workers, {clients} clients x {} reqs",
+        coord.workers(),
+        requests / clients
+    );
     let t0 = std::time::Instant::now();
     let mut handles = Vec::new();
     for t in 0..clients {
@@ -69,9 +82,12 @@ fn main() -> scnn::Result<()> {
         hits as f64 / served as f64
     );
     println!(
-        "batches {}  occupancy {:.2}  latency p50 {:?}  p99 {:?}  mean {:?}",
-        m.batches, m.occupancy, m.p50, m.p99, m.mean
+        "batches {}  occupancy {:.2}  latency p50 {:?}  p99 {:?}  mean {:?}  peak in-flight {}",
+        m.batches, m.occupancy, m.p50, m.p99, m.mean, m.inflight_peak
     );
+    for w in &m.per_worker {
+        println!("  worker {}: {} requests in {} batches", w.worker, w.requests, w.batches);
+    }
     println!("serve OK");
     Ok(())
 }

@@ -1,52 +1,124 @@
-//! Coordinator / serving benchmarks: end-to-end request throughput and
-//! latency through the dynamic batcher + PJRT serving path.
+//! Coordinator / serving benchmarks.
 //!
-//! Requires `make artifacts`; skips gracefully otherwise.
+//! Part 1 always runs: a **worker-scaling sweep** over the synthetic
+//! backend, whose fixed per-batch latency models a busy fixed-batch
+//! accelerator — sustained throughput must rise with the worker count
+//! at saturation (N=4 > N=1). Part 2 (end-to-end PJRT serving path)
+//! needs `make artifacts` and skips gracefully otherwise.
 
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
-use scnn::coordinator::{BatchPolicy, Coordinator, ServeConfig};
+use scnn::coordinator::{
+    BatchPolicy, Coordinator, ExecutorSpec, PoolConfig, ServeConfig, SyntheticExecutor,
+};
 use scnn::data::{Dataset, Split, SynthCifar};
-use scnn::runtime::trainer::Knobs;
+use scnn::runtime::{artifacts_ready, trainer::Knobs};
 
-fn main() {
-    if !std::path::Path::new("artifacts/scnet10_meta.txt").exists() {
-        println!("coordinator bench skipped: run `make artifacts` first");
+/// Drive a pool to saturation from `clients` blocking threads; returns
+/// (req/s, final snapshot).
+fn drive(
+    coord: &Coordinator,
+    clients: usize,
+    requests_per_client: usize,
+) -> (f64, scnn::coordinator::MetricsSnapshot) {
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for t in 0..clients {
+        let client = coord.client();
+        handles.push(std::thread::spawn(move || {
+            let data = SynthCifar::new(10);
+            for i in 0..requests_per_client {
+                let (x, _) = data.sample(Split::Test, t * 10_000 + i);
+                client.infer(x.into_vec()).expect("infer");
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    ((clients * requests_per_client) as f64 / wall, coord.metrics())
+}
+
+fn sweep_workers() {
+    println!("== worker-scaling sweep (synthetic backend, 2 ms/batch accelerator) ==");
+    let spec = ExecutorSpec { image_len: 3 * 32 * 32, batch: 8, classes: 10 };
+    let mut throughput_n1 = 0.0f64;
+    let mut throughput_n4 = 0.0f64;
+    for workers in [1usize, 2, 4, 8] {
+        let factory = SyntheticExecutor::factory(spec, Duration::from_millis(2));
+        let pool = PoolConfig { workers, queue_depth: 64, ..PoolConfig::default() };
+        let coord = Coordinator::start_with(factory, pool).expect("start pool");
+        // Saturate: enough concurrent clients to keep every worker's
+        // batch full (8 blocking clients per worker at batch 8).
+        let (reqs_per_s, m) = drive(&coord, 8 * workers, 96);
+        if workers == 1 {
+            throughput_n1 = reqs_per_s;
+        }
+        if workers == 4 {
+            throughput_n4 = reqs_per_s;
+        }
+        println!(
+            "coordinator/sweep/workers={workers}  {:>8.0} req/s  occupancy {:.2}  \
+             p50 {:?}  p99 {:?}  peak-inflight {}",
+            reqs_per_s, m.occupancy, m.p50, m.p99, m.inflight_peak
+        );
+        coord.shutdown();
+    }
+    let speedup = throughput_n4 / throughput_n1.max(1.0);
+    println!(
+        "coordinator/sweep/speedup  N=4 vs N=1: {speedup:.2}x  ({})",
+        if speedup > 1.0 { "scales" } else { "DOES NOT SCALE" }
+    );
+}
+
+fn sweep_batch_policy() {
+    println!("\n== batching policy (synthetic backend, 1 worker, light load) ==");
+    let spec = ExecutorSpec { image_len: 3 * 32 * 32, batch: 8, classes: 10 };
+    for (label, adaptive) in [("adaptive", true), ("fixed-wait", false)] {
+        let factory = SyntheticExecutor::factory(spec, Duration::from_millis(2));
+        let policy = BatchPolicy {
+            max_wait: Duration::from_millis(5),
+            adaptive,
+            ..BatchPolicy::default()
+        };
+        let pool = PoolConfig { workers: 1, policy, queue_depth: 64 };
+        let coord = Coordinator::start_with(factory, pool).expect("start pool");
+        // 2 clients against batch 8: occupancy is low, so the adaptive
+        // policy should stop holding batches open and cut p50.
+        let (reqs_per_s, m) = drive(&coord, 2, 96);
+        println!(
+            "coordinator/policy/{label:<10}  {:>8.0} req/s  occupancy {:.2}  p50 {:?}  p99 {:?}",
+            reqs_per_s, m.occupancy, m.p50, m.p99
+        );
+        coord.shutdown();
+    }
+}
+
+fn bench_pjrt() {
+    if !artifacts_ready("artifacts", "scnet10") {
+        println!("\ncoordinator/pjrt skipped: run `make artifacts` first");
         return;
     }
-    for (label, clients, max_wait_ms) in
-        [("1-client", 1usize, 2u64), ("8-clients", 8, 2), ("32-clients", 32, 5)]
+    println!("\n== end-to-end PJRT serving path ==");
+    for (label, workers, clients) in
+        [("w1/8-clients", 1usize, 8usize), ("w2/16-clients", 2, 16), ("w4/32-clients", 4, 32)]
     {
         let mut cfg = ServeConfig::new("artifacts", "scnet10");
         cfg.knobs = Knobs::quantized(2).with_res_bsl(Some(16));
-        cfg.policy = BatchPolicy { max_wait: std::time::Duration::from_millis(max_wait_ms) };
+        cfg.workers = workers;
         let coord = Coordinator::start(cfg).expect("start coordinator");
-        let requests_per_client = 192usize;
-        let t0 = Instant::now();
-        let mut handles = Vec::new();
-        for t in 0..clients {
-            let client = coord.client();
-            handles.push(std::thread::spawn(move || {
-                let data = SynthCifar::new(10);
-                for i in 0..requests_per_client {
-                    let (x, _) = data.sample(Split::Test, t * 10_000 + i);
-                    client.infer(x.into_vec()).expect("infer");
-                }
-            }));
-        }
-        for h in handles {
-            h.join().unwrap();
-        }
-        let wall = t0.elapsed().as_secs_f64();
-        let m = coord.shutdown();
-        let total = clients * requests_per_client;
+        let (reqs_per_s, m) = drive(&coord, clients, 192);
         println!(
-            "coordinator/{label:<12} {total:>6} reqs in {wall:>6.2}s -> {:>7.0} req/s  \
-             occupancy {:.2}  p50 {:?}  p99 {:?}",
-            total as f64 / wall,
-            m.occupancy,
-            m.p50,
-            m.p99
+            "coordinator/pjrt/{label:<14}  {:>7.0} req/s  occupancy {:.2}  p50 {:?}  p99 {:?}",
+            reqs_per_s, m.occupancy, m.p50, m.p99
         );
+        coord.shutdown();
     }
+}
+
+fn main() {
+    sweep_workers();
+    sweep_batch_policy();
+    bench_pjrt();
 }

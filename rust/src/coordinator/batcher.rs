@@ -1,36 +1,91 @@
-//! Dynamic batcher + PJRT worker thread.
+//! Multi-worker inference pool with adaptive batching and
+//! backpressure.
 //!
-//! Requests (single images) are coalesced into the fixed batch size of
-//! the AOT-compiled executable: the worker drains the queue until the
-//! batch is full or `max_wait` expires since the first request, pads
-//! the tail with zeros, executes once, and fans the logits back out.
+//! Requests (single images) enter a **sharded queue**: one bounded
+//! channel per worker, round-robin on submit with overflow spilling to
+//! the next shard. Each worker thread owns its own [`BatchExecutor`]
+//! (built in-thread via an [`ExecutorFactory`], because PJRT handles
+//! are not `Send`), drains its shard into the executor's fixed batch —
+//! padding the tail with zeros — executes once, and fans the logits
+//! back out. Per-worker [`ServerMetrics`] aggregate into one
+//! [`super::MetricsSnapshot`].
 //!
-//! PJRT handles are not `Send` (the `xla` crate wraps raw pointers in
-//! `Rc`), so the worker thread owns its *own* [`Runtime`] and
-//! [`Trainer`]; trained parameters cross the thread boundary as plain
-//! `Vec<f32>` blobs and are installed with [`Trainer::set_params`].
+//! Batching is **adaptive**: a worker tracks an EWMA of its batch
+//! occupancy and scales the hold time between [`BatchPolicy::min_wait`]
+//! (light traffic → don't add latency waiting for co-riders that are
+//! not coming) and [`BatchPolicy::max_wait`] (heavy traffic → amortize
+//! the fixed batch cost; under load the batch fills long before the
+//! deadline anyway).
+//!
+//! Backpressure is explicit: every shard channel is bounded by
+//! [`ServeConfig::queue_depth`]. When all shards are full the
+//! [`OverloadPolicy`] decides between blocking the client
+//! ([`OverloadPolicy::Block`]) and shedding the request with an error
+//! ([`OverloadPolicy::Shed`]).
+//!
+//! Shutdown is graceful: [`Coordinator::shutdown`] signals stop,
+//! workers drain every queued request into final batches, and the call
+//! joins them before returning the last snapshot.
 
-use std::sync::mpsc;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{self, RecvTimeoutError, TrySendError};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use crate::runtime::{trainer::Knobs, Runtime, Trainer};
+use crate::runtime::trainer::Knobs;
 use crate::Result;
 use anyhow::Context;
 
+use super::executor::{BatchExecutor, ExecutorFactory, ExecutorSpec, PjrtExecutor};
 use super::metrics::ServerMetrics;
 
-/// Batching policy.
+/// What to do with a request when every shard queue is full.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OverloadPolicy {
+    /// Block the submitting client until its shard has room
+    /// (backpressure propagates to the caller).
+    Block,
+    /// Fail fast: return an error to the client and count the request
+    /// in [`super::MetricsSnapshot::shed`].
+    Shed,
+}
+
+/// Batching policy of each pool worker.
 #[derive(Clone, Copy, Debug)]
 pub struct BatchPolicy {
     /// Max time to hold an open batch after its first request.
     pub max_wait: Duration,
+    /// Hold time floor used when traffic is light (adaptive mode).
+    pub min_wait: Duration,
+    /// Scale the hold time with observed batch occupancy; `false`
+    /// always holds for `max_wait`.
+    pub adaptive: bool,
+    /// Behavior when every shard queue is full.
+    pub overload: OverloadPolicy,
 }
 
 impl Default for BatchPolicy {
     fn default() -> Self {
-        Self { max_wait: Duration::from_millis(5) }
+        Self {
+            max_wait: Duration::from_millis(5),
+            min_wait: Duration::from_micros(250),
+            adaptive: true,
+            overload: OverloadPolicy::Block,
+        }
+    }
+}
+
+impl BatchPolicy {
+    /// The hold time for the next batch given the worker's occupancy
+    /// EWMA in `[0, 1]`: interpolates `min_wait..=max_wait` when
+    /// [`BatchPolicy::adaptive`], else returns `max_wait`.
+    pub fn effective_wait(&self, occupancy_ewma: f64) -> Duration {
+        if !self.adaptive {
+            return self.max_wait;
+        }
+        let lo = self.min_wait.min(self.max_wait);
+        lo + (self.max_wait - lo).mul_f64(occupancy_ewma.clamp(0.0, 1.0))
     }
 }
 
@@ -40,26 +95,108 @@ struct Request {
     resp: mpsc::SyncSender<Result<Vec<f32>>>,
 }
 
-/// Client handle: submit images, receive logits. Cheap to clone.
+/// State shared by the coordinator, its clients and its workers.
+struct Shared {
+    stop: AtomicBool,
+    shed: AtomicU64,
+    rr: AtomicUsize,
+    inflight: AtomicUsize,
+    inflight_peak: AtomicUsize,
+}
+
+impl Shared {
+    fn new() -> Self {
+        Self {
+            stop: AtomicBool::new(false),
+            shed: AtomicU64::new(0),
+            rr: AtomicUsize::new(0),
+            inflight: AtomicUsize::new(0),
+            inflight_peak: AtomicUsize::new(0),
+        }
+    }
+
+    /// Bump the in-flight gauge before the request becomes visible to
+    /// a worker; returns the observed level for [`Shared::note_admitted`].
+    fn note_submitting(&self) -> usize {
+        self.inflight.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    /// Publish the peak only for requests that were actually admitted,
+    /// so a burst of shed attempts cannot inflate `inflight_peak`.
+    fn note_admitted(&self, observed: usize) {
+        self.inflight_peak.fetch_max(observed, Ordering::Relaxed);
+    }
+
+    fn note_done(&self, n: usize) {
+        self.inflight.fetch_sub(n, Ordering::Relaxed);
+    }
+}
+
+/// Client handle: submit images, receive logits. Cheap to clone; any
+/// number of threads may hold one.
 #[derive(Clone)]
 pub struct InferenceClient {
-    tx: mpsc::SyncSender<Request>,
+    shards: Vec<mpsc::SyncSender<Request>>,
+    shared: Arc<Shared>,
+    overload: OverloadPolicy,
     image_len: usize,
     classes: usize,
 }
 
 impl InferenceClient {
     /// Blocking inference of one image (CHW flat). Returns logits.
+    ///
+    /// ```
+    /// use std::time::Duration;
+    /// use scnn::coordinator::{Coordinator, ExecutorSpec, PoolConfig, SyntheticExecutor};
+    ///
+    /// # fn main() -> scnn::Result<()> {
+    /// let spec = ExecutorSpec { image_len: 4, batch: 2, classes: 3 };
+    /// let factory = SyntheticExecutor::factory(spec, Duration::ZERO);
+    /// let pool = PoolConfig { workers: 2, ..PoolConfig::default() };
+    /// let coord = Coordinator::start_with(factory, pool)?;
+    /// let logits = coord.client().infer(vec![0.25; 4])?;
+    /// assert_eq!(logits.len(), 3);
+    /// coord.shutdown();
+    /// # Ok(())
+    /// # }
+    /// ```
     pub fn infer(&self, x: Vec<f32>) -> Result<Vec<f32>> {
         anyhow::ensure!(x.len() == self.image_len, "image length mismatch");
         let (tx, rx) = mpsc::sync_channel(1);
-        self.tx
-            .send(Request { x, t0: Instant::now(), resp: tx })
-            .map_err(|_| anyhow::anyhow!("coordinator stopped"))?;
-        rx.recv().context("coordinator dropped the request")?
+        self.submit(Request { x, t0: Instant::now(), resp: tx })?;
+        match rx.recv() {
+            Ok(result) => result,
+            Err(_) => {
+                // The response channel died without an answer: the
+                // request raced a shutdown past the worker's final
+                // drain (or the worker died). Either way it is
+                // terminally done — repair the gauge and report the
+                // shutdown as such, honoring the drain invariant.
+                self.shared.note_done(1);
+                if self.shared.stop.load(Ordering::Relaxed) {
+                    anyhow::bail!("coordinator stopped");
+                }
+                anyhow::bail!("coordinator dropped the request");
+            }
+        }
     }
 
-    /// Classify one image.
+    /// Classify one image (argmax over [`InferenceClient::infer`]).
+    ///
+    /// ```
+    /// use std::time::Duration;
+    /// use scnn::coordinator::{Coordinator, ExecutorSpec, PoolConfig, SyntheticExecutor};
+    ///
+    /// # fn main() -> scnn::Result<()> {
+    /// let spec = ExecutorSpec { image_len: 4, batch: 2, classes: 3 };
+    /// let factory = SyntheticExecutor::factory(spec, Duration::ZERO);
+    /// let coord = Coordinator::start_with(factory, PoolConfig::default())?;
+    /// let class = coord.client().classify(vec![1.0, 0.0, 0.5, 0.25])?;
+    /// assert!(class < 3);
+    /// # Ok(())
+    /// # }
+    /// ```
     pub fn classify(&self, x: Vec<f32>) -> Result<usize> {
         let logits = self.infer(x)?;
         Ok(logits
@@ -74,9 +211,70 @@ impl InferenceClient {
     pub fn classes(&self) -> usize {
         self.classes
     }
+
+    /// Number of pool workers behind this client.
+    pub fn workers(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Route one request: round-robin over the shards, spilling to the
+    /// next shard when the preferred one is full; when every shard is
+    /// full, apply the [`OverloadPolicy`].
+    fn submit(&self, req: Request) -> Result<()> {
+        if self.shared.stop.load(Ordering::Relaxed) {
+            anyhow::bail!("coordinator stopped");
+        }
+        let n = self.shards.len();
+        let start = self.shared.rr.fetch_add(1, Ordering::Relaxed) % n;
+        // Count the request as in-flight *before* it becomes visible to
+        // any worker: otherwise a fast worker could decrement first and
+        // underflow the gauge. Undone on every rejection path below;
+        // the peak is only published on successful admission.
+        let observed = self.shared.note_submitting();
+        let mut req = req;
+        // A disconnected shard (dead worker) is skipped like a full
+        // one: the pool degrades to the surviving workers and only
+        // reports a stop once every shard is gone.
+        let mut first_full: Option<usize> = None;
+        for k in 0..n {
+            let shard = (start + k) % n;
+            match self.shards[shard].try_send(req) {
+                Ok(()) => {
+                    self.shared.note_admitted(observed);
+                    return Ok(());
+                }
+                Err(TrySendError::Full(r)) => {
+                    first_full.get_or_insert(shard);
+                    req = r;
+                }
+                Err(TrySendError::Disconnected(r)) => req = r,
+            }
+        }
+        let Some(full) = first_full else {
+            self.shared.note_done(1);
+            anyhow::bail!("coordinator stopped");
+        };
+        match self.overload {
+            OverloadPolicy::Block => match self.shards[full].send(req) {
+                Ok(()) => {
+                    self.shared.note_admitted(observed);
+                    Ok(())
+                }
+                Err(_) => {
+                    self.shared.note_done(1);
+                    anyhow::bail!("coordinator stopped");
+                }
+            },
+            OverloadPolicy::Shed => {
+                self.shared.note_done(1);
+                self.shared.shed.fetch_add(1, Ordering::Relaxed);
+                anyhow::bail!("{} ({n} shard queues full)", SHED_ERROR);
+            }
+        }
+    }
 }
 
-/// Everything the worker needs to build its own PJRT stack.
+/// Everything a PJRT worker needs to build its own serving stack.
 #[derive(Clone, Debug)]
 pub struct ServeConfig {
     /// Artifacts directory.
@@ -89,8 +287,10 @@ pub struct ServeConfig {
     pub knobs: Knobs,
     /// Batching policy.
     pub policy: BatchPolicy,
-    /// Request queue depth (backpressure bound).
+    /// Per-shard request queue depth (backpressure bound).
     pub queue_depth: usize,
+    /// Number of pool workers, each owning a PJRT stack.
+    pub workers: usize,
 }
 
 impl ServeConfig {
@@ -103,114 +303,251 @@ impl ServeConfig {
             knobs: Knobs::quantized(2),
             policy: BatchPolicy::default(),
             queue_depth: 1024,
+            workers: 1,
         }
     }
 }
 
-/// The running coordinator (owns the worker thread).
+/// Backend-agnostic pool sizing/policy (what [`ServeConfig`] reduces
+/// to once the PJRT-specific fields became an [`ExecutorFactory`]).
+#[derive(Clone, Copy, Debug)]
+pub struct PoolConfig {
+    /// Number of worker threads (each with its own shard + executor).
+    pub workers: usize,
+    /// Batching policy.
+    pub policy: BatchPolicy,
+    /// Per-shard request queue depth (backpressure bound).
+    pub queue_depth: usize,
+}
+
+impl Default for PoolConfig {
+    fn default() -> Self {
+        Self { workers: 1, policy: BatchPolicy::default(), queue_depth: 1024 }
+    }
+}
+
+/// How often an idle worker re-checks the stop flag.
+const IDLE_POLL: Duration = Duration::from_millis(20);
+
+/// Marker prefix of load-shedding rejections (see [`is_shed_error`]).
+pub const SHED_ERROR: &str = "overloaded: request shed";
+
+/// True when an [`InferenceClient::infer`]/`classify` error is a
+/// load-shedding rejection ([`OverloadPolicy::Shed`]) rather than a
+/// real failure. Callers should use this instead of matching error
+/// text themselves.
+pub fn is_shed_error(e: &anyhow::Error) -> bool {
+    format!("{e}").starts_with(SHED_ERROR)
+}
+
+/// The running pool (owns the worker threads).
 pub struct Coordinator {
     client: InferenceClient,
-    worker: Option<JoinHandle<()>>,
-    metrics: Arc<ServerMetrics>,
+    workers: Vec<JoinHandle<()>>,
+    metrics: Vec<Arc<ServerMetrics>>,
+    shared: Arc<Shared>,
     batch: usize,
 }
 
 impl Coordinator {
-    /// Start a coordinator; blocks until the worker has compiled the
-    /// executable and is ready to serve (or failed).
+    /// Start a PJRT-backed pool; blocks until every worker has
+    /// compiled its executables and is ready to serve (or any failed).
     pub fn start(cfg: ServeConfig) -> Result<Self> {
-        let (tx, rx) = mpsc::sync_channel::<Request>(cfg.queue_depth);
-        let (ready_tx, ready_rx) = mpsc::sync_channel::<Result<(usize, usize, usize)>>(1);
-        let metrics = Arc::new(ServerMetrics::new());
-        let metrics_w = metrics.clone();
-        let worker = std::thread::Builder::new()
-            .name("scnn-batcher".into())
-            .spawn(move || {
-                let setup = (|| -> Result<(Trainer, usize, usize, usize)> {
-                    let rt = Runtime::new(&cfg.artifacts)?;
-                    let mut tr = Trainer::new(&rt, &cfg.model)?;
-                    if let Some(p) = cfg.params {
-                        tr.set_params(p)?;
-                    }
-                    let (c, h, w) = tr.meta().input;
-                    let (batch, classes) = (tr.meta().batch, tr.meta().classes);
-                    Ok((tr, c * h * w, batch, classes))
-                })();
-                match setup {
-                    Ok((tr, image_len, batch, classes)) => {
-                        let _ = ready_tx.send(Ok((image_len, batch, classes)));
-                        Self::worker_loop(
-                            tr, cfg.knobs, cfg.policy, rx, metrics_w, image_len, batch, classes,
-                        );
+        let pool =
+            PoolConfig { workers: cfg.workers, policy: cfg.policy, queue_depth: cfg.queue_depth };
+        let ServeConfig { artifacts, model, params, knobs, .. } = cfg;
+        let factory: ExecutorFactory = Box::new(move |_worker| {
+            let exec = PjrtExecutor::new(&artifacts, &model, params.as_deref(), knobs)?;
+            Ok(Box::new(exec))
+        });
+        Self::start_with(factory, pool)
+    }
+
+    /// Start with automatic backend selection: the PJRT serving path
+    /// when the model's AOT artifacts exist, else the synthetic demo
+    /// backend shaped `(image_len, classes)` (the shared fallback of
+    /// the CLI and `examples/serve.rs`).
+    pub fn start_auto(cfg: ServeConfig, fallback: (usize, usize)) -> Result<Self> {
+        if crate::runtime::artifacts_ready(&cfg.artifacts, &cfg.model) {
+            Self::start(cfg)
+        } else {
+            let pool = PoolConfig {
+                workers: cfg.workers,
+                policy: cfg.policy,
+                queue_depth: cfg.queue_depth,
+            };
+            let (image_len, classes) = fallback;
+            Self::start_with(super::SyntheticExecutor::demo_factory(image_len, classes), pool)
+        }
+    }
+
+    /// Start a pool over any executor backend. Blocks until every
+    /// worker has built its executor; fails if any worker fails or if
+    /// workers disagree on the [`ExecutorSpec`].
+    pub fn start_with(factory: ExecutorFactory, pool: PoolConfig) -> Result<Self> {
+        let n = pool.workers.max(1);
+        let factory = Arc::new(factory);
+        let shared = Arc::new(Shared::new());
+        let (ready_tx, ready_rx) = mpsc::sync_channel::<Result<ExecutorSpec>>(n);
+        let mut shards = Vec::with_capacity(n);
+        let mut workers = Vec::with_capacity(n);
+        let mut metrics = Vec::with_capacity(n);
+        for w in 0..n {
+            let (tx, rx) = mpsc::sync_channel::<Request>(pool.queue_depth.max(1));
+            shards.push(tx);
+            let m = Arc::new(ServerMetrics::new());
+            metrics.push(m.clone());
+            let factory = factory.clone();
+            let shared = shared.clone();
+            let ready_tx = ready_tx.clone();
+            let policy = pool.policy;
+            let handle = std::thread::Builder::new()
+                .name(format!("scnn-worker-{w}"))
+                .spawn(move || match (factory.as_ref())(w) {
+                    Ok(exec) => {
+                        let _ = ready_tx.send(Ok(exec.spec()));
+                        drop(ready_tx);
+                        Self::worker_loop(exec.as_ref(), policy, &rx, &m, &shared);
                     }
                     Err(e) => {
                         let _ = ready_tx.send(Err(e));
                     }
-                }
-            })
-            .context("spawning batcher thread")?;
-        let (image_len, batch, classes) =
-            ready_rx.recv().context("worker died during setup")??;
-        Ok(Self {
-            client: InferenceClient { tx, image_len, classes },
-            worker: Some(worker),
-            metrics,
-            batch,
-        })
+                })
+                .context("spawning pool worker thread")?;
+            workers.push(handle);
+        }
+        drop(ready_tx);
+        let mut spec: Option<ExecutorSpec> = None;
+        for _ in 0..n {
+            let s = ready_rx.recv().context("worker died during setup")??;
+            match spec {
+                None => spec = Some(s),
+                Some(prev) => anyhow::ensure!(
+                    prev == s,
+                    "workers disagree on executor spec: {prev:?} vs {s:?}"
+                ),
+            }
+        }
+        let spec = spec.expect("n >= 1 workers reported ready");
+        let client = InferenceClient {
+            shards,
+            shared: shared.clone(),
+            overload: pool.policy.overload,
+            image_len: spec.image_len,
+            classes: spec.classes,
+        };
+        Ok(Self { client, workers, metrics, shared, batch: spec.batch })
     }
 
-    #[allow(clippy::too_many_arguments)]
+    /// One worker: batch its shard queue into the executor until the
+    /// pool stops (then drain) or every sender disappears.
     fn worker_loop(
-        trainer: Trainer,
-        knobs: Knobs,
+        exec: &dyn BatchExecutor,
         policy: BatchPolicy,
-        rx: mpsc::Receiver<Request>,
-        metrics: Arc<ServerMetrics>,
-        image_len: usize,
-        batch: usize,
-        classes: usize,
+        rx: &mpsc::Receiver<Request>,
+        metrics: &ServerMetrics,
+        shared: &Shared,
     ) {
-        loop {
-            // Block for the first request of the batch.
-            let first = match rx.recv() {
-                Ok(r) => r,
-                Err(_) => return, // all senders gone
-            };
-            let deadline = Instant::now() + policy.max_wait;
-            let mut pending = vec![first];
-            while pending.len() < batch {
-                let now = Instant::now();
-                if now >= deadline {
-                    break;
+        let spec = exec.spec();
+        // Start pessimistic (assume load) so cold-start bursts batch well.
+        let mut occupancy_ewma = 1.0f64;
+        'serve: loop {
+            // Block for the first request, re-checking stop while idle.
+            let first = loop {
+                match rx.recv_timeout(IDLE_POLL) {
+                    Ok(r) => break r,
+                    Err(RecvTimeoutError::Timeout) => {
+                        if shared.stop.load(Ordering::Relaxed) {
+                            break 'serve;
+                        }
+                    }
+                    Err(RecvTimeoutError::Disconnected) => break 'serve,
                 }
-                match rx.recv_timeout(deadline - now) {
+            };
+            let mut pending = Vec::with_capacity(spec.batch);
+            pending.push(first);
+            // Drain whatever is already queued, free of charge.
+            while pending.len() < spec.batch {
+                match rx.try_recv() {
                     Ok(r) => pending.push(r),
                     Err(_) => break,
                 }
             }
-            // Assemble the padded batch.
-            let mut x = vec![0.0f32; batch * image_len];
-            for (i, r) in pending.iter().enumerate() {
-                x[i * image_len..(i + 1) * image_len].copy_from_slice(&r.x);
+            // Hold the batch open for the adaptive wait.
+            if pending.len() < spec.batch {
+                let deadline = Instant::now() + policy.effective_wait(occupancy_ewma);
+                while pending.len() < spec.batch {
+                    let now = Instant::now();
+                    if now >= deadline {
+                        break;
+                    }
+                    match rx.recv_timeout(deadline - now) {
+                        Ok(r) => pending.push(r),
+                        Err(_) => break,
+                    }
+                }
             }
-            match trainer.logits(&x, knobs, true) {
-                Ok(logits) => {
-                    let mut latencies = Vec::with_capacity(pending.len());
-                    for (i, r) in pending.into_iter().enumerate() {
-                        let row = logits[i * classes..(i + 1) * classes].to_vec();
-                        latencies.push(r.t0.elapsed());
-                        let _ = r.resp.send(Ok(row));
-                    }
-                    metrics.record_batch(&latencies, batch);
+            occupancy_ewma = 0.8 * occupancy_ewma
+                + 0.2 * (pending.len() as f64 / spec.batch.max(1) as f64);
+            Self::execute_batch(exec, &spec, pending, metrics, shared);
+        }
+        // Graceful drain: serve everything still queued, then exit.
+        loop {
+            let mut pending = Vec::with_capacity(spec.batch);
+            while pending.len() < spec.batch {
+                match rx.try_recv() {
+                    Ok(r) => pending.push(r),
+                    Err(_) => break,
                 }
-                Err(e) => {
-                    let msg = format!("{e:#}");
-                    for r in pending {
-                        let _ = r.resp.send(Err(anyhow::anyhow!(msg.clone())));
-                    }
+            }
+            if pending.is_empty() {
+                break;
+            }
+            Self::execute_batch(exec, &spec, pending, metrics, shared);
+        }
+    }
+
+    /// Pad, execute, fan out, record.
+    fn execute_batch(
+        exec: &dyn BatchExecutor,
+        spec: &ExecutorSpec,
+        pending: Vec<Request>,
+        metrics: &ServerMetrics,
+        shared: &Shared,
+    ) {
+        let filled = pending.len();
+        let mut x = vec![0.0f32; spec.batch * spec.image_len];
+        for (i, r) in pending.iter().enumerate() {
+            x[i * spec.image_len..(i + 1) * spec.image_len].copy_from_slice(&r.x);
+        }
+        let result = exec.run_batch(&x).and_then(|logits| {
+            anyhow::ensure!(
+                logits.len() == spec.batch * spec.classes,
+                "executor returned {} logits, expected {}",
+                logits.len(),
+                spec.batch * spec.classes
+            );
+            Ok(logits)
+        });
+        match result {
+            Ok(logits) => {
+                let mut latencies = Vec::with_capacity(filled);
+                for (i, r) in pending.into_iter().enumerate() {
+                    let row = logits[i * spec.classes..(i + 1) * spec.classes].to_vec();
+                    latencies.push(r.t0.elapsed());
+                    let _ = r.resp.send(Ok(row));
                 }
+                metrics.record_batch(&latencies, spec.batch);
+            }
+            Err(e) => {
+                let msg = format!("{e:#}");
+                for r in pending {
+                    let _ = r.resp.send(Err(anyhow::anyhow!(msg.clone())));
+                }
+                metrics.record_errors(filled as u64);
             }
         }
+        shared.note_done(filled);
     }
 
     /// A cloneable client handle.
@@ -218,25 +555,76 @@ impl Coordinator {
         self.client.clone()
     }
 
-    /// Metrics snapshot.
-    pub fn metrics(&self) -> super::MetricsSnapshot {
-        self.metrics.snapshot(self.batch)
+    /// Number of pool workers.
+    pub fn workers(&self) -> usize {
+        self.metrics.len()
     }
 
-    /// Stop the coordinator: returns the final metrics snapshot. The
-    /// worker thread exits once every [`InferenceClient`] clone is
-    /// dropped (the channel closes); outstanding requests error out.
-    pub fn shutdown(self) -> super::MetricsSnapshot {
-        self.metrics.snapshot(self.batch)
+    /// Aggregated metrics snapshot across all workers.
+    pub fn metrics(&self) -> super::MetricsSnapshot {
+        ServerMetrics::aggregate(
+            &self.metrics,
+            self.batch,
+            self.shared.shed.load(Ordering::Relaxed),
+            self.shared.inflight_peak.load(Ordering::Relaxed),
+        )
+    }
+
+    /// Graceful shutdown: reject new requests, drain everything
+    /// already queued, join the workers, and return the final
+    /// aggregated snapshot.
+    pub fn shutdown(mut self) -> super::MetricsSnapshot {
+        self.shared.stop.store(true, Ordering::Relaxed);
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+        self.metrics()
     }
 }
 
 impl Drop for Coordinator {
     fn drop(&mut self) {
-        // Dropping our senders closes the channel once all client
-        // clones are gone; the worker then exits on its own. Joining
-        // here could hang if a client outlives the coordinator, so the
-        // thread is detached instead.
-        self.worker.take();
+        // Signal stop but do not join: a client blocked on a response
+        // must not deadlock against a Coordinator dropped on the same
+        // thread. Workers drain and exit on their next idle poll.
+        self.shared.stop.store(true, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn adaptive_wait_interpolates() {
+        let p = BatchPolicy {
+            max_wait: Duration::from_millis(10),
+            min_wait: Duration::from_millis(1),
+            adaptive: true,
+            overload: OverloadPolicy::Block,
+        };
+        assert_eq!(p.effective_wait(0.0), Duration::from_millis(1));
+        assert_eq!(p.effective_wait(1.0), Duration::from_millis(10));
+        let mid = p.effective_wait(0.5);
+        assert!(mid > Duration::from_millis(4) && mid < Duration::from_millis(7), "{mid:?}");
+        // Out-of-range EWMA values clamp.
+        assert_eq!(p.effective_wait(7.0), Duration::from_millis(10));
+        assert_eq!(p.effective_wait(-1.0), Duration::from_millis(1));
+    }
+
+    #[test]
+    fn non_adaptive_wait_is_max_wait() {
+        let p = BatchPolicy { adaptive: false, ..BatchPolicy::default() };
+        assert_eq!(p.effective_wait(0.0), p.max_wait);
+    }
+
+    #[test]
+    fn default_policy_is_sane() {
+        let p = BatchPolicy::default();
+        assert!(p.min_wait <= p.max_wait);
+        assert_eq!(p.overload, OverloadPolicy::Block);
+        let cfg = ServeConfig::new("artifacts", "scnet10");
+        assert_eq!(cfg.workers, 1);
+        assert_eq!(cfg.queue_depth, 1024);
     }
 }

@@ -1,0 +1,199 @@
+//! Pluggable batch executors behind the inference pool.
+//!
+//! The pool in [`super::batcher`] is backend-agnostic: each worker
+//! thread owns one [`BatchExecutor`], built *inside* that thread by an
+//! [`ExecutorFactory`]. The factory indirection exists because PJRT
+//! handles are not `Send` (the `xla` crate wraps raw pointers in
+//! `Rc`): a [`Trainer`] can never cross a thread boundary, but a
+//! closure that builds one can. It is also the seam every later
+//! multi-backend PR plugs into — a worker neither knows nor cares
+//! whether its batches run on PJRT, a future GPU backend, or the
+//! in-process synthetic model used by tests and benches.
+
+use std::time::Duration;
+
+use crate::runtime::{trainer::Knobs, Runtime, Trainer};
+use crate::Result;
+
+/// Fixed shape contract of one executor: every worker in a pool must
+/// report the same spec (checked at startup).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ExecutorSpec {
+    /// Flattened image length (C·H·W floats per request).
+    pub image_len: usize,
+    /// Fixed batch capacity of one execution (AOT-compiled batch).
+    pub batch: usize,
+    /// Logits per request.
+    pub classes: usize,
+}
+
+/// A batch-at-a-time inference engine owned by a single pool worker.
+pub trait BatchExecutor {
+    /// The executor's shape contract.
+    fn spec(&self) -> ExecutorSpec;
+
+    /// Run one padded batch of `spec().batch * spec().image_len`
+    /// floats, returning `spec().batch * spec().classes` logits.
+    fn run_batch(&self, x: &[f32]) -> Result<Vec<f32>>;
+}
+
+/// Builds a worker's executor inside the worker thread. The argument
+/// is the worker index (0-based), for logging or device placement.
+pub type ExecutorFactory = Box<dyn Fn(usize) -> Result<Box<dyn BatchExecutor>> + Send + Sync>;
+
+/// PJRT-backed executor: the serving path (integer codes through the
+/// Pallas kernel) of an AOT-exported model. Each instance owns its own
+/// [`Runtime`] and [`Trainer`] because PJRT handles are not `Send`.
+pub struct PjrtExecutor {
+    trainer: Trainer,
+    knobs: Knobs,
+    spec: ExecutorSpec,
+}
+
+impl PjrtExecutor {
+    /// Build a runtime, load the model's executables, and optionally
+    /// install trained parameters.
+    pub fn new(
+        artifacts: &str,
+        model: &str,
+        params: Option<&[Vec<f32>]>,
+        knobs: Knobs,
+    ) -> Result<Self> {
+        let rt = Runtime::new(artifacts)?;
+        let mut trainer = Trainer::new(&rt, model)?;
+        if let Some(p) = params {
+            trainer.set_params(p.to_vec())?;
+        }
+        let (c, h, w) = trainer.meta().input;
+        let spec = ExecutorSpec {
+            image_len: c * h * w,
+            batch: trainer.meta().batch,
+            classes: trainer.meta().classes,
+        };
+        Ok(Self { trainer, knobs, spec })
+    }
+}
+
+impl BatchExecutor for PjrtExecutor {
+    fn spec(&self) -> ExecutorSpec {
+        self.spec
+    }
+
+    fn run_batch(&self, x: &[f32]) -> Result<Vec<f32>> {
+        self.trainer.logits(x, self.knobs, true)
+    }
+}
+
+/// Deterministic in-process model for tests and benchmarks: logits are
+/// a pure function of each image (identical results for any worker
+/// count), and each executed batch costs a fixed simulated latency,
+/// like a busy fixed-batch accelerator. Because the cost is latency
+/// (not host CPU), a worker-scaling sweep shows real scaling on any
+/// host.
+pub struct SyntheticExecutor {
+    spec: ExecutorSpec,
+    latency: Duration,
+}
+
+impl SyntheticExecutor {
+    /// New executor with zero simulated latency.
+    pub fn new(spec: ExecutorSpec) -> Self {
+        Self { spec, latency: Duration::ZERO }
+    }
+
+    /// Set the simulated per-batch latency.
+    pub fn with_latency(mut self, latency: Duration) -> Self {
+        self.latency = latency;
+        self
+    }
+
+    /// Convenience factory for [`super::Coordinator::start_with`].
+    pub fn factory(spec: ExecutorSpec, latency: Duration) -> ExecutorFactory {
+        Box::new(move |_worker| Ok(Box::new(SyntheticExecutor::new(spec).with_latency(latency))))
+    }
+
+    /// The demo-grade fallback the CLI and `examples/serve.rs` share
+    /// when AOT artifacts are absent: batch 16, 2 ms simulated batch
+    /// latency (a plausible small-accelerator operating point).
+    pub fn demo_factory(image_len: usize, classes: usize) -> ExecutorFactory {
+        Self::factory(
+            ExecutorSpec { image_len, batch: 16, classes },
+            Duration::from_millis(2),
+        )
+    }
+
+    /// The reference logits for one image — exposed so tests can check
+    /// pool responses against ground truth.
+    pub fn reference_logits(&self, image: &[f32]) -> Vec<f32> {
+        debug_assert_eq!(image.len(), self.spec.image_len);
+        let mut out = Vec::with_capacity(self.spec.classes);
+        for c in 0..self.spec.classes {
+            // Class-dependent strided projection: cheap, deterministic,
+            // and discriminative enough that argmax varies with input.
+            let stride = c + 1;
+            let mut acc = 0.0f32;
+            let mut i = c % self.spec.image_len.max(1);
+            while i < image.len() {
+                acc += image[i] * (1.0 + (c as f32) * 0.125);
+                i += stride;
+            }
+            out.push(acc / (image.len() as f32 / stride as f32).max(1.0));
+        }
+        out
+    }
+}
+
+impl BatchExecutor for SyntheticExecutor {
+    fn spec(&self) -> ExecutorSpec {
+        self.spec
+    }
+
+    fn run_batch(&self, x: &[f32]) -> Result<Vec<f32>> {
+        anyhow::ensure!(
+            x.len() == self.spec.batch * self.spec.image_len,
+            "batch input length {} != {}",
+            x.len(),
+            self.spec.batch * self.spec.image_len
+        );
+        if !self.latency.is_zero() {
+            std::thread::sleep(self.latency);
+        }
+        let mut out = Vec::with_capacity(self.spec.batch * self.spec.classes);
+        for b in 0..self.spec.batch {
+            let image = &x[b * self.spec.image_len..(b + 1) * self.spec.image_len];
+            out.extend(self.reference_logits(image));
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_is_deterministic_and_shape_correct() {
+        let spec = ExecutorSpec { image_len: 8, batch: 3, classes: 4 };
+        let exec = SyntheticExecutor::new(spec);
+        let x: Vec<f32> = (0..24).map(|i| i as f32 * 0.1).collect();
+        let a = exec.run_batch(&x).unwrap();
+        let b = exec.run_batch(&x).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 12);
+        // Row 1 equals the reference logits of image 1.
+        assert_eq!(&a[4..8], exec.reference_logits(&x[8..16]).as_slice());
+        // Input length is validated.
+        assert!(exec.run_batch(&x[..23]).is_err());
+    }
+
+    #[test]
+    fn synthetic_logits_vary_by_input() {
+        let spec = ExecutorSpec { image_len: 16, batch: 1, classes: 10 };
+        let exec = SyntheticExecutor::new(spec);
+        let a = exec.reference_logits(&[0.5; 16]);
+        let mut img = vec![0.5; 16];
+        img[3] = -2.0;
+        let b = exec.reference_logits(&img);
+        assert_ne!(a, b);
+    }
+}

@@ -1,10 +1,11 @@
 //! Serving metrics: request counts, latency percentiles, batch
-//! occupancy.
+//! occupancy — one [`ServerMetrics`] per pool worker, aggregated into
+//! a single [`MetricsSnapshot`].
 
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
-/// Thread-safe metrics accumulator.
+/// Thread-safe metrics accumulator (one per pool worker).
 #[derive(Debug, Default)]
 pub struct ServerMetrics {
     inner: Mutex<Inner>,
@@ -15,15 +16,29 @@ struct Inner {
     requests: u64,
     batches: u64,
     padded_slots: u64,
+    errors: u64,
     latencies_us: Vec<u64>,
 }
 
-/// A point-in-time snapshot.
+/// Per-worker counters inside a [`MetricsSnapshot`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WorkerCounts {
+    /// Worker index (matches the `scnn-worker-{i}` thread name).
+    pub worker: usize,
+    /// Requests this worker completed successfully.
+    pub requests: u64,
+    /// Batches this worker executed.
+    pub batches: u64,
+    /// Requests this worker failed (executor errors).
+    pub errors: u64,
+}
+
+/// A point-in-time snapshot aggregated over the whole pool.
 #[derive(Clone, Debug)]
 pub struct MetricsSnapshot {
-    /// Completed requests.
+    /// Completed requests (across all workers).
     pub requests: u64,
-    /// Executed batches.
+    /// Executed batches (across all workers).
     pub batches: u64,
     /// Mean batch occupancy in [0, 1].
     pub occupancy: f64,
@@ -33,6 +48,19 @@ pub struct MetricsSnapshot {
     pub p99: Duration,
     /// Mean request latency.
     pub mean: Duration,
+    /// Requests that failed with an executor error.
+    pub errors: u64,
+    /// Requests rejected by load shedding ([`OverloadPolicy::Shed`]).
+    ///
+    /// [`OverloadPolicy::Shed`]: super::OverloadPolicy::Shed
+    pub shed: u64,
+    /// Number of pool workers aggregated into this snapshot.
+    pub workers: usize,
+    /// Peak number of requests queued/executing at once (high-water
+    /// mark of the admission gauge).
+    pub inflight_peak: usize,
+    /// Per-worker breakdown, indexed by worker.
+    pub per_worker: Vec<WorkerCounts>,
 }
 
 impl ServerMetrics {
@@ -52,35 +80,79 @@ impl ServerMetrics {
             .extend(latencies.iter().map(|d| d.as_micros() as u64));
     }
 
-    /// Snapshot (sorts latencies; intended for end-of-run reporting).
+    /// Record `n` requests that failed with an executor error.
+    pub fn record_errors(&self, n: u64) {
+        self.inner.lock().unwrap().errors += n;
+    }
+
+    /// Single-worker snapshot (sorts latencies; intended for
+    /// end-of-run reporting).
     pub fn snapshot(&self, capacity: usize) -> MetricsSnapshot {
-        let mut g = self.inner.lock().unwrap();
-        g.latencies_us.sort_unstable();
-        let n = g.latencies_us.len();
+        Self::merge([self].into_iter(), capacity, 0, 0)
+    }
+
+    /// Aggregate the per-worker accumulators of a pool into one
+    /// snapshot. `shed` and `inflight_peak` come from the pool's
+    /// shared admission state.
+    pub fn aggregate(
+        workers: &[Arc<ServerMetrics>],
+        capacity: usize,
+        shed: u64,
+        inflight_peak: usize,
+    ) -> MetricsSnapshot {
+        Self::merge(workers.iter().map(Arc::as_ref), capacity, shed, inflight_peak)
+    }
+
+    fn merge<'a>(
+        workers: impl Iterator<Item = &'a ServerMetrics>,
+        capacity: usize,
+        shed: u64,
+        inflight_peak: usize,
+    ) -> MetricsSnapshot {
+        let mut latencies: Vec<u64> = Vec::new();
+        let mut per_worker = Vec::new();
+        let (mut requests, mut batches, mut padded, mut errors) = (0u64, 0u64, 0u64, 0u64);
+        for (w, m) in workers.enumerate() {
+            let g = m.inner.lock().unwrap();
+            requests += g.requests;
+            batches += g.batches;
+            padded += g.padded_slots;
+            errors += g.errors;
+            latencies.extend_from_slice(&g.latencies_us);
+            per_worker.push(WorkerCounts {
+                worker: w,
+                requests: g.requests,
+                batches: g.batches,
+                errors: g.errors,
+            });
+        }
+        latencies.sort_unstable();
+        let n = latencies.len();
         let pick = |q: f64| -> Duration {
             if n == 0 {
                 return Duration::ZERO;
             }
             let idx = ((n as f64 - 1.0) * q).round() as usize;
-            Duration::from_micros(g.latencies_us[idx])
+            Duration::from_micros(latencies[idx])
         };
         let mean = if n == 0 {
             Duration::ZERO
         } else {
-            Duration::from_micros(g.latencies_us.iter().sum::<u64>() / n as u64)
+            Duration::from_micros(latencies.iter().sum::<u64>() / n as u64)
         };
-        let slots = g.batches * capacity as u64;
+        let slots = batches * capacity as u64;
         MetricsSnapshot {
-            requests: g.requests,
-            batches: g.batches,
-            occupancy: if slots == 0 {
-                0.0
-            } else {
-                1.0 - g.padded_slots as f64 / slots as f64
-            },
+            requests,
+            batches,
+            occupancy: if slots == 0 { 0.0 } else { 1.0 - padded as f64 / slots as f64 },
             p50: pick(0.5),
             p99: pick(0.99),
             mean,
+            errors,
+            shed,
+            workers: per_worker.len(),
+            inflight_peak,
+            per_worker,
         }
     }
 }
@@ -103,6 +175,9 @@ mod tests {
         assert!((s.occupancy - 3.0 / 8.0).abs() < 1e-9);
         assert_eq!(s.p50, Duration::from_micros(200));
         assert_eq!(s.mean, Duration::from_micros(200));
+        assert_eq!(s.workers, 1);
+        assert_eq!(s.errors, 0);
+        assert_eq!(s.shed, 0);
     }
 
     #[test]
@@ -111,5 +186,30 @@ mod tests {
         let s = m.snapshot(8);
         assert_eq!(s.requests, 0);
         assert_eq!(s.p99, Duration::ZERO);
+        assert_eq!(s.per_worker.len(), 1);
+    }
+
+    #[test]
+    fn aggregates_across_workers() {
+        let a = Arc::new(ServerMetrics::new());
+        let b = Arc::new(ServerMetrics::new());
+        a.record_batch(&[Duration::from_micros(100); 4], 4);
+        b.record_batch(&[Duration::from_micros(500)], 4);
+        b.record_errors(2);
+        let s = ServerMetrics::aggregate(&[a, b], 4, 3, 17);
+        assert_eq!(s.requests, 5);
+        assert_eq!(s.batches, 2);
+        assert_eq!(s.errors, 2);
+        assert_eq!(s.shed, 3);
+        assert_eq!(s.workers, 2);
+        assert_eq!(s.inflight_peak, 17);
+        assert!((s.occupancy - 5.0 / 8.0).abs() < 1e-9);
+        assert_eq!(s.p99, Duration::from_micros(500));
+        assert_eq!(s.per_worker[0].requests, 4);
+        assert_eq!(s.per_worker[1].requests, 1);
+        assert_eq!(s.per_worker[1].errors, 2);
+        // Latency pool is merged before percentiles: p50 of
+        // [100,100,100,100,500] is 100µs.
+        assert_eq!(s.p50, Duration::from_micros(100));
     }
 }

@@ -1,18 +1,36 @@
-//! L3 inference coordinator: request queue → dynamic batcher → PJRT
-//! worker.
+//! L3 inference coordinator: sharded request queue → adaptive dynamic
+//! batcher → a pool of executor-owning workers.
 //!
 //! The paper's contribution is the accelerator itself, so the
-//! coordinator is the thin-but-real serving layer around it: clients
-//! submit single images, the batcher coalesces them into the fixed
-//! batch the AOT-compiled executable expects (padding the tail), a
-//! worker thread executes the serving-path HLO (integer codes through
-//! the Pallas kernel), and per-request latency / batch-occupancy
-//! metrics are tracked. No async runtime is available offline, so the
-//! design is the classic thread + channel dynamic batcher (the same
-//! shape as vLLM's router).
+//! coordinator is the serving layer that keeps the datapath fed:
+//! clients submit single images, the pool coalesces them into the
+//! fixed batches the AOT-compiled executable expects (padding the
+//! tail), `N` worker threads execute the serving-path HLO (integer
+//! codes through the Pallas kernel), and per-request latency /
+//! batch-occupancy / shedding metrics are tracked per worker and
+//! aggregated. No async runtime is available offline, so the design is
+//! the classic thread + bounded-channel dynamic batcher (the same
+//! shape as vLLM's router), sharded one queue per worker.
+//!
+//! Layering (see `docs/SERVING.md` for every knob and field):
+//!
+//! * [`executor`] — the backend seam: [`BatchExecutor`] +
+//!   [`ExecutorFactory`] (PJRT handles are not `Send`, so each worker
+//!   builds its own backend in-thread), with [`PjrtExecutor`] for the
+//!   real serving path and [`SyntheticExecutor`] for tests/benches.
+//! * [`batcher`] — the pool: [`Coordinator`], [`InferenceClient`],
+//!   [`BatchPolicy`] (adaptive hold time), [`OverloadPolicy`]
+//!   (backpressure vs load shedding), [`ServeConfig`]/[`PoolConfig`].
+//! * [`metrics`] — [`ServerMetrics`] per worker, aggregated into one
+//!   [`MetricsSnapshot`].
 
 pub mod batcher;
+pub mod executor;
 pub mod metrics;
 
-pub use batcher::{BatchPolicy, Coordinator, InferenceClient, ServeConfig};
-pub use metrics::{MetricsSnapshot, ServerMetrics};
+pub use batcher::{
+    is_shed_error, BatchPolicy, Coordinator, InferenceClient, OverloadPolicy, PoolConfig,
+    ServeConfig, SHED_ERROR,
+};
+pub use executor::{BatchExecutor, ExecutorFactory, ExecutorSpec, PjrtExecutor, SyntheticExecutor};
+pub use metrics::{MetricsSnapshot, ServerMetrics, WorkerCounts};

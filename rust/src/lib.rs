@@ -33,8 +33,10 @@
 //!   up per-layer ADP/energy (Fig 13, Table V).
 //! * [`runtime`] — PJRT client wrapper that loads the AOT-compiled JAX
 //!   artifacts (HLO text) and executes them from Rust.
-//! * [`coordinator`] — async inference coordinator: request queue,
-//!   dynamic batcher, PJRT worker, metrics.
+//! * [`coordinator`] — multi-worker inference pool: sharded request
+//!   queue, adaptive dynamic batcher with backpressure/load-shedding,
+//!   pluggable batch executors (PJRT or synthetic), aggregated
+//!   metrics.
 //! * [`exp`] — one runner per paper table/figure (the benchmark harness).
 //!
 //! Layers 1–2 (Pallas kernel and the SC-friendly JAX model with

@@ -3,7 +3,8 @@
 //! ```text
 //! scnn exp <id>|all [--full] [--artifacts DIR] [--seed N]
 //! scnn train --model NAME [--steps N] [--act-bsl B] [--artifacts DIR]
-//! scnn serve --model NAME [--requests N] [--artifacts DIR]
+//! scnn serve --model NAME [--workers N] [--clients N] [--requests N]
+//!            [--backend auto|pjrt|synthetic] [--shed] [--artifacts DIR]
 //! scnn info
 //! ```
 //!
@@ -11,10 +12,12 @@
 
 use std::collections::HashMap;
 
-use scnn::coordinator::{Coordinator, ServeConfig};
+use scnn::coordinator::{
+    Coordinator, OverloadPolicy, PoolConfig, ServeConfig, SyntheticExecutor,
+};
 use scnn::data::{Dataset, Split, SynthCifar, SynthDigits};
 use scnn::exp;
-use scnn::runtime::{trainer::Knobs, Runtime, Trainer};
+use scnn::runtime::{artifacts_ready, trainer::Knobs, Runtime, Trainer};
 use scnn::Result;
 
 fn parse_flags(args: &[String]) -> (Vec<String>, HashMap<String, String>) {
@@ -71,7 +74,8 @@ fn main() -> Result<()> {
                  \n  exp <id>|all [--full] [--artifacts DIR] [--seed N]\n\
                  \n      ids: {}\n\
                  \n  train --model tnn|scnet10|scnet20 [--steps N] [--act-bsl B] [--res-bsl B]\n\
-                 \n  serve --model NAME [--requests N] [--steps N]\n\
+                 \n  serve --model NAME [--workers N] [--clients N] [--requests N] [--steps N]\n\
+                 \n        [--backend auto|pjrt|synthetic] [--shed]\n\
                  \n  info   print runtime/artifact status",
                 exp::ALL_IDS.join(" ")
             );
@@ -137,42 +141,72 @@ fn cmd_serve(flags: &HashMap<String, String>, artifacts: &str) -> Result<()> {
     let model = flags.get("model").cloned().unwrap_or_else(|| "scnet10".into());
     let requests: usize = flags.get("requests").and_then(|s| s.parse().ok()).unwrap_or(512);
     let steps: usize = flags.get("steps").and_then(|s| s.parse().ok()).unwrap_or(0);
+    let workers: usize = flags.get("workers").and_then(|s| s.parse().ok()).unwrap_or(1).max(1);
+    let clients: usize = flags.get("clients").and_then(|s| s.parse().ok()).unwrap_or(4).max(1);
+    let backend = flags.get("backend").map(String::as_str).unwrap_or("auto");
     let knobs = knobs_from_flags(flags);
     let data = dataset_for(&model);
-    let mut cfg = ServeConfig::new(artifacts, &model);
-    cfg.knobs = knobs;
-    if steps > 0 {
-        println!("warm-up training for {steps} steps...");
-        let rt = Runtime::new(artifacts)?;
-        let mut tr = Trainer::new(&rt, &model)?;
-        tr.train_qat(data.as_ref(), steps / 2, steps / 2, 0.05, knobs, |_, _| {})?;
-        cfg.params = Some(tr.params().to_vec());
+    let mut policy = scnn::coordinator::BatchPolicy::default();
+    if flags.contains_key("shed") {
+        policy.overload = OverloadPolicy::Shed;
     }
-    let coord = Coordinator::start(cfg)?;
+    let use_pjrt = match backend {
+        "pjrt" => true,
+        "synthetic" => false,
+        "auto" => artifacts_ready(artifacts, &model),
+        other => anyhow::bail!("unknown --backend {other} (auto|pjrt|synthetic)"),
+    };
+    let coord = if use_pjrt {
+        let mut cfg = ServeConfig::new(artifacts, &model);
+        cfg.knobs = knobs;
+        cfg.workers = workers;
+        cfg.policy = policy;
+        if steps > 0 {
+            println!("warm-up training for {steps} steps...");
+            let rt = Runtime::new(artifacts)?;
+            let mut tr = Trainer::new(&rt, &model)?;
+            tr.train_qat(data.as_ref(), steps / 2, steps / 2, 0.05, knobs, |_, _| {})?;
+            cfg.params = Some(tr.params().to_vec());
+        }
+        Coordinator::start(cfg)?
+    } else {
+        println!("backend: synthetic (deterministic in-process model, no artifacts needed)");
+        let (c, h, w) = data.shape();
+        let factory = SyntheticExecutor::demo_factory(c * h * w, data.num_classes());
+        Coordinator::start_with(factory, PoolConfig { workers, policy, queue_depth: 1024 })?
+    };
     let client = coord.client();
     let (c, h, w) = data.shape();
-    println!("serving {model} ({c}x{h}x{w}); issuing {requests} requests from 4 threads");
+    println!(
+        "serving {model} ({c}x{h}x{w}); {workers} workers; issuing {requests} requests \
+         from {clients} client threads"
+    );
     let t0 = std::time::Instant::now();
     let mut handles = Vec::new();
-    for t in 0..4usize {
+    for t in 0..clients {
         let client = client.clone();
         let data = dataset_for(&model);
-        let n = requests / 4;
-        handles.push(std::thread::spawn(move || -> Result<usize> {
+        let n = requests / clients;
+        handles.push(std::thread::spawn(move || -> Result<(usize, usize)> {
             let mut hits = 0usize;
+            let mut shed = 0usize;
             for i in 0..n {
                 let (x, y) = data.sample(Split::Test, t * 100_000 + i);
-                let pred = client.classify(x.into_vec())?;
-                if pred == y {
-                    hits += 1;
+                match client.classify(x.into_vec()) {
+                    Ok(pred) if pred == y => hits += 1,
+                    Ok(_) => {}
+                    Err(e) if scnn::coordinator::is_shed_error(&e) => shed += 1,
+                    Err(e) => return Err(e),
                 }
             }
-            Ok(hits)
+            Ok((hits, shed))
         }));
     }
-    let mut hits = 0usize;
+    let (mut hits, mut shed) = (0usize, 0usize);
     for h in handles {
-        hits += h.join().unwrap()?;
+        let (h_hits, h_shed) = h.join().unwrap()?;
+        hits += h_hits;
+        shed += h_shed;
     }
     let dt = t0.elapsed();
     let m = coord.shutdown();
@@ -181,12 +215,20 @@ fn cmd_serve(flags: &HashMap<String, String>, artifacts: &str) -> Result<()> {
         m.requests,
         dt.as_secs_f64(),
         m.requests as f64 / dt.as_secs_f64(),
-        hits as f64 / (requests / 4 * 4) as f64
+        // Accuracy over *served* requests: shed ones never produced a
+        // prediction and must not deflate the number.
+        hits as f64 / m.requests.max(1) as f64
     );
     println!(
-        "batches {} (occupancy {:.2}), latency p50 {:?} p99 {:?}",
-        m.batches, m.occupancy, m.p50, m.p99
+        "batches {} (occupancy {:.2}), latency p50 {:?} p99 {:?}, shed {} (client-observed {})",
+        m.batches, m.occupancy, m.p50, m.p99, m.shed, shed
     );
+    for w in &m.per_worker {
+        println!(
+            "  worker {}: {} requests in {} batches ({} errors)",
+            w.worker, w.requests, w.batches, w.errors
+        );
+    }
     Ok(())
 }
 

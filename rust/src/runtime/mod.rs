@@ -92,6 +92,13 @@ impl Runtime {
     }
 }
 
+/// True when the AOT artifacts of `model` are present under `dir`
+/// (cheap probe used by the CLI/benches to pick a serving backend
+/// without constructing a client).
+pub fn artifacts_ready(dir: impl AsRef<Path>, model: &str) -> bool {
+    dir.as_ref().join(format!("{model}_meta.txt")).exists()
+}
+
 /// Build an f32 literal of the given shape from a flat slice.
 pub fn literal_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
     let n: usize = dims.iter().product::<usize>().max(1);

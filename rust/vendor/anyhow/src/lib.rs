@@ -1,0 +1,222 @@
+//! Offline drop-in subset of the `anyhow` error-handling crate.
+//!
+//! The build environment has no crates.io access (DESIGN.md
+//! §Substitutions), so this vendored shim provides exactly the surface
+//! `scnn` uses, with the same semantics as upstream `anyhow`:
+//!
+//! * [`Error`] — a context-chain error type. `{}` displays the
+//!   outermost message; `{:#}` displays the whole chain joined by
+//!   `": "` (matching upstream's alternate formatting).
+//! * [`Result<T>`] — `Result` defaulted to [`Error`].
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on `Result`
+//!   and `Option`.
+//! * [`anyhow!`], [`bail!`], [`ensure!`] — the construction macros.
+//!
+//! Like upstream, [`Error`] deliberately does **not** implement
+//! `std::error::Error`, which is what allows the blanket
+//! `From<E: std::error::Error>` conversion used by `?`.
+
+use std::fmt;
+
+/// A context-chain error. Index 0 of the chain is the outermost
+/// (most recently attached) message; the last entry is the root cause.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from a printable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Self { chain: vec![message.to_string()] }
+    }
+
+    /// Prepend a context message (what `.context(..)` does).
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Self {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The messages from outermost context to root cause.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+
+    /// The innermost (root-cause) message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(String::as_str).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            f.write_str(&self.chain.join(": "))
+        } else {
+            f.write_str(self.chain.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or(""))?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for (i, cause) in self.chain[1..].iter().enumerate() {
+                write!(f, "\n    {i}: {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        let mut chain = vec![e.to_string()];
+        let mut source = e.source();
+        while let Some(s) = source {
+            chain.push(s.to_string());
+            source = s.source();
+        }
+        Self { chain }
+    }
+}
+
+/// `Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to errors (and convert `Option` to `Result`).
+pub trait Context<T> {
+    /// Wrap the error with a fixed context message.
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T>;
+
+    /// Wrap the error with a lazily-evaluated context message.
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: std::error::Error + Send + Sync + 'static> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| Error::from(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or printable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] when a condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::Error::msg(concat!(
+                "condition failed: ",
+                stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Result<usize> {
+        let n: usize = s.parse().context("parsing count")?;
+        ensure!(n > 0, "count must be positive, got {n}");
+        Ok(n)
+    }
+
+    #[test]
+    fn context_chain_and_alternate_display() {
+        let e = parse("x").unwrap_err();
+        assert_eq!(format!("{e}"), "parsing count");
+        let full = format!("{e:#}");
+        assert!(full.starts_with("parsing count: "), "{full}");
+        assert!(format!("{e:?}").contains("Caused by"), "{e:?}");
+    }
+
+    #[test]
+    fn ensure_and_bail_format() {
+        let e = parse("0").unwrap_err();
+        assert_eq!(format!("{e}"), "count must be positive, got 0");
+        fn fail() -> Result<()> {
+            bail!("bad value {}", 7)
+        }
+        assert_eq!(format!("{}", fail().unwrap_err()), "bad value 7");
+    }
+
+    #[test]
+    fn option_context_and_question_mark() {
+        fn first(v: &[u8]) -> Result<u8> {
+            let x = v.first().context("empty slice")?;
+            Ok(*x)
+        }
+        assert_eq!(first(&[3]).unwrap(), 3);
+        assert_eq!(format!("{}", first(&[]).unwrap_err()), "empty slice");
+    }
+
+    #[test]
+    fn from_std_error_keeps_sources() {
+        let io = std::io::Error::other("disk on fire");
+        let e: Error = io.into();
+        assert_eq!(e.root_cause(), "disk on fire");
+        let e = e.context("loading artifact");
+        assert_eq!(e.chain().count(), 2);
+    }
+
+    #[test]
+    fn anyhow_macro_accepts_string_exprs() {
+        let msg = String::from("already formatted");
+        let e = anyhow!(msg.clone());
+        assert_eq!(format!("{e}"), "already formatted");
+    }
+}

@@ -1,0 +1,276 @@
+//! Offline API stub of the `xla` (PJRT) crate, version-matched to the
+//! `xla_extension` 0.5.1 surface that `scnn::runtime` targets.
+//!
+//! The build environment has neither crates.io access nor the
+//! `libxla_extension` native library (DESIGN.md §Substitutions), so
+//! this vendored shim keeps the crate compiling and the non-PJRT 95%
+//! of the test suite running:
+//!
+//! * [`Literal`] is **functional**: scalar/vec1/reshape/to_vec round
+//!   trips behave like the real crate (host-side data only).
+//! * Client construction succeeds (so `scnn info` and artifact probing
+//!   work), but [`PjRtClient::compile`] and execution return
+//!   "backend unavailable" errors pointing at the substitution note.
+//!
+//! Swapping the real backend in is a one-line `Cargo.toml` change
+//! (point the `xla` dependency at the real crate); no `scnn` source
+//! changes are required, which is the entire point of the stub.
+
+use std::fmt;
+
+/// Stub error type (the real crate's `Error` is also a display-able
+/// enum; only the message matters to `scnn`, which wraps everything in
+/// `anyhow` context).
+#[derive(Clone, Debug)]
+pub struct Error(String);
+
+impl Error {
+    fn unavailable(op: &str) -> Self {
+        Self(format!(
+            "{op} unavailable: scnn was built against the vendored `xla` API stub \
+             (no PJRT native library in this environment; see DESIGN.md §Substitutions)"
+        ))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Stub result type.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element storage of a [`Literal`].
+#[doc(hidden)]
+#[derive(Clone, Debug)]
+pub enum Storage {
+    /// 32-bit floats.
+    F32(Vec<f32>),
+    /// 32-bit signed integers.
+    I32(Vec<i32>),
+    /// A tuple of literals.
+    Tuple(Vec<Literal>),
+}
+
+/// Element types a [`Literal`] can hold (mirror of the real crate's
+/// native-type trait, restricted to what `scnn` uses).
+pub trait NativeType: Copy + Sized {
+    /// Human-readable dtype name for error messages.
+    const NAME: &'static str;
+    #[doc(hidden)]
+    fn wrap(v: Vec<Self>) -> Storage;
+    #[doc(hidden)]
+    fn unwrap(s: &Storage) -> Option<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    const NAME: &'static str = "f32";
+    fn wrap(v: Vec<Self>) -> Storage {
+        Storage::F32(v)
+    }
+    fn unwrap(s: &Storage) -> Option<Vec<Self>> {
+        match s {
+            Storage::F32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    const NAME: &'static str = "i32";
+    fn wrap(v: Vec<Self>) -> Storage {
+        Storage::I32(v)
+    }
+    fn unwrap(s: &Storage) -> Option<Vec<Self>> {
+        match s {
+            Storage::I32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+/// A host-side tensor value (functional in the stub).
+#[derive(Clone, Debug)]
+pub struct Literal {
+    storage: Storage,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-0 literal.
+    pub fn scalar<T: NativeType>(v: T) -> Self {
+        Self { storage: T::wrap(vec![v]), dims: vec![] }
+    }
+
+    /// Rank-1 literal from a slice.
+    pub fn vec1<T: NativeType>(v: &[T]) -> Self {
+        Self { storage: T::wrap(v.to_vec()), dims: vec![v.len() as i64] }
+    }
+
+    /// Reinterpret with new dimensions (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Self> {
+        let n: i64 = dims.iter().product();
+        let len = match &self.storage {
+            Storage::F32(v) => v.len(),
+            Storage::I32(v) => v.len(),
+            Storage::Tuple(_) => {
+                return Err(Error("cannot reshape a tuple literal".into()));
+            }
+        };
+        if n.max(1) as usize != len.max(1) {
+            return Err(Error(format!(
+                "reshape {dims:?} incompatible with {len} elements"
+            )));
+        }
+        Ok(Self { storage: self.storage.clone(), dims: dims.to_vec() })
+    }
+
+    /// Copy the elements out as a flat vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unwrap(&self.storage)
+            .ok_or_else(|| Error(format!("literal does not hold {} elements", T::NAME)))
+    }
+
+    /// First element (rank-agnostic).
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T> {
+        self.to_vec::<T>()?
+            .first()
+            .copied()
+            .ok_or_else(|| Error("empty literal".into()))
+    }
+
+    /// Unpack a tuple literal into its components.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self.storage {
+            Storage::Tuple(v) => Ok(v),
+            _ => Err(Error("literal is not a tuple".into())),
+        }
+    }
+
+    /// Dimensions.
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Parsed HLO module (the stub only retains the source path).
+#[derive(Clone, Debug)]
+pub struct HloModuleProto {
+    path: String,
+}
+
+impl HloModuleProto {
+    /// Read an HLO **text** file. The stub verifies the file is
+    /// readable and looks like HLO text, then records the path.
+    pub fn from_text_file(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error(format!("reading HLO text {path}: {e}")))?;
+        if !text.contains("HloModule") {
+            return Err(Error(format!("{path} does not look like HLO text")));
+        }
+        Ok(Self { path: path.to_string() })
+    }
+}
+
+/// A computation handle compiled from an [`HloModuleProto`].
+#[derive(Clone, Debug)]
+pub struct XlaComputation {
+    path: String,
+}
+
+impl XlaComputation {
+    /// Wrap a parsed module.
+    pub fn from_proto(proto: &HloModuleProto) -> Self {
+        Self { path: proto.path.clone() }
+    }
+}
+
+/// PJRT client handle. Construction succeeds in the stub so that
+/// diagnostics (`scnn info`) and metadata loading work without the
+/// native library; only compile/execute are unavailable.
+pub struct PjRtClient {
+    platform: &'static str,
+}
+
+impl PjRtClient {
+    /// CPU-backed client.
+    pub fn cpu() -> Result<Self> {
+        Ok(Self { platform: "cpu-stub (vendored xla shim; PJRT unavailable)" })
+    }
+
+    /// Platform name for diagnostics.
+    pub fn platform_name(&self) -> String {
+        self.platform.to_string()
+    }
+
+    /// Compile a computation — always fails in the stub.
+    pub fn compile(&self, comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::unavailable(&format!("compiling {}", comp.path)))
+    }
+}
+
+/// A compiled executable handle (never constructed by the stub).
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute with the given arguments — unreachable in the stub
+    /// (compile never succeeds), present for API compatibility.
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::unavailable("PJRT execute"))
+    }
+}
+
+/// A device buffer handle (never constructed by the stub).
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    /// Copy device memory back to a host [`Literal`].
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::unavailable("device -> host transfer"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let l = Literal::vec1(&[1.0f32, -2.5, 3.0]);
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, -2.5, 3.0]);
+        assert_eq!(l.get_first_element::<f32>().unwrap(), 1.0);
+        assert!(l.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn literal_reshape_checks_element_count() {
+        let l = Literal::vec1(&[0i32; 12]);
+        let r = l.reshape(&[3, 4]).unwrap();
+        assert_eq!(r.dims(), &[3, 4]);
+        assert!(l.reshape(&[5, 5]).is_err());
+    }
+
+    #[test]
+    fn scalar_literal() {
+        let l = Literal::scalar(7i32);
+        assert_eq!(l.dims().len(), 0);
+        assert_eq!(l.get_first_element::<i32>().unwrap(), 7);
+    }
+
+    #[test]
+    fn compile_reports_stub() {
+        let client = PjRtClient::cpu().unwrap();
+        assert!(client.platform_name().contains("stub"));
+        let comp = XlaComputation { path: "x.hlo.txt".into() };
+        let err = client.compile(&comp).unwrap_err();
+        assert!(err.to_string().contains("vendored `xla` API stub"), "{err}");
+    }
+}
