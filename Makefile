@@ -14,4 +14,9 @@ test:
 bench:
 	cargo bench
 
-.PHONY: artifacts build test bench
+# Machine-readable perf record: engine throughput + SC-backend pool
+# sweep, written to BENCH_sc.json (tracked across PRs).
+bench-json:
+	BENCH_JSON=BENCH_sc.json cargo bench --bench sc_serve
+
+.PHONY: artifacts build test bench bench-json

@@ -1,17 +1,19 @@
 //! Serving demo: the L3 coordinator pool batching concurrent requests
-//! into the serving path (integer codes through the Pallas kernel when
-//! AOT artifacts are present, a deterministic synthetic model
-//! otherwise).
+//! into any registered backend — `sc` (the native bit-exact SC engine,
+//! no artifacts needed), `pjrt` (integer codes through the Pallas
+//! kernel when AOT artifacts are present), `binary` (fixed-point
+//! baseline), `synthetic` (fixed-latency toy), or `auto`.
 //!
-//! Spawns an optional warm-up training run, starts an `N`-worker pool,
-//! fires requests from several client threads, and reports throughput,
-//! latency percentiles, batch occupancy and the per-worker breakdown.
+//! Spawns an optional warm-up training run (PJRT only), starts an
+//! `N`-worker pool, fires requests from several client threads, and
+//! reports throughput, latency percentiles, batch occupancy and the
+//! per-worker breakdown.
 //!
 //! ```bash
-//! cargo run --release --example serve [-- requests=2048 clients=8 workers=4]
+//! cargo run --release --example serve [-- backend=sc requests=2048 clients=8 workers=4]
 //! ```
 
-use scnn::coordinator::{Coordinator, ServeConfig};
+use scnn::coordinator::{Backend, Coordinator, ServeConfig};
 use scnn::data::{Dataset, Split, SynthCifar};
 use scnn::runtime::{artifacts_ready, trainer::Knobs, Runtime, Trainer};
 
@@ -26,26 +28,28 @@ fn main() -> scnn::Result<()> {
     let requests = arg("requests", 2048).max(clients);
     let workers = arg("workers", 4).max(1);
     let warmup_steps = arg("warmup", 100);
+    let backend = Backend::parse(
+        &std::env::args()
+            .find_map(|a| a.strip_prefix("backend=").map(str::to_string))
+            .unwrap_or_else(|| "auto".into()),
+    )?;
     let data = SynthCifar::new(10);
     let knobs = Knobs::quantized(2).with_res_bsl(Some(16));
 
     let mut cfg = ServeConfig::new("artifacts", "scnet10");
     cfg.knobs = knobs;
     cfg.workers = workers;
-    if artifacts_ready("artifacts", "scnet10") {
+    let resolved = backend.resolve("artifacts", "scnet10");
+    println!("backend: {resolved} (pass backend=sc for the native SC engine)");
+    if resolved == Backend::Pjrt && artifacts_ready("artifacts", "scnet10") && warmup_steps > 0 {
         // Real serving path; warm-up training so the model is non-trivial.
-        if warmup_steps > 0 {
-            println!("warm-up: training {warmup_steps} steps...");
-            let rt = Runtime::new("artifacts")?;
-            let mut tr = Trainer::new(&rt, "scnet10")?;
-            tr.train_qat(&data, warmup_steps / 2, warmup_steps / 2, 0.05, knobs, |_, _| {})?;
-            cfg.params = Some(tr.params().to_vec());
-        }
-    } else {
-        println!("artifacts missing -> synthetic backend (run `make artifacts` for PJRT)");
+        println!("warm-up: training {warmup_steps} steps...");
+        let rt = Runtime::new("artifacts")?;
+        let mut tr = Trainer::new(&rt, "scnet10")?;
+        tr.train_qat(&data, warmup_steps / 2, warmup_steps / 2, 0.05, knobs, |_, _| {})?;
+        cfg.params = Some(tr.params().to_vec());
     }
-    let (c, h, w) = data.shape();
-    let coord = Coordinator::start_auto(cfg, (c * h * w, data.num_classes()))?;
+    let coord = Coordinator::start_backend(resolved, cfg)?;
 
     println!(
         "coordinator up; {} workers, {clients} clients x {} reqs",

@@ -1,6 +1,8 @@
 //! Bit-exact SC executor benchmarks (§Perf L3 target: evaluate 1k
 //! SynthCIFAR images in < 60 s → ≥ 16.7 img/s on the fast count path).
 
+use std::sync::Arc;
+
 use scnn::data::{Dataset, Split, SynthCifar, SynthDigits};
 use scnn::nn::binary_exec::BinaryExecutor;
 use scnn::nn::model::{ModelCfg, ModelParams};
@@ -16,11 +18,13 @@ fn main() {
     println!("== tnn (SynthDigits) forward ==");
     let cfg = ModelCfg::tnn();
     let params = ModelParams::init(&cfg, &mut rng);
-    let prep = Prepared::new(
+    // One frozen model shared by all three executors (Arc refcount
+    // bumps, no weight/SI-table copies).
+    let prep = Arc::new(Prepared::new(
         &cfg,
         &params,
         QuantConfig { act_bsl: Some(2), weight_ternary: true, residual_bsl: None },
-    );
+    ));
     let digits = SynthDigits::new();
     let (dimg, _) = digits.sample(Split::Test, 0);
     let sc = ScExecutor::new(prep.clone());
@@ -33,7 +37,7 @@ fn main() {
     println!("\n== scnet10 (SynthCIFAR, residual) forward ==");
     let cfg = ModelCfg::scnet(10);
     let params = ModelParams::init(&cfg, &mut rng);
-    let prep = Prepared::new(&cfg, &params, QuantConfig::w2a2r16());
+    let prep = Arc::new(Prepared::new(&cfg, &params, QuantConfig::w2a2r16()));
     let cifar = SynthCifar::new(10);
     let (cimg, _) = cifar.sample(Split::Test, 0);
     let sc = ScExecutor::new(prep.clone());

@@ -1,0 +1,119 @@
+//! Native SC serving benchmarks (§Perf): the batched `ScEngine` vs the
+//! per-image `ScExecutor`, and a worker-scaling sweep of the pool on
+//! the **real SC model** (backend `sc`) instead of the synthetic
+//! stand-in.
+//!
+//! With `BENCH_JSON=<path>` (what `make bench-json` sets) the results
+//! are also written as machine-readable JSON so the perf trajectory is
+//! tracked across PRs:
+//!
+//! ```bash
+//! BENCH_JSON=BENCH_sc.json cargo bench --bench sc_serve
+//! ```
+
+use std::time::Instant;
+
+use scnn::coordinator::{Backend, Coordinator, ServeConfig};
+use scnn::data::{Dataset, Split, SynthCifar, SynthDigits};
+use scnn::nn::model::{ModelCfg, ModelParams};
+use scnn::nn::quant::QuantConfig;
+use scnn::nn::sc_engine::ScEngine;
+use scnn::nn::sc_exec::{Prepared, ScExecutor};
+use scnn::util::bench::{Bench, JsonReport};
+use scnn::util::Rng;
+
+fn engine_vs_executor(report: &mut JsonReport) {
+    let b = Bench::default();
+    println!("== engine vs executor (bit-identical logits, same frozen model) ==");
+    for (label, cfg, quant, img) in [
+        (
+            "tnn",
+            ModelCfg::tnn(),
+            QuantConfig { act_bsl: Some(2), weight_ternary: true, residual_bsl: None },
+            SynthDigits::new().sample(Split::Test, 0).0,
+        ),
+        (
+            "scnet10",
+            ModelCfg::scnet(10),
+            QuantConfig::w2a2r16(),
+            SynthCifar::new(10).sample(Split::Test, 0).0,
+        ),
+    ] {
+        let mut rng = Rng::new(11);
+        let params = ModelParams::init(&cfg, &mut rng);
+        let prep = std::sync::Arc::new(Prepared::new(&cfg, &params, quant));
+        let exec = ScExecutor::new(prep.clone());
+        let mut engine = ScEngine::new(prep);
+        assert_eq!(engine.forward(&img), exec.forward(&img), "{label}: engines disagree");
+        let me = b.run(&format!("sc_serve/executor/{label}_forward"), 1, || exec.forward(&img));
+        let mg = b.run(&format!("sc_serve/engine/{label}_forward"), 1, || engine.forward(&img));
+        let speedup = me.median_s / mg.median_s.max(1e-12);
+        println!("   -> engine speedup over executor: {speedup:.2}x");
+        report.add(&format!("executor/{label}_forward"), &me, 1);
+        report.add(&format!("engine/{label}_forward"), &mg, 1);
+        report.add_scalar(&format!("engine/{label}_speedup"), speedup, "x");
+    }
+}
+
+fn pool_sweep_sc(report: &mut JsonReport) {
+    println!("\n== worker-scaling sweep (backend sc, tnn, real SC model) ==");
+    let mut n1 = 0.0f64;
+    let mut n4 = 0.0f64;
+    for workers in [1usize, 2, 4, 8] {
+        let mut cfg = ServeConfig::new("artifacts", "tnn");
+        cfg.workers = workers;
+        cfg.batch = 8;
+        cfg.queue_depth = 64;
+        let coord = Coordinator::start_backend(Backend::Sc, cfg).expect("start sc pool");
+        let clients = 4 * workers;
+        let per_client = 64usize;
+        let t0 = Instant::now();
+        let mut handles = Vec::new();
+        for t in 0..clients {
+            let client = coord.client();
+            handles.push(std::thread::spawn(move || {
+                let data = SynthDigits::new();
+                for i in 0..per_client {
+                    let (x, _) = data.sample(Split::Test, t * 10_000 + i);
+                    client.infer(x.into_vec()).expect("infer");
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let reqs_per_s = (clients * per_client) as f64 / wall;
+        let m = coord.shutdown();
+        println!(
+            "sc_serve/pool/workers={workers}  {reqs_per_s:>8.0} req/s  occupancy {:.2}  \
+             p50 {:?}  p99 {:?}",
+            m.occupancy, m.p50, m.p99
+        );
+        report.add_scalar(&format!("pool/sc/workers={workers}"), reqs_per_s, "req/s");
+        if workers == 1 {
+            n1 = reqs_per_s;
+        }
+        if workers == 4 {
+            n4 = reqs_per_s;
+        }
+    }
+    let speedup = n4 / n1.max(1.0);
+    println!(
+        "sc_serve/pool/speedup  N=4 vs N=1: {speedup:.2}x  ({})",
+        if speedup > 1.0 { "scales" } else { "DOES NOT SCALE" }
+    );
+    report.add_scalar("pool/sc/speedup_n4_vs_n1", speedup, "x");
+}
+
+fn main() {
+    let mut report = JsonReport::new("sc_serve");
+    engine_vs_executor(&mut report);
+    pool_sweep_sc(&mut report);
+    if let Ok(path) = std::env::var("BENCH_JSON") {
+        report.write(&path).expect("write BENCH_JSON");
+        println!("\nwrote {} entries to {path}", report.len());
+    } else {
+        println!("\n(set BENCH_JSON=BENCH_sc.json or run `make bench-json` for JSON output)");
+    }
+}

@@ -118,6 +118,15 @@ impl Bsn {
         self.sort_impl(bits, None::<&mut fn() -> bool>)
     }
 
+    /// Buffer-reuse variant of [`Bsn::sort_gate_level`] (fault-free
+    /// fast path only): sorts into `out`, using `scratch` as the
+    /// word-parallel work area. Both buffers are overwritten and reuse
+    /// their allocations, so a steady-state serving loop sorts without
+    /// touching the heap.
+    pub fn sort_gate_level_into(&self, bits: &BitVec, scratch: &mut Vec<u64>, out: &mut BitVec) {
+        self.sort_packed_into(bits, scratch, out);
+    }
+
     /// Gate-level sort with per-comparator-output fault injection: each
     /// of the two output wires of every comparator flips with
     /// probability `ber`. Used by the Fig-5 fault-tolerance experiment.
@@ -178,9 +187,20 @@ impl Bsn {
     /// `a&b`), so the network runs at ~64 comparators per instruction.
     /// Property-tested equal to the scalar compare-exchange network.
     fn sort_packed(&self, bits: &BitVec) -> BitVec {
+        let mut scratch = Vec::new();
+        let mut out = BitVec::zeros(0);
+        self.sort_packed_into(bits, &mut scratch, &mut out);
+        out
+    }
+
+    /// Packed sort into caller-owned buffers (see
+    /// [`Bsn::sort_gate_level_into`]).
+    fn sort_packed_into(&self, bits: &BitVec, v: &mut Vec<u64>, out: &mut BitVec) {
+        assert_eq!(bits.len(), self.width, "BSN input width mismatch");
         let n = self.padded;
         let words = n.div_ceil(64);
-        let mut v = vec![0u64; words];
+        v.clear();
+        v.resize(words, 0u64);
         for (i, b) in bits.iter().enumerate() {
             if b {
                 v[i / 64] |= 1 << (i % 64);
@@ -232,13 +252,12 @@ impl Bsn {
             }
             k *= 2;
         }
-        let mut out = BitVec::zeros(self.width);
+        out.reset(self.width);
         for i in 0..self.width {
             if v[i / 64] >> (i % 64) & 1 == 1 {
                 out.set(i, true);
             }
         }
-        out
     }
 
     /// Mask selecting in-word lanes whose bit `j` of the index is 0
@@ -316,10 +335,17 @@ impl Bsn {
     /// path.
     pub fn concat(products: &[ThermCode]) -> BitVec {
         let mut out = BitVec::zeros(0);
+        Self::concat_into(products, &mut out);
+        out
+    }
+
+    /// Buffer-reuse variant of [`Bsn::concat`]: overwrites `out`,
+    /// reusing its allocation.
+    pub fn concat_into(products: &[ThermCode], out: &mut BitVec) {
+        out.reset(0);
         for p in products {
             out.extend_from(p.bits());
         }
-        out
     }
 }
 
@@ -445,6 +471,30 @@ mod tests {
                     let scalar = bsn.sort_impl(&b, Some(&mut never));
                     assert_eq!(packed, scalar, "width={width} in={b}");
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn sort_into_reuses_buffers_and_matches() {
+        let mut rng = Rng::new(5);
+        let mut scratch = Vec::new();
+        let mut out = BitVec::zeros(0);
+        for width in [3usize, 17, 64, 129] {
+            let bsn = Bsn::new(width);
+            for _ in 0..4 {
+                let mut b = BitVec::zeros(width);
+                for i in 0..width {
+                    b.set(i, rng.gen_bool(0.5));
+                }
+                bsn.sort_gate_level_into(&b, &mut scratch, &mut out);
+                assert_eq!(out, bsn.sort_gate_level(&b), "width={width}");
+                // Concat round-trips through the reuse path too.
+                let codes =
+                    [ThermCode::from_count(1, 2), ThermCode::from_count(2, 2)];
+                let mut cat = BitVec::zeros(0);
+                Bsn::concat_into(&codes, &mut cat);
+                assert_eq!(cat, Bsn::concat(&codes));
             }
         }
     }

@@ -48,22 +48,41 @@ impl RescaleBlock {
     /// Multiply by `2^n`: replicate the stream `2^n` times. Output BSL
     /// is `bsl · 2^n`; decoded value scales exactly by `2^n`.
     pub fn mul_pow2(&self, code: &ThermCode, n: u32) -> ThermCode {
+        let mut out = ThermCode::from_bits(BitVec::zeros(0));
+        self.mul_pow2_into(code, n, &mut out);
+        out
+    }
+
+    /// Buffer-reuse variant of [`RescaleBlock::mul_pow2`]: overwrites
+    /// `out`, reusing its allocation (the double-buffer register file
+    /// the hardware block actually has).
+    pub fn mul_pow2_into(&self, code: &ThermCode, n: u32, out: &mut ThermCode) {
         assert_eq!(code.bsl(), self.bsl);
         let reps = 1usize << n;
-        let mut bits = BitVec::zeros(0);
+        let bits = out.bits_mut();
+        bits.reset(0);
         for _ in 0..reps {
             bits.extend_from(code.bits());
         }
-        ThermCode::from_bits(bits)
     }
 
     /// One division-by-2 cycle: select 1 of every 2 bits (even indices
     /// of the *sorted* stream, so the selected popcount is `ceil(c/2)`),
     /// then append `11110000` to restore the BSL. Requires BSL 16.
     pub fn div2_cycle(&self, code: &ThermCode) -> ThermCode {
+        let mut out = ThermCode::from_bits(BitVec::zeros(0));
+        self.div2_cycle_into(code, &mut out);
+        out
+    }
+
+    /// Buffer-reuse variant of [`RescaleBlock::div2_cycle`]. `out` must
+    /// not alias `code` (the hardware uses the second buffer of its
+    /// double-buffered register file).
+    pub fn div2_cycle_into(&self, code: &ThermCode, out: &mut ThermCode) {
         assert_eq!(self.bsl, 16, "the paper's divider pads 8 bits; BSL must be 16");
         assert_eq!(code.bsl(), 16);
-        let mut bits = BitVec::zeros(0);
+        let bits = out.bits_mut();
+        bits.reset(0);
         // Select every other bit. On a canonical (sorted) stream the
         // even-index selection keeps ceil(count/2) ones.
         for i in (0..16).step_by(2) {
@@ -72,14 +91,15 @@ impl RescaleBlock {
         for ch in DIV_PAD.chars() {
             bits.push(ch == '1');
         }
-        ThermCode::from_bits(bits)
     }
 
     /// Divide by `2^n`: `n` division cycles.
     pub fn div_pow2(&self, code: &ThermCode, n: u32) -> ThermCode {
         let mut c = code.clone();
+        let mut scratch = ThermCode::from_bits(BitVec::zeros(0));
         for _ in 0..n {
-            c = self.div2_cycle(&c);
+            self.div2_cycle_into(&c, &mut scratch);
+            std::mem::swap(&mut c, &mut scratch);
         }
         c
     }
@@ -165,6 +185,21 @@ mod tests {
             let d = r.div2_cycle(&c);
             let err = (d.decode() as f64 - q as f64 / 2.0).abs();
             assert!(err <= 0.5, "q={q} err={err}");
+        }
+    }
+
+    #[test]
+    fn into_variants_match_allocating_ones() {
+        let r = RescaleBlock::new(16);
+        let mut out = ThermCode::from_count(0, 16);
+        for q in -8i64..=8 {
+            let c = ThermCode::encode(q, 16);
+            for n in 0..3u32 {
+                r.mul_pow2_into(&c, n, &mut out);
+                assert_eq!(out, r.mul_pow2(&c, n), "mul q={q} n={n}");
+            }
+            r.div2_cycle_into(&c, &mut out);
+            assert_eq!(out, r.div2_cycle(&c), "div q={q}");
         }
     }
 

@@ -167,8 +167,16 @@ impl SelectiveInterconnect {
     /// Bit-level application on an actual (possibly fault-corrupted)
     /// sorted stream.
     pub fn apply_bits(&self, sorted: &BitVec) -> BitVec {
+        let mut out = BitVec::zeros(0);
+        self.apply_bits_into(sorted, &mut out);
+        out
+    }
+
+    /// Buffer-reuse variant of [`SelectiveInterconnect::apply_bits`]:
+    /// overwrites `out`, reusing its allocation.
+    pub fn apply_bits_into(&self, sorted: &BitVec, out: &mut BitVec) {
         assert_eq!(sorted.len(), self.in_width);
-        let mut out = BitVec::zeros(self.taps.len());
+        out.reset(self.taps.len());
         for (j, t) in self.taps.iter().enumerate() {
             let v = match t {
                 SelTap::Zero => false,
@@ -177,7 +185,14 @@ impl SelectiveInterconnect {
             };
             out.set(j, v);
         }
-        out
+    }
+
+    /// The full count-transfer table `count ↦ apply_count(count)` for
+    /// `count ∈ 0..=in_width` — what a serving engine precomputes once
+    /// per channel so the steady-state inner loop is a single indexed
+    /// load instead of a tap scan.
+    pub fn count_table(&self) -> Vec<usize> {
+        (0..=self.in_width).map(|c| self.apply_count(c)).collect()
     }
 
     /// Apply to a thermometer accumulation result.
@@ -282,6 +297,21 @@ mod tests {
             let bits = si.apply_bits(sorted.bits());
             assert_eq!(bits.popcount(), si.apply_count(c));
             assert!(bits.is_thermometer());
+        }
+    }
+
+    #[test]
+    fn apply_bits_into_and_count_table_match() {
+        let act = ActivationFn::BnRelu { gamma: 1.25, beta: -1.0, ratio: 0.5 };
+        let si = SelectiveInterconnect::for_activation(&act, 24, 8);
+        let table = si.count_table();
+        assert_eq!(table.len(), 25);
+        let mut out = BitVec::zeros(0);
+        for c in 0..=24usize {
+            assert_eq!(table[c], si.apply_count(c));
+            let sorted = ThermCode::from_count(c, 24);
+            si.apply_bits_into(sorted.bits(), &mut out);
+            assert_eq!(out, si.apply_bits(sorted.bits()));
         }
     }
 

@@ -93,6 +93,21 @@ impl BitVec {
         &mut self.bits
     }
 
+    /// Re-initialize in place to `len` zero bits, reusing the existing
+    /// allocation when capacity allows — the buffer-reuse primitive
+    /// behind the `*_into` entry points of [`thermometer`] and
+    /// `crate::circuits`.
+    pub fn reset(&mut self, len: usize) {
+        self.bits.clear();
+        self.bits.resize(len, false);
+    }
+
+    /// Overwrite with the contents of `other`, reusing the allocation.
+    pub fn copy_from(&mut self, other: &BitVec) {
+        self.bits.clear();
+        self.bits.extend_from_slice(&other.bits);
+    }
+
     /// Append a bit.
     pub fn push(&mut self, b: bool) {
         self.bits.push(b);
@@ -166,5 +181,14 @@ mod tests {
         let mut a = BitVec::from_str01("11");
         a.extend_from(&BitVec::from_str01("00"));
         assert_eq!(a.to_str01(), "1100");
+    }
+
+    #[test]
+    fn bitvec_reset_and_copy_from() {
+        let mut a = BitVec::from_str01("1101");
+        a.reset(6);
+        assert_eq!(a.to_str01(), "000000");
+        a.copy_from(&BitVec::from_str01("101"));
+        assert_eq!(a.to_str01(), "101");
     }
 }

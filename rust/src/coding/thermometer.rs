@@ -51,6 +51,25 @@ impl ThermCode {
         Self { bits }
     }
 
+    /// Buffer-reuse variant of [`ThermCode::encode`]: overwrite `out`
+    /// with the encoding of `q`, reusing its allocation (zero-alloc in
+    /// steady state once `out` has reached capacity `bsl`).
+    pub fn encode_into(q: i64, bsl: usize, out: &mut ThermCode) {
+        assert!(bsl >= 2 && bsl % 2 == 0, "BSL must be even, got {bsl}");
+        let half = (bsl / 2) as i64;
+        let ones = (q.clamp(-half, half) + half) as usize;
+        Self::from_count_into(ones, bsl, out);
+    }
+
+    /// Buffer-reuse variant of [`ThermCode::from_count`].
+    pub fn from_count_into(ones: usize, bsl: usize, out: &mut ThermCode) {
+        assert!(ones <= bsl);
+        out.bits.reset(bsl);
+        for i in 0..ones {
+            out.bits.set(i, true);
+        }
+    }
+
     /// Wrap an existing bit vector. Does *not* require the vector to be
     /// sorted — decode only depends on the popcount, which is exactly why
     /// the BSN accumulator is exact (§II.B).
@@ -186,6 +205,22 @@ mod tests {
                 let c = ThermCode::encode(q, bsl);
                 assert_eq!(c.decode(), q, "bsl={bsl} q={q}");
                 assert!(c.is_canonical());
+            }
+        }
+    }
+
+    #[test]
+    fn into_variants_match_allocating_ones() {
+        let mut buf = ThermCode::encode(0, 2);
+        for bsl in [2usize, 4, 8, 16] {
+            let (lo, hi) = ThermCode::range(bsl);
+            for q in lo - 2..=hi + 2 {
+                ThermCode::encode_into(q, bsl, &mut buf);
+                assert_eq!(buf, ThermCode::encode(q, bsl), "bsl={bsl} q={q}");
+            }
+            for ones in 0..=bsl {
+                ThermCode::from_count_into(ones, bsl, &mut buf);
+                assert_eq!(buf, ThermCode::from_count(ones, bsl));
             }
         }
     }

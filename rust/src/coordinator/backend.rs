@@ -1,0 +1,226 @@
+//! Unified backend registry for the inference pool.
+//!
+//! One enum names every way the coordinator can execute a batch, and
+//! one function turns a name + [`ServeConfig`] into the
+//! [`ExecutorFactory`] the pool consumes — replacing the per-backend
+//! factory plumbing that used to be duplicated across `main.rs`,
+//! `examples/serve.rs` and the benches.
+//!
+//! | Backend | Executor | Needs artifacts | What it serves |
+//! |---------|----------|-----------------|----------------|
+//! | `pjrt` | [`PjrtExecutor`] | yes | AOT-compiled serving HLO through PJRT |
+//! | `sc` | [`ScBatchExecutor`] | no | the **native bit-exact SC model** via the batched [`crate::nn::ScEngine`] |
+//! | `binary` | [`BinaryBatchExecutor`] | no | the binary fixed-point baseline over the same frozen network |
+//! | `synthetic` | [`SyntheticExecutor`] | no | deterministic fixed-latency toy (tests/benches) |
+//! | `auto` | — | — | resolves to `pjrt` when artifacts exist, else `synthetic` |
+//!
+//! The `sc` and `binary` backends freeze the model deterministically
+//! from [`ServeConfig::seed`] ([`ModelParams::init`]) at the quant
+//! point described by [`ServeConfig::knobs`], so a pool and a
+//! single-threaded executor built from the same config are guaranteed
+//! to serve the *same* network — the bit-identical-logits property
+//! `rust/tests/sc_serve.rs` asserts.
+
+use std::sync::Arc;
+
+use crate::nn::model::{ModelCfg, ModelParams};
+use crate::nn::quant::QuantConfig;
+use crate::nn::sc_exec::Prepared;
+use crate::runtime::artifacts_ready;
+use crate::runtime::trainer::Knobs;
+use crate::util::Rng;
+use crate::Result;
+
+use super::batcher::ServeConfig;
+use super::executor::{
+    BinaryBatchExecutor, ExecutorFactory, PjrtExecutor, ScBatchExecutor, SyntheticExecutor,
+};
+
+/// Every executor backend the pool can run, by name.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Resolve at start time: `pjrt` when the model's AOT artifacts
+    /// exist, else `synthetic`.
+    Auto,
+    /// AOT-compiled serving path through PJRT.
+    Pjrt,
+    /// Deterministic in-process toy model with fixed batch latency.
+    Synthetic,
+    /// Native bit-exact SC model through the batched engine.
+    Sc,
+    /// Binary fixed-point baseline over the same frozen network.
+    Binary,
+}
+
+impl Backend {
+    /// All selectable backends, in `--backend` help order.
+    pub const ALL: [Backend; 5] =
+        [Backend::Auto, Backend::Pjrt, Backend::Synthetic, Backend::Sc, Backend::Binary];
+
+    /// Parse a `--backend` flag value.
+    pub fn parse(s: &str) -> Result<Backend> {
+        match s {
+            "auto" => Ok(Backend::Auto),
+            "pjrt" => Ok(Backend::Pjrt),
+            "synthetic" => Ok(Backend::Synthetic),
+            "sc" => Ok(Backend::Sc),
+            "binary" => Ok(Backend::Binary),
+            other => anyhow::bail!("unknown backend {other:?} (auto|pjrt|synthetic|sc|binary)"),
+        }
+    }
+
+    /// The flag spelling.
+    pub fn name(self) -> &'static str {
+        match self {
+            Backend::Auto => "auto",
+            Backend::Pjrt => "pjrt",
+            Backend::Synthetic => "synthetic",
+            Backend::Sc => "sc",
+            Backend::Binary => "binary",
+        }
+    }
+
+    /// Resolve [`Backend::Auto`] against the artifact store; concrete
+    /// backends return themselves.
+    pub fn resolve(self, artifacts: &str, model: &str) -> Backend {
+        match self {
+            Backend::Auto => {
+                if artifacts_ready(artifacts, model) {
+                    Backend::Pjrt
+                } else {
+                    Backend::Synthetic
+                }
+            }
+            b => b,
+        }
+    }
+
+    /// Build the pool's [`ExecutorFactory`] for this backend from a
+    /// [`ServeConfig`]. `Auto` is resolved first. Takes the config by
+    /// value so the PJRT arm can *move* the (potentially large)
+    /// trained-parameter blobs into the worker closure instead of
+    /// deep-cloning them.
+    pub fn factory(self, cfg: ServeConfig) -> Result<ExecutorFactory> {
+        match self.resolve(&cfg.artifacts, &cfg.model) {
+            Backend::Pjrt => {
+                let ServeConfig { artifacts, model, params, knobs, .. } = cfg;
+                Ok(Box::new(move |_worker| {
+                    let exec = PjrtExecutor::new(&artifacts, &model, params.as_deref(), knobs)?;
+                    Ok(Box::new(exec))
+                }))
+            }
+            Backend::Synthetic => {
+                let mc = model_cfg_for(&cfg.model)?;
+                let (c, h, w) = mc.input;
+                Ok(SyntheticExecutor::demo_factory(c * h * w, mc.num_classes))
+            }
+            Backend::Sc => Ok(ScBatchExecutor::factory(prepared_for(&cfg)?, cfg.batch)),
+            Backend::Binary => Ok(BinaryBatchExecutor::factory(prepared_for(&cfg)?, cfg.batch)),
+            Backend::Auto => unreachable!("resolve() never returns Auto"),
+        }
+    }
+}
+
+impl std::fmt::Display for Backend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// The pure-Rust model configuration behind an artifact name.
+pub fn model_cfg_for(model: &str) -> Result<ModelCfg> {
+    match model {
+        "tnn" => Ok(ModelCfg::tnn()),
+        "scnet10" => Ok(ModelCfg::scnet(10)),
+        "scnet20" => Ok(ModelCfg::scnet(20)),
+        other => anyhow::bail!("unknown model {other:?} (tnn|scnet10|scnet20)"),
+    }
+}
+
+/// Map the serving [`Knobs`] onto the SC executor's [`QuantConfig`].
+/// The SC datapath is always quantized, so float knobs are rejected —
+/// and so are disabled (`res_on = 0`) or float residuals: the frozen
+/// [`Prepared`] network always wires the residual taps its model
+/// config declares (a `residual_bsl` of `None` silently means
+/// "default BSL 16" there, not "off"), so accepting those knobs would
+/// serve a different network than requested.
+pub fn quant_from_knobs(k: &Knobs) -> Result<QuantConfig> {
+    anyhow::ensure!(
+        k.act_fp == 0.0 && k.w_fp == 0.0,
+        "the SC/binary backends require quantized activations and ternary weights"
+    );
+    anyhow::ensure!(
+        k.res_on != 0.0 && k.res_fp == 0.0,
+        "the SC/binary backends cannot disable or float the residual path \
+         (the frozen SC network always wires its residual taps); \
+         use --res-bsl <B> or omit the flag"
+    );
+    let act_bsl = (k.act_half * 2.0).round() as usize;
+    let residual_bsl = Some((k.res_half * 2.0).round() as usize);
+    Ok(QuantConfig { act_bsl: Some(act_bsl), weight_ternary: true, residual_bsl })
+}
+
+/// Freeze the served model for the native backends: deterministic
+/// parameters from [`ServeConfig::seed`], quantization from
+/// [`ServeConfig::knobs`], shared behind one [`Arc`] by every worker.
+pub fn prepared_for(cfg: &ServeConfig) -> Result<Arc<Prepared>> {
+    let mc = model_cfg_for(&cfg.model)?;
+    let quant = quant_from_knobs(&cfg.knobs)?;
+    let mut rng = Rng::new(cfg.seed);
+    let params = ModelParams::init(&mc, &mut rng);
+    Ok(Arc::new(Prepared::new(&mc, &params, quant)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrips_all_names() {
+        for b in Backend::ALL {
+            assert_eq!(Backend::parse(b.name()).unwrap(), b);
+            assert_eq!(format!("{b}"), b.name());
+        }
+        assert!(Backend::parse("tpu").is_err());
+    }
+
+    #[test]
+    fn auto_resolves_to_synthetic_without_artifacts() {
+        let b = Backend::Auto.resolve("definitely/not/a/dir", "scnet10");
+        assert_eq!(b, Backend::Synthetic);
+        assert_eq!(Backend::Sc.resolve("definitely/not/a/dir", "scnet10"), Backend::Sc);
+    }
+
+    #[test]
+    fn knob_mapping_matches_paper_configs() {
+        let q = quant_from_knobs(&Knobs::quantized(2).with_res_bsl(Some(16))).unwrap();
+        assert_eq!(q, QuantConfig::w2a2r16());
+        let q4 = quant_from_knobs(&Knobs::quantized(4)).unwrap();
+        assert_eq!(q4.act_bsl, Some(4));
+        assert_eq!(q4.residual_bsl, Some(16));
+        assert!(quant_from_knobs(&Knobs::float()).is_err());
+        // Disabled or float residuals are unrepresentable in the frozen
+        // SC network and must be rejected, not silently served at R16.
+        assert!(quant_from_knobs(&Knobs::quantized(2).with_res_bsl(None)).is_err());
+        assert!(quant_from_knobs(&Knobs::quantized(2).with_float_res()).is_err());
+    }
+
+    #[test]
+    fn prepared_for_is_deterministic_in_the_seed() {
+        let mut cfg = ServeConfig::new("artifacts", "tnn");
+        cfg.seed = 11;
+        let a = prepared_for(&cfg).unwrap();
+        let b = prepared_for(&cfg).unwrap();
+        assert_eq!(a.convs.len(), b.convs.len());
+        assert_eq!(a.fc.values, b.fc.values);
+        assert_eq!(a.input_alpha, b.input_alpha);
+    }
+
+    #[test]
+    fn unknown_model_is_rejected() {
+        assert!(model_cfg_for("resnet50").is_err());
+        let mut cfg = ServeConfig::new("artifacts", "resnet50");
+        cfg.seed = 1;
+        assert!(prepared_for(&cfg).is_err());
+    }
+}

@@ -37,7 +37,8 @@ use crate::runtime::trainer::Knobs;
 use crate::Result;
 use anyhow::Context;
 
-use super::executor::{BatchExecutor, ExecutorFactory, ExecutorSpec, PjrtExecutor};
+use super::backend::Backend;
+use super::executor::{BatchExecutor, ExecutorFactory, ExecutorSpec};
 use super::metrics::ServerMetrics;
 
 /// What to do with a request when every shard queue is full.
@@ -274,14 +275,18 @@ impl InferenceClient {
     }
 }
 
-/// Everything a PJRT worker needs to build its own serving stack.
+/// Everything a pool worker needs to build its serving stack, for any
+/// [`Backend`]. PJRT workers consume `artifacts`/`params`; the native
+/// `sc`/`binary` backends freeze the model from `model`/`knobs`/`seed`
+/// and batch at `batch`.
 #[derive(Clone, Debug)]
 pub struct ServeConfig {
     /// Artifacts directory.
     pub artifacts: String,
-    /// Model name (artifact prefix).
+    /// Model name (artifact prefix): `tnn`, `scnet10`, `scnet20`.
     pub model: String,
-    /// Trained parameters to install (None = exported init).
+    /// Trained parameters to install in PJRT workers (None = exported
+    /// init).
     pub params: Option<Vec<Vec<f32>>>,
     /// Quantization knobs for the serving path.
     pub knobs: Knobs,
@@ -289,8 +294,13 @@ pub struct ServeConfig {
     pub policy: BatchPolicy,
     /// Per-shard request queue depth (backpressure bound).
     pub queue_depth: usize,
-    /// Number of pool workers, each owning a PJRT stack.
+    /// Number of pool workers, each owning its executor.
     pub workers: usize,
+    /// Deterministic init seed for the native `sc`/`binary` backends
+    /// (the frozen model is a pure function of `(model, knobs, seed)`).
+    pub seed: u64,
+    /// Batch capacity of one native-backend execution.
+    pub batch: usize,
 }
 
 impl ServeConfig {
@@ -304,6 +314,8 @@ impl ServeConfig {
             policy: BatchPolicy::default(),
             queue_depth: 1024,
             workers: 1,
+            seed: 42,
+            batch: 8,
         }
     }
 }
@@ -350,23 +362,28 @@ pub struct Coordinator {
 }
 
 impl Coordinator {
+    /// Start a pool over a named [`Backend`] — the single entry point
+    /// the CLI, examples and benches share. `Backend::Auto` resolves
+    /// against the artifact store; every other backend is taken
+    /// literally. Blocks until every worker has built its executor.
+    pub fn start_backend(backend: Backend, cfg: ServeConfig) -> Result<Self> {
+        let pool =
+            PoolConfig { workers: cfg.workers, policy: cfg.policy, queue_depth: cfg.queue_depth };
+        let factory = backend.factory(cfg)?;
+        Self::start_with(factory, pool)
+    }
+
     /// Start a PJRT-backed pool; blocks until every worker has
     /// compiled its executables and is ready to serve (or any failed).
     pub fn start(cfg: ServeConfig) -> Result<Self> {
-        let pool =
-            PoolConfig { workers: cfg.workers, policy: cfg.policy, queue_depth: cfg.queue_depth };
-        let ServeConfig { artifacts, model, params, knobs, .. } = cfg;
-        let factory: ExecutorFactory = Box::new(move |_worker| {
-            let exec = PjrtExecutor::new(&artifacts, &model, params.as_deref(), knobs)?;
-            Ok(Box::new(exec))
-        });
-        Self::start_with(factory, pool)
+        Self::start_backend(Backend::Pjrt, cfg)
     }
 
     /// Start with automatic backend selection: the PJRT serving path
     /// when the model's AOT artifacts exist, else the synthetic demo
-    /// backend shaped `(image_len, classes)` (the shared fallback of
-    /// the CLI and `examples/serve.rs`).
+    /// backend shaped `(image_len, classes)` (for callers whose model
+    /// is not in the registry; registry models can just use
+    /// [`Coordinator::start_backend`] with [`Backend::Auto`]).
     pub fn start_auto(cfg: ServeConfig, fallback: (usize, usize)) -> Result<Self> {
         if crate::runtime::artifacts_ready(&cfg.artifacts, &cfg.model) {
             Self::start(cfg)
@@ -404,10 +421,10 @@ impl Coordinator {
             let handle = std::thread::Builder::new()
                 .name(format!("scnn-worker-{w}"))
                 .spawn(move || match (factory.as_ref())(w) {
-                    Ok(exec) => {
+                    Ok(mut exec) => {
                         let _ = ready_tx.send(Ok(exec.spec()));
                         drop(ready_tx);
-                        Self::worker_loop(exec.as_ref(), policy, &rx, &m, &shared);
+                        Self::worker_loop(exec.as_mut(), policy, &rx, &m, &shared);
                     }
                     Err(e) => {
                         let _ = ready_tx.send(Err(e));
@@ -442,7 +459,7 @@ impl Coordinator {
     /// One worker: batch its shard queue into the executor until the
     /// pool stops (then drain) or every sender disappears.
     fn worker_loop(
-        exec: &dyn BatchExecutor,
+        exec: &mut dyn BatchExecutor,
         policy: BatchPolicy,
         rx: &mpsc::Receiver<Request>,
         metrics: &ServerMetrics,
@@ -509,7 +526,7 @@ impl Coordinator {
 
     /// Pad, execute, fan out, record.
     fn execute_batch(
-        exec: &dyn BatchExecutor,
+        exec: &mut dyn BatchExecutor,
         spec: &ExecutorSpec,
         pending: Vec<Request>,
         metrics: &ServerMetrics,
@@ -520,7 +537,7 @@ impl Coordinator {
         for (i, r) in pending.iter().enumerate() {
             x[i * spec.image_len..(i + 1) * spec.image_len].copy_from_slice(&r.x);
         }
-        let result = exec.run_batch(&x).and_then(|logits| {
+        let result = exec.run_batch(&x, filled).and_then(|logits| {
             anyhow::ensure!(
                 logits.len() == spec.batch * spec.classes,
                 "executor returned {} logits, expected {}",

@@ -5,13 +5,24 @@
 //! [`ExecutorFactory`]. The factory indirection exists because PJRT
 //! handles are not `Send` (the `xla` crate wraps raw pointers in
 //! `Rc`): a [`Trainer`] can never cross a thread boundary, but a
-//! closure that builds one can. It is also the seam every later
-//! multi-backend PR plugs into — a worker neither knows nor cares
-//! whether its batches run on PJRT, a future GPU backend, or the
-//! in-process synthetic model used by tests and benches.
+//! closure that builds one can. It is also the seam the unified
+//! [`super::Backend`] registry plugs into — a worker neither knows nor
+//! cares whether its batches run on PJRT ([`PjrtExecutor`]), the native
+//! bit-exact SC engine ([`ScBatchExecutor`]), the binary fixed-point
+//! baseline ([`BinaryBatchExecutor`]), or the in-process synthetic
+//! model used by tests and benches ([`SyntheticExecutor`]).
+//!
+//! `run_batch` takes `&mut self`: a worker exclusively owns its
+//! executor, and the native SC engine reuses per-worker scratch arenas
+//! across batches (the zero-allocation steady state).
 
+use std::sync::Arc;
 use std::time::Duration;
 
+use crate::nn::binary_exec::BinaryExecutor;
+use crate::nn::sc_engine::ScEngine;
+use crate::nn::sc_exec::Prepared;
+use crate::nn::tensor::Tensor;
 use crate::runtime::{trainer::Knobs, Runtime, Trainer};
 use crate::Result;
 
@@ -34,7 +45,14 @@ pub trait BatchExecutor {
 
     /// Run one padded batch of `spec().batch * spec().image_len`
     /// floats, returning `spec().batch * spec().classes` logits.
-    fn run_batch(&self, x: &[f32]) -> Result<Vec<f32>>;
+    /// `filled` is the number of live rows at the front of the batch
+    /// (the rest is zero padding): backends with per-row cost compute
+    /// only those rows and may return anything (canonically zeros) in
+    /// the padded rows, which the pool never reads. Fixed-shape
+    /// backends (AOT-compiled PJRT) are free to ignore it.
+    /// Takes `&mut self` so stateful backends can reuse their scratch
+    /// arenas across batches.
+    fn run_batch(&mut self, x: &[f32], filled: usize) -> Result<Vec<f32>>;
 }
 
 /// Builds a worker's executor inside the worker thread. The argument
@@ -79,8 +97,123 @@ impl BatchExecutor for PjrtExecutor {
         self.spec
     }
 
-    fn run_batch(&self, x: &[f32]) -> Result<Vec<f32>> {
+    fn run_batch(&mut self, x: &[f32], _filled: usize) -> Result<Vec<f32>> {
+        // The AOT executable has a fixed batch shape; padded rows cost
+        // the same either way.
         self.trainer.logits(x, self.knobs, true)
+    }
+}
+
+/// Native SC serving backend: the batched, bit-exact
+/// [`ScEngine`] behind the pool — the paper's deterministic-coding
+/// datapath served directly, no AOT artifacts required. All workers
+/// share one frozen [`Prepared`] (`Arc`); each worker owns its own
+/// engine (scratch arenas are per-worker state). Logits are the SC
+/// executor's integer class scores, converted to `f32` losslessly for
+/// the wire format.
+pub struct ScBatchExecutor {
+    engine: ScEngine,
+    spec: ExecutorSpec,
+    logits: Vec<i64>,
+}
+
+impl ScBatchExecutor {
+    /// Build over a shared frozen model, with a fixed per-execution
+    /// batch capacity.
+    pub fn new(prep: Arc<Prepared>, batch: usize) -> Self {
+        let engine = ScEngine::new(prep);
+        let batch = batch.max(1);
+        let spec = ExecutorSpec {
+            image_len: engine.image_len(),
+            batch,
+            classes: engine.classes(),
+        };
+        Self { engine, spec, logits: vec![0i64; batch * spec.classes] }
+    }
+
+    /// Factory for [`super::Coordinator::start_with`]: every worker
+    /// shares `prep`, each builds its own engine in-thread.
+    pub fn factory(prep: Arc<Prepared>, batch: usize) -> ExecutorFactory {
+        Box::new(move |_worker| Ok(Box::new(ScBatchExecutor::new(prep.clone(), batch))))
+    }
+}
+
+impl BatchExecutor for ScBatchExecutor {
+    fn spec(&self) -> ExecutorSpec {
+        self.spec
+    }
+
+    fn run_batch(&mut self, x: &[f32], filled: usize) -> Result<Vec<f32>> {
+        anyhow::ensure!(
+            x.len() == self.spec.batch * self.spec.image_len,
+            "batch input length {} != {}",
+            x.len(),
+            self.spec.batch * self.spec.image_len
+        );
+        // Only the live rows are forwarded — a partial batch at light
+        // load must not pay full-batch SC-model cost for zero padding.
+        let filled = filled.min(self.spec.batch);
+        self.engine.forward_batch_into(
+            &x[..filled * self.spec.image_len],
+            &mut self.logits[..filled * self.spec.classes],
+        );
+        for v in &mut self.logits[filled * self.spec.classes..] {
+            *v = 0;
+        }
+        Ok(self.logits.iter().map(|&v| v as f32).collect())
+    }
+}
+
+/// Binary fixed-point baseline behind the pool: the conventional
+/// datapath over the same frozen network, for apples-to-apples serving
+/// comparisons against [`ScBatchExecutor`]. Per-image path (the
+/// baseline is not the optimized engine).
+pub struct BinaryBatchExecutor {
+    exec: BinaryExecutor,
+    spec: ExecutorSpec,
+}
+
+impl BinaryBatchExecutor {
+    /// Build over a shared frozen model.
+    pub fn new(prep: Arc<Prepared>, batch: usize) -> Self {
+        let (c, h, w) = prep.cfg.input;
+        let spec = ExecutorSpec {
+            image_len: c * h * w,
+            batch: batch.max(1),
+            classes: prep.cfg.num_classes,
+        };
+        Self { exec: BinaryExecutor::new(prep), spec }
+    }
+
+    /// Factory for [`super::Coordinator::start_with`].
+    pub fn factory(prep: Arc<Prepared>, batch: usize) -> ExecutorFactory {
+        Box::new(move |_worker| Ok(Box::new(BinaryBatchExecutor::new(prep.clone(), batch))))
+    }
+}
+
+impl BatchExecutor for BinaryBatchExecutor {
+    fn spec(&self) -> ExecutorSpec {
+        self.spec
+    }
+
+    fn run_batch(&mut self, x: &[f32], filled: usize) -> Result<Vec<f32>> {
+        anyhow::ensure!(
+            x.len() == self.spec.batch * self.spec.image_len,
+            "batch input length {} != {}",
+            x.len(),
+            self.spec.batch * self.spec.image_len
+        );
+        let (c, h, w) = self.exec.prepared().cfg.input;
+        let mut out = Vec::with_capacity(self.spec.batch * self.spec.classes);
+        for b in 0..filled.min(self.spec.batch) {
+            let img = Tensor::from_vec(
+                &[c, h, w],
+                x[b * self.spec.image_len..(b + 1) * self.spec.image_len].to_vec(),
+            );
+            out.extend(self.exec.forward(&img).into_iter().map(|v| v as f32));
+        }
+        out.resize(self.spec.batch * self.spec.classes, 0.0);
+        Ok(out)
     }
 }
 
@@ -148,7 +281,7 @@ impl BatchExecutor for SyntheticExecutor {
         self.spec
     }
 
-    fn run_batch(&self, x: &[f32]) -> Result<Vec<f32>> {
+    fn run_batch(&mut self, x: &[f32], filled: usize) -> Result<Vec<f32>> {
         anyhow::ensure!(
             x.len() == self.spec.batch * self.spec.image_len,
             "batch input length {} != {}",
@@ -159,10 +292,11 @@ impl BatchExecutor for SyntheticExecutor {
             std::thread::sleep(self.latency);
         }
         let mut out = Vec::with_capacity(self.spec.batch * self.spec.classes);
-        for b in 0..self.spec.batch {
+        for b in 0..filled.min(self.spec.batch) {
             let image = &x[b * self.spec.image_len..(b + 1) * self.spec.image_len];
             out.extend(self.reference_logits(image));
         }
+        out.resize(self.spec.batch * self.spec.classes, 0.0);
         Ok(out)
     }
 }
@@ -174,16 +308,21 @@ mod tests {
     #[test]
     fn synthetic_is_deterministic_and_shape_correct() {
         let spec = ExecutorSpec { image_len: 8, batch: 3, classes: 4 };
-        let exec = SyntheticExecutor::new(spec);
+        let mut exec = SyntheticExecutor::new(spec);
         let x: Vec<f32> = (0..24).map(|i| i as f32 * 0.1).collect();
-        let a = exec.run_batch(&x).unwrap();
-        let b = exec.run_batch(&x).unwrap();
+        let a = exec.run_batch(&x, 3).unwrap();
+        let b = exec.run_batch(&x, 3).unwrap();
         assert_eq!(a, b);
         assert_eq!(a.len(), 12);
         // Row 1 equals the reference logits of image 1.
         assert_eq!(&a[4..8], exec.reference_logits(&x[8..16]).as_slice());
+        // Padded rows (filled < batch) come back zeroed, full length.
+        let p = exec.run_batch(&x, 1).unwrap();
+        assert_eq!(p.len(), 12);
+        assert_eq!(&p[..4], &a[..4]);
+        assert!(p[4..].iter().all(|&v| v == 0.0));
         // Input length is validated.
-        assert!(exec.run_batch(&x[..23]).is_err());
+        assert!(exec.run_batch(&x[..23], 2).is_err());
     }
 
     #[test]
@@ -195,5 +334,61 @@ mod tests {
         img[3] = -2.0;
         let b = exec.reference_logits(&img);
         assert_ne!(a, b);
+    }
+
+    #[test]
+    fn sc_batch_executor_matches_sc_executor() {
+        use crate::nn::model::{ModelCfg, ModelParams};
+        use crate::nn::quant::QuantConfig;
+        use crate::nn::sc_exec::ScExecutor;
+        use crate::util::Rng;
+
+        let cfg = ModelCfg::tnn();
+        let mut rng = Rng::new(7);
+        let params = ModelParams::init(&cfg, &mut rng);
+        let prep = Arc::new(Prepared::new(
+            &cfg,
+            &params,
+            QuantConfig { act_bsl: Some(2), weight_ternary: true, residual_bsl: None },
+        ));
+        let mut be = ScBatchExecutor::new(prep.clone(), 2);
+        assert_eq!(be.spec(), ExecutorSpec { image_len: 784, batch: 2, classes: 10 });
+        let x: Vec<f32> = (0..2 * 784).map(|_| rng.normal() as f32).collect();
+        let logits = be.run_batch(&x, 2).unwrap();
+        assert_eq!(logits.len(), 20);
+        let exec = ScExecutor::new(prep);
+        for b in 0..2 {
+            let img = Tensor::from_vec(&[1, 28, 28], x[b * 784..(b + 1) * 784].to_vec());
+            let expect: Vec<f32> = exec.forward(&img).into_iter().map(|v| v as f32).collect();
+            assert_eq!(&logits[b * 10..(b + 1) * 10], expect.as_slice(), "row {b}");
+        }
+        // Partial batch: only the live row is computed, padding is zeroed.
+        let partial = be.run_batch(&x, 1).unwrap();
+        assert_eq!(&partial[..10], &logits[..10]);
+        assert!(partial[10..].iter().all(|&v| v == 0.0));
+        // Wrong batch length is rejected.
+        assert!(be.run_batch(&x[..784], 1).is_err());
+    }
+
+    #[test]
+    fn binary_batch_executor_matches_sc_on_clean_path() {
+        use crate::nn::model::{ModelCfg, ModelParams};
+        use crate::nn::quant::QuantConfig;
+        use crate::util::Rng;
+
+        let cfg = ModelCfg::tnn();
+        let mut rng = Rng::new(8);
+        let params = ModelParams::init(&cfg, &mut rng);
+        let prep = Arc::new(Prepared::new(
+            &cfg,
+            &params,
+            QuantConfig { act_bsl: Some(2), weight_ternary: true, residual_bsl: None },
+        ));
+        let mut sc = ScBatchExecutor::new(prep.clone(), 1);
+        let mut bin = BinaryBatchExecutor::new(prep, 1);
+        assert_eq!(sc.spec(), bin.spec());
+        let x: Vec<f32> = (0..784).map(|_| rng.normal() as f32).collect();
+        // Fault-free, the binary datapath computes the same network.
+        assert_eq!(sc.run_batch(&x, 1).unwrap(), bin.run_batch(&x, 1).unwrap());
     }
 }

@@ -14,23 +14,33 @@
 //!
 //! Layering (see `docs/SERVING.md` for every knob and field):
 //!
+//! * [`backend`] — the unified [`Backend`] registry
+//!   (`auto|pjrt|synthetic|sc|binary`): one name → one
+//!   [`ExecutorFactory`], shared by the CLI, examples and benches.
 //! * [`executor`] — the backend seam: [`BatchExecutor`] +
 //!   [`ExecutorFactory`] (PJRT handles are not `Send`, so each worker
 //!   builds its own backend in-thread), with [`PjrtExecutor`] for the
-//!   real serving path and [`SyntheticExecutor`] for tests/benches.
+//!   AOT serving path, [`ScBatchExecutor`] for the native bit-exact SC
+//!   engine, [`BinaryBatchExecutor`] for the fixed-point baseline and
+//!   [`SyntheticExecutor`] for tests/benches.
 //! * [`batcher`] — the pool: [`Coordinator`], [`InferenceClient`],
 //!   [`BatchPolicy`] (adaptive hold time), [`OverloadPolicy`]
 //!   (backpressure vs load shedding), [`ServeConfig`]/[`PoolConfig`].
 //! * [`metrics`] — [`ServerMetrics`] per worker, aggregated into one
 //!   [`MetricsSnapshot`].
 
+pub mod backend;
 pub mod batcher;
 pub mod executor;
 pub mod metrics;
 
+pub use backend::Backend;
 pub use batcher::{
     is_shed_error, BatchPolicy, Coordinator, InferenceClient, OverloadPolicy, PoolConfig,
     ServeConfig, SHED_ERROR,
 };
-pub use executor::{BatchExecutor, ExecutorFactory, ExecutorSpec, PjrtExecutor, SyntheticExecutor};
+pub use executor::{
+    BatchExecutor, BinaryBatchExecutor, ExecutorFactory, ExecutorSpec, PjrtExecutor,
+    ScBatchExecutor, SyntheticExecutor,
+};
 pub use metrics::{MetricsSnapshot, ServerMetrics, WorkerCounts};

@@ -63,6 +63,9 @@ pub fn ber_sweep(
     seed: u64,
 ) -> BerSweep {
     let (images, labels) = data.batch(Split::Test, 0, n_eval);
+    // One frozen model shared by every executor in the sweep (the Arc
+    // clone is a refcount bump, not a copy of the weights/SI tables).
+    let prep = std::sync::Arc::new(prep.clone());
     let clean = ScExecutor::new(prep.clone());
     let soft = clean.accuracy(&images, &labels);
     let mut points = Vec::with_capacity(bers.len());

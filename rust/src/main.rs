@@ -4,7 +4,8 @@
 //! scnn exp <id>|all [--full] [--artifacts DIR] [--seed N]
 //! scnn train --model NAME [--steps N] [--act-bsl B] [--artifacts DIR]
 //! scnn serve --model NAME [--workers N] [--clients N] [--requests N]
-//!            [--backend auto|pjrt|synthetic] [--shed] [--artifacts DIR]
+//!            [--backend auto|pjrt|synthetic|sc|binary] [--batch N]
+//!            [--seed N] [--shed] [--artifacts DIR]
 //! scnn info
 //! ```
 //!
@@ -12,12 +13,10 @@
 
 use std::collections::HashMap;
 
-use scnn::coordinator::{
-    Coordinator, OverloadPolicy, PoolConfig, ServeConfig, SyntheticExecutor,
-};
+use scnn::coordinator::{Backend, Coordinator, OverloadPolicy, ServeConfig};
 use scnn::data::{Dataset, Split, SynthCifar, SynthDigits};
 use scnn::exp;
-use scnn::runtime::{artifacts_ready, trainer::Knobs, Runtime, Trainer};
+use scnn::runtime::{trainer::Knobs, Runtime, Trainer};
 use scnn::Result;
 
 fn parse_flags(args: &[String]) -> (Vec<String>, HashMap<String, String>) {
@@ -75,7 +74,8 @@ fn main() -> Result<()> {
                  \n      ids: {}\n\
                  \n  train --model tnn|scnet10|scnet20 [--steps N] [--act-bsl B] [--res-bsl B]\n\
                  \n  serve --model NAME [--workers N] [--clients N] [--requests N] [--steps N]\n\
-                 \n        [--backend auto|pjrt|synthetic] [--shed]\n\
+                 \n        [--backend auto|pjrt|synthetic|sc|binary] [--batch N] [--seed N] [--shed]\n\
+                 \n        (--seed pins the sc/binary backends' deterministic model freeze)\n\
                  \n  info   print runtime/artifact status",
                 exp::ALL_IDS.join(" ")
             );
@@ -143,38 +143,32 @@ fn cmd_serve(flags: &HashMap<String, String>, artifacts: &str) -> Result<()> {
     let steps: usize = flags.get("steps").and_then(|s| s.parse().ok()).unwrap_or(0);
     let workers: usize = flags.get("workers").and_then(|s| s.parse().ok()).unwrap_or(1).max(1);
     let clients: usize = flags.get("clients").and_then(|s| s.parse().ok()).unwrap_or(4).max(1);
-    let backend = flags.get("backend").map(String::as_str).unwrap_or("auto");
+    let seed: u64 = flags.get("seed").and_then(|s| s.parse().ok()).unwrap_or(42);
+    let backend = Backend::parse(flags.get("backend").map(String::as_str).unwrap_or("auto"))?;
     let knobs = knobs_from_flags(flags);
     let data = dataset_for(&model);
     let mut policy = scnn::coordinator::BatchPolicy::default();
     if flags.contains_key("shed") {
         policy.overload = OverloadPolicy::Shed;
     }
-    let use_pjrt = match backend {
-        "pjrt" => true,
-        "synthetic" => false,
-        "auto" => artifacts_ready(artifacts, &model),
-        other => anyhow::bail!("unknown --backend {other} (auto|pjrt|synthetic)"),
-    };
-    let coord = if use_pjrt {
-        let mut cfg = ServeConfig::new(artifacts, &model);
-        cfg.knobs = knobs;
-        cfg.workers = workers;
-        cfg.policy = policy;
-        if steps > 0 {
-            println!("warm-up training for {steps} steps...");
-            let rt = Runtime::new(artifacts)?;
-            let mut tr = Trainer::new(&rt, &model)?;
-            tr.train_qat(data.as_ref(), steps / 2, steps / 2, 0.05, knobs, |_, _| {})?;
-            cfg.params = Some(tr.params().to_vec());
-        }
-        Coordinator::start(cfg)?
-    } else {
-        println!("backend: synthetic (deterministic in-process model, no artifacts needed)");
-        let (c, h, w) = data.shape();
-        let factory = SyntheticExecutor::demo_factory(c * h * w, data.num_classes());
-        Coordinator::start_with(factory, PoolConfig { workers, policy, queue_depth: 1024 })?
-    };
+    let mut cfg = ServeConfig::new(artifacts, &model);
+    cfg.knobs = knobs;
+    cfg.workers = workers;
+    cfg.policy = policy;
+    cfg.seed = seed;
+    if let Some(b) = flags.get("batch").and_then(|s| s.parse().ok()) {
+        cfg.batch = b;
+    }
+    let resolved = backend.resolve(artifacts, &model);
+    println!("backend: {resolved}");
+    if resolved == Backend::Pjrt && steps > 0 {
+        println!("warm-up training for {steps} steps...");
+        let rt = Runtime::new(artifacts)?;
+        let mut tr = Trainer::new(&rt, &model)?;
+        tr.train_qat(data.as_ref(), steps / 2, steps / 2, 0.05, knobs, |_, _| {})?;
+        cfg.params = Some(tr.params().to_vec());
+    }
+    let coord = Coordinator::start_backend(resolved, cfg)?;
     let client = coord.client();
     let (c, h, w) = data.shape();
     println!(

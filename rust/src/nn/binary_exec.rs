@@ -13,6 +13,8 @@
 //!    catastrophically, which is exactly why Fig 5 shows binary designs
 //!    degrading much faster than SC at equal BER.
 
+use std::sync::Arc;
+
 use crate::util::Rng;
 use super::layers;
 use super::model::{LayerCfg, ModelCfg, ModelParams};
@@ -118,19 +120,25 @@ pub fn accuracy_float(
 /// Binary fixed-point executor over the same frozen network as the SC
 /// executor, with faults injected into two's-complement words.
 pub struct BinaryExecutor {
-    prep: Prepared,
+    prep: Arc<Prepared>,
     fault: Option<FaultCfg>,
 }
 
 impl BinaryExecutor {
-    /// Fault-free.
-    pub fn new(prep: Prepared) -> Self {
-        Self { prep, fault: None }
+    /// Fault-free. Accepts an owned [`Prepared`] or a shared
+    /// `Arc<Prepared>` (pool workers share one frozen model).
+    pub fn new(prep: impl Into<Arc<Prepared>>) -> Self {
+        Self { prep: prep.into(), fault: None }
     }
 
     /// With word-level fault injection.
-    pub fn with_faults(prep: Prepared, fault: FaultCfg) -> Self {
-        Self { prep, fault: Some(fault) }
+    pub fn with_faults(prep: impl Into<Arc<Prepared>>, fault: FaultCfg) -> Self {
+        Self { prep: prep.into(), fault: Some(fault) }
+    }
+
+    /// The frozen network.
+    pub fn prepared(&self) -> &Prepared {
+        &self.prep
     }
 
     /// Forward one image → integer class scores. Fault-free, this is
@@ -153,7 +161,7 @@ impl BinaryExecutor {
         let mut res: Option<CodeMap> = None;
         let mut li = 0usize;
         let mut gap: Option<Vec<i64>> = None;
-        for l in &self.prep.cfg.layers.clone() {
+        for l in &self.prep.cfg.layers {
             match l {
                 LayerCfg::Conv { .. } => {
                     let pc = &self.prep.convs[li];

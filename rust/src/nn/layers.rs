@@ -67,6 +67,48 @@ pub fn im2col(x: &Tensor, cs: &ConvShape) -> (Vec<f32>, usize, usize) {
     (out, oh, ow)
 }
 
+/// Integer im2col into a caller-owned buffer — the zero-allocation
+/// entry point of the batched [`crate::nn::sc_engine::ScEngine`].
+/// Unfolds a CHW plane of quantized codes into rows of length
+/// `k·k·cin`, one row per output pixel; padding contributes zeros.
+/// `out` must be exactly `oh·ow·acc_width` long; every element is
+/// written (no stale data survives). Semantically identical to
+/// [`im2col`] on integer-valued tensors.
+pub fn im2col_i32_into(
+    x: &[i32],
+    (c, h, w): (usize, usize, usize),
+    cs: &ConvShape,
+    out: &mut [i32],
+) -> (usize, usize) {
+    assert_eq!(c, cs.cin);
+    assert_eq!(x.len(), c * h * w);
+    let (oh, ow) = cs.out_hw(h, w);
+    let cols = cs.acc_width();
+    assert_eq!(out.len(), oh * ow * cols, "im2col_i32_into: buffer size mismatch");
+    for oy in 0..oh {
+        for ox in 0..ow {
+            let row = (oy * ow + ox) * cols;
+            let mut idx = 0;
+            for ci in 0..c {
+                for ky in 0..cs.k {
+                    for kx in 0..cs.k {
+                        let iy = (oy * cs.stride + ky) as isize - cs.pad as isize;
+                        let ix = (ox * cs.stride + kx) as isize - cs.pad as isize;
+                        out[row + idx] =
+                            if iy >= 0 && ix >= 0 && (iy as usize) < h && (ix as usize) < w {
+                                x[(ci * h + iy as usize) * w + ix as usize]
+                            } else {
+                                0
+                            };
+                        idx += 1;
+                    }
+                }
+            }
+        }
+    }
+    (oh, ow)
+}
+
 /// Float conv2d via im2col (the reference semantics both executors are
 /// checked against). Weights are (O, I, K, K) row-major.
 pub fn conv2d(x: &Tensor, w: &Tensor, cs: &ConvShape) -> Tensor {
@@ -233,6 +275,21 @@ mod tests {
         let yf = conv2d(&xf, &wf, &cs);
         assert_eq!((oh, ow), (5, 5));
         for (a, b) in yi.iter().zip(yf.data()) {
+            assert_eq!(*a as f32, *b);
+        }
+    }
+
+    #[test]
+    fn im2col_i32_into_matches_float_im2col() {
+        let cs = ConvShape { cin: 2, cout: 1, k: 3, stride: 2, pad: 1 };
+        let (c, h, w) = (2usize, 5usize, 4usize);
+        let xq: Vec<i32> = (0..c * h * w).map(|i| (i as i32 % 7) - 3).collect();
+        let xf = Tensor::from_vec(&[c, h, w], xq.iter().map(|&v| v as f32).collect());
+        let (cols_f, oh, ow) = im2col(&xf, &cs);
+        let mut cols_i = vec![99i32; oh * ow * cs.acc_width()];
+        let (oh2, ow2) = im2col_i32_into(&xq, (c, h, w), &cs, &mut cols_i);
+        assert_eq!((oh, ow), (oh2, ow2));
+        for (a, b) in cols_i.iter().zip(&cols_f) {
             assert_eq!(*a as f32, *b);
         }
     }

@@ -2,7 +2,11 @@
 //! configurations, and the two executors the paper compares —
 //! the **bit-exact SC executor** (runs the quantized network through the
 //! circuit simulators of [`crate::circuits`]) and the **binary integer
-//! baseline** (a conventional fixed-point datapath).
+//! baseline** (a conventional fixed-point datapath) — plus the batched
+//! **serving engine** ([`sc_engine::ScEngine`]): the same frozen network
+//! as the SC executor, bit-identical logits, but with pre-sized scratch
+//! arenas and synthesized count tables so the steady-state request path
+//! allocates nothing.
 //!
 //! The quantization semantics here *must* match `python/compile/model.py`
 //! exactly: the JAX side trains with fake-quant straight-through
@@ -14,9 +18,11 @@ pub mod binary_exec;
 pub mod layers;
 pub mod model;
 pub mod quant;
+pub mod sc_engine;
 pub mod sc_exec;
 pub mod tensor;
 
 pub use model::{LayerCfg, ModelCfg};
 pub use quant::QuantConfig;
+pub use sc_engine::ScEngine;
 pub use tensor::Tensor;

@@ -1,0 +1,427 @@
+//! Batched, serving-grade SC inference engine.
+//!
+//! [`ScEngine`] evaluates the same frozen network as
+//! [`super::sc_exec::ScExecutor`] — bit-identical logits, asserted in
+//! `rust/tests/sc_serve.rs` — but is shaped for the request path
+//! instead of offline experiments:
+//!
+//! * **Shared model.** The engine holds `Arc<Prepared>`, so a pool of
+//!   workers shares one copy of the ternarized weights and SI tables
+//!   instead of deep-cloning them per worker.
+//! * **Pre-sized scratch arenas.** All intermediate state — im2col
+//!   column buffers, ping-pong activation planes, residual planes and
+//!   the GAP accumulator — is allocated once at construction from the
+//!   model's static geometry and reused for every image. The
+//!   steady-state forward path performs **no heap allocation**: the
+//!   inner conv loop is integer dot products plus table lookups over
+//!   caller-owned slices (the `*_into` discipline of
+//!   [`crate::coding::thermometer`] and [`crate::circuits`]).
+//! * **Synthesized count tables.** Per-channel selective interconnects
+//!   and the residual re-scaling block are folded into lookup tables at
+//!   construction ([`SelectiveInterconnect::count_table`],
+//!   [`align_res_count`]), which is exact: both are pure monotone
+//!   functions of the accumulated count. This is the same
+//!   "deterministic coding makes everything a count function" property
+//!   the paper builds on (DESIGN.md §Hardware-Adaptation: activations
+//!   stay thermometer/ternary codes end-to-end, so a layer is fully
+//!   described by its count-transfer function) — the engine just
+//!   evaluates that function by indexed load instead of tap scan.
+//!
+//! The engine is the fault-free serving path; fault injection (Fig 5)
+//! stays on [`super::sc_exec::ScExecutor`], which walks actual bit
+//! vectors. Throughput floors for both live in DESIGN.md §Perf and are
+//! tracked by `rust/benches/sc_serve.rs` → `BENCH_sc.json`.
+
+use std::sync::Arc;
+
+use crate::circuits::si::SelectiveInterconnect;
+use super::layers::im2col_i32_into;
+use super::model::LayerCfg;
+use super::sc_exec::{align_res_count, Prepared};
+use super::tensor::Tensor;
+
+/// Per-conv-layer execution plan: static geometry plus the synthesized
+/// count tables, so the hot loop touches no model-construction code.
+struct ConvPlan {
+    /// Input plane dims (C, H, W).
+    in_dims: (usize, usize, usize),
+    /// Output spatial dims.
+    oh: usize,
+    ow: usize,
+    /// Accumulation width (products per output pixel).
+    acc_w: usize,
+    /// Count-domain offset `acc_w · L/2` added to the dot product.
+    base: i64,
+    /// LUT row width: `bsn_width + 1` (one entry per possible count).
+    lut_w: usize,
+    /// Main SI transfer, channel-major `cout × lut_w`, already offset
+    /// to signed codes: `lut[c] = apply_count(c) - out_bsl/2`.
+    si_main_lut: Vec<i32>,
+    /// Residual-tap SI transfer (layers with `res_out`).
+    si_res_lut: Option<Vec<i32>>,
+    /// Residual alignment `res count → aligned count` (§III.C), for
+    /// layers with `res_in`. Indexed by `rq + res_bsl/2 ∈ 0..=res_bsl`.
+    align_lut: Option<Vec<i64>>,
+}
+
+/// The batched SC inference engine. See the module docs.
+pub struct ScEngine {
+    prep: Arc<Prepared>,
+    plans: Vec<ConvPlan>,
+    /// im2col scratch, sized for the widest layer.
+    cols: Vec<i32>,
+    /// Ping-pong activation planes (input of the current layer lives in
+    /// `plane_a`, its output is written to `plane_b`, then swapped).
+    plane_a: Vec<i32>,
+    plane_b: Vec<i32>,
+    /// Ping-pong residual planes (read old tap, write new tap).
+    res_a: Vec<i32>,
+    res_b: Vec<i32>,
+    /// Global-average-pool accumulator.
+    gap: Vec<i64>,
+}
+
+impl ScEngine {
+    /// Build an engine over a frozen network, pre-sizing every scratch
+    /// arena from the model's static geometry and synthesizing the
+    /// per-channel count tables.
+    pub fn new(prep: impl Into<Arc<Prepared>>) -> Self {
+        let prep: Arc<Prepared> = prep.into();
+        let act_bsl = prep.act_bsl();
+        let half = (act_bsl / 2) as i64;
+        let res_bsl = prep.res_bsl();
+        let mut dims = prep.cfg.input;
+        let mut res_dims: Option<(usize, usize, usize)> = None;
+        let mut plans = Vec::with_capacity(prep.convs.len());
+        let mut max_cols = 0usize;
+        let mut max_plane = dims.0 * dims.1 * dims.2;
+        let mut max_res = 0usize;
+        let mut max_ch = dims.0;
+        let mut ci = 0usize;
+        for l in &prep.cfg.layers {
+            if let LayerCfg::Conv { shape, .. } = l {
+                let pc = &prep.convs[ci];
+                let (oh, ow) = shape.out_hw(dims.1, dims.2);
+                let npix = oh * ow;
+                let acc_w = shape.acc_width();
+                let lut_w = pc.bsn_width + 1;
+                let si_main_lut = flatten_si_luts(&pc.si_main, lut_w);
+                let si_res_lut =
+                    pc.si_res.as_ref().map(|sis| flatten_si_luts(sis, lut_w));
+                let align_lut = if pc.res_in {
+                    let rd = res_dims.expect("res_in conv without a residual producer");
+                    assert_eq!(
+                        rd,
+                        (shape.cout, oh, ow),
+                        "residual tap geometry must match the consuming conv output"
+                    );
+                    Some(
+                        (0..=res_bsl)
+                            .map(|c| align_res_count(c, res_bsl, pc.res_shift) as i64)
+                            .collect(),
+                    )
+                } else {
+                    None
+                };
+                plans.push(ConvPlan {
+                    in_dims: dims,
+                    oh,
+                    ow,
+                    acc_w,
+                    base: acc_w as i64 * half,
+                    lut_w,
+                    si_main_lut,
+                    si_res_lut,
+                    align_lut,
+                });
+                max_cols = max_cols.max(npix * acc_w);
+                dims = (shape.cout, oh, ow);
+                max_plane = max_plane.max(dims.0 * dims.1 * dims.2);
+                if pc.si_res.is_some() {
+                    res_dims = Some(dims);
+                    max_res = max_res.max(dims.0 * dims.1 * dims.2);
+                }
+                max_ch = max_ch.max(shape.cout);
+                ci += 1;
+            }
+        }
+        Self {
+            prep,
+            plans,
+            cols: vec![0; max_cols],
+            plane_a: vec![0; max_plane],
+            plane_b: vec![0; max_plane],
+            res_a: vec![0; max_res],
+            res_b: vec![0; max_res],
+            gap: vec![0; max_ch],
+        }
+    }
+
+    /// The frozen network.
+    pub fn prepared(&self) -> &Prepared {
+        &self.prep
+    }
+
+    /// The shared handle to the frozen network.
+    pub fn prepared_arc(&self) -> &Arc<Prepared> {
+        &self.prep
+    }
+
+    /// Flattened image length (C·H·W).
+    pub fn image_len(&self) -> usize {
+        let (c, h, w) = self.prep.cfg.input;
+        c * h * w
+    }
+
+    /// Logits per image.
+    pub fn classes(&self) -> usize {
+        self.prep.cfg.num_classes
+    }
+
+    /// Forward one flat CHW image into a caller-owned logits slice.
+    /// Allocation-free in steady state; bit-identical to
+    /// [`super::sc_exec::ScExecutor::forward`].
+    pub fn forward_into(&mut self, image: &[f32], logits: &mut [i64]) {
+        let Self { prep, plans, cols, plane_a, plane_b, res_a, res_b, gap } = self;
+        let prep: &Prepared = &**prep;
+        let (c0, h0, w0) = prep.cfg.input;
+        let n0 = c0 * h0 * w0;
+        assert_eq!(image.len(), n0, "image length mismatch");
+        assert_eq!(logits.len(), prep.cfg.num_classes, "logits length mismatch");
+        // Input encoding at the trained scale (same rule as ScExecutor).
+        let halff = (prep.act_bsl() / 2) as f32;
+        for (dst, &v) in plane_a[..n0].iter_mut().zip(image.iter()) {
+            *dst = (v / prep.input_alpha).round().clamp(-halff, halff) as i32;
+        }
+        let rhalf = (prep.res_bsl() / 2) as i64;
+        let mut dims = prep.cfg.input;
+        let mut li = 0usize;
+        let mut gap_len: Option<usize> = None;
+        for l in &prep.cfg.layers {
+            match l {
+                LayerCfg::Conv { .. } => {
+                    let pc = &prep.convs[li];
+                    let plan = &plans[li];
+                    let (cin, h, w) = plan.in_dims;
+                    let npix = plan.oh * plan.ow;
+                    let acc = plan.acc_w;
+                    im2col_i32_into(
+                        &plane_a[..cin * h * w],
+                        (cin, h, w),
+                        &pc.shape,
+                        &mut cols[..npix * acc],
+                    );
+                    for co in 0..pc.shape.cout {
+                        let wrow = &pc.wq.values[co * acc..(co + 1) * acc];
+                        let main_lut =
+                            &plan.si_main_lut[co * plan.lut_w..(co + 1) * plan.lut_w];
+                        let res_lut = plan
+                            .si_res_lut
+                            .as_deref()
+                            .map(|l| &l[co * plan.lut_w..(co + 1) * plan.lut_w]);
+                        let res_in = plan
+                            .align_lut
+                            .as_deref()
+                            .map(|lut| (lut, &res_a[co * npix..(co + 1) * npix]));
+                        let out_row = &mut plane_b[co * npix..(co + 1) * npix];
+                        for p in 0..npix {
+                            let xr = &cols[p * acc..(p + 1) * acc];
+                            // Product counts through TernaryMultiplier
+                            // semantics: count(a·w) = a·w + L/2 per
+                            // product, summed by the BSN (popcount).
+                            let mut count = plan.base;
+                            for (x, wv) in xr.iter().zip(wrow.iter()) {
+                                count += *x as i64 * *wv as i64;
+                            }
+                            // Residual contribution (§III.C alignment).
+                            if let Some((lut, rrow)) = res_in {
+                                count += lut[(rrow[p] as i64 + rhalf) as usize];
+                            }
+                            let c = (count.max(0) as usize).min(plan.lut_w - 1);
+                            out_row[p] = main_lut[c];
+                            if let Some(rl) = res_lut {
+                                res_b[co * npix + p] = rl[c];
+                            }
+                        }
+                    }
+                    std::mem::swap(plane_a, plane_b);
+                    if pc.si_res.is_some() {
+                        std::mem::swap(res_a, res_b);
+                    }
+                    dims = (pc.shape.cout, plan.oh, plan.ow);
+                    li += 1;
+                }
+                LayerCfg::GlobalAvgPool => {
+                    let (c, h, w) = dims;
+                    for ch in 0..c {
+                        let mut s = 0i64;
+                        for &q in &plane_a[ch * h * w..(ch + 1) * h * w] {
+                            s += q as i64;
+                        }
+                        gap[ch] = s;
+                    }
+                    gap_len = Some(c);
+                }
+                LayerCfg::Linear { in_dim, out_dim } => {
+                    assert_eq!(*out_dim, logits.len());
+                    let fc = &prep.fc.values;
+                    if let Some(n) = gap_len {
+                        assert_eq!(n, *in_dim);
+                        for (o, out) in logits.iter_mut().enumerate() {
+                            let mut s = 0i64;
+                            for i in 0..*in_dim {
+                                s += gap[i] * fc[o * in_dim + i] as i64;
+                            }
+                            *out = s;
+                        }
+                    } else {
+                        let (c, h, w) = dims;
+                        assert_eq!(c * h * w, *in_dim);
+                        for (o, out) in logits.iter_mut().enumerate() {
+                            let mut s = 0i64;
+                            for i in 0..*in_dim {
+                                s += plane_a[i] as i64 * fc[o * in_dim + i] as i64;
+                            }
+                            *out = s;
+                        }
+                    }
+                    return;
+                }
+            }
+        }
+        panic!("model has no classifier layer");
+    }
+
+    /// Forward a flat batch (`batch · image_len` floats, NCHW) into a
+    /// caller-owned `batch · classes` logits slice.
+    pub fn forward_batch_into(&mut self, x: &[f32], logits: &mut [i64]) {
+        let il = self.image_len();
+        let cl = self.classes();
+        assert!(il > 0 && x.len() % il == 0, "batch input length must be a multiple of image_len");
+        let batch = x.len() / il;
+        assert_eq!(logits.len(), batch * cl, "logits buffer length mismatch");
+        for b in 0..batch {
+            self.forward_into(&x[b * il..(b + 1) * il], &mut logits[b * cl..(b + 1) * cl]);
+        }
+    }
+
+    /// Convenience single-image forward (allocates the result vector).
+    pub fn forward(&mut self, image: &Tensor) -> Vec<i64> {
+        let mut logits = vec![0i64; self.classes()];
+        self.forward_into(image.data(), &mut logits);
+        logits
+    }
+
+    /// Classify a batch; returns predicted classes.
+    pub fn predict(&mut self, images: &[Tensor]) -> Vec<usize> {
+        images
+            .iter()
+            .map(|im| {
+                let l = self.forward(im);
+                l.iter().enumerate().max_by_key(|(_, &v)| v).map(|(i, _)| i).unwrap()
+            })
+            .collect()
+    }
+}
+
+/// Flatten per-channel SI count tables into one channel-major LUT of
+/// signed output codes.
+fn flatten_si_luts(sis: &[SelectiveInterconnect], lut_w: usize) -> Vec<i32> {
+    let mut lut = Vec::with_capacity(sis.len() * lut_w);
+    for si in sis {
+        let off = (si.out_bsl() / 2) as i32;
+        let table = si.count_table();
+        assert_eq!(table.len(), lut_w, "SI in_width must equal the layer's BSN width");
+        lut.extend(table.into_iter().map(|v| v as i32 - off));
+    }
+    lut
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::model::{ModelCfg, ModelParams};
+    use crate::nn::quant::QuantConfig;
+    use crate::nn::sc_exec::ScExecutor;
+    use crate::util::Rng;
+
+    fn prep_for(cfg: &ModelCfg, quant: QuantConfig, seed: u64) -> Arc<Prepared> {
+        let mut rng = Rng::new(seed);
+        let params = ModelParams::init(cfg, &mut rng);
+        Arc::new(Prepared::new(cfg, &params, quant))
+    }
+
+    #[test]
+    fn engine_matches_executor_on_tnn() {
+        let cfg = ModelCfg::tnn();
+        for bsl in [2usize, 4, 8] {
+            let prep = prep_for(
+                &cfg,
+                QuantConfig { act_bsl: Some(bsl), weight_ternary: true, residual_bsl: None },
+                3,
+            );
+            let exec = ScExecutor::new(prep.clone());
+            let mut engine = ScEngine::new(prep);
+            let mut rng = Rng::new(41 + bsl as u64);
+            for _ in 0..3 {
+                let img = Tensor::from_vec(
+                    &[1, 28, 28],
+                    (0..784).map(|_| rng.normal() as f32).collect(),
+                );
+                assert_eq!(engine.forward(&img), exec.forward(&img), "bsl={bsl}");
+            }
+        }
+    }
+
+    #[test]
+    fn engine_matches_executor_on_residual_scnet() {
+        let cfg = ModelCfg::scnet(10);
+        let prep = prep_for(&cfg, QuantConfig::w2a2r16(), 5);
+        let exec = ScExecutor::new(prep.clone());
+        let mut engine = ScEngine::new(prep);
+        let mut rng = Rng::new(17);
+        for _ in 0..2 {
+            let img = Tensor::from_vec(
+                &[3, 32, 32],
+                (0..3 * 32 * 32).map(|_| rng.normal() as f32 * 0.5).collect(),
+            );
+            assert_eq!(engine.forward(&img), exec.forward(&img));
+        }
+    }
+
+    #[test]
+    fn batch_forward_equals_per_image() {
+        let cfg = ModelCfg::tnn();
+        let prep = prep_for(
+            &cfg,
+            QuantConfig { act_bsl: Some(2), weight_ternary: true, residual_bsl: None },
+            9,
+        );
+        let mut engine = ScEngine::new(prep);
+        let mut rng = Rng::new(23);
+        let batch = 3usize;
+        let il = engine.image_len();
+        let cl = engine.classes();
+        let x: Vec<f32> = (0..batch * il).map(|_| rng.normal() as f32).collect();
+        let mut batched = vec![0i64; batch * cl];
+        engine.forward_batch_into(&x, &mut batched);
+        for b in 0..batch {
+            let mut one = vec![0i64; cl];
+            engine.forward_into(&x[b * il..(b + 1) * il], &mut one);
+            assert_eq!(&batched[b * cl..(b + 1) * cl], one.as_slice(), "image {b}");
+        }
+    }
+
+    #[test]
+    fn engine_shares_the_prepared() {
+        let cfg = ModelCfg::tnn();
+        let prep = prep_for(
+            &cfg,
+            QuantConfig { act_bsl: Some(2), weight_ternary: true, residual_bsl: None },
+            1,
+        );
+        let a = ScEngine::new(prep.clone());
+        let b = ScEngine::new(prep.clone());
+        assert!(Arc::ptr_eq(a.prepared_arc(), b.prepared_arc()));
+    }
+}

@@ -17,6 +17,8 @@
 //!   `ber` — the Fig 5 experiment — using actual [`ThermCode`] bit
 //!   vectors rather than count shortcuts.
 
+use std::sync::Arc;
+
 use crate::circuits::multiplier::TernaryMultiplier;
 use crate::circuits::rescale::RescaleBlock;
 use crate::circuits::si::{ActivationFn, SelectiveInterconnect};
@@ -203,24 +205,34 @@ pub struct CodeMap {
 }
 
 /// The SC executor.
+///
+/// Holds the frozen model behind an [`Arc`] so that any number of
+/// executors (e.g. one per pool worker) share a single `Prepared`
+/// instead of deep-cloning the weights and SI tables per worker.
 pub struct ScExecutor {
-    prep: Prepared,
+    prep: Arc<Prepared>,
     fault: Option<FaultCfg>,
 }
 
 impl ScExecutor {
-    /// New fault-free executor.
-    pub fn new(prep: Prepared) -> Self {
-        Self { prep, fault: None }
+    /// New fault-free executor. Accepts either an owned [`Prepared`]
+    /// (wrapped on the spot) or a shared `Arc<Prepared>` (no copy).
+    pub fn new(prep: impl Into<Arc<Prepared>>) -> Self {
+        Self { prep: prep.into(), fault: None }
     }
 
     /// With fault injection.
-    pub fn with_faults(prep: Prepared, fault: FaultCfg) -> Self {
-        Self { prep, fault: Some(fault) }
+    pub fn with_faults(prep: impl Into<Arc<Prepared>>, fault: FaultCfg) -> Self {
+        Self { prep: prep.into(), fault: Some(fault) }
     }
 
     /// The frozen network.
     pub fn prepared(&self) -> &Prepared {
+        &self.prep
+    }
+
+    /// The shared handle to the frozen network.
+    pub fn prepared_arc(&self) -> &Arc<Prepared> {
         &self.prep
     }
 
@@ -480,6 +492,15 @@ mod tests {
     }
 
     #[test]
+    fn executors_share_one_prepared() {
+        let prep = std::sync::Arc::new(tiny_prep(2));
+        let a = ScExecutor::new(prep.clone());
+        let b = ScExecutor::new(prep.clone());
+        assert!(std::sync::Arc::ptr_eq(a.prepared_arc(), b.prepared_arc()));
+        assert!(std::sync::Arc::ptr_eq(a.prepared_arc(), &prep));
+    }
+
+    #[test]
     fn residual_network_runs() {
         let cfg = ModelCfg::scnet(10);
         let mut rng = Rng::new(5);
@@ -496,7 +517,8 @@ mod tests {
 
     #[test]
     fn faults_perturb_but_zero_ber_matches_clean() {
-        let prep = tiny_prep(2);
+        // One frozen model shared by all three executors (no deep clones).
+        let prep = std::sync::Arc::new(tiny_prep(2));
         let clean = ScExecutor::new(prep.clone());
         let faulty0 = ScExecutor::with_faults(prep.clone(), FaultCfg { ber: 0.0, seed: 1 });
         let mut rng = Rng::new(11);

@@ -9,6 +9,11 @@
 //! name                                  median        mean      throughput
 //! bsn/gate_level/4608            1.234 ms     1.240 ms     3.73 Mbit/s
 //! ```
+//!
+//! For machine-readable output, collect results in a [`JsonReport`]
+//! and write them to disk (`make bench-json` → `BENCH_sc.json`), so
+//! the perf trajectory is tracked across PRs instead of scrolling away
+//! in CI logs.
 
 use std::hint::black_box;
 use std::time::{Duration, Instant};
@@ -79,6 +84,119 @@ impl Bench {
     }
 }
 
+/// One entry of a [`JsonReport`].
+enum JsonEntry {
+    /// A timed case (optionally with items/s throughput).
+    Measured { name: String, m: Measurement, items_per_s: Option<f64> },
+    /// A free-form scalar (e.g. a pool sweep's req/s).
+    Scalar { name: String, value: f64, unit: String },
+}
+
+/// Machine-readable benchmark collector. Serializes to a small
+/// hand-rolled JSON document (no serde offline):
+///
+/// ```json
+/// {
+///   "bench": "sc_serve",
+///   "entries": [
+///     {"name": "engine/scnet_forward", "median_s": 1.2e-3, "mean_s": 1.3e-3,
+///      "iters": 250, "items_per_s": 833.0},
+///     {"name": "pool/sc/workers=4", "value": 3100.0, "unit": "req/s"}
+///   ]
+/// }
+/// ```
+pub struct JsonReport {
+    bench: String,
+    entries: Vec<JsonEntry>,
+}
+
+impl JsonReport {
+    /// New empty report for a named bench binary.
+    pub fn new(bench: &str) -> Self {
+        Self { bench: bench.to_string(), entries: Vec::new() }
+    }
+
+    /// Record a timed case. `work_items` > 0 adds an `items_per_s`
+    /// field computed from the median.
+    pub fn add(&mut self, name: &str, m: &Measurement, work_items: u64) {
+        let items_per_s =
+            (work_items > 0 && m.median_s > 0.0).then(|| work_items as f64 / m.median_s);
+        self.entries.push(JsonEntry::Measured { name: name.to_string(), m: *m, items_per_s });
+    }
+
+    /// Record a free-form scalar (e.g. sustained req/s of a pool sweep
+    /// point).
+    pub fn add_scalar(&mut self, name: &str, value: f64, unit: &str) {
+        self.entries.push(JsonEntry::Scalar {
+            name: name.to_string(),
+            value,
+            unit: unit.to_string(),
+        });
+    }
+
+    /// Number of recorded entries.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when nothing has been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Serialize to JSON text.
+    pub fn to_json(&self) -> String {
+        let mut s = String::new();
+        s.push_str("{\n");
+        s.push_str(&format!("  \"bench\": \"{}\",\n", escape(&self.bench)));
+        s.push_str("  \"entries\": [\n");
+        for (i, e) in self.entries.iter().enumerate() {
+            let row = match e {
+                JsonEntry::Measured { name, m, items_per_s } => {
+                    let tail = items_per_s
+                        .map(|t| format!(", \"items_per_s\": {t}"))
+                        .unwrap_or_default();
+                    format!(
+                        "    {{\"name\": \"{}\", \"median_s\": {}, \"mean_s\": {}, \"iters\": {}{tail}}}",
+                        escape(name),
+                        m.median_s,
+                        m.mean_s,
+                        m.iters
+                    )
+                }
+                JsonEntry::Scalar { name, value, unit } => format!(
+                    "    {{\"name\": \"{}\", \"value\": {value}, \"unit\": \"{}\"}}",
+                    escape(name),
+                    escape(unit)
+                ),
+            };
+            s.push_str(&row);
+            s.push_str(if i + 1 < self.entries.len() { ",\n" } else { "\n" });
+        }
+        s.push_str("  ]\n}\n");
+        s
+    }
+
+    /// Write the JSON document to `path`.
+    pub fn write(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json())
+    }
+}
+
+/// Minimal JSON string escaping (quotes, backslashes, control chars).
+fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
 /// Human-readable seconds.
 pub fn human_time(s: f64) -> String {
     if s >= 1.0 {
@@ -123,5 +241,29 @@ mod tests {
         assert_eq!(human_time(2e-3), "2.000 ms");
         assert_eq!(human_time(2e-6), "2.000 us");
         assert!(human(5e6).starts_with("5.00 M"));
+    }
+
+    #[test]
+    fn json_report_shape() {
+        let mut r = JsonReport::new("sc_serve");
+        assert!(r.is_empty());
+        r.add("engine/forward", &Measurement { median_s: 0.002, mean_s: 0.0021, iters: 10 }, 1);
+        r.add("engine/no_items", &Measurement { median_s: 0.5, mean_s: 0.5, iters: 3 }, 0);
+        r.add_scalar("pool/sc/workers=4", 3100.5, "req/s");
+        assert_eq!(r.len(), 3);
+        let json = r.to_json();
+        assert!(json.starts_with('{') && json.trim_end().ends_with('}'), "{json}");
+        assert!(json.contains("\"bench\": \"sc_serve\""));
+        assert!(json.contains("\"items_per_s\": 500"));
+        assert!(!json.contains("no_items\", \"median_s\": 0.5, \"mean_s\": 0.5, \"iters\": 3, "));
+        assert!(json.contains("\"unit\": \"req/s\""));
+        // Every entry row but the last is comma-terminated.
+        assert_eq!(json.matches("{\"name\"").count(), 3);
+    }
+
+    #[test]
+    fn json_escaping() {
+        assert_eq!(escape("a\"b\\c"), "a\\\"b\\\\c");
+        assert_eq!(escape("x\ny"), "x\\u000ay");
     }
 }

@@ -1,0 +1,157 @@
+//! Engine/executor equivalence and native SC serving integration:
+//!
+//! * property test — batched [`ScEngine`] logits are bit-identical to
+//!   the per-image [`ScExecutor`] on random images across BSLs and
+//!   both model families (including the residual network);
+//! * integration — `scnn serve --backend sc` semantics: a multi-worker
+//!   pool over [`Backend::Sc`] returns, for every request, exactly the
+//!   logits and class the single-threaded executor computes for the
+//!   same fixed seed.
+
+use std::sync::Arc;
+
+use scnn::coordinator::{backend, Backend, Coordinator, ServeConfig};
+use scnn::data::{Dataset, Split, SynthDigits};
+use scnn::nn::model::{ModelCfg, ModelParams};
+use scnn::nn::quant::QuantConfig;
+use scnn::nn::sc_engine::ScEngine;
+use scnn::nn::sc_exec::{Prepared, ScExecutor};
+use scnn::nn::Tensor;
+use scnn::util::prop::check_simple;
+use scnn::util::Rng;
+
+fn frozen(cfg: &ModelCfg, quant: QuantConfig, seed: u64) -> Arc<Prepared> {
+    let mut rng = Rng::new(seed);
+    let params = ModelParams::init(cfg, &mut rng);
+    Arc::new(Prepared::new(cfg, &params, quant))
+}
+
+#[test]
+fn prop_engine_logits_bit_identical_to_executor_tnn() {
+    let cfg = ModelCfg::tnn();
+    for bsl in [2usize, 4, 8] {
+        let prep = frozen(
+            &cfg,
+            QuantConfig { act_bsl: Some(bsl), weight_ternary: true, residual_bsl: None },
+            100 + bsl as u64,
+        );
+        let exec = ScExecutor::new(prep.clone());
+        let mut engine = ScEngine::new(prep);
+        check_simple(
+            0xEC0DE + bsl as u64,
+            8,
+            |rng| {
+                // Random image, wide dynamic range so saturation paths
+                // are exercised too.
+                let scale = 0.25 + 2.0 * rng.f64() as f32;
+                (0..784).map(|_| rng.normal() as f32 * scale).collect::<Vec<f32>>()
+            },
+            |pix| {
+                let img = Tensor::from_vec(&[1, 28, 28], pix.clone());
+                engine.forward(&img) == exec.forward(&img)
+            },
+        );
+    }
+}
+
+#[test]
+fn prop_engine_logits_bit_identical_to_executor_residual_scnet() {
+    let cfg = ModelCfg::scnet(10);
+    let prep = frozen(&cfg, QuantConfig::w2a2r16(), 7);
+    let exec = ScExecutor::new(prep.clone());
+    let mut engine = ScEngine::new(prep);
+    check_simple(
+        0x5C4E7,
+        4,
+        |rng| (0..3 * 32 * 32).map(|_| rng.normal() as f32 * 0.5).collect::<Vec<f32>>(),
+        |pix| {
+            let img = Tensor::from_vec(&[3, 32, 32], pix.clone());
+            engine.forward(&img) == exec.forward(&img)
+        },
+    );
+}
+
+#[test]
+fn sc_backend_pool_matches_single_threaded_executor() {
+    // `scnn serve --backend sc --model tnn --workers 2` equivalent.
+    let mut cfg = ServeConfig::new("artifacts", "tnn");
+    cfg.workers = 2;
+    cfg.batch = 4;
+    cfg.seed = 123;
+    // The single-threaded oracle: same (model, knobs, seed) freeze.
+    let prep = backend::prepared_for(&cfg).expect("freeze model");
+    let oracle = ScExecutor::new(prep);
+
+    let coord = Coordinator::start_backend(Backend::Sc, cfg).expect("start sc pool");
+    let client = coord.client();
+    let data = SynthDigits::new();
+    assert_eq!(client.classes(), 10);
+
+    let mut handles = Vec::new();
+    for t in 0..4usize {
+        let client = client.clone();
+        handles.push(std::thread::spawn(move || -> Vec<(usize, Vec<f32>, usize)> {
+            let data = SynthDigits::new();
+            (0..8usize)
+                .map(|i| {
+                    let idx = t * 1000 + i;
+                    let (x, _) = data.sample(Split::Test, idx);
+                    let logits = client.infer(x.data().to_vec()).expect("infer");
+                    let class = client.classify(x.into_vec()).expect("classify");
+                    (idx, logits, class)
+                })
+                .collect()
+        }));
+    }
+    let mut total = 0usize;
+    for h in handles {
+        for (idx, logits, class) in h.join().unwrap() {
+            let (x, _) = data.sample(Split::Test, idx);
+            let expect: Vec<f32> =
+                oracle.forward(&x).into_iter().map(|v| v as f32).collect();
+            assert_eq!(logits, expect, "pool logits differ from ScExecutor for request {idx}");
+            let expect_class = oracle.predict(std::slice::from_ref(&x))[0];
+            assert_eq!(class, expect_class, "pool class differs for request {idx}");
+            total += 1;
+        }
+    }
+    assert_eq!(total, 32);
+    let m = coord.shutdown();
+    // Two requests per image (infer + classify).
+    assert_eq!(m.requests, 64);
+    assert_eq!(m.errors, 0);
+}
+
+#[test]
+fn binary_backend_pool_serves_and_matches_sc_backend() {
+    // Fault-free, the binary fixed-point datapath and the SC engine
+    // compute the same quantized network — through the pool too.
+    let mut cfg = ServeConfig::new("artifacts", "tnn");
+    cfg.seed = 9;
+    cfg.batch = 2;
+    let data = SynthDigits::new();
+    let mut answers = Vec::new();
+    for backend in [Backend::Sc, Backend::Binary] {
+        let coord = Coordinator::start_backend(backend, cfg.clone()).expect("start pool");
+        let client = coord.client();
+        let logits: Vec<Vec<f32>> = (0..6)
+            .map(|i| client.infer(data.sample(Split::Test, i).0.into_vec()).expect("infer"))
+            .collect();
+        coord.shutdown();
+        answers.push(logits);
+    }
+    assert_eq!(answers[0], answers[1], "sc and binary backends disagree fault-free");
+}
+
+#[test]
+fn auto_backend_falls_back_to_synthetic_without_artifacts() {
+    // Auto resolves to synthetic without artifacts and keeps serving.
+    let mut cfg = ServeConfig::new("no/artifacts/here", "tnn");
+    cfg.workers = 1;
+    let resolved = Backend::Auto.resolve(&cfg.artifacts, &cfg.model);
+    assert_eq!(resolved, Backend::Synthetic);
+    let coord = Coordinator::start_backend(Backend::Auto, cfg).expect("start auto pool");
+    let logits = coord.client().infer(vec![0.5; 784]).expect("infer");
+    assert_eq!(logits.len(), 10);
+    coord.shutdown();
+}
