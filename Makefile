@@ -15,8 +15,11 @@ bench:
 	cargo bench
 
 # Machine-readable perf record: engine throughput + SC-backend pool
-# sweep, written to BENCH_sc.json (tracked across PRs).
+# sweep in BENCH_sc.json, plus sorter-level Mbit/s in BENCH_bsn.json
+# (both tracked across PRs; CI uploads them as the `bench-json`
+# artifact with BENCH_QUICK=1).
 bench-json:
 	BENCH_JSON=BENCH_sc.json cargo bench --bench sc_serve
+	BENCH_JSON=BENCH_bsn.json cargo bench --bench bsn
 
 .PHONY: artifacts build test bench bench-json

@@ -1,66 +1,103 @@
 //! BSN benchmarks — regenerates the Table V / Fig 9 performance axis
 //! and measures the simulator's own throughput (§Perf L3 target:
-//! ≥ 10^7 sorted bits/s gate-level).
+//! ≥ 10^7 sorted bits/s gate-level; the packed u64 datapath clears it
+//! by orders of magnitude).
+//!
+//! With `BENCH_JSON=<path>` (what `make bench-json` sets) sorter
+//! throughput is also written as machine-readable JSON — in Mbit/s per
+//! width — so sorter-level wins are tracked separately from the
+//! end-to-end serving wins in `BENCH_sc.json`. `BENCH_QUICK=1` runs a
+//! reduced configuration for CI.
 
 use scnn::accel;
 use scnn::circuits::Bsn;
 use scnn::coding::BitVec;
-use scnn::util::bench::Bench;
+use scnn::util::bench::{Bench, JsonReport};
 use scnn::util::Rng;
 
+fn quick() -> bool {
+    std::env::var("BENCH_QUICK").is_ok_and(|v| v != "0")
+}
+
 fn main() {
-    let b = Bench::default();
-    println!("== BSN gate-level sort throughput ==");
+    let b = if quick() { Bench::quick() } else { Bench::default() };
+    let mut report = JsonReport::new("bsn");
+    println!("== BSN gate-level sort throughput (packed u64 datapath) ==");
     let mut rng = Rng::new(1);
-    for width in [256usize, 1024, 4608, 9216] {
+    let widths: &[usize] =
+        if quick() { &[256, 1024] } else { &[256, 1024, 4608, 9216] };
+    let mut scratch: Vec<u64> = Vec::new();
+    let mut sorted = BitVec::zeros(0);
+    for &width in widths {
         let bsn = Bsn::new(width);
         let mut bits = BitVec::zeros(width);
         for i in 0..width {
             bits.set(i, rng.gen_bool(0.5));
         }
-        b.run(&format!("bsn/gate_sort/{width}"), width as u64, || {
-            bsn.sort_gate_level(&bits)
+        let m = b.run(&format!("bsn/gate_sort/{width}"), width as u64, || {
+            bsn.sort_gate_level_into(&bits, &mut scratch, &mut sorted)
         });
+        report.add(&format!("gate_sort/{width}"), &m, width as u64);
+        report.add_scalar(
+            &format!("gate_sort/{width}/throughput"),
+            width as f64 / m.median_s.max(1e-12) / 1e6,
+            "Mbit/s",
+        );
     }
 
     println!("\n== functional accumulate (count domain) ==");
     for width in [4608usize, 9216] {
         let counts: Vec<usize> = (0..width / 64).map(|i| (i * 7) % 64).collect();
-        b.run(&format!("bsn/functional/{width}"), width as u64, || {
+        let m = b.run(&format!("bsn/functional/{width}"), width as u64, || {
             counts.iter().sum::<usize>()
         });
+        report.add(&format!("functional/{width}"), &m, width as u64);
     }
 
-    println!("\n== approximate designs (Table V workloads) ==");
-    for width in [2304usize, 4608, 9216] {
-        let spatial = accel::design_spatial(width, 16);
-        let m0 = spatial.stages()[0].m;
-        let l0 = spatial.stages()[0].l;
-        let counts: Vec<usize> = (0..m0).map(|i| (i * 13) % (l0 + 1)).collect();
-        b.run(&format!("approx/spatial_counts/{width}"), m0 as u64, || {
-            spatial.eval_counts(&counts)
-        });
-        let mut rng2 = Rng::new(7);
-        b.run(&format!("approx/spatial_mse100/{width}"), 100, || {
-            spatial.mse(0.5, 100, &mut rng2)
-        });
+    if !quick() {
+        println!("\n== approximate designs (Table V workloads) ==");
+        for width in [2304usize, 4608, 9216] {
+            let spatial = accel::design_spatial(width, 16);
+            let m0 = spatial.stages()[0].m;
+            let l0 = spatial.stages()[0].l;
+            let counts: Vec<usize> = (0..m0).map(|i| (i * 13) % (l0 + 1)).collect();
+            b.run(&format!("approx/spatial_counts/{width}"), m0 as u64, || {
+                spatial.eval_counts(&counts)
+            });
+            let mut rng2 = Rng::new(7);
+            b.run(&format!("approx/spatial_mse100/{width}"), 100, || {
+                spatial.mse(0.5, 100, &mut rng2)
+            });
+        }
+
+        println!("\n== cost model (used inside search loops) ==");
+        for width in [4608usize, 9216] {
+            b.run(&format!("cost/bsn_gate_count/{width}"), 1, || {
+                Bsn::new(width).gate_count()
+            });
+        }
     }
 
-    println!("\n== cost model (used inside search loops) ==");
-    for width in [4608usize, 9216] {
-        b.run(&format!("cost/bsn_gate_count/{width}"), 1, || {
-            Bsn::new(width).gate_count()
-        });
-    }
-
-    println!("\n== fault-injected sort ==");
+    println!("\n== fault-injected sort (scalar path, reused scratch) ==");
     let bsn = Bsn::new(1024);
     let mut bits = BitVec::zeros(1024);
     for i in 0..1024 {
         bits.set(i, rng.gen_bool(0.5));
     }
     let mut frng = Rng::new(3);
-    b.run("bsn/faulty_sort/1024@1e-3", 1024, || {
-        bsn.sort_with_faults(&bits, 1e-3, &mut frng)
+    let mut lanes: Vec<bool> = Vec::new();
+    let m = b.run("bsn/faulty_sort/1024@1e-3", 1024, || {
+        bsn.sort_with_faults_into(&bits, 1e-3, &mut frng, &mut lanes, &mut sorted)
     });
+    report.add("faulty_sort/1024@1e-3", &m, 1024);
+    report.add_scalar(
+        "faulty_sort/1024@1e-3/throughput",
+        1024.0 / m.median_s.max(1e-12) / 1e6,
+        "Mbit/s",
+    );
+
+    if let Ok(path) = std::env::var("BENCH_JSON") {
+        report.write(&path).expect("write BENCH_JSON");
+        println!("\nwrote {} entries to {path}", report.len());
+    }
 }

@@ -10,6 +10,10 @@
 //! ```bash
 //! BENCH_JSON=BENCH_sc.json cargo bench --bench sc_serve
 //! ```
+//!
+//! `BENCH_QUICK=1` selects the small synthetic/SC configuration CI
+//! uses to keep the artifact-producing run short (fewer measurement
+//! iterations, pool sweep capped at 2 workers).
 
 use std::time::Instant;
 
@@ -22,8 +26,12 @@ use scnn::nn::sc_exec::{Prepared, ScExecutor};
 use scnn::util::bench::{Bench, JsonReport};
 use scnn::util::Rng;
 
+fn quick() -> bool {
+    std::env::var("BENCH_QUICK").is_ok_and(|v| v != "0")
+}
+
 fn engine_vs_executor(report: &mut JsonReport) {
-    let b = Bench::default();
+    let b = if quick() { Bench::quick() } else { Bench::default() };
     println!("== engine vs executor (bit-identical logits, same frozen model) ==");
     for (label, cfg, quant, img) in [
         (
@@ -59,14 +67,15 @@ fn pool_sweep_sc(report: &mut JsonReport) {
     println!("\n== worker-scaling sweep (backend sc, tnn, real SC model) ==");
     let mut n1 = 0.0f64;
     let mut n4 = 0.0f64;
-    for workers in [1usize, 2, 4, 8] {
+    let sweep: &[usize] = if quick() { &[1, 2] } else { &[1, 2, 4, 8] };
+    for &workers in sweep {
         let mut cfg = ServeConfig::new("artifacts", "tnn");
         cfg.workers = workers;
         cfg.batch = 8;
         cfg.queue_depth = 64;
         let coord = Coordinator::start_backend(Backend::Sc, cfg).expect("start sc pool");
         let clients = 4 * workers;
-        let per_client = 64usize;
+        let per_client = if quick() { 16usize } else { 64usize };
         let t0 = Instant::now();
         let mut handles = Vec::new();
         for t in 0..clients {
@@ -94,16 +103,17 @@ fn pool_sweep_sc(report: &mut JsonReport) {
         if workers == 1 {
             n1 = reqs_per_s;
         }
-        if workers == 4 {
+        if workers == *sweep.last().unwrap() {
             n4 = reqs_per_s;
         }
     }
+    let top = sweep.last().unwrap();
     let speedup = n4 / n1.max(1.0);
     println!(
-        "sc_serve/pool/speedup  N=4 vs N=1: {speedup:.2}x  ({})",
+        "sc_serve/pool/speedup  N={top} vs N=1: {speedup:.2}x  ({})",
         if speedup > 1.0 { "scales" } else { "DOES NOT SCALE" }
     );
-    report.add_scalar("pool/sc/speedup_n4_vs_n1", speedup, "x");
+    report.add_scalar(&format!("pool/sc/speedup_n{top}_vs_n1"), speedup, "x");
 }
 
 fn main() {

@@ -70,13 +70,35 @@ impl SubSample {
 
     /// Bit-level application on an actual sorted stream.
     pub fn apply_bits(&self, sorted: &BitVec) -> BitVec {
-        let l = sorted.len();
-        let pos = self.positions(l);
-        let mut out = BitVec::zeros(pos.len());
-        for (j, &p) in pos.iter().enumerate() {
-            out.set(j, sorted.get(p));
-        }
+        let mut out = BitVec::zeros(0);
+        self.apply_bits_into(sorted, &mut out);
         out
+    }
+
+    /// Buffer-reuse variant of [`SubSample::apply_bits`]: overwrites
+    /// `out` (reusing its allocation), assembling whole output words
+    /// from the packed sorted stream.
+    pub fn apply_bits_into(&self, sorted: &BitVec, out: &mut BitVec) {
+        let l = sorted.len();
+        let n = self.out_bsl(l);
+        out.reset(n);
+        let words = out.as_mut_words();
+        let mut acc = 0u64;
+        let mut wi = 0usize;
+        for j in 0..n {
+            let p = self.clip + j * self.stride + self.stride / 2;
+            if sorted.get(p) {
+                acc |= 1 << (j % 64);
+            }
+            if j % 64 == 63 {
+                words[wi] = acc;
+                wi += 1;
+                acc = 0;
+            }
+        }
+        if n % 64 != 0 {
+            words[wi] = acc;
+        }
     }
 }
 
@@ -189,22 +211,27 @@ impl ApproxBsn {
     }
 
     /// Bit-level evaluation: actually sorts every sub-BSN and samples
-    /// bits. Exact circuit semantics (slow; used for verification).
+    /// bits. Exact circuit semantics (used for verification). Group
+    /// extraction, sorting and sampling all stay in the packed word
+    /// domain — the only per-bit work left is the sampler's tap gather.
     pub fn eval_bits(&self, input: &BitVec) -> BitVec {
         assert_eq!(input.len(), self.in_width());
         let mut cur = input.clone();
+        let mut next = BitVec::zeros(0);
+        let mut grp = BitVec::zeros(0);
+        let mut sorted = BitVec::zeros(0);
+        let mut sampled = BitVec::zeros(0);
+        let mut scratch: Vec<u64> = Vec::new();
         for st in &self.stages {
-            let mut next = BitVec::zeros(0);
+            next.reset(0);
             let bsn = Bsn::new(st.l);
             for g in 0..st.m {
-                let mut grp = BitVec::zeros(st.l);
-                for i in 0..st.l {
-                    grp.set(i, cur.get(g * st.l + i));
-                }
-                let sorted = bsn.sort_gate_level(&grp);
-                next.extend_from(&st.sub.apply_bits(&sorted));
+                grp.copy_range_from(&cur, g * st.l, st.l);
+                bsn.sort_gate_level_into(&grp, &mut scratch, &mut sorted);
+                st.sub.apply_bits_into(&sorted, &mut sampled);
+                next.extend_from(&sampled);
             }
-            cur = next;
+            std::mem::swap(&mut cur, &mut next);
         }
         cur
     }

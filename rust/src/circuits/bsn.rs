@@ -112,10 +112,11 @@ impl Bsn {
     }
 
     /// Gate-level descending sort (1s first). Bit-exact simulation of
-    /// the compare-exchange network; the returned vector has the
-    /// *requested* width (padding stripped).
+    /// the compare-exchange network via the packed word-parallel fast
+    /// path; the returned vector has the *requested* width (padding
+    /// stripped).
     pub fn sort_gate_level(&self, bits: &BitVec) -> BitVec {
-        self.sort_impl(bits, None::<&mut fn() -> bool>)
+        self.sort_packed(bits)
     }
 
     /// Buffer-reuse variant of [`Bsn::sort_gate_level`] (fault-free
@@ -131,18 +132,46 @@ impl Bsn {
     /// of the two output wires of every comparator flips with
     /// probability `ber`. Used by the Fig-5 fault-tolerance experiment.
     pub fn sort_with_faults(&self, bits: &BitVec, ber: f64, rng: &mut Rng) -> BitVec {
-        let mut flip = || rng.gen_bool(ber);
-        self.sort_impl(bits, Some(&mut flip))
+        let mut scratch = Vec::new();
+        let mut out = BitVec::zeros(0);
+        self.sort_with_faults_into(bits, ber, rng, &mut scratch, &mut out);
+        out
     }
 
-    fn sort_impl<F: FnMut() -> bool>(&self, bits: &BitVec, mut fault: Option<&mut F>) -> BitVec {
+    /// Buffer-reuse variant of [`Bsn::sort_with_faults`]: `scratch` is
+    /// the scalar lane buffer and `out` the result, both overwritten in
+    /// place so a BER sweep re-sorting thousands of streams stops
+    /// thrashing the allocator.
+    pub fn sort_with_faults_into(
+        &self,
+        bits: &BitVec,
+        ber: f64,
+        rng: &mut Rng,
+        scratch: &mut Vec<bool>,
+        out: &mut BitVec,
+    ) {
+        let mut flip = || rng.gen_bool(ber);
+        self.sort_scalar_into(bits, &mut flip, scratch, out);
+    }
+
+    /// Scalar (lane-per-bool) compare-exchange network with a fault
+    /// closure sampled once per comparator output wire, in network
+    /// order. The packed fast path is property-tested equal to this
+    /// with a never-firing closure.
+    fn sort_scalar_into<F: FnMut() -> bool>(
+        &self,
+        bits: &BitVec,
+        fault: &mut F,
+        v: &mut Vec<bool>,
+        out: &mut BitVec,
+    ) {
         assert_eq!(bits.len(), self.width, "BSN input width mismatch");
-        if fault.is_none() {
-            return self.sort_packed(bits);
-        }
         let n = self.padded;
-        let mut v = vec![false; n];
-        v[..self.width].copy_from_slice(bits.as_slice());
+        v.clear();
+        v.resize(n, false);
+        for (dst, b) in v.iter_mut().zip(bits.iter()) {
+            *dst = b;
+        }
 
         // Batcher's bitonic sort, descending (ones first).
         let mut k = 2usize;
@@ -157,13 +186,11 @@ impl Bsn {
                         // Comparator: OR on the "greater" lane, AND on
                         // the "lesser" lane.
                         let (mut hi, mut lo) = (a || b, a && b);
-                        if let Some(f) = fault.as_deref_mut() {
-                            if f() {
-                                hi = !hi;
-                            }
-                            if f() {
-                                lo = !lo;
-                            }
+                        if fault() {
+                            hi = !hi;
+                        }
+                        if fault() {
+                            lo = !lo;
                         }
                         if descending {
                             v[i] = hi;
@@ -178,7 +205,12 @@ impl Bsn {
             }
             k *= 2;
         }
-        BitVec::from_bits(&v[..self.width])
+        out.reset(self.width);
+        for i in 0..self.width {
+            if v[i] {
+                out.set(i, true);
+            }
+        }
     }
 
     /// Bit-sliced (64-way word-parallel) bitonic sort — the fault-free
@@ -194,18 +226,17 @@ impl Bsn {
     }
 
     /// Packed sort into caller-owned buffers (see
-    /// [`Bsn::sort_gate_level_into`]).
+    /// [`Bsn::sort_gate_level_into`]). Since [`BitVec`] stores packed
+    /// `u64` words natively, entry and exit are word memcpys — no
+    /// per-bit transpose on either side of the network.
     fn sort_packed_into(&self, bits: &BitVec, v: &mut Vec<u64>, out: &mut BitVec) {
         assert_eq!(bits.len(), self.width, "BSN input width mismatch");
         let n = self.padded;
         let words = n.div_ceil(64);
         v.clear();
         v.resize(words, 0u64);
-        for (i, b) in bits.iter().enumerate() {
-            if b {
-                v[i / 64] |= 1 << (i % 64);
-            }
-        }
+        let src = bits.as_words();
+        v[..src.len()].copy_from_slice(src);
         let mut k = 2usize;
         while k <= n {
             let mut j = k / 2;
@@ -252,12 +283,7 @@ impl Bsn {
             }
             k *= 2;
         }
-        out.reset(self.width);
-        for i in 0..self.width {
-            if v[i / 64] >> (i % 64) & 1 == 1 {
-                out.set(i, true);
-            }
-        }
+        out.load_words(v, self.width);
     }
 
     /// Mask selecting in-word lanes whose bit `j` of the index is 0
@@ -468,7 +494,9 @@ mod tests {
                     // Scalar path: force the fault machinery with a
                     // never-firing injector.
                     let mut never = || false;
-                    let scalar = bsn.sort_impl(&b, Some(&mut never));
+                    let mut lanes = Vec::new();
+                    let mut scalar = BitVec::zeros(0);
+                    bsn.sort_scalar_into(&b, &mut never, &mut lanes, &mut scalar);
                     assert_eq!(packed, scalar, "width={width} in={b}");
                 }
             }
@@ -496,6 +524,27 @@ mod tests {
                 Bsn::concat_into(&codes, &mut cat);
                 assert_eq!(cat, Bsn::concat(&codes));
             }
+        }
+    }
+
+    #[test]
+    fn faults_into_matches_allocating_path() {
+        // Same seed -> identical draw order -> identical faulty output,
+        // with the scratch buffers reused across calls.
+        let bsn = Bsn::new(100);
+        let mut setup = Rng::new(13);
+        let mut b = BitVec::zeros(100);
+        for i in 0..100 {
+            b.set(i, setup.gen_bool(0.5));
+        }
+        let mut lanes = Vec::new();
+        let mut out = BitVec::zeros(0);
+        for ber in [0.0, 1e-3, 0.05] {
+            let mut r1 = Rng::new(77);
+            let mut r2 = Rng::new(77);
+            let alloc = bsn.sort_with_faults(&b, ber, &mut r1);
+            bsn.sort_with_faults_into(&b, ber, &mut r2, &mut lanes, &mut out);
+            assert_eq!(alloc, out, "ber={ber}");
         }
     }
 

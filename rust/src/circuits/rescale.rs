@@ -81,16 +81,18 @@ impl RescaleBlock {
     pub fn div2_cycle_into(&self, code: &ThermCode, out: &mut ThermCode) {
         assert_eq!(self.bsl, 16, "the paper's divider pads 8 bits; BSL must be 16");
         assert_eq!(code.bsl(), 16);
+        // Select every other bit (even lanes of the sorted stream keep
+        // ceil(count/2) ones) with a SWAR even-bit compress of the one
+        // 16-lane word, then append the pad pattern as a constant:
+        // DIV_PAD = "11110000" occupies lanes 8..11 -> 0x0f00.
+        let w = code.bits().as_words()[0];
+        let mut x = w & 0x5555;
+        x = (x ^ (x >> 1)) & 0x3333;
+        x = (x ^ (x >> 2)) & 0x0f0f;
+        x = (x ^ (x >> 4)) & 0x00ff;
         let bits = out.bits_mut();
-        bits.reset(0);
-        // Select every other bit. On a canonical (sorted) stream the
-        // even-index selection keeps ceil(count/2) ones.
-        for i in (0..16).step_by(2) {
-            bits.push(code.bits().get(i));
-        }
-        for ch in DIV_PAD.chars() {
-            bits.push(ch == '1');
-        }
+        bits.reset(16);
+        bits.as_mut_words()[0] = x | 0x0f00;
     }
 
     /// Divide by `2^n`: `n` division cycles.

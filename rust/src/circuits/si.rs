@@ -173,17 +173,32 @@ impl SelectiveInterconnect {
     }
 
     /// Buffer-reuse variant of [`SelectiveInterconnect::apply_bits`]:
-    /// overwrites `out`, reusing its allocation.
+    /// overwrites `out`, reusing its allocation. The tap gather
+    /// assembles whole output words directly from the packed sorted
+    /// stream instead of setting bits one at a time.
     pub fn apply_bits_into(&self, sorted: &BitVec, out: &mut BitVec) {
         assert_eq!(sorted.len(), self.in_width);
         out.reset(self.taps.len());
+        let words = out.as_mut_words();
+        let mut acc = 0u64;
+        let mut wi = 0usize;
         for (j, t) in self.taps.iter().enumerate() {
             let v = match t {
                 SelTap::Zero => false,
                 SelTap::One => true,
                 SelTap::Bit(p) => sorted.get(*p),
             };
-            out.set(j, v);
+            if v {
+                acc |= 1 << (j % 64);
+            }
+            if j % 64 == 63 {
+                words[wi] = acc;
+                wi += 1;
+                acc = 0;
+            }
+        }
+        if self.taps.len() % 64 != 0 {
+            words[wi] = acc;
         }
     }
 

@@ -95,15 +95,15 @@ impl SpatialTemporalBsn {
     }
 
     /// Bit-level evaluation over the full input stream (cycle-major).
+    /// Per-cycle chunk extraction is a word-parallel range copy; the
+    /// merge sorts packed words end to end.
     pub fn eval_bits(&self, input: &BitVec) -> BitVec {
         assert_eq!(input.len(), self.total_width());
         let w0 = self.inner.in_width();
         let mut partials = BitVec::zeros(0);
+        let mut chunk = BitVec::zeros(0);
         for c in 0..self.data_cycles {
-            let mut chunk = BitVec::zeros(w0);
-            for i in 0..w0 {
-                chunk.set(i, input.get(c * w0 + i));
-            }
+            chunk.copy_range_from(input, c * w0, w0);
             partials.extend_from(&self.inner.eval_bits(&chunk));
         }
         let merge = Bsn::new(self.merge_width());

@@ -23,74 +23,149 @@ pub use thermometer::ThermCode;
 
 /// A plain bit vector, LSB-first in push order. Thermometer streams store
 /// their 1s at the *front* (low indices) per the paper's convention.
+///
+/// **Storage is packed**: bit `i` lives in word `i / 64` at bit position
+/// `i % 64` of a `Vec<u64>` (LSB-first lane order), with the logical
+/// length tracked separately. Every bulk operation — popcount, bitwise
+/// combination, concatenation, range copy, complement-reverse, the
+/// thermometer ones-prefix fill — runs word-at-a-time, which is what
+/// lets the gate-level circuit stages in `crate::circuits` evaluate ~64
+/// lanes per instruction without ever transposing to a byte-per-bit
+/// form.
+///
+/// Invariants maintained by every method:
+/// * `words.len() == len.div_ceil(64)`;
+/// * bits at positions `>= len` in the last word are zero.
 #[derive(Clone, Debug, PartialEq, Eq, Hash)]
 pub struct BitVec {
-    bits: Vec<bool>,
+    words: Vec<u64>,
+    len: usize,
 }
 
 impl BitVec {
+    #[inline]
+    fn word_count(len: usize) -> usize {
+        len.div_ceil(64)
+    }
+
+    /// Mask of the valid bits in the last storage word.
+    #[inline]
+    fn tail_mask(len: usize) -> u64 {
+        let r = len % 64;
+        if r == 0 {
+            u64::MAX
+        } else {
+            (1u64 << r) - 1
+        }
+    }
+
+    /// Zero any stale bits past `len` in the last word (the invariant
+    /// every word-level producer restores before returning).
+    #[inline]
+    fn mask_tail(&mut self) {
+        if let Some(last) = self.words.last_mut() {
+            *last &= Self::tail_mask(self.len);
+        }
+    }
+
     /// An all-zero bit vector of length `len`.
     pub fn zeros(len: usize) -> Self {
-        Self { bits: vec![false; len] }
+        Self { words: vec![0; Self::word_count(len)], len }
     }
 
     /// Build from a bool slice.
     pub fn from_bits(bits: &[bool]) -> Self {
-        Self { bits: bits.to_vec() }
+        let mut out = Self::zeros(bits.len());
+        for (i, &b) in bits.iter().enumerate() {
+            if b {
+                out.words[i / 64] |= 1 << (i % 64);
+            }
+        }
+        out
     }
 
     /// Build from a `0`/`1` string, e.g. `"1100"`. Panics on other chars.
     pub fn from_str01(s: &str) -> Self {
-        Self { bits: s.chars().map(|c| match c {
-            '0' => false,
-            '1' => true,
-            _ => panic!("BitVec::from_str01: invalid char {c:?}"),
-        }).collect() }
+        let mut out = Self::zeros(s.chars().count());
+        for (i, c) in s.chars().enumerate() {
+            match c {
+                '0' => {}
+                '1' => out.words[i / 64] |= 1 << (i % 64),
+                _ => panic!("BitVec::from_str01: invalid char {c:?}"),
+            }
+        }
+        out
     }
 
     /// Render as a `0`/`1` string (index 0 first).
     pub fn to_str01(&self) -> String {
-        self.bits.iter().map(|&b| if b { '1' } else { '0' }).collect()
+        (0..self.len).map(|i| if self.get(i) { '1' } else { '0' }).collect()
     }
 
     /// Number of bits.
     pub fn len(&self) -> usize {
-        self.bits.len()
+        self.len
     }
 
     /// True when the vector holds no bits.
     pub fn is_empty(&self) -> bool {
-        self.bits.is_empty()
+        self.len == 0
     }
 
     /// Bit at `i`.
+    #[inline]
     pub fn get(&self, i: usize) -> bool {
-        self.bits[i]
+        assert!(i < self.len, "BitVec index {i} out of range (len {})", self.len);
+        self.words[i / 64] >> (i % 64) & 1 == 1
     }
 
     /// Set bit `i`.
+    #[inline]
     pub fn set(&mut self, i: usize, v: bool) {
-        self.bits[i] = v;
+        assert!(i < self.len, "BitVec index {i} out of range (len {})", self.len);
+        let mask = 1u64 << (i % 64);
+        if v {
+            self.words[i / 64] |= mask;
+        } else {
+            self.words[i / 64] &= !mask;
+        }
     }
 
     /// Flip bit `i` (used by fault injection).
+    #[inline]
     pub fn flip(&mut self, i: usize) {
-        self.bits[i] = !self.bits[i];
+        assert!(i < self.len, "BitVec index {i} out of range (len {})", self.len);
+        self.words[i / 64] ^= 1 << (i % 64);
     }
 
-    /// Number of 1s.
+    /// Number of 1s — one `popcnt` per 64 lanes.
     pub fn popcount(&self) -> usize {
-        self.bits.iter().filter(|&&b| b).count()
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
     }
 
-    /// Borrow the raw bits.
-    pub fn as_slice(&self) -> &[bool] {
-        &self.bits
+    /// Borrow the packed storage words (LSB-first lanes; bits past
+    /// [`BitVec::len`] in the last word are guaranteed zero).
+    pub fn as_words(&self) -> &[u64] {
+        &self.words
     }
 
-    /// Mutably borrow the raw bits.
-    pub fn as_mut_slice(&mut self) -> &mut [bool] {
-        &mut self.bits
+    /// Mutably borrow the packed storage words. The caller must keep
+    /// bits past [`BitVec::len`] in the last word zero — every other
+    /// method relies on that invariant.
+    pub fn as_mut_words(&mut self) -> &mut [u64] {
+        &mut self.words
+    }
+
+    /// Overwrite with the first `len` bits of a packed word slice
+    /// (stale bits past `len` in the source's last word are masked
+    /// off). The word-parallel unpack primitive of the BSN sorter.
+    pub fn load_words(&mut self, src: &[u64], len: usize) {
+        let nw = Self::word_count(len);
+        assert!(nw <= src.len(), "load_words: {len} bits need {nw} words, got {}", src.len());
+        self.words.clear();
+        self.words.extend_from_slice(&src[..nw]);
+        self.len = len;
+        self.mask_tail();
     }
 
     /// Re-initialize in place to `len` zero bits, reusing the existing
@@ -98,41 +173,187 @@ impl BitVec {
     /// behind the `*_into` entry points of [`thermometer`] and
     /// `crate::circuits`.
     pub fn reset(&mut self, len: usize) {
-        self.bits.clear();
-        self.bits.resize(len, false);
+        self.words.clear();
+        self.words.resize(Self::word_count(len), 0);
+        self.len = len;
     }
 
-    /// Overwrite with the contents of `other`, reusing the allocation.
+    /// Overwrite with the contents of `other`, reusing the allocation
+    /// (a word-level memcpy).
     pub fn copy_from(&mut self, other: &BitVec) {
-        self.bits.clear();
-        self.bits.extend_from_slice(&other.bits);
+        self.words.clear();
+        self.words.extend_from_slice(&other.words);
+        self.len = other.len;
     }
 
     /// Append a bit.
     pub fn push(&mut self, b: bool) {
-        self.bits.push(b);
+        if self.len % 64 == 0 {
+            self.words.push(0);
+        }
+        if b {
+            self.words[self.len / 64] |= 1 << (self.len % 64);
+        }
+        self.len += 1;
     }
 
-    /// Concatenate another vector onto this one.
+    /// Concatenate another vector onto this one — whole source words
+    /// are shifted into place (two shifts + two ORs per 64 bits), so
+    /// stream concatenation ahead of the BSN never walks single bits.
     pub fn extend_from(&mut self, other: &BitVec) {
-        self.bits.extend_from_slice(&other.bits);
+        if other.len == 0 {
+            return;
+        }
+        let off = self.len % 64;
+        let new_len = self.len + other.len;
+        if off == 0 {
+            self.words.extend_from_slice(&other.words);
+            self.len = new_len;
+            return;
+        }
+        let base = self.words.len() - 1;
+        self.words.resize(Self::word_count(new_len), 0);
+        let nw = self.words.len();
+        for (k, &w) in other.words.iter().enumerate() {
+            self.words[base + k] |= w << off;
+            // High spill of this source word; when it would land past
+            // the end it is all zeros (tail invariant on `other`).
+            if base + k + 1 < nw {
+                self.words[base + k + 1] |= w >> (64 - off);
+            }
+        }
+        self.len = new_len;
+    }
+
+    /// Overwrite with `len` bits of `src` starting at bit `start` — a
+    /// word-parallel funnel shift (the group-extraction primitive of
+    /// the approximate/spatial-temporal BSNs).
+    pub fn copy_range_from(&mut self, src: &BitVec, start: usize, len: usize) {
+        assert!(
+            start + len <= src.len,
+            "copy_range_from: range {start}..{} out of bounds (src len {})",
+            start + len,
+            src.len
+        );
+        self.reset(len);
+        if len == 0 {
+            return;
+        }
+        let sw = start / 64;
+        let off = start % 64;
+        let nw = self.words.len();
+        if off == 0 {
+            self.words.copy_from_slice(&src.words[sw..sw + nw]);
+        } else {
+            for k in 0..nw {
+                let lo = src.words[sw + k] >> off;
+                let hi = src.words.get(sw + k + 1).copied().unwrap_or(0) << (64 - off);
+                self.words[k] = lo | hi;
+            }
+        }
+        self.mask_tail();
+    }
+
+    /// Overwrite with the ones-prefix pattern: `ones` 1s followed by
+    /// zeros, `len` bits total — the canonical thermometer code,
+    /// emitted as whole `u64::MAX` words plus one masked partial.
+    pub fn set_ones_prefix(&mut self, len: usize, ones: usize) {
+        assert!(ones <= len, "ones-prefix {ones} longer than the vector ({len})");
+        self.reset(len);
+        let full = ones / 64;
+        for w in &mut self.words[..full] {
+            *w = u64::MAX;
+        }
+        let r = ones % 64;
+        if r > 0 {
+            self.words[full] = (1u64 << r) - 1;
+        }
+    }
+
+    /// Overwrite with the complement of `src` read in reverse bit
+    /// order: bit `i` becomes `!src[len-1-i]`. This is thermometer
+    /// negation and the ternary multiplier's `w = -1` path, done as one
+    /// `reverse_bits` + funnel shift + NOT per word instead of a
+    /// per-bit scan.
+    pub fn complement_reversed_from(&mut self, src: &BitVec) {
+        let l = src.len;
+        self.reset(l);
+        if l == 0 {
+            return;
+        }
+        let nw = self.words.len();
+        // Reversing the zero-padded width nw*64 and then shifting right
+        // by the pad restores the length-l reversal.
+        let shift = nw * 64 - l;
+        if shift == 0 {
+            for j in 0..nw {
+                self.words[j] = !src.words[nw - 1 - j].reverse_bits();
+            }
+        } else {
+            for j in 0..nw {
+                let cur = src.words[nw - 1 - j].reverse_bits();
+                let next = if j + 1 < nw { src.words[nw - 2 - j].reverse_bits() } else { 0 };
+                self.words[j] = !((cur >> shift) | (next << (64 - shift)));
+            }
+        }
+        self.mask_tail();
+    }
+
+    /// In-place bitwise AND with an equal-length vector.
+    pub fn and_with(&mut self, other: &BitVec) {
+        assert_eq!(self.len, other.len, "and_with: length mismatch");
+        for (a, b) in self.words.iter_mut().zip(&other.words) {
+            *a &= b;
+        }
+    }
+
+    /// In-place bitwise OR with an equal-length vector.
+    pub fn or_with(&mut self, other: &BitVec) {
+        assert_eq!(self.len, other.len, "or_with: length mismatch");
+        for (a, b) in self.words.iter_mut().zip(&other.words) {
+            *a |= b;
+        }
+    }
+
+    /// In-place bitwise XOR with an equal-length vector.
+    pub fn xor_with(&mut self, other: &BitVec) {
+        assert_eq!(self.len, other.len, "xor_with: length mismatch");
+        for (a, b) in self.words.iter_mut().zip(&other.words) {
+            *a ^= b;
+        }
+    }
+
+    /// In-place bitwise NOT over all `len` lanes.
+    pub fn not_inplace(&mut self) {
+        for w in &mut self.words {
+            *w = !*w;
+        }
+        self.mask_tail();
     }
 
     /// Iterate over bits.
     pub fn iter(&self) -> impl Iterator<Item = bool> + '_ {
-        self.bits.iter().copied()
+        (0..self.len).map(move |i| self.words[i / 64] >> (i % 64) & 1 == 1)
     }
 
     /// True iff the vector is a valid thermometer code (all 1s before
-    /// all 0s).
+    /// all 0s). Word-level: all-ones words, at most one `2^k - 1`
+    /// boundary word, then all-zero words.
     pub fn is_thermometer(&self) -> bool {
-        let mut seen_zero = false;
-        for &b in &self.bits {
-            if b && seen_zero {
-                return false;
-            }
-            if !b {
-                seen_zero = true;
+        let mut past_boundary = false;
+        let last = self.words.len().wrapping_sub(1);
+        for (wi, &w) in self.words.iter().enumerate() {
+            let valid = if wi == last { Self::tail_mask(self.len) } else { u64::MAX };
+            if past_boundary {
+                if w != 0 {
+                    return false;
+                }
+            } else if w != valid {
+                // Must be a low-ones prefix: 2^k - 1.
+                if w & w.wrapping_add(1) != 0 {
+                    return false;
+                }
+                past_boundary = true;
             }
         }
         true
@@ -190,5 +411,88 @@ mod tests {
         assert_eq!(a.to_str01(), "000000");
         a.copy_from(&BitVec::from_str01("101"));
         assert_eq!(a.to_str01(), "101");
+    }
+
+    #[test]
+    fn word_boundary_extend_and_push() {
+        // Concatenate around the 64-bit word boundary at a misaligned
+        // offset and check against the string model.
+        let mut a = BitVec::from_str01(&"10".repeat(31)); // 62 bits
+        let b = BitVec::from_str01("11101");
+        a.extend_from(&b);
+        let expect = format!("{}{}", "10".repeat(31), "11101");
+        assert_eq!(a.to_str01(), expect);
+        assert_eq!(a.len(), 67);
+        a.push(true);
+        assert_eq!(a.to_str01(), format!("{expect}1"));
+        assert_eq!(a.popcount(), 31 + 4 + 1);
+    }
+
+    #[test]
+    fn ones_prefix_matches_thermometer() {
+        let mut b = BitVec::zeros(0);
+        for len in [1usize, 63, 64, 65, 130] {
+            for ones in [0, 1, len / 2, len] {
+                b.set_ones_prefix(len, ones);
+                assert_eq!(b.len(), len);
+                assert_eq!(b.popcount(), ones, "len={len} ones={ones}");
+                assert!(b.is_thermometer());
+                assert!(ones == len || !b.get(ones));
+                assert!(ones == 0 || b.get(ones - 1));
+            }
+        }
+    }
+
+    #[test]
+    fn copy_range_unaligned() {
+        let s: String =
+            (0..200).map(|i| if (i * 7 + 3) % 5 < 2 { '1' } else { '0' }).collect();
+        let src = BitVec::from_str01(&s);
+        let mut dst = BitVec::zeros(0);
+        for (start, len) in [(0, 64), (1, 64), (63, 66), (64, 64), (70, 100), (199, 1), (3, 0)] {
+            dst.copy_range_from(&src, start, len);
+            assert_eq!(dst.to_str01(), &s[start..start + len], "start={start} len={len}");
+        }
+    }
+
+    #[test]
+    fn complement_reverse_matches_scalar() {
+        for len in [1usize, 2, 5, 63, 64, 65, 127, 130] {
+            let s: String = (0..len).map(|i| if i % 3 == 0 { '1' } else { '0' }).collect();
+            let src = BitVec::from_str01(&s);
+            let mut out = BitVec::zeros(0);
+            out.complement_reversed_from(&src);
+            assert_eq!(out.len(), len);
+            for i in 0..len {
+                assert_eq!(out.get(i), !src.get(len - 1 - i), "len={len} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn bitwise_ops_and_not() {
+        let a0 = BitVec::from_str01("110101");
+        let b0 = BitVec::from_str01("011100");
+        let mut a = a0.clone();
+        a.and_with(&b0);
+        assert_eq!(a.to_str01(), "010100");
+        let mut o = a0.clone();
+        o.or_with(&b0);
+        assert_eq!(o.to_str01(), "111101");
+        let mut x = a0.clone();
+        x.xor_with(&b0);
+        assert_eq!(x.to_str01(), "101001");
+        x.not_inplace();
+        assert_eq!(x.to_str01(), "010110");
+        assert_eq!(x.popcount(), 3);
+    }
+
+    #[test]
+    fn load_words_masks_tail() {
+        let mut b = BitVec::zeros(0);
+        b.load_words(&[u64::MAX, u64::MAX], 70);
+        assert_eq!(b.len(), 70);
+        assert_eq!(b.popcount(), 70);
+        assert!(b.is_thermometer());
     }
 }

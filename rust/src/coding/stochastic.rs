@@ -95,10 +95,10 @@ pub fn unipolar_decode(bits: &BitVec) -> f64 {
 /// streams.
 pub fn xnor_mult(a: &BitVec, b: &BitVec) -> BitVec {
     assert_eq!(a.len(), b.len());
-    let mut out = BitVec::zeros(a.len());
-    for i in 0..a.len() {
-        out.set(i, !(a.get(i) ^ b.get(i)));
-    }
+    // Word-parallel XNOR: ~(a ^ b) over packed lanes.
+    let mut out = a.clone();
+    out.xor_with(b);
+    out.not_inplace();
     out
 }
 

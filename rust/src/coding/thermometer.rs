@@ -33,21 +33,16 @@ impl ThermCode {
         assert!(bsl >= 2 && bsl % 2 == 0, "BSL must be even, got {bsl}");
         let half = (bsl / 2) as i64;
         let q = q.clamp(-half, half);
-        let ones = (q + half) as usize;
-        let mut bits = BitVec::zeros(bsl);
-        for i in 0..ones {
-            bits.set(i, true);
-        }
-        Self { bits }
+        Self::from_count((q + half) as usize, bsl)
     }
 
-    /// Build directly from a count of ones (`0..=L`).
+    /// Build directly from a count of ones (`0..=L`). Emits whole
+    /// packed words (`u64::MAX` runs plus one masked partial), not a
+    /// per-bit fill.
     pub fn from_count(ones: usize, bsl: usize) -> Self {
         assert!(ones <= bsl);
-        let mut bits = BitVec::zeros(bsl);
-        for i in 0..ones {
-            bits.set(i, true);
-        }
+        let mut bits = BitVec::zeros(0);
+        bits.set_ones_prefix(bsl, ones);
         Self { bits }
     }
 
@@ -64,10 +59,7 @@ impl ThermCode {
     /// Buffer-reuse variant of [`ThermCode::from_count`].
     pub fn from_count_into(ones: usize, bsl: usize, out: &mut ThermCode) {
         assert!(ones <= bsl);
-        out.bits.reset(bsl);
-        for i in 0..ones {
-            out.bits.set(i, true);
-        }
+        out.bits.set_ones_prefix(bsl, ones);
     }
 
     /// Wrap an existing bit vector. Does *not* require the vector to be
@@ -121,12 +113,10 @@ impl ThermCode {
     /// a bitwise complement plus reversal; functionally the popcount maps
     /// `c -> L - c`, i.e. `q -> -q`.
     pub fn negate(&self) -> Self {
-        let l = self.bsl();
-        // Complement-and-reverse keeps canonical codes canonical.
-        let mut bits = BitVec::zeros(l);
-        for i in 0..l {
-            bits.set(i, !self.bits.get(l - 1 - i));
-        }
+        // Complement-and-reverse keeps canonical codes canonical; done
+        // word-parallel (`reverse_bits` + funnel shift + NOT).
+        let mut bits = BitVec::zeros(0);
+        bits.complement_reversed_from(&self.bits);
         Self { bits }
     }
 

@@ -161,11 +161,14 @@ impl BinaryExecutor {
         let mut res: Option<CodeMap> = None;
         let mut li = 0usize;
         let mut gap: Option<Vec<i64>> = None;
+        // Integer im2col scratch reused across layers (no per-layer
+        // float tensor round-trip).
+        let mut cols: Vec<i32> = Vec::new();
         for l in &self.prep.cfg.layers {
             match l {
                 LayerCfg::Conv { .. } => {
                     let pc = &self.prep.convs[li];
-                    let (m, r) = self.conv_layer(pc, &main, res.as_ref(), rng.as_mut());
+                    let (m, r) = self.conv_layer(pc, &main, res.as_ref(), rng.as_mut(), &mut cols);
                     main = m;
                     if r.is_some() {
                         res = r;
@@ -205,12 +208,15 @@ impl BinaryExecutor {
         main: &CodeMap,
         res: Option<&CodeMap>,
         mut rng: Option<&mut Rng>,
+        cols: &mut Vec<i32>,
     ) -> (CodeMap, Option<CodeMap>) {
         let (cin, h, w) = main.dims;
-        let xf = Tensor::from_vec(&[cin, h, w], main.q.iter().map(|&v| v as f32).collect());
-        let (cols, oh, ow) = layers::im2col(&xf, &pc.shape);
         let acc_w = pc.shape.acc_width();
+        let (oh, ow) = pc.shape.out_hw(h, w);
         let npix = oh * ow;
+        cols.clear();
+        cols.resize(npix * acc_w, 0);
+        layers::im2col_i32_into(&main.q, (cin, h, w), &pc.shape, cols);
         // Accumulator word width for fault injection: enough for the
         // worst-case accumulation.
         let acc_bits = (64 - (pc.bsn_width as u64).leading_zeros()).max(8) as u32;

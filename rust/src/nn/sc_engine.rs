@@ -29,8 +29,12 @@
 //!
 //! The engine is the fault-free serving path; fault injection (Fig 5)
 //! stays on [`super::sc_exec::ScExecutor`], which walks actual bit
-//! vectors. Throughput floors for both live in DESIGN.md §Perf and are
-//! tracked by `rust/benches/sc_serve.rs` → `BENCH_sc.json`.
+//! streams — since `crate::coding::BitVec` packs those streams into
+//! native `u64` words, no byte-per-bit (`Vec<bool>`) buffer exists
+//! anywhere on a serving path, packed planes and integer count planes
+//! only (DESIGN.md §Perf, "Packed representation"). Throughput floors
+//! for both live in DESIGN.md §Perf and are tracked by
+//! `rust/benches/sc_serve.rs` → `BENCH_sc.json`.
 
 use std::sync::Arc;
 

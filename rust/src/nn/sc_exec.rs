@@ -22,9 +22,9 @@ use std::sync::Arc;
 use crate::circuits::multiplier::TernaryMultiplier;
 use crate::circuits::rescale::RescaleBlock;
 use crate::circuits::si::{ActivationFn, SelectiveInterconnect};
-use crate::coding::{Ternary, ThermCode};
+use crate::coding::{BitVec, Ternary, ThermCode};
 use crate::util::Rng;
-use super::layers::{ConvShape, im2col};
+use super::layers::{im2col_i32_into, ConvShape};
 use super::model::{LayerCfg, ModelCfg, ModelParams};
 use super::quant::{QuantConfig, TernaryTensor};
 use super::tensor::Tensor;
@@ -257,11 +257,23 @@ impl ScExecutor {
         // emit res_out first, so `res` starts empty.
         let mut li = 0usize;
         let mut gap: Option<Vec<i64>> = None;
+        // Scratch reused across layers: the integer im2col buffer and
+        // (under fault injection) the bitstream work codes, so neither
+        // path allocates per product or per pixel.
+        let mut cols: Vec<i32> = Vec::new();
+        let mut scratch = FaultScratch::new();
         for l in &self.prep.cfg.layers {
             match l {
                 LayerCfg::Conv { .. } => {
                     let pc = &self.prep.convs[li];
-                    let (m, r) = self.conv_layer(pc, &main, res.as_ref(), rng.as_mut());
+                    let (m, r) = self.conv_layer(
+                        pc,
+                        &main,
+                        res.as_ref(),
+                        rng.as_mut(),
+                        &mut cols,
+                        &mut scratch,
+                    );
                     main = m;
                     if r.is_some() {
                         res = r;
@@ -326,18 +338,20 @@ impl ScExecutor {
         main: &CodeMap,
         res: Option<&CodeMap>,
         mut rng: Option<&mut Rng>,
+        cols: &mut Vec<i32>,
+        scratch: &mut FaultScratch,
     ) -> (CodeMap, Option<CodeMap>) {
         let act_bsl = main.bsl;
         let (cin, h, w) = main.dims;
         assert_eq!(cin, pc.shape.cin);
-        // im2col over the quantized values.
-        let xf = Tensor::from_vec(
-            &[cin, h, w],
-            main.q.iter().map(|&v| v as f32).collect(),
-        );
-        let (cols, oh, ow) = im2col(&xf, &pc.shape);
+        // Integer im2col straight over the quantized codes, into the
+        // caller's reusable buffer.
         let acc_w = pc.shape.acc_width();
+        let (oh, ow) = pc.shape.out_hw(h, w);
         let npix = oh * ow;
+        cols.clear();
+        cols.resize(npix * acc_w, 0);
+        im2col_i32_into(&main.q, (cin, h, w), &pc.shape, cols);
         let half = (act_bsl / 2) as i64;
 
         let mut out_main = vec![0i32; pc.shape.cout * npix];
@@ -353,16 +367,19 @@ impl ScExecutor {
                 // Product counts through the ternary multiplier.
                 let mut count: i64 = 0;
                 if let Some(r) = rng.as_deref_mut() {
-                    // Bit-faithful path with fault injection.
+                    // Bit-faithful path with fault injection, through
+                    // the reusable scratch codes (no per-product
+                    // allocation; same RNG draw order as before).
                     let ber = self.fault.unwrap().ber;
                     for i in 0..acc_w {
-                        let a = ThermCode::encode(xr[i] as i64, act_bsl);
-                        let mut prod = TernaryMultiplier::mult_therm(
-                            &a,
+                        ThermCode::encode_into(xr[i] as i64, act_bsl, &mut scratch.enc);
+                        TernaryMultiplier::mult_bits_into(
+                            scratch.enc.bits(),
                             Ternary::from_i64(wrow[i] as i64),
+                            scratch.prod.bits_mut(),
                         );
-                        flip_bits(&mut prod, ber, r);
-                        count += prod.count() as i64;
+                        flip_bits(&mut scratch.prod, ber, r);
+                        count += scratch.prod.count() as i64;
                     }
                 } else {
                     // Fast count arithmetic: count(a·w) = a·w + L/2
@@ -384,7 +401,7 @@ impl ScExecutor {
                 let count = count.max(0) as usize;
                 // SI taps.
                 let cmain = if let Some(r) = rng.as_deref_mut() {
-                    apply_si_faulty(&pc.si_main[co], count, self.fault.unwrap().ber, r)
+                    apply_si_faulty(&pc.si_main[co], count, self.fault.unwrap().ber, r, scratch)
                 } else {
                     pc.si_main[co].apply_count(count.min(pc.bsn_width))
                 };
@@ -392,7 +409,7 @@ impl ScExecutor {
                     cmain as i32 - (pc.si_main[co].out_bsl() / 2) as i32;
                 if let Some(ref sis) = pc.si_res {
                     let cres = if let Some(r) = rng.as_deref_mut() {
-                        apply_si_faulty(&sis[co], count, self.fault.unwrap().ber, r)
+                        apply_si_faulty(&sis[co], count, self.fault.unwrap().ber, r, scratch)
                     } else {
                         sis[co].apply_count(count.min(pc.bsn_width))
                     };
@@ -447,17 +464,42 @@ pub fn flip_bits(code: &mut ThermCode, ber: f64, rng: &mut Rng) {
     }
 }
 
+/// Reusable bitstream work area for the fault-injection path: the
+/// encoded activation, the multiplier product, the reconstructed sorted
+/// stream and the SI tap output. All packed [`BitVec`]s, reset in place
+/// each use.
+struct FaultScratch {
+    enc: ThermCode,
+    prod: ThermCode,
+    sorted: ThermCode,
+    tapped: BitVec,
+}
+
+impl FaultScratch {
+    fn new() -> Self {
+        Self {
+            enc: ThermCode::from_count(0, 2),
+            prod: ThermCode::from_count(0, 2),
+            sorted: ThermCode::from_count(0, 2),
+            tapped: BitVec::zeros(0),
+        }
+    }
+}
+
 /// SI application on a fault-corrupted sorted stream: build the sorted
-/// code from the count, flip stream bits, then tap.
+/// code from the count, flip stream bits, then tap — all in the
+/// caller's scratch buffers.
 fn apply_si_faulty(
     si: &SelectiveInterconnect,
     count: usize,
     ber: f64,
     rng: &mut Rng,
+    scratch: &mut FaultScratch,
 ) -> usize {
-    let mut sorted = ThermCode::from_count(count.min(si.in_width()), si.in_width());
-    flip_bits(&mut sorted, ber, rng);
-    si.apply_bits(sorted.bits()).popcount()
+    ThermCode::from_count_into(count.min(si.in_width()), si.in_width(), &mut scratch.sorted);
+    flip_bits(&mut scratch.sorted, ber, rng);
+    si.apply_bits_into(scratch.sorted.bits(), &mut scratch.tapped);
+    scratch.tapped.popcount()
 }
 
 #[cfg(test)]

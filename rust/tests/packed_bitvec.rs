@@ -1,0 +1,365 @@
+//! Property tests for the packed `u64` `BitVec` representation.
+//!
+//! Two layers of evidence that the word-packed datapath is bit-exact:
+//!
+//! 1. every bulk `BitVec` operation (popcount, concat, range copy at
+//!    non-word-aligned offsets, ones-prefix fill, complement-reverse,
+//!    bitwise combinators, str01 round-trip) is pitted against a naive
+//!    `Vec<bool>` reference model over lengths straddling the 64-bit
+//!    word boundary;
+//! 2. every gate-level circuit stage (ternary multiplier, BSN sort,
+//!    selective interconnect, rescale divider, approximate and
+//!    spatial-temporal BSNs) is checked packed-vs-scalar on random —
+//!    including non-canonical — streams.
+
+use scnn::circuits::approx_bsn::{ApproxBsn, ApproxStage, SubSample};
+use scnn::circuits::multiplier::TernaryMultiplier;
+use scnn::circuits::rescale::{RescaleBlock, DIV_PAD};
+use scnn::circuits::si::{SelTap, SelectiveInterconnect};
+use scnn::circuits::st_bsn::SpatialTemporalBsn;
+use scnn::circuits::Bsn;
+use scnn::coding::{BitVec, Ternary, ThermCode};
+use scnn::util::prop::check_simple;
+use scnn::util::Rng;
+
+/// Naive byte-per-bit reference model.
+fn rand_bools(rng: &mut Rng, n: usize, p: f64) -> Vec<bool> {
+    (0..n).map(|_| rng.gen_bool(p)).collect()
+}
+
+fn to_bitvec(bits: &[bool]) -> BitVec {
+    BitVec::from_bits(bits)
+}
+
+fn assert_matches_ref(bv: &BitVec, reference: &[bool], ctx: &str) {
+    assert_eq!(bv.len(), reference.len(), "{ctx}: length");
+    assert_eq!(
+        bv.popcount(),
+        reference.iter().filter(|&&b| b).count(),
+        "{ctx}: popcount"
+    );
+    for (i, &b) in reference.iter().enumerate() {
+        assert_eq!(bv.get(i), b, "{ctx}: bit {i}");
+    }
+}
+
+/// Round-trip and per-bit access across word boundaries.
+#[test]
+fn prop_packed_roundtrip_matches_reference() {
+    check_simple(
+        101,
+        150,
+        |rng| {
+            let n = 1 + rng.gen_index(300);
+            rand_bools(rng, n, rng.f64())
+        },
+        |bits| {
+            let bv = to_bitvec(bits);
+            assert_matches_ref(&bv, bits, "from_bits");
+            let s: String = bits.iter().map(|&b| if b { '1' } else { '0' }).collect();
+            bv.to_str01() == s
+                && BitVec::from_str01(&s) == bv
+                && bv.iter().collect::<Vec<_>>() == *bits
+        },
+    );
+}
+
+/// Concatenation at arbitrary (mostly non-word-aligned) offsets.
+#[test]
+fn prop_packed_concat_matches_reference() {
+    check_simple(
+        103,
+        150,
+        |rng| {
+            let a = rand_bools(rng, rng.gen_index(200), 0.5);
+            let b = rand_bools(rng, rng.gen_index(200), 0.5);
+            (a, b)
+        },
+        |(a, b)| {
+            let mut packed = to_bitvec(a);
+            packed.extend_from(&to_bitvec(b));
+            let mut reference = a.clone();
+            reference.extend_from_slice(b);
+            assert_matches_ref(&packed, &reference, "extend_from");
+            // push keeps working after a misaligned concat.
+            packed.push(true);
+            reference.push(true);
+            assert_matches_ref(&packed, &reference, "push after extend");
+            true
+        },
+    );
+}
+
+/// Range copy (the BSN group-extraction primitive) at random offsets.
+#[test]
+fn prop_packed_copy_range_matches_reference() {
+    check_simple(
+        107,
+        200,
+        |rng| {
+            let src = rand_bools(rng, 1 + rng.gen_index(300), 0.5);
+            let start = rng.gen_index(src.len());
+            let len = rng.gen_index(src.len() - start + 1);
+            (src, start, len)
+        },
+        |(src, start, len)| {
+            let mut out = BitVec::zeros(0);
+            out.copy_range_from(&to_bitvec(src), *start, *len);
+            assert_matches_ref(&out, &src[*start..start + len], "copy_range_from");
+            true
+        },
+    );
+}
+
+/// Ones-prefix fill (thermometer encode) and complement-reverse
+/// (negation / `w = -1` multiplier path).
+#[test]
+fn prop_packed_prefix_and_reverse_match_reference() {
+    check_simple(
+        109,
+        200,
+        |rng| {
+            let n = 1 + rng.gen_index(300);
+            (rand_bools(rng, n, 0.5), rng.gen_index(n + 1))
+        },
+        |(bits, ones)| {
+            let n = bits.len();
+            let mut prefix = BitVec::zeros(0);
+            prefix.set_ones_prefix(n, *ones);
+            let ref_prefix: Vec<bool> = (0..n).map(|i| i < *ones).collect();
+            assert_matches_ref(&prefix, &ref_prefix, "set_ones_prefix");
+            assert!(prefix.is_thermometer());
+
+            let mut rev = BitVec::zeros(0);
+            rev.complement_reversed_from(&to_bitvec(bits));
+            let ref_rev: Vec<bool> = (0..n).map(|i| !bits[n - 1 - i]).collect();
+            assert_matches_ref(&rev, &ref_rev, "complement_reversed_from");
+            true
+        },
+    );
+}
+
+/// Bitwise combinators and the thermometer-validity check.
+#[test]
+fn prop_packed_bitwise_ops_match_reference() {
+    check_simple(
+        113,
+        200,
+        |rng| {
+            let n = 1 + rng.gen_index(300);
+            (rand_bools(rng, n, 0.5), rand_bools(rng, n, 0.5))
+        },
+        |(a, b)| {
+            let (pa, pb) = (to_bitvec(a), to_bitvec(b));
+            for (name, f, g) in [
+                (
+                    "and",
+                    BitVec::and_with as fn(&mut BitVec, &BitVec),
+                    (|x, y| x && y) as fn(bool, bool) -> bool,
+                ),
+                ("or", BitVec::or_with, |x, y| x || y),
+                ("xor", BitVec::xor_with, |x, y| x != y),
+            ] {
+                let mut out = pa.clone();
+                f(&mut out, &pb);
+                let reference: Vec<bool> =
+                    a.iter().zip(b).map(|(&x, &y)| g(x, y)).collect();
+                assert_matches_ref(&out, &reference, name);
+            }
+            let mut not = pa.clone();
+            not.not_inplace();
+            let ref_not: Vec<bool> = a.iter().map(|&x| !x).collect();
+            assert_matches_ref(&not, &ref_not, "not");
+
+            // is_thermometer agrees with the scalar definition.
+            let mut seen_zero = false;
+            let mut ref_therm = true;
+            for &bit in a {
+                if bit && seen_zero {
+                    ref_therm = false;
+                    break;
+                }
+                if !bit {
+                    seen_zero = true;
+                }
+            }
+            pa.is_thermometer() == ref_therm
+        },
+    );
+}
+
+/// The packed 64-lane BSN equals the scalar compare-exchange network
+/// (reached through the public fault API with a zero BER) on every
+/// width class.
+#[test]
+fn prop_packed_sort_equals_scalar_network() {
+    check_simple(
+        127,
+        60,
+        |rng| {
+            let width = 1 + rng.gen_index(260);
+            rand_bools(rng, width, rng.f64())
+        },
+        |bits| {
+            let bv = to_bitvec(bits);
+            let bsn = Bsn::new(bits.len());
+            let packed = bsn.sort_gate_level(&bv);
+            let scalar = bsn.sort_with_faults(&bv, 0.0, &mut Rng::new(1));
+            packed == scalar
+                && packed.popcount() == bv.popcount()
+                && packed.is_thermometer()
+        },
+    );
+}
+
+/// Word-wise ternary multiplier vs the per-bit mux reference, on
+/// non-canonical streams (as occur under fault injection).
+#[test]
+fn prop_multiplier_packed_equals_scalar() {
+    check_simple(
+        131,
+        200,
+        |rng| {
+            let bsl = 2 * (1 + rng.gen_index(80));
+            (rand_bools(rng, bsl, 0.5), rng.gen_range_i64(-1, 1))
+        },
+        |(act_bits, w)| {
+            let act = to_bitvec(act_bits);
+            let w = Ternary::from_i64(*w);
+            let got = TernaryMultiplier::mult_bits(&act, w);
+            let l = act_bits.len();
+            let reference: Vec<bool> = match w {
+                Ternary::Pos => act_bits.clone(),
+                Ternary::Zero => (0..l).map(|i| i < l / 2).collect(),
+                Ternary::Neg => (0..l).map(|i| !act_bits[l - 1 - i]).collect(),
+            };
+            assert_matches_ref(&got, &reference, "mult_bits");
+            true
+        },
+    );
+}
+
+/// Word-assembling SI tap gather vs a per-tap scalar reference, on
+/// arbitrary (non-sorted) streams, with buffer reuse across calls.
+#[test]
+fn prop_si_apply_bits_packed_equals_scalar() {
+    check_simple(
+        137,
+        100,
+        |rng| {
+            let in_w = 4 + rng.gen_index(150);
+            let out = 2 + rng.gen_index(20);
+            // Random monotone count table -> a valid SI.
+            let mut table = Vec::with_capacity(in_w + 1);
+            let mut cur = 0usize;
+            for _ in 0..=in_w {
+                if rng.gen_bool(0.3) && cur < out {
+                    cur += 1;
+                }
+                table.push(cur);
+            }
+            let stream = rand_bools(rng, in_w, rng.f64());
+            (in_w, out, table, stream)
+        },
+        |(in_w, out, table, stream)| {
+            let t = table.clone();
+            let si = SelectiveInterconnect::synthesize(|c| t[c], *in_w, *out);
+            let sorted = to_bitvec(stream);
+            let mut reused = BitVec::zeros(0);
+            si.apply_bits_into(&sorted, &mut reused);
+            let reference: Vec<bool> = si
+                .taps()
+                .iter()
+                .map(|t| match t {
+                    SelTap::Zero => false,
+                    SelTap::One => true,
+                    SelTap::Bit(p) => stream[*p],
+                })
+                .collect();
+            assert_matches_ref(&reused, &reference, "apply_bits_into");
+            si.apply_bits(&sorted) == reused
+        },
+    );
+}
+
+/// SWAR even-bit divider vs the per-bit select-and-pad reference, on
+/// arbitrary 16-lane streams.
+#[test]
+fn prop_rescale_div2_packed_equals_scalar() {
+    check_simple(
+        139,
+        300,
+        |rng| rand_bools(rng, 16, rng.f64()),
+        |bits| {
+            let r = RescaleBlock::new(16);
+            let code = ThermCode::from_bits(to_bitvec(bits));
+            let got = r.div2_cycle(&code);
+            let mut reference: Vec<bool> = (0..16).step_by(2).map(|i| bits[i]).collect();
+            reference.extend(DIV_PAD.chars().map(|c| c == '1'));
+            assert_matches_ref(got.bits(), &reference, "div2_cycle");
+            true
+        },
+    );
+}
+
+/// Thermometer encode/negate through the packed fills equal the
+/// definitional reference at word-boundary BSLs.
+#[test]
+fn prop_thermometer_packed_encoding() {
+    for bsl in [2usize, 62, 64, 66, 128, 190] {
+        let (lo, hi) = ThermCode::range(bsl);
+        let mut buf = ThermCode::from_count(0, 2);
+        for q in lo..=hi {
+            let c = ThermCode::encode(q, bsl);
+            let ones = (q + (bsl / 2) as i64) as usize;
+            let reference: Vec<bool> = (0..bsl).map(|i| i < ones).collect();
+            assert_matches_ref(c.bits(), &reference, "encode");
+            assert!(c.is_canonical());
+            assert_eq!(c.negate().decode(), -q, "bsl={bsl} q={q}");
+            ThermCode::encode_into(q, bsl, &mut buf);
+            assert_eq!(buf, c, "encode_into bsl={bsl} q={q}");
+        }
+    }
+}
+
+/// Approximate-BSN bit path (packed sorts + word-extracted groups)
+/// equals the count path on groups that straddle word boundaries.
+#[test]
+fn prop_approx_bsn_packed_bits_equal_counts() {
+    // 2 groups of 96 bits (crossing the u64 boundary) -> 40-bit codes
+    // -> one 80-bit merge.
+    let a = ApproxBsn::new(vec![
+        ApproxStage { m: 2, l: 96, sub: SubSample { clip: 8, stride: 2 } },
+        ApproxStage { m: 1, l: 80, sub: SubSample { clip: 8, stride: 1 } },
+    ]);
+    let mut rng = Rng::new(149);
+    for _ in 0..25 {
+        let bits = rand_bools(&mut rng, 192, 0.5);
+        let bv = to_bitvec(&bits);
+        let counts: Vec<usize> = (0..2)
+            .map(|g| bits[g * 96..(g + 1) * 96].iter().filter(|&&b| b).count())
+            .collect();
+        assert_eq!(a.eval_bits(&bv).popcount(), a.eval_counts(&counts));
+    }
+}
+
+/// Spatial-temporal BSN bit path with word-parallel chunk extraction
+/// equals the count path.
+#[test]
+fn prop_st_bsn_packed_bits_equal_counts() {
+    let inner = ApproxBsn::new(vec![ApproxStage {
+        m: 1,
+        l: 96,
+        sub: SubSample { clip: 16, stride: 2 },
+    }]);
+    let st = SpatialTemporalBsn::new(inner, 288, SubSample { clip: 12, stride: 1 });
+    let mut rng = Rng::new(151);
+    for _ in 0..15 {
+        let bits = rand_bools(&mut rng, 288, 0.5);
+        let bv = to_bitvec(&bits);
+        let counts: Vec<usize> = (0..3)
+            .map(|c| bits[c * 96..(c + 1) * 96].iter().filter(|&&b| b).count())
+            .collect();
+        assert_eq!(st.eval_bits(&bv).popcount(), st.eval_counts(&counts));
+    }
+}
