@@ -1,10 +1,15 @@
-//! Quickstart: the paper's datapath on one dot-product, end to end.
+//! Quickstart: the paper's datapath on one dot-product, then a whole
+//! frozen network through the batched serving engine.
 //!
-//! Encodes ternary activations/weights as thermometer codes, multiplies
-//! with the 5-gate cell (Fig 3a), accumulates through a gate-level
-//! bitonic sorting network (Fig 3b), and applies a BN-fused ReLU via
-//! the selective interconnect — then checks the result against plain
-//! integer arithmetic.
+//! Steps 1–4 walk one accumulation through the circuit blocks: encode
+//! ternary activations/weights as thermometer codes, multiply with the
+//! 5-gate cell (Fig 3a), accumulate through a gate-level bitonic
+//! sorting network (Fig 3b), and apply a BN-fused ReLU via the
+//! selective interconnect — checked against plain integer arithmetic.
+//! Step 5 then runs the same mathematics at model scale on the serving
+//! core: a frozen network forwarded batch-at-a-time by `nn::ScEngine`
+//! (packed ternary GEMM panels + sharded engine threads), bit-identical
+//! to the circuit-faithful `ScExecutor`.
 //!
 //! ```bash
 //! cargo run --release --example quickstart
@@ -14,6 +19,11 @@ use scnn::circuits::multiplier::TernaryMultiplier;
 use scnn::circuits::si::{ActivationFn, SelectiveInterconnect};
 use scnn::circuits::Bsn;
 use scnn::coding::{Ternary, ThermCode};
+use scnn::nn::model::{ModelCfg, ModelParams};
+use scnn::nn::quant::QuantConfig;
+use scnn::nn::sc_exec::{Prepared, ScExecutor};
+use scnn::nn::{ScEngine, Tensor};
+use scnn::util::Rng;
 
 fn main() {
     // A toy 8-wide accumulation: activations and ternary weights.
@@ -69,7 +79,45 @@ fn main() {
     let ideal = if expect as f64 >= 1.0 { expect - 1 } else { 0 };
     assert_eq!(out_code.decode(), ideal.clamp(-4, 4));
 
-    println!("\n== 5. hardware cost (28-nm calibrated model) ==");
+    println!("\n== 5. serve a frozen network (batched ScEngine, ternary GEMM + threads) ==");
+    // Freeze a small ternary CNN at the paper's W2-A2 quant point and
+    // forward a batch through the serving engine: zero-skipping packed
+    // weight panels, count-table activations, batch rows sharded over
+    // two scoped threads. Bit-identical to the circuit-faithful
+    // per-image executor.
+    let cfg = ModelCfg::tnn();
+    let (ic, ih, iw) = cfg.input;
+    let mut rng = Rng::new(42);
+    let params = ModelParams::init(&cfg, &mut rng);
+    let quant = QuantConfig { act_bsl: Some(2), weight_ternary: true, residual_bsl: None };
+    let prep = std::sync::Arc::new(Prepared::new(&cfg, &params, quant));
+    let mut engine = ScEngine::with_threads(prep.clone(), 2);
+    let batch = 4usize;
+    let il = engine.image_len();
+    let cl = engine.classes();
+    let images: Vec<f32> = (0..batch * il).map(|_| rng.normal() as f32).collect();
+    let mut logits = vec![0i64; batch * cl];
+    let t0 = std::time::Instant::now();
+    engine.forward_batch_into(&images, &mut logits);
+    let dt = t0.elapsed();
+    let exec = ScExecutor::new(prep);
+    for b in 0..batch {
+        let img = Tensor::from_vec(&[ic, ih, iw], images[b * il..(b + 1) * il].to_vec());
+        assert_eq!(
+            &logits[b * cl..(b + 1) * cl],
+            exec.forward(&img).as_slice(),
+            "engine logits must be bit-identical to the executor (image {b})"
+        );
+        let pred = (0..cl).max_by_key(|&c| logits[b * cl + c]).unwrap();
+        println!("  image {b}: class {pred}  logits[..4] {:?}", &logits[b * cl..b * cl + 4]);
+    }
+    println!(
+        "  {batch} images in {:.2?} on {} engine threads — bit-identical to ScExecutor",
+        dt,
+        engine.threads()
+    );
+
+    println!("\n== 6. hardware cost (28-nm calibrated model) ==");
     let cost = bsn.cost();
     println!(
         "  16-bit BSN: {} comparators, {:.2} um2, {:.3} ns, ADP {:.2} um2*ns",

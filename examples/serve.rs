@@ -10,7 +10,7 @@
 //! per-worker breakdown.
 //!
 //! ```bash
-//! cargo run --release --example serve [-- backend=sc requests=2048 clients=8 workers=4]
+//! cargo run --release --example serve [-- backend=sc requests=2048 clients=8 workers=4 threads=2]
 //! ```
 
 use scnn::coordinator::{Backend, Coordinator, ServeConfig};
@@ -27,6 +27,9 @@ fn main() -> scnn::Result<()> {
     let clients = arg("clients", 8).max(1);
     let requests = arg("requests", 2048).max(clients);
     let workers = arg("workers", 4).max(1);
+    // Intra-engine threads of the sc backend (each worker shards its
+    // batch rows across this many scoped threads; bit-identical logits).
+    let threads = arg("threads", 1).max(1);
     let warmup_steps = arg("warmup", 100);
     let backend = Backend::parse(
         &std::env::args()
@@ -39,6 +42,7 @@ fn main() -> scnn::Result<()> {
     let mut cfg = ServeConfig::new("artifacts", "scnet10");
     cfg.knobs = knobs;
     cfg.workers = workers;
+    cfg.threads = threads;
     let resolved = backend.resolve("artifacts", "scnet10");
     println!("backend: {resolved} (pass backend=sc for the native SC engine)");
     if resolved == Backend::Pjrt && artifacts_ready("artifacts", "scnet10") && warmup_steps > 0 {

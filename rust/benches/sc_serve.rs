@@ -1,7 +1,8 @@
-//! Native SC serving benchmarks (§Perf): the batched `ScEngine` vs the
-//! per-image `ScExecutor`, and a worker-scaling sweep of the pool on
-//! the **real SC model** (backend `sc`) instead of the synthetic
-//! stand-in.
+//! Native SC serving benchmarks (§Perf): the packed GEMM kernels vs
+//! the naive triple loop, the batched `ScEngine` vs the per-image
+//! `ScExecutor`, the engine's imgs/s at N threads, and a
+//! worker-scaling sweep of the pool on the **real SC model** (backend
+//! `sc`) instead of the synthetic stand-in.
 //!
 //! With `BENCH_JSON=<path>` (what `make bench-json` sets) the results
 //! are also written as machine-readable JSON so the perf trajectory is
@@ -19,6 +20,7 @@ use std::time::Instant;
 
 use scnn::coordinator::{Backend, Coordinator, ServeConfig};
 use scnn::data::{Dataset, Split, SynthCifar, SynthDigits};
+use scnn::nn::gemm::{gemm_naive, I8Panel, TernaryPanel};
 use scnn::nn::model::{ModelCfg, ModelParams};
 use scnn::nn::quant::QuantConfig;
 use scnn::nn::sc_engine::ScEngine;
@@ -30,9 +32,118 @@ fn quick() -> bool {
     std::env::var("BENCH_QUICK").is_ok_and(|v| v != "0")
 }
 
+/// The packed kernels against the naive triple loop, on conv-shaped
+/// problems (rows = cout, k = accumulation width, n = output pixels).
+/// Work item = one multiply-accumulate of the naive loop, so items/s
+/// is MACs/s and the speedup scalars are directly comparable.
+fn gemm_vs_naive(report: &mut JsonReport) {
+    let b = if quick() { Bench::quick() } else { Bench::default() };
+    println!("== packed GEMM vs naive triple loop (ternary conv shapes) ==");
+    // (label, cout, acc width, npix): tnn layer 2, scnet res block 2,
+    // and a ragged shape exercising the block/microkernel edges.
+    for (label, rows, k, n) in
+        [("tnn_l2", 16usize, 72usize, 49usize), ("scnet_rb2", 32, 288, 256), ("ragged", 13, 37, 19)]
+    {
+        let mut rng = Rng::new(0xBEC + rows as u64);
+        let w: Vec<i8> = (0..rows * k).map(|_| rng.gen_range_i64(-1, 1) as i8).collect();
+        let cols: Vec<i32> = (0..n * k).map(|_| rng.gen_range_i64(-8, 9) as i32).collect();
+        let macs = (rows * k * n) as u64;
+        let mut out = vec![0i64; rows * n];
+        let mn = b.run(&format!("sc_serve/gemm/naive/{label}"), macs, || {
+            gemm_naive(&w, rows, k, &cols, n, &mut out);
+            out[0]
+        });
+        let expect = out.clone();
+        let ternary = TernaryPanel::pack(&w, rows, k);
+        let mt = b.run(&format!("sc_serve/gemm/ternary/{label}"), macs, || {
+            ternary.gemm_into(&cols, n, &mut out);
+            out[0]
+        });
+        assert_eq!(out, expect, "{label}: ternary kernel disagrees with naive");
+        let dense = I8Panel::pack(&w, rows, k);
+        let md = b.run(&format!("sc_serve/gemm/dense/{label}"), macs, || {
+            dense.gemm_into(&cols, n, &mut out);
+            out[0]
+        });
+        assert_eq!(out, expect, "{label}: dense kernel disagrees with naive");
+        report.add(&format!("gemm/naive/{label}"), &mn, macs);
+        report.add(&format!("gemm/ternary/{label}"), &mt, macs);
+        report.add(&format!("gemm/dense/{label}"), &md, macs);
+        let st = mn.median_s / mt.median_s.max(1e-12);
+        let sd = mn.median_s / md.median_s.max(1e-12);
+        println!("   -> {label}: ternary {st:.2}x, dense {sd:.2}x over naive");
+        report.add_scalar(&format!("gemm/ternary/{label}_speedup"), st, "x");
+        report.add_scalar(&format!("gemm/dense/{label}_speedup"), sd, "x");
+    }
+}
+
+/// Engine throughput at N intra-engine threads (imgs/s on a fixed
+/// batch), with bit-identity asserted against the sequential engine.
+fn engine_threads_sweep(report: &mut JsonReport) {
+    let b = if quick() { Bench::quick() } else { Bench::default() };
+    println!("\n== engine batch forward at N threads (tnn, bit-identical logits) ==");
+    let cfg = ModelCfg::tnn();
+    let mut rng = Rng::new(19);
+    let params = ModelParams::init(&cfg, &mut rng);
+    let prep = std::sync::Arc::new(Prepared::new(
+        &cfg,
+        &params,
+        QuantConfig { act_bsl: Some(2), weight_ternary: true, residual_bsl: None },
+    ));
+    let batch = if quick() { 8usize } else { 32usize };
+    let mut seq = ScEngine::new(prep.clone());
+    let il = seq.image_len();
+    let cl = seq.classes();
+    let x: Vec<f32> = (0..batch * il).map(|_| rng.normal() as f32).collect();
+    let mut expect = vec![0i64; batch * cl];
+    seq.forward_batch_into(&x, &mut expect);
+    let mut t1 = 0.0f64;
+    let mut t_top = 0.0f64;
+    let sweep: &[usize] = if quick() { &[1, 2] } else { &[1, 2, 4] };
+    for &threads in sweep {
+        let mut engine = ScEngine::with_threads(prep.clone(), threads);
+        let mut logits = vec![0i64; batch * cl];
+        let m = b.run(
+            &format!("sc_serve/engine/tnn_batch{batch}_threads={threads}"),
+            batch as u64,
+            || {
+                engine.forward_batch_into(&x, &mut logits);
+                logits[0]
+            },
+        );
+        assert_eq!(logits, expect, "threads={threads}: logits diverged");
+        let imgs_per_s = batch as f64 / m.median_s.max(1e-12);
+        report.add_scalar(&format!("engine/tnn/threads={threads}"), imgs_per_s, "imgs/s");
+        if threads == 1 {
+            t1 = m.median_s;
+        }
+        t_top = m.median_s;
+    }
+    let top = *sweep.last().unwrap();
+    let speedup = t1 / t_top.max(1e-12);
+    println!("   -> thread scaling N={top} vs N=1 on batch {batch}: {speedup:.2}x");
+    report.add_scalar(&format!("engine/tnn/thread_speedup_n{top}_vs_n1"), speedup, "x");
+    // Single-request latency: a one-row batch takes the channel-block
+    // sharding path, so --threads helps even without co-riders.
+    for &threads in sweep {
+        let mut engine = ScEngine::with_threads(prep.clone(), threads);
+        let mut logits = vec![0i64; cl];
+        let m = b.run(&format!("sc_serve/engine/tnn_batch1_threads={threads}"), 1, || {
+            engine.forward_batch_into(&x[..il], &mut logits);
+            logits[0]
+        });
+        assert_eq!(logits[..], expect[..cl], "batch1 threads={threads}: logits diverged");
+        report.add_scalar(
+            &format!("engine/tnn/batch1_threads={threads}"),
+            1.0 / m.median_s.max(1e-12),
+            "imgs/s",
+        );
+    }
+}
+
 fn engine_vs_executor(report: &mut JsonReport) {
     let b = if quick() { Bench::quick() } else { Bench::default() };
-    println!("== engine vs executor (bit-identical logits, same frozen model) ==");
+    println!("\n== engine vs executor (bit-identical logits, same frozen model) ==");
     for (label, cfg, quant, img) in [
         (
             "tnn",
@@ -118,7 +229,9 @@ fn pool_sweep_sc(report: &mut JsonReport) {
 
 fn main() {
     let mut report = JsonReport::new("sc_serve");
+    gemm_vs_naive(&mut report);
     engine_vs_executor(&mut report);
+    engine_threads_sweep(&mut report);
     pool_sweep_sc(&mut report);
     if let Ok(path) = std::env::var("BENCH_JSON") {
         report.write(&path).expect("write BENCH_JSON");

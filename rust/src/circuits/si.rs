@@ -210,6 +210,15 @@ impl SelectiveInterconnect {
         (0..=self.in_width).map(|c| self.apply_count(c)).collect()
     }
 
+    /// [`SelectiveInterconnect::count_table`] shifted to **signed**
+    /// output codes: entry `c` is `apply_count(c) - out_bsl/2`, i.e.
+    /// exactly the value a serving engine stores in an activation
+    /// plane. One synthesis entry point for every LUT consumer.
+    pub fn signed_count_table(&self) -> Vec<i32> {
+        let off = (self.out_bsl() / 2) as i32;
+        self.count_table().into_iter().map(|v| v as i32 - off).collect()
+    }
+
     /// Apply to a thermometer accumulation result.
     pub fn apply(&self, acc: &ThermCode) -> ThermCode {
         assert_eq!(acc.bsl(), self.in_width);
@@ -230,6 +239,21 @@ impl SelectiveInterconnect {
     pub fn cost(&self) -> Cost {
         cost_of(&self.gate_count())
     }
+}
+
+/// Flatten per-channel signed count tables into one channel-major LUT
+/// of `sis.len() × lut_w` entries — the layout serving engines index as
+/// `lut[channel · lut_w + count]`. `lut_w` must equal every channel's
+/// `in_width + 1` (one entry per possible accumulated count); the
+/// mismatch assert catches SI banks synthesized at the wrong BSN width.
+pub fn flatten_count_tables(sis: &[SelectiveInterconnect], lut_w: usize) -> Vec<i32> {
+    let mut lut = Vec::with_capacity(sis.len() * lut_w);
+    for si in sis {
+        let table = si.signed_count_table();
+        assert_eq!(table.len(), lut_w, "SI in_width must equal the layer's BSN width");
+        lut.extend(table);
+    }
+    lut
 }
 
 #[cfg(test)]
@@ -328,6 +352,24 @@ mod tests {
             si.apply_bits_into(sorted.bits(), &mut out);
             assert_eq!(out, si.apply_bits(sorted.bits()));
         }
+    }
+
+    #[test]
+    fn signed_table_and_flattening() {
+        let a = SelectiveInterconnect::for_activation(&ActivationFn::Relu { ratio: 0.5 }, 12, 4);
+        let b = SelectiveInterconnect::for_activation(
+            &ActivationFn::BnRelu { gamma: 2.0, beta: 1.0, ratio: 0.25 },
+            12,
+            4,
+        );
+        let st = a.signed_count_table();
+        for c in 0..=12usize {
+            assert_eq!(st[c], a.apply_count(c) as i32 - 2, "c={c}");
+        }
+        let flat = flatten_count_tables(&[a.clone(), b.clone()], 13);
+        assert_eq!(flat.len(), 2 * 13);
+        assert_eq!(&flat[..13], a.signed_count_table().as_slice());
+        assert_eq!(&flat[13..], b.signed_count_table().as_slice());
     }
 
     #[test]

@@ -114,7 +114,9 @@ impl Backend {
                 let (c, h, w) = mc.input;
                 Ok(SyntheticExecutor::demo_factory(c * h * w, mc.num_classes))
             }
-            Backend::Sc => Ok(ScBatchExecutor::factory(prepared_for(&cfg)?, cfg.batch)),
+            Backend::Sc => {
+                Ok(ScBatchExecutor::factory(prepared_for(&cfg)?, cfg.batch, cfg.threads))
+            }
             Backend::Binary => Ok(BinaryBatchExecutor::factory(prepared_for(&cfg)?, cfg.batch)),
             Backend::Auto => unreachable!("resolve() never returns Auto"),
         }

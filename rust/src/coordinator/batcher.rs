@@ -301,6 +301,13 @@ pub struct ServeConfig {
     pub seed: u64,
     /// Batch capacity of one native-backend execution.
     pub batch: usize,
+    /// Intra-engine threads of one `sc`-backend execution: each worker
+    /// shards batch rows × output-channel blocks across this many
+    /// scoped threads inside `nn::ScEngine` (bit-identical logits at
+    /// any value; single-row batches fall back to channel-block
+    /// sharding so the threads still cut latency). Total serving
+    /// threads scale as `workers × threads`.
+    pub threads: usize,
 }
 
 impl ServeConfig {
@@ -316,6 +323,7 @@ impl ServeConfig {
             workers: 1,
             seed: 42,
             batch: 8,
+            threads: 1,
         }
     }
 }

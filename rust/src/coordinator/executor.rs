@@ -107,10 +107,14 @@ impl BatchExecutor for PjrtExecutor {
 /// Native SC serving backend: the batched, bit-exact
 /// [`ScEngine`] behind the pool — the paper's deterministic-coding
 /// datapath served directly, no AOT artifacts required. All workers
-/// share one frozen [`Prepared`] (`Arc`); each worker owns its own
-/// engine (scratch arenas are per-worker state). Logits are the SC
-/// executor's integer class scores, converted to `f32` losslessly for
-/// the wire format.
+/// share one frozen [`Prepared`] (`Arc`, including the packed GEMM
+/// panels); each worker owns its own engine (scratch arenas are
+/// per-worker state, one arena set per engine thread). With
+/// `threads > 1` the engine shards each batch over rows × output-
+/// channel blocks (rows when the batch is wide, channel blocks within
+/// a row when it isn't) — logits stay bit-identical at any thread
+/// count. Logits are the SC executor's integer class scores, converted
+/// to `f32` losslessly for the wire format.
 pub struct ScBatchExecutor {
     engine: ScEngine,
     spec: ExecutorSpec,
@@ -119,9 +123,10 @@ pub struct ScBatchExecutor {
 
 impl ScBatchExecutor {
     /// Build over a shared frozen model, with a fixed per-execution
-    /// batch capacity.
-    pub fn new(prep: Arc<Prepared>, batch: usize) -> Self {
-        let engine = ScEngine::new(prep);
+    /// batch capacity and intra-engine thread count (both clamped to
+    /// ≥ 1).
+    pub fn new(prep: Arc<Prepared>, batch: usize, threads: usize) -> Self {
+        let engine = ScEngine::with_threads(prep, threads.max(1));
         let batch = batch.max(1);
         let spec = ExecutorSpec {
             image_len: engine.image_len(),
@@ -133,8 +138,8 @@ impl ScBatchExecutor {
 
     /// Factory for [`super::Coordinator::start_with`]: every worker
     /// shares `prep`, each builds its own engine in-thread.
-    pub fn factory(prep: Arc<Prepared>, batch: usize) -> ExecutorFactory {
-        Box::new(move |_worker| Ok(Box::new(ScBatchExecutor::new(prep.clone(), batch))))
+    pub fn factory(prep: Arc<Prepared>, batch: usize, threads: usize) -> ExecutorFactory {
+        Box::new(move |_worker| Ok(Box::new(ScBatchExecutor::new(prep.clone(), batch, threads))))
     }
 }
 
@@ -351,7 +356,7 @@ mod tests {
             &params,
             QuantConfig { act_bsl: Some(2), weight_ternary: true, residual_bsl: None },
         ));
-        let mut be = ScBatchExecutor::new(prep.clone(), 2);
+        let mut be = ScBatchExecutor::new(prep.clone(), 2, 2);
         assert_eq!(be.spec(), ExecutorSpec { image_len: 784, batch: 2, classes: 10 });
         let x: Vec<f32> = (0..2 * 784).map(|_| rng.normal() as f32).collect();
         let logits = be.run_batch(&x, 2).unwrap();
@@ -384,7 +389,7 @@ mod tests {
             &params,
             QuantConfig { act_bsl: Some(2), weight_ternary: true, residual_bsl: None },
         ));
-        let mut sc = ScBatchExecutor::new(prep.clone(), 1);
+        let mut sc = ScBatchExecutor::new(prep.clone(), 1, 1);
         let mut bin = BinaryBatchExecutor::new(prep, 1);
         assert_eq!(sc.spec(), bin.spec());
         let x: Vec<f32> = (0..784).map(|_| rng.normal() as f32).collect();

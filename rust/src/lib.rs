@@ -22,8 +22,10 @@
 //!   voltage/frequency power model behind Fig 4.
 //! * [`nn`] — the NN substrate: tensors, conv/BN/linear layers, ternary /
 //!   thermometer quantization, a **bit-exact SC executor** that runs
-//!   quantized networks through the circuit simulators, and a binary
-//!   integer baseline executor.
+//!   quantized networks through the circuit simulators, a binary
+//!   integer baseline executor, the packed **ternary/i8 GEMM core**
+//!   every accumulation site shares ([`nn::gemm`]), and the batched,
+//!   optionally multi-threaded serving engine ([`nn::ScEngine`]).
 //! * [`fault`] — bit-error-rate fault injection for SC and binary
 //!   datapaths (Fig 5).
 //! * [`data`] — deterministic synthetic datasets standing in for MNIST /

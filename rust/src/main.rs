@@ -5,7 +5,7 @@
 //! scnn train --model NAME [--steps N] [--act-bsl B] [--artifacts DIR]
 //! scnn serve --model NAME [--workers N] [--clients N] [--requests N]
 //!            [--backend auto|pjrt|synthetic|sc|binary] [--batch N]
-//!            [--seed N] [--shed] [--artifacts DIR]
+//!            [--threads N] [--seed N] [--shed] [--artifacts DIR]
 //! scnn info
 //! ```
 //!
@@ -74,8 +74,10 @@ fn main() -> Result<()> {
                  \n      ids: {}\n\
                  \n  train --model tnn|scnet10|scnet20 [--steps N] [--act-bsl B] [--res-bsl B]\n\
                  \n  serve --model NAME [--workers N] [--clients N] [--requests N] [--steps N]\n\
-                 \n        [--backend auto|pjrt|synthetic|sc|binary] [--batch N] [--seed N] [--shed]\n\
-                 \n        (--seed pins the sc/binary backends' deterministic model freeze)\n\
+                 \n        [--backend auto|pjrt|synthetic|sc|binary] [--batch N] [--threads N]\n\
+                 \n        [--seed N] [--shed]\n\
+                 \n        (--seed pins the sc/binary backends' deterministic model freeze;\n\
+                 \n         --threads shards each sc-backend batch across N engine threads)\n\
                  \n  info   print runtime/artifact status",
                 exp::ALL_IDS.join(" ")
             );
@@ -142,6 +144,7 @@ fn cmd_serve(flags: &HashMap<String, String>, artifacts: &str) -> Result<()> {
     let requests: usize = flags.get("requests").and_then(|s| s.parse().ok()).unwrap_or(512);
     let steps: usize = flags.get("steps").and_then(|s| s.parse().ok()).unwrap_or(0);
     let workers: usize = flags.get("workers").and_then(|s| s.parse().ok()).unwrap_or(1).max(1);
+    let threads: usize = flags.get("threads").and_then(|s| s.parse().ok()).unwrap_or(1).max(1);
     let clients: usize = flags.get("clients").and_then(|s| s.parse().ok()).unwrap_or(4).max(1);
     let seed: u64 = flags.get("seed").and_then(|s| s.parse().ok()).unwrap_or(42);
     let backend = Backend::parse(flags.get("backend").map(String::as_str).unwrap_or("auto"))?;
@@ -154,6 +157,7 @@ fn cmd_serve(flags: &HashMap<String, String>, artifacts: &str) -> Result<()> {
     let mut cfg = ServeConfig::new(artifacts, &model);
     cfg.knobs = knobs;
     cfg.workers = workers;
+    cfg.threads = threads;
     cfg.policy = policy;
     cfg.seed = seed;
     if let Some(b) = flags.get("batch").and_then(|s| s.parse().ok()) {
@@ -172,8 +176,8 @@ fn cmd_serve(flags: &HashMap<String, String>, artifacts: &str) -> Result<()> {
     let client = coord.client();
     let (c, h, w) = data.shape();
     println!(
-        "serving {model} ({c}x{h}x{w}); {workers} workers; issuing {requests} requests \
-         from {clients} client threads"
+        "serving {model} ({c}x{h}x{w}); {workers} workers x {threads} engine threads; \
+         issuing {requests} requests from {clients} client threads"
     );
     let t0 = std::time::Instant::now();
     let mut handles = Vec::new();

@@ -161,14 +161,16 @@ impl BinaryExecutor {
         let mut res: Option<CodeMap> = None;
         let mut li = 0usize;
         let mut gap: Option<Vec<i64>> = None;
-        // Integer im2col scratch reused across layers (no per-layer
-        // float tensor round-trip).
+        // Integer im2col + GEMM count scratch reused across layers (no
+        // per-layer float tensor round-trip, no per-layer allocation).
         let mut cols: Vec<i32> = Vec::new();
+        let mut acc: Vec<i64> = Vec::new();
         for l in &self.prep.cfg.layers {
             match l {
                 LayerCfg::Conv { .. } => {
                     let pc = &self.prep.convs[li];
-                    let (m, r) = self.conv_layer(pc, &main, res.as_ref(), rng.as_mut(), &mut cols);
+                    let (m, r) =
+                        self.conv_layer(pc, &main, res.as_ref(), rng.as_mut(), &mut cols, &mut acc);
                     main = m;
                     if r.is_some() {
                         res = r;
@@ -189,12 +191,12 @@ impl BinaryExecutor {
                     let x = gap
                         .clone()
                         .unwrap_or_else(|| main.q.iter().map(|&v| v as i64).collect());
-                    let mut logits = vec![0i64; *out_dim];
-                    for o in 0..*out_dim {
-                        for i in 0..*in_dim {
-                            logits[o] += x[i] * self.prep.fc.values[o * in_dim + i] as i64;
-                        }
-                    }
+                    assert_eq!(x.len(), *in_dim);
+                    // Classifier through the dense packed panel (the
+                    // binary family's GEMM format).
+                    let fc = &self.prep.fc_panels.dense;
+                    let logits: Vec<i64> =
+                        (0..*out_dim).map(|o| fc.row_dot_i64(o, &x)).collect();
                     return logits;
                 }
             }
@@ -209,6 +211,7 @@ impl BinaryExecutor {
         res: Option<&CodeMap>,
         mut rng: Option<&mut Rng>,
         cols: &mut Vec<i32>,
+        acc: &mut Vec<i64>,
     ) -> (CodeMap, Option<CodeMap>) {
         let (cin, h, w) = main.dims;
         let acc_w = pc.shape.acc_width();
@@ -222,24 +225,40 @@ impl BinaryExecutor {
         let acc_bits = (64 - (pc.bsn_width as u64).leading_zeros()).max(8) as u32;
         let ber = self.fault.map(|f| f.ber).unwrap_or(0.0);
 
+        // Fault-free accumulation is one dense i8-panel GEMM (the
+        // 4×-wide microkernel over the panel packed at freeze time);
+        // the word-fault path below must walk scalar words to inject
+        // per-word flips in the same draw order as before.
+        if rng.is_none() {
+            // Grow-only scratch, never cleared: gemm_into overwrites
+            // every element it hands out, so stale counts from another
+            // layer never survive into a read.
+            if acc.len() < pc.shape.cout * npix {
+                acc.resize(pc.shape.cout * npix, 0);
+            }
+            pc.panels.dense.gemm_into(cols, npix, &mut acc[..pc.shape.cout * npix]);
+        }
+
         let mut out_main = vec![0i32; pc.shape.cout * npix];
         let mut out_res = pc.si_res.as_ref().map(|_| vec![0i32; pc.shape.cout * npix]);
         let half = (main.bsl / 2) as i64;
         for co in 0..pc.shape.cout {
             let wrow = &pc.wq.values[co * acc_w..(co + 1) * acc_w];
             for p in 0..npix {
-                let xr = &cols[p * acc_w..(p + 1) * acc_w];
-                let mut acc: i64 = 0;
-                for i in 0..acc_w {
-                    let mut q = (xr[i] as i64).clamp(-half, half);
-                    if let Some(r) = rng.as_deref_mut() {
+                let dot: i64 = if let Some(r) = rng.as_deref_mut() {
+                    let xr = &cols[p * acc_w..(p + 1) * acc_w];
+                    let mut s = 0i64;
+                    for i in 0..acc_w {
                         // Activation word faults (sign + 3 magnitude bits).
-                        q = flip_word(q, 4, ber, r);
+                        let q = flip_word((xr[i] as i64).clamp(-half, half), 4, ber, r);
+                        s += q * wrow[i] as i64;
                     }
-                    acc += q * wrow[i] as i64;
-                }
+                    s
+                } else {
+                    acc[co * npix + p]
+                };
                 // Count-domain offset identical to the SC path.
-                let mut count = acc + (acc_w as i64) * half;
+                let mut count = dot + (acc_w as i64) * half;
                 if pc.res_in {
                     let rm = res.expect("residual map");
                     let rhalf = (rm.bsl / 2) as i64;

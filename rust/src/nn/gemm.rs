@@ -1,0 +1,469 @@
+//! Integer GEMM core for the count-domain accumulation stage.
+//!
+//! Every executor in this crate reduces a conv layer to the same shape
+//! of work: an im2col matrix of quantized activation codes (`npix × K`
+//! i32 rows) against a panel of low-precision weight rows (`cout × K`),
+//! accumulated exactly in `i64` counts. PR 3 made the *bit-level*
+//! stages word-parallel, which moved the serving hot path into these
+//! dot products — previously naive per-(channel, pixel) scalar loops.
+//!
+//! This module is the one implementation they all share, with the
+//! weight panels packed **once at [`super::sc_exec::Prepared`] build
+//! time** into the two formats the two model families want:
+//!
+//! * [`TernaryPanel`] — for the SC family, whose weights are ternary
+//!   (`{-1, 0, +1}` after [`super::quant::TernaryTensor::quantize`]).
+//!   Each weight row is split into a `+1` index list and a `−1` index
+//!   list; **zeros are skipped entirely** (no load, no multiply) and
+//!   the surviving terms are pure adds/subtracts — the paper's own
+//!   argument that ternary weights make the accumulator multiplier-free
+//!   applies to the simulator too. A typical ternarized row is ~²⁄₃
+//!   non-zero, so this also cuts memory traffic by a third before any
+//!   arithmetic win.
+//! * [`I8Panel`] — for the binary/quantized family: a dense row-major
+//!   `i8` panel walked by a 4×-wide unrolled microkernel (four pixel
+//!   columns per pass, one weight load feeding four accumulators).
+//!
+//! The ternary kernel is **cache-blocked**: its output is produced in
+//! [`BLOCK_CO`]-row channel blocks, and within a block the im2col row
+//! of one pixel (a few KiB) is reused across every channel before
+//! moving on, so the activation row stays in L1 while the much larger
+//! index panel streams. The dense kernel's reuse lever is its
+//! microkernel instead (one weight load feeds four pixel columns).
+//! Accumulation is exact `i64` integer arithmetic
+//! — no ordering, no rounding — which is what lets the threaded engine
+//! shard output blocks freely and still produce **bit-identical**
+//! logits (asserted in `rust/tests/gemm.rs`).
+//!
+//! [`gemm_naive`] is the reference triple loop the packed kernels are
+//! property-tested against; `rust/benches/sc_serve.rs` tracks the
+//! packed-vs-naive ratio in `BENCH_sc.json` (DESIGN.md §Perf,
+//! "Ternary GEMM + threading").
+
+/// Output-channel block width of the cache-blocked kernels. Eight i64
+/// accumulator lanes per activation-row pass: small enough to live in
+/// registers, large enough to amortize the activation-row loads.
+pub const BLOCK_CO: usize = 8;
+
+/// Reference GEMM: `out[r·n + p] = Σ_i w[r·k + i] · cols[p·k + i]`,
+/// the naive triple loop every packed kernel must reproduce exactly.
+/// `w` is `rows × k` row-major, `cols` is `n × k` row-major (one im2col
+/// row per output pixel), `out` is `rows × n` row-major.
+pub fn gemm_naive(w: &[i8], rows: usize, k: usize, cols: &[i32], n: usize, out: &mut [i64]) {
+    assert_eq!(w.len(), rows * k, "gemm_naive: weight panel size mismatch");
+    assert_eq!(cols.len(), n * k, "gemm_naive: activation matrix size mismatch");
+    assert_eq!(out.len(), rows * n, "gemm_naive: output size mismatch");
+    for r in 0..rows {
+        let wrow = &w[r * k..(r + 1) * k];
+        for p in 0..n {
+            let x = &cols[p * k..(p + 1) * k];
+            let mut s = 0i64;
+            for i in 0..k {
+                s += x[i] as i64 * wrow[i] as i64;
+            }
+            out[r * n + p] = s;
+        }
+    }
+}
+
+/// Ternary weight panel packed as per-row `+1` / `−1` index lists
+/// (CSR-like; zeros dropped at pack time). The multiplication
+/// disappears: a row dot is `Σ x[plus] − Σ x[minus]`.
+#[derive(Clone, Debug)]
+pub struct TernaryPanel {
+    rows: usize,
+    k: usize,
+    /// Concatenated per-row index lists: for row `r`,
+    /// `idx[off[r]..mid[r]]` are the `+1` positions and
+    /// `idx[mid[r]..off[r+1]]` the `−1` positions.
+    idx: Vec<u32>,
+    /// Row starts into `idx` (`rows + 1` entries).
+    off: Vec<u32>,
+    /// Per-row boundary between the `+1` and `−1` lists.
+    mid: Vec<u32>,
+}
+
+impl TernaryPanel {
+    /// Pack a `rows × k` row-major ternary panel. Panics when a value
+    /// is outside `{-1, 0, +1}` — those rows belong in an [`I8Panel`].
+    pub fn pack(values: &[i8], rows: usize, k: usize) -> Self {
+        assert_eq!(values.len(), rows * k, "TernaryPanel::pack: panel size mismatch");
+        assert!(k <= u32::MAX as usize, "TernaryPanel::pack: row width exceeds u32 indices");
+        let mut idx = Vec::new();
+        let mut off = Vec::with_capacity(rows + 1);
+        let mut mid = Vec::with_capacity(rows);
+        off.push(0u32);
+        for r in 0..rows {
+            let wrow = &values[r * k..(r + 1) * k];
+            for (i, &v) in wrow.iter().enumerate() {
+                if v == 1 {
+                    idx.push(i as u32);
+                } else {
+                    assert!(
+                        v == 0 || v == -1,
+                        "TernaryPanel::pack: non-ternary weight {v} at row {r}, col {i}"
+                    );
+                }
+            }
+            mid.push(idx.len() as u32);
+            for (i, &v) in wrow.iter().enumerate() {
+                if v == -1 {
+                    idx.push(i as u32);
+                }
+            }
+            off.push(idx.len() as u32);
+        }
+        Self { rows, k, idx, off, mid }
+    }
+
+    /// Number of weight rows (output channels).
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Row width (accumulation width / reduction dimension).
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Non-zero weights surviving the pack (the work the kernel does;
+    /// `k·rows − nnz` multiplies were skipped outright).
+    pub fn nnz(&self) -> usize {
+        self.idx.len()
+    }
+
+    /// The `+1` and `−1` index lists of one row.
+    #[inline]
+    fn row_lists(&self, r: usize) -> (&[u32], &[u32]) {
+        let lo = self.off[r] as usize;
+        let mi = self.mid[r] as usize;
+        let hi = self.off[r + 1] as usize;
+        (&self.idx[lo..mi], &self.idx[mi..hi])
+    }
+
+    /// Dot of row `r` with one im2col row (`k` i32 codes): adds and
+    /// subtracts only, zero weights never touched.
+    #[inline]
+    pub fn row_dot(&self, r: usize, x: &[i32]) -> i64 {
+        debug_assert_eq!(x.len(), self.k);
+        let (plus, minus) = self.row_lists(r);
+        let mut pos = 0i64;
+        for &i in plus {
+            pos += x[i as usize] as i64;
+        }
+        let mut neg = 0i64;
+        for &i in minus {
+            neg += x[i as usize] as i64;
+        }
+        pos - neg
+    }
+
+    /// [`TernaryPanel::row_dot`] over `i64` inputs — the classifier
+    /// path, where the GAP accumulator is already 64-bit.
+    #[inline]
+    pub fn row_dot_i64(&self, r: usize, x: &[i64]) -> i64 {
+        debug_assert_eq!(x.len(), self.k);
+        let (plus, minus) = self.row_lists(r);
+        let mut pos = 0i64;
+        for &i in plus {
+            pos += x[i as usize];
+        }
+        let mut neg = 0i64;
+        for &i in minus {
+            neg += x[i as usize];
+        }
+        pos - neg
+    }
+
+    /// Cache-blocked GEMM: `out[r·n + p] = row_dot(r, cols row p)`.
+    /// Bit-identical to [`gemm_naive`] on ternary panels (exact i64
+    /// accumulation; property-tested). Within each [`BLOCK_CO`]-row
+    /// channel block the kernel walks pixels in the outer loop, so one
+    /// im2col row is loaded once and consumed by the whole block.
+    pub fn gemm_into(&self, cols: &[i32], n: usize, out: &mut [i64]) {
+        self.gemm_rows_into(0, self.rows, cols, n, out);
+    }
+
+    /// [`TernaryPanel::gemm_into`] restricted to weight rows
+    /// `r0..r1`, writing into a `(r1−r0) × n` chunk — the work unit of
+    /// the engine's output-channel-block sharding (each thread owns a
+    /// disjoint row range, so the full result is assembled without
+    /// synchronization and stays bit-identical to the full-panel call).
+    pub fn gemm_rows_into(&self, r0: usize, r1: usize, cols: &[i32], n: usize, out: &mut [i64]) {
+        assert!(r0 <= r1 && r1 <= self.rows, "TernaryPanel::gemm_rows_into: row range");
+        assert_eq!(cols.len(), n * self.k, "TernaryPanel::gemm_rows_into: cols size mismatch");
+        assert_eq!(out.len(), (r1 - r0) * n, "TernaryPanel::gemm_rows_into: out size mismatch");
+        if self.k == 0 {
+            out.fill(0);
+            return;
+        }
+        for b0 in (r0..r1).step_by(BLOCK_CO) {
+            let b1 = (b0 + BLOCK_CO).min(r1);
+            for (p, x) in cols.chunks_exact(self.k).enumerate() {
+                for r in b0..b1 {
+                    out[(r - r0) * n + p] = self.row_dot(r, x);
+                }
+            }
+        }
+    }
+}
+
+/// Dense low-bit weight panel (row-major `i8`) with a 4×-wide unrolled
+/// microkernel: four pixel columns advance together, so each weight
+/// byte is loaded once and feeds four independent i64 accumulators.
+#[derive(Clone, Debug)]
+pub struct I8Panel {
+    rows: usize,
+    k: usize,
+    data: Vec<i8>,
+}
+
+impl I8Panel {
+    /// Pack a `rows × k` row-major `i8` panel (any i8 values — the
+    /// quantized/binary family is not restricted to ternary).
+    pub fn pack(values: &[i8], rows: usize, k: usize) -> Self {
+        assert_eq!(values.len(), rows * k, "I8Panel::pack: panel size mismatch");
+        Self { rows, k, data: values.to_vec() }
+    }
+
+    /// Number of weight rows.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Row width.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// One packed weight row.
+    #[inline]
+    pub fn row(&self, r: usize) -> &[i8] {
+        &self.data[r * self.k..(r + 1) * self.k]
+    }
+
+    /// Dot of row `r` with one activation row.
+    #[inline]
+    pub fn row_dot(&self, r: usize, x: &[i32]) -> i64 {
+        debug_assert_eq!(x.len(), self.k);
+        let mut s = 0i64;
+        for (&xv, &wv) in x.iter().zip(self.row(r)) {
+            s += xv as i64 * wv as i64;
+        }
+        s
+    }
+
+    /// [`I8Panel::row_dot`] over `i64` inputs (classifier path).
+    #[inline]
+    pub fn row_dot_i64(&self, r: usize, x: &[i64]) -> i64 {
+        debug_assert_eq!(x.len(), self.k);
+        let mut s = 0i64;
+        for (&xv, &wv) in x.iter().zip(self.row(r)) {
+            s += xv * wv as i64;
+        }
+        s
+    }
+
+    /// GEMM via the 4×-wide microkernel; bit-identical to
+    /// [`gemm_naive`] (exact i64 accumulation, property-tested). The
+    /// dense panel's reuse lever is the microkernel itself — each
+    /// weight byte loaded once for four pixel columns — so rows are
+    /// walked flat (channel blocking buys nothing here; it belongs to
+    /// the ternary kernel's gather pattern).
+    pub fn gemm_into(&self, cols: &[i32], n: usize, out: &mut [i64]) {
+        assert_eq!(cols.len(), n * self.k, "I8Panel::gemm_into: cols size mismatch");
+        assert_eq!(out.len(), self.rows * n, "I8Panel::gemm_into: out size mismatch");
+        let k = self.k;
+        for r in 0..self.rows {
+            let wrow = self.row(r);
+            let orow = &mut out[r * n..(r + 1) * n];
+            let mut p = 0usize;
+            // Microkernel: 4 pixel columns per pass, one weight load
+            // feeding 4 accumulators.
+            while p + 4 <= n {
+                let x0 = &cols[p * k..(p + 1) * k];
+                let x1 = &cols[(p + 1) * k..(p + 2) * k];
+                let x2 = &cols[(p + 2) * k..(p + 3) * k];
+                let x3 = &cols[(p + 3) * k..(p + 4) * k];
+                let (mut a0, mut a1, mut a2, mut a3) = (0i64, 0i64, 0i64, 0i64);
+                for i in 0..k {
+                    let w = wrow[i] as i64;
+                    a0 += x0[i] as i64 * w;
+                    a1 += x1[i] as i64 * w;
+                    a2 += x2[i] as i64 * w;
+                    a3 += x3[i] as i64 * w;
+                }
+                orow[p] = a0;
+                orow[p + 1] = a1;
+                orow[p + 2] = a2;
+                orow[p + 3] = a3;
+                p += 4;
+            }
+            // Ragged edge narrower than the microkernel.
+            while p < n {
+                orow[p] = self.row_dot(r, &cols[p * k..(p + 1) * k]);
+                p += 1;
+            }
+        }
+    }
+}
+
+/// Both packings of one weight panel, built together at `Prepared`
+/// freeze time: the SC family consumes [`WeightPanels::ternary`], the
+/// binary/quantized family [`WeightPanels::dense`]. One pack call, one
+/// source of truth for the panel geometry. Deliberate trade-off: one
+/// frozen model carries both formats (plus the raw `wq.values` the
+/// fault path walks) so any executor family can attach to the same
+/// shared `Arc<Prepared>` without re-packing — a few extra bytes per
+/// weight on models this size, paid once per freeze, never per worker.
+#[derive(Clone, Debug)]
+pub struct WeightPanels {
+    /// Zero-skipping add/sub panel for the ternary family.
+    pub ternary: TernaryPanel,
+    /// Dense microkernel panel for the binary/quantized family.
+    pub dense: I8Panel,
+}
+
+impl WeightPanels {
+    /// Pack a `rows × k` row-major ternary panel both ways.
+    pub fn pack(values: &[i8], rows: usize, k: usize) -> Self {
+        Self {
+            ternary: TernaryPanel::pack(values, rows, k),
+            dense: I8Panel::pack(values, rows, k),
+        }
+    }
+}
+
+/// Unrolled f32 dot product for the float layers (`layers::linear`,
+/// `layers::conv2d`). Single accumulator, strictly sequential adds —
+/// **bit-identical** to the scalar loop it replaces (float summation
+/// order is observable), just with the loop control amortized 4×.
+#[inline]
+pub fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut s = 0.0f32;
+    let mut ca = a.chunks_exact(4);
+    let mut cb = b.chunks_exact(4);
+    for (qa, qb) in ca.by_ref().zip(cb.by_ref()) {
+        s += qa[0] * qb[0];
+        s += qa[1] * qb[1];
+        s += qa[2] * qb[2];
+        s += qa[3] * qb[3];
+    }
+    for (x, y) in ca.remainder().iter().zip(cb.remainder()) {
+        s += x * y;
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn random_panel(rng: &mut Rng, rows: usize, k: usize, ternary: bool) -> Vec<i8> {
+        (0..rows * k)
+            .map(|_| {
+                if ternary {
+                    rng.gen_range_i64(-1, 1) as i8
+                } else {
+                    rng.gen_range_i64(-128, 127) as i8
+                }
+            })
+            .collect()
+    }
+
+    fn random_cols(rng: &mut Rng, n: usize, k: usize) -> Vec<i32> {
+        (0..n * k).map(|_| rng.gen_range_i64(-8, 9) as i32).collect()
+    }
+
+    #[test]
+    fn ternary_panel_matches_naive() {
+        let mut rng = Rng::new(1);
+        for &(rows, k, n) in
+            &[(1usize, 1usize, 1usize), (3, 7, 5), (8, 9, 16), (17, 72, 49), (5, 144, 3)]
+        {
+            let w = random_panel(&mut rng, rows, k, true);
+            let cols = random_cols(&mut rng, n, k);
+            let mut expect = vec![0i64; rows * n];
+            gemm_naive(&w, rows, k, &cols, n, &mut expect);
+            let panel = TernaryPanel::pack(&w, rows, k);
+            assert_eq!(panel.rows(), rows);
+            assert_eq!(panel.k(), k);
+            let mut got = vec![i64::MIN; rows * n];
+            panel.gemm_into(&cols, n, &mut got);
+            assert_eq!(got, expect, "rows={rows} k={k} n={n}");
+        }
+    }
+
+    #[test]
+    fn i8_panel_matches_naive_including_ragged_edges() {
+        let mut rng = Rng::new(2);
+        // n below, at, and above the 4-wide microkernel; rows straddling
+        // BLOCK_CO.
+        for &(rows, k, n) in &[(1usize, 3usize, 1usize), (2, 5, 3), (9, 8, 4), (11, 13, 7)] {
+            let w = random_panel(&mut rng, rows, k, false);
+            let cols = random_cols(&mut rng, n, k);
+            let mut expect = vec![0i64; rows * n];
+            gemm_naive(&w, rows, k, &cols, n, &mut expect);
+            let panel = I8Panel::pack(&w, rows, k);
+            let mut got = vec![i64::MIN; rows * n];
+            panel.gemm_into(&cols, n, &mut got);
+            assert_eq!(got, expect, "rows={rows} k={k} n={n}");
+        }
+    }
+
+    #[test]
+    fn ternary_pack_skips_zeros() {
+        let w: Vec<i8> = vec![1, 0, -1, 0, 0, 1];
+        let panel = TernaryPanel::pack(&w, 2, 3);
+        assert_eq!(panel.nnz(), 3);
+        assert_eq!(panel.row_dot(0, &[10, 20, 30]), 10 - 30);
+        assert_eq!(panel.row_dot(1, &[4, 5, 6]), 6);
+        assert_eq!(panel.row_dot_i64(0, &[10, 20, 30]), -20);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-ternary weight")]
+    fn ternary_pack_rejects_wide_values() {
+        TernaryPanel::pack(&[2], 1, 1);
+    }
+
+    #[test]
+    fn i64_dots_match_i32_dots() {
+        let mut rng = Rng::new(3);
+        let w = random_panel(&mut rng, 4, 10, true);
+        let x32 = random_cols(&mut rng, 1, 10);
+        let x64: Vec<i64> = x32.iter().map(|&v| v as i64).collect();
+        let tp = TernaryPanel::pack(&w, 4, 10);
+        let dp = I8Panel::pack(&w, 4, 10);
+        for r in 0..4 {
+            assert_eq!(tp.row_dot(r, &x32), tp.row_dot_i64(r, &x64));
+            assert_eq!(dp.row_dot(r, &x32), dp.row_dot_i64(r, &x64));
+            assert_eq!(tp.row_dot(r, &x32), dp.row_dot(r, &x32));
+        }
+    }
+
+    #[test]
+    fn weight_panels_pack_both_families() {
+        let w: Vec<i8> = vec![1, -1, 0, 0, 1, 1];
+        let p = WeightPanels::pack(&w, 2, 3);
+        assert_eq!(p.ternary.rows(), p.dense.rows());
+        assert_eq!(p.ternary.row_dot(1, &[1, 2, 3]), p.dense.row_dot(1, &[1, 2, 3]));
+    }
+
+    #[test]
+    fn dot_f32_matches_scalar_order() {
+        let mut rng = Rng::new(4);
+        for len in [0usize, 1, 3, 4, 7, 8, 129] {
+            let a: Vec<f32> = (0..len).map(|_| rng.normal() as f32).collect();
+            let b: Vec<f32> = (0..len).map(|_| rng.normal() as f32).collect();
+            let mut s = 0.0f32;
+            for i in 0..len {
+                s += a[i] * b[i];
+            }
+            // Identical summation order -> identical bits.
+            assert_eq!(dot_f32(&a, &b).to_bits(), s.to_bits(), "len={len}");
+        }
+    }
+}

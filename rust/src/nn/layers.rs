@@ -5,6 +5,7 @@
 //! datapath (multiplier array → BSN → SI) processes, and the width that
 //! drives the BSN cost model (Fig 9, Fig 13).
 
+use super::gemm::{self, I8Panel};
 use super::tensor::Tensor;
 
 /// Static shape of a conv layer.
@@ -74,6 +75,13 @@ pub fn im2col(x: &Tensor, cs: &ConvShape) -> (Vec<f32>, usize, usize) {
 /// `out` must be exactly `oh·ow·acc_width` long; every element is
 /// written (no stale data survives). Semantically identical to
 /// [`im2col`] on integer-valued tensors.
+///
+/// The packing loop works a kernel row at a time: for each
+/// `(pixel, ci, ky)` the `k` taps over `kx` are contiguous both in the
+/// input row and in the output row, so the copy is `fill` for the
+/// padded flanks plus one `copy_from_slice` for the valid span —
+/// no per-element index arithmetic or bounds checks survive in the
+/// inner loop.
 pub fn im2col_i32_into(
     x: &[i32],
     (c, h, w): (usize, usize, usize),
@@ -85,23 +93,30 @@ pub fn im2col_i32_into(
     let (oh, ow) = cs.out_hw(h, w);
     let cols = cs.acc_width();
     assert_eq!(out.len(), oh * ow * cols, "im2col_i32_into: buffer size mismatch");
+    let k = cs.k;
+    let mut rows = out.chunks_exact_mut(cols.max(1));
     for oy in 0..oh {
         for ox in 0..ow {
-            let row = (oy * ow + ox) * cols;
-            let mut idx = 0;
+            let row = rows.next().expect("output row per pixel");
+            // Leftmost input column of this pixel's receptive field.
+            let x0 = (ox * cs.stride) as isize - cs.pad as isize;
+            // Valid kx span: 0 <= x0 + kx < w.
+            let lo = (-x0).clamp(0, k as isize) as usize;
+            let hi = (w as isize - x0).clamp(0, k as isize) as usize;
+            let mut seg = row.chunks_exact_mut(k);
             for ci in 0..c {
-                for ky in 0..cs.k {
-                    for kx in 0..cs.k {
-                        let iy = (oy * cs.stride + ky) as isize - cs.pad as isize;
-                        let ix = (ox * cs.stride + kx) as isize - cs.pad as isize;
-                        out[row + idx] =
-                            if iy >= 0 && ix >= 0 && (iy as usize) < h && (ix as usize) < w {
-                                x[(ci * h + iy as usize) * w + ix as usize]
-                            } else {
-                                0
-                            };
-                        idx += 1;
+                let plane = &x[ci * h * w..(ci + 1) * h * w];
+                for ky in 0..k {
+                    let dst = seg.next().expect("k-wide segment per (ci, ky)");
+                    let iy = (oy * cs.stride + ky) as isize - cs.pad as isize;
+                    if iy < 0 || iy >= h as isize || lo >= hi {
+                        dst.fill(0);
+                        continue;
                     }
+                    dst[..lo].fill(0);
+                    dst[hi..].fill(0);
+                    let src_at = iy as usize * w + (x0 + lo as isize) as usize;
+                    dst[lo..hi].copy_from_slice(&plane[src_at..src_at + (hi - lo)]);
                 }
             }
         }
@@ -119,19 +134,20 @@ pub fn conv2d(x: &Tensor, w: &Tensor, cs: &ConvShape) -> Tensor {
     for co in 0..cs.cout {
         let wrow = &w.data()[co * acc..(co + 1) * acc];
         for p in 0..oh * ow {
-            let xr = &cols[p * acc..(p + 1) * acc];
-            let mut s = 0.0f32;
-            for i in 0..acc {
-                s += xr[i] * wrow[i];
-            }
-            out.data_mut()[co * oh * ow + p] = s;
+            // Unrolled dot with sequential summation order (bit-exact
+            // vs the scalar loop — this is the reference semantics).
+            out.data_mut()[co * oh * ow + p] =
+                gemm::dot_f32(&cols[p * acc..(p + 1) * acc], wrow);
         }
     }
     out
 }
 
 /// Integer conv2d on pre-quantized values: `x_q` (len = cin·h·w),
-/// ternary `w_q` (len = cout·acc). Returns per-pixel integer sums.
+/// low-bit `w_q` (len = cout·acc). Returns per-pixel integer sums.
+/// Routed through [`crate::nn::gemm`]: integer im2col (no float
+/// round-trip) followed by the dense i8-panel GEMM; exact i64
+/// accumulation, so the result is identical to the naive triple loop.
 pub fn conv2d_int(
     x_q: &[i32],
     (cin, h, w): (usize, usize, usize),
@@ -139,21 +155,13 @@ pub fn conv2d_int(
     cs: &ConvShape,
 ) -> (Vec<i64>, usize, usize) {
     assert_eq!(x_q.len(), cin * h * w);
-    let xf = Tensor::from_vec(&[cin, h, w], x_q.iter().map(|&v| v as f32).collect());
-    let (cols, oh, ow) = im2col(&xf, cs);
+    let (oh, ow) = cs.out_hw(h, w);
     let acc = cs.acc_width();
-    let mut out = vec![0i64; cs.cout * oh * ow];
-    for co in 0..cs.cout {
-        let wrow = &w_q[co * acc..(co + 1) * acc];
-        for p in 0..oh * ow {
-            let xr = &cols[p * acc..(p + 1) * acc];
-            let mut s = 0i64;
-            for i in 0..acc {
-                s += xr[i] as i64 * wrow[i] as i64;
-            }
-            out[co * oh * ow + p] = s;
-        }
-    }
+    let npix = oh * ow;
+    let mut cols = vec![0i32; npix * acc];
+    im2col_i32_into(x_q, (cin, h, w), cs, &mut cols);
+    let mut out = vec![0i64; cs.cout * npix];
+    I8Panel::pack(w_q, cs.cout, acc).gemm_into(&cols, npix, &mut out);
     (out, oh, ow)
 }
 
@@ -192,18 +200,16 @@ pub fn global_avgpool(x: &Tensor) -> Tensor {
     out
 }
 
-/// Linear layer: `y = W x` with W of shape (O, I).
+/// Linear layer: `y = W x` with W of shape (O, I). One
+/// [`gemm::dot_f32`] per output row (sequential summation order — the
+/// reference semantics are unchanged).
 pub fn linear(x: &Tensor, w: &Tensor) -> Tensor {
     let i = x.len();
     let o = w.shape()[0];
     assert_eq!(w.shape()[1], i);
     let mut out = Tensor::zeros(&[o]);
     for oo in 0..o {
-        let mut s = 0.0;
-        for ii in 0..i {
-            s += w.data()[oo * i + ii] * x.data()[ii];
-        }
-        out.data_mut()[oo] = s;
+        out.data_mut()[oo] = gemm::dot_f32(&w.data()[oo * i..(oo + 1) * i], x.data());
     }
     out
 }

@@ -6,7 +6,11 @@
 //! **serving engine** ([`sc_engine::ScEngine`]): the same frozen network
 //! as the SC executor, bit-identical logits, but with pre-sized scratch
 //! arenas and synthesized count tables so the steady-state request path
-//! allocates nothing.
+//! allocates nothing. Every count-domain accumulation site routes
+//! through the shared [`gemm`] core: weight panels packed once at
+//! freeze time into zero-skipping ternary index lists (SC family) and
+//! dense i8 microkernel panels (binary family), cache-blocked by
+//! output-channel block (DESIGN.md §Perf "Ternary GEMM + threading").
 //!
 //! The quantization semantics here *must* match `python/compile/model.py`
 //! exactly: the JAX side trains with fake-quant straight-through
@@ -15,6 +19,7 @@
 //! that was trained (verified end-to-end in `rust/tests/sc_pipeline.rs`).
 
 pub mod binary_exec;
+pub mod gemm;
 pub mod layers;
 pub mod model;
 pub mod quant;

@@ -2,46 +2,59 @@
 //!
 //! [`ScEngine`] evaluates the same frozen network as
 //! [`super::sc_exec::ScExecutor`] — bit-identical logits, asserted in
-//! `rust/tests/sc_serve.rs` — but is shaped for the request path
-//! instead of offline experiments:
+//! `rust/tests/sc_serve.rs` and `rust/tests/gemm.rs` — but is shaped
+//! for the request path instead of offline experiments:
 //!
 //! * **Shared model.** The engine holds `Arc<Prepared>`, so a pool of
-//!   workers shares one copy of the ternarized weights and SI tables
-//!   instead of deep-cloning them per worker.
+//!   workers shares one copy of the ternarized weights, packed GEMM
+//!   panels and SI tables instead of deep-cloning them per worker.
+//! * **Ternary GEMM core.** The accumulation stage of every conv layer
+//!   is one cache-blocked call into [`super::gemm::TernaryPanel`] —
+//!   zero-skipping add/sub index lists packed once at
+//!   [`Prepared`] build time — instead of a naive per-(channel, pixel)
+//!   scalar dot product (DESIGN.md §Perf, "Ternary GEMM + threading").
 //! * **Pre-sized scratch arenas.** All intermediate state — im2col
-//!   column buffers, ping-pong activation planes, residual planes and
-//!   the GAP accumulator — is allocated once at construction from the
-//!   model's static geometry and reused for every image. The
-//!   steady-state forward path performs **no heap allocation**: the
-//!   inner conv loop is integer dot products plus table lookups over
-//!   caller-owned slices (the `*_into` discipline of
-//!   [`crate::coding::thermometer`] and [`crate::circuits`]).
+//!   column buffers, the GEMM count plane, ping-pong activation planes,
+//!   residual planes and the GAP accumulator — lives in
+//!   per-thread [`EngineScratch`] arenas allocated once at construction
+//!   from the model's static geometry and reused for every image. The
+//!   steady-state forward path performs **no heap allocation**.
 //! * **Synthesized count tables.** Per-channel selective interconnects
 //!   and the residual re-scaling block are folded into lookup tables at
-//!   construction ([`SelectiveInterconnect::count_table`],
-//!   [`align_res_count`]), which is exact: both are pure monotone
-//!   functions of the accumulated count. This is the same
-//!   "deterministic coding makes everything a count function" property
-//!   the paper builds on (DESIGN.md §Hardware-Adaptation: activations
-//!   stay thermometer/ternary codes end-to-end, so a layer is fully
-//!   described by its count-transfer function) — the engine just
-//!   evaluates that function by indexed load instead of tap scan.
+//!   construction ([`si::flatten_count_tables`], [`align_res_count`]),
+//!   which is exact: both are pure monotone functions of the
+//!   accumulated count. This is the same "deterministic coding makes
+//!   everything a count function" property the paper builds on
+//!   (DESIGN.md §Hardware-Adaptation) — the engine just evaluates that
+//!   function by indexed load instead of tap scan.
+//! * **Intra-engine threading.** [`ScEngine::forward_batch_into`]
+//!   shards **batch rows × output-channel blocks** with
+//!   `std::thread::scope` — no runtime, no extra deps. Rows split into
+//!   contiguous chunks, one per scratch arena; threads left over on a
+//!   narrow batch (down to one image using all of them) split each
+//!   conv layer's channel blocks within their row, so the knob also
+//!   cuts single-request latency. Because count
+//!   accumulation is exact `i64` arithmetic and every (row,
+//!   channel-block) work item writes a disjoint output slice, the
+//!   sharding is order-safe: logits are **bit-identical** at every
+//!   thread count (asserted in `rust/tests/gemm.rs`). The knob is
+//!   plumbed through `ServeConfig::threads` / `scnn serve --threads N`.
+//!   Trade-off: the channel-block path spawns its scoped threads per
+//!   conv layer, so it pays thread-creation cost per layer per image —
+//!   worth it on wide layers (scnet-class models), mostly overhead on
+//!   tiny ones; the row path spawns once per batch.
 //!
 //! The engine is the fault-free serving path; fault injection (Fig 5)
 //! stays on [`super::sc_exec::ScExecutor`], which walks actual bit
-//! streams — since `crate::coding::BitVec` packs those streams into
-//! native `u64` words, no byte-per-bit (`Vec<bool>`) buffer exists
-//! anywhere on a serving path, packed planes and integer count planes
-//! only (DESIGN.md §Perf, "Packed representation"). Throughput floors
-//! for both live in DESIGN.md §Perf and are tracked by
-//! `rust/benches/sc_serve.rs` → `BENCH_sc.json`.
+//! streams. Throughput floors live in DESIGN.md §Perf and are tracked
+//! by `rust/benches/sc_serve.rs` → `BENCH_sc.json`.
 
 use std::sync::Arc;
 
-use crate::circuits::si::SelectiveInterconnect;
+use crate::circuits::si;
 use super::layers::im2col_i32_into;
 use super::model::LayerCfg;
-use super::sc_exec::{align_res_count, Prepared};
+use super::sc_exec::{align_res_count, Prepared, PreparedConv};
 use super::tensor::Tensor;
 
 /// Per-conv-layer execution plan: static geometry plus the synthesized
@@ -59,7 +72,7 @@ struct ConvPlan {
     /// LUT row width: `bsn_width + 1` (one entry per possible count).
     lut_w: usize,
     /// Main SI transfer, channel-major `cout × lut_w`, already offset
-    /// to signed codes: `lut[c] = apply_count(c) - out_bsl/2`.
+    /// to signed codes ([`si::flatten_count_tables`]).
     si_main_lut: Vec<i32>,
     /// Residual-tap SI transfer (layers with `res_out`).
     si_res_lut: Option<Vec<i32>>,
@@ -68,12 +81,26 @@ struct ConvPlan {
     align_lut: Option<Vec<i64>>,
 }
 
-/// The batched SC inference engine. See the module docs.
-pub struct ScEngine {
-    prep: Arc<Prepared>,
-    plans: Vec<ConvPlan>,
+/// Static scratch geometry of one frozen network: the arena sizes every
+/// [`EngineScratch`] is allocated from.
+#[derive(Clone, Copy, Debug)]
+struct ScratchSizes {
+    cols: usize,
+    acc: usize,
+    plane: usize,
+    res: usize,
+    ch: usize,
+}
+
+/// One thread's complete working set: im2col columns, the GEMM count
+/// plane, ping-pong activation/residual planes and the GAP accumulator.
+/// Allocated once, reused for every image the thread forwards.
+struct EngineScratch {
     /// im2col scratch, sized for the widest layer.
     cols: Vec<i32>,
+    /// GEMM output counts (`cout × npix` i64), sized for the widest
+    /// layer.
+    acc: Vec<i64>,
     /// Ping-pong activation planes (input of the current layer lives in
     /// `plane_a`, its output is written to `plane_b`, then swapped).
     plane_a: Vec<i32>,
@@ -85,11 +112,42 @@ pub struct ScEngine {
     gap: Vec<i64>,
 }
 
+impl EngineScratch {
+    fn new(s: &ScratchSizes) -> Self {
+        Self {
+            cols: vec![0; s.cols],
+            acc: vec![0; s.acc],
+            plane_a: vec![0; s.plane],
+            plane_b: vec![0; s.plane],
+            res_a: vec![0; s.res],
+            res_b: vec![0; s.res],
+            gap: vec![0; s.ch],
+        }
+    }
+}
+
+/// The batched SC inference engine. See the module docs.
+pub struct ScEngine {
+    prep: Arc<Prepared>,
+    plans: Vec<ConvPlan>,
+    /// One scratch arena per shard thread (`scratch.len()` == the
+    /// engine's thread knob; index 0 serves the sequential paths).
+    scratch: Vec<EngineScratch>,
+}
+
 impl ScEngine {
-    /// Build an engine over a frozen network, pre-sizing every scratch
-    /// arena from the model's static geometry and synthesizing the
-    /// per-channel count tables.
+    /// Build a single-threaded engine over a frozen network. Equivalent
+    /// to [`ScEngine::with_threads`]`(prep, 1)`.
     pub fn new(prep: impl Into<Arc<Prepared>>) -> Self {
+        Self::with_threads(prep, 1)
+    }
+
+    /// Build an engine whose [`ScEngine::forward_batch_into`] shards
+    /// batch rows across up to `threads` scoped threads, each owning
+    /// one pre-sized scratch arena. `threads` is clamped to ≥ 1; memory
+    /// scales linearly with it (one full arena set per thread). Logits
+    /// are bit-identical at every thread count.
+    pub fn with_threads(prep: impl Into<Arc<Prepared>>, threads: usize) -> Self {
         let prep: Arc<Prepared> = prep.into();
         let act_bsl = prep.act_bsl();
         let half = (act_bsl / 2) as i64;
@@ -97,10 +155,13 @@ impl ScEngine {
         let mut dims = prep.cfg.input;
         let mut res_dims: Option<(usize, usize, usize)> = None;
         let mut plans = Vec::with_capacity(prep.convs.len());
-        let mut max_cols = 0usize;
-        let mut max_plane = dims.0 * dims.1 * dims.2;
-        let mut max_res = 0usize;
-        let mut max_ch = dims.0;
+        let mut sizes = ScratchSizes {
+            cols: 0,
+            acc: 0,
+            plane: dims.0 * dims.1 * dims.2,
+            res: 0,
+            ch: dims.0,
+        };
         let mut ci = 0usize;
         for l in &prep.cfg.layers {
             if let LayerCfg::Conv { shape, .. } = l {
@@ -109,9 +170,9 @@ impl ScEngine {
                 let npix = oh * ow;
                 let acc_w = shape.acc_width();
                 let lut_w = pc.bsn_width + 1;
-                let si_main_lut = flatten_si_luts(&pc.si_main, lut_w);
+                let si_main_lut = si::flatten_count_tables(&pc.si_main, lut_w);
                 let si_res_lut =
-                    pc.si_res.as_ref().map(|sis| flatten_si_luts(sis, lut_w));
+                    pc.si_res.as_ref().map(|sis| si::flatten_count_tables(sis, lut_w));
                 let align_lut = if pc.res_in {
                     let rd = res_dims.expect("res_in conv without a residual producer");
                     assert_eq!(
@@ -138,27 +199,20 @@ impl ScEngine {
                     si_res_lut,
                     align_lut,
                 });
-                max_cols = max_cols.max(npix * acc_w);
+                sizes.cols = sizes.cols.max(npix * acc_w);
+                sizes.acc = sizes.acc.max(shape.cout * npix);
                 dims = (shape.cout, oh, ow);
-                max_plane = max_plane.max(dims.0 * dims.1 * dims.2);
+                sizes.plane = sizes.plane.max(dims.0 * dims.1 * dims.2);
                 if pc.si_res.is_some() {
                     res_dims = Some(dims);
-                    max_res = max_res.max(dims.0 * dims.1 * dims.2);
+                    sizes.res = sizes.res.max(dims.0 * dims.1 * dims.2);
                 }
-                max_ch = max_ch.max(shape.cout);
+                sizes.ch = sizes.ch.max(shape.cout);
                 ci += 1;
             }
         }
-        Self {
-            prep,
-            plans,
-            cols: vec![0; max_cols],
-            plane_a: vec![0; max_plane],
-            plane_b: vec![0; max_plane],
-            res_a: vec![0; max_res],
-            res_b: vec![0; max_res],
-            gap: vec![0; max_ch],
-        }
+        let scratch = (0..threads.max(1)).map(|_| EngineScratch::new(&sizes)).collect();
+        Self { prep, plans, scratch }
     }
 
     /// The frozen network.
@@ -169,6 +223,12 @@ impl ScEngine {
     /// The shared handle to the frozen network.
     pub fn prepared_arc(&self) -> &Arc<Prepared> {
         &self.prep
+    }
+
+    /// The thread knob: how many scratch arenas / scoped threads
+    /// [`ScEngine::forward_batch_into`] shards batch rows across.
+    pub fn threads(&self) -> usize {
+        self.scratch.len()
     }
 
     /// Flattened image length (C·H·W).
@@ -184,129 +244,78 @@ impl ScEngine {
 
     /// Forward one flat CHW image into a caller-owned logits slice.
     /// Allocation-free in steady state; bit-identical to
-    /// [`super::sc_exec::ScExecutor::forward`].
+    /// [`super::sc_exec::ScExecutor::forward`]. On an engine with a
+    /// thread knob > 1, each conv layer's output-channel blocks are
+    /// computed by scoped threads (still bit-identical — the single
+    /// request latency win).
     pub fn forward_into(&mut self, image: &[f32], logits: &mut [i64]) {
-        let Self { prep, plans, cols, plane_a, plane_b, res_a, res_b, gap } = self;
-        let prep: &Prepared = &**prep;
-        let (c0, h0, w0) = prep.cfg.input;
-        let n0 = c0 * h0 * w0;
-        assert_eq!(image.len(), n0, "image length mismatch");
-        assert_eq!(logits.len(), prep.cfg.num_classes, "logits length mismatch");
-        // Input encoding at the trained scale (same rule as ScExecutor).
-        let halff = (prep.act_bsl() / 2) as f32;
-        for (dst, &v) in plane_a[..n0].iter_mut().zip(image.iter()) {
-            *dst = (v / prep.input_alpha).round().clamp(-halff, halff) as i32;
-        }
-        let rhalf = (prep.res_bsl() / 2) as i64;
-        let mut dims = prep.cfg.input;
-        let mut li = 0usize;
-        let mut gap_len: Option<usize> = None;
-        for l in &prep.cfg.layers {
-            match l {
-                LayerCfg::Conv { .. } => {
-                    let pc = &prep.convs[li];
-                    let plan = &plans[li];
-                    let (cin, h, w) = plan.in_dims;
-                    let npix = plan.oh * plan.ow;
-                    let acc = plan.acc_w;
-                    im2col_i32_into(
-                        &plane_a[..cin * h * w],
-                        (cin, h, w),
-                        &pc.shape,
-                        &mut cols[..npix * acc],
-                    );
-                    for co in 0..pc.shape.cout {
-                        let wrow = &pc.wq.values[co * acc..(co + 1) * acc];
-                        let main_lut =
-                            &plan.si_main_lut[co * plan.lut_w..(co + 1) * plan.lut_w];
-                        let res_lut = plan
-                            .si_res_lut
-                            .as_deref()
-                            .map(|l| &l[co * plan.lut_w..(co + 1) * plan.lut_w]);
-                        let res_in = plan
-                            .align_lut
-                            .as_deref()
-                            .map(|lut| (lut, &res_a[co * npix..(co + 1) * npix]));
-                        let out_row = &mut plane_b[co * npix..(co + 1) * npix];
-                        for p in 0..npix {
-                            let xr = &cols[p * acc..(p + 1) * acc];
-                            // Product counts through TernaryMultiplier
-                            // semantics: count(a·w) = a·w + L/2 per
-                            // product, summed by the BSN (popcount).
-                            let mut count = plan.base;
-                            for (x, wv) in xr.iter().zip(wrow.iter()) {
-                                count += *x as i64 * *wv as i64;
-                            }
-                            // Residual contribution (§III.C alignment).
-                            if let Some((lut, rrow)) = res_in {
-                                count += lut[(rrow[p] as i64 + rhalf) as usize];
-                            }
-                            let c = (count.max(0) as usize).min(plan.lut_w - 1);
-                            out_row[p] = main_lut[c];
-                            if let Some(rl) = res_lut {
-                                res_b[co * npix + p] = rl[c];
-                            }
-                        }
-                    }
-                    std::mem::swap(plane_a, plane_b);
-                    if pc.si_res.is_some() {
-                        std::mem::swap(res_a, res_b);
-                    }
-                    dims = (pc.shape.cout, plan.oh, plan.ow);
-                    li += 1;
-                }
-                LayerCfg::GlobalAvgPool => {
-                    let (c, h, w) = dims;
-                    for ch in 0..c {
-                        let mut s = 0i64;
-                        for &q in &plane_a[ch * h * w..(ch + 1) * h * w] {
-                            s += q as i64;
-                        }
-                        gap[ch] = s;
-                    }
-                    gap_len = Some(c);
-                }
-                LayerCfg::Linear { in_dim, out_dim } => {
-                    assert_eq!(*out_dim, logits.len());
-                    let fc = &prep.fc.values;
-                    if let Some(n) = gap_len {
-                        assert_eq!(n, *in_dim);
-                        for (o, out) in logits.iter_mut().enumerate() {
-                            let mut s = 0i64;
-                            for i in 0..*in_dim {
-                                s += gap[i] * fc[o * in_dim + i] as i64;
-                            }
-                            *out = s;
-                        }
-                    } else {
-                        let (c, h, w) = dims;
-                        assert_eq!(c * h * w, *in_dim);
-                        for (o, out) in logits.iter_mut().enumerate() {
-                            let mut s = 0i64;
-                            for i in 0..*in_dim {
-                                s += plane_a[i] as i64 * fc[o * in_dim + i] as i64;
-                            }
-                            *out = s;
-                        }
-                    }
-                    return;
-                }
-            }
-        }
-        panic!("model has no classifier layer");
+        let threads = self.scratch.len();
+        forward_one(&self.prep, &self.plans, &mut self.scratch[0], image, logits, threads);
     }
 
     /// Forward a flat batch (`batch · image_len` floats, NCHW) into a
     /// caller-owned `batch · classes` logits slice.
+    ///
+    /// With a thread knob > 1 ([`ScEngine::with_threads`]) the work is
+    /// sharded over **batch rows × output-channel blocks**: rows split
+    /// into contiguous chunks, one per scoped thread (each in its own
+    /// scratch arena, spawned once per batch), and any threads left
+    /// over when the batch is narrower than the knob — down to a
+    /// single-row batch using all of them — are spent inside each row
+    /// on its conv layers' output-channel blocks, so the knob also
+    /// cuts latency when co-riders are scarce. Exact i64 count
+    /// accumulation and disjoint output slices make both dimensions
+    /// order-safe: the logits are bit-identical to the sequential path
+    /// at every thread count.
     pub fn forward_batch_into(&mut self, x: &[f32], logits: &mut [i64]) {
         let il = self.image_len();
         let cl = self.classes();
         assert!(il > 0 && x.len() % il == 0, "batch input length must be a multiple of image_len");
         let batch = x.len() / il;
         assert_eq!(logits.len(), batch * cl, "logits buffer length mismatch");
-        for b in 0..batch {
-            self.forward_into(&x[b * il..(b + 1) * il], &mut logits[b * cl..(b + 1) * cl]);
+        let Self { prep, plans, scratch } = self;
+        let prep: &Prepared = prep;
+        let plans: &[ConvPlan] = plans;
+        let nt = scratch.len().min(batch);
+        if nt <= 1 {
+            // Sequential engine — or a single row, where the only
+            // parallelism available is inside the row: spend the
+            // threads on its conv layers' output-channel blocks.
+            let intra = if batch == 1 { scratch.len() } else { 1 };
+            let s = &mut scratch[0];
+            for (xrow, lrow) in x.chunks_exact(il).zip(logits.chunks_exact_mut(cl)) {
+                forward_one(prep, plans, s, xrow, lrow, intra);
+            }
+            return;
         }
+        // Contiguous row chunks, one scoped thread per scratch arena —
+        // row sharding spawns once per batch, so it is the primary
+        // dimension whenever more than one row exists. Threads left
+        // over when the batch is narrower than the knob (batch < len)
+        // are spent *inside* each row thread, on its conv layers'
+        // output-channel blocks — channel-block sharding only touches
+        // that thread's own arena, so the dimensions compose freely.
+        let intra = (scratch.len() / nt).max(1);
+        let per = batch.div_ceil(nt);
+        std::thread::scope(|sc| {
+            let mut xs = x;
+            let mut ls = &mut logits[..];
+            for s in scratch[..nt].iter_mut() {
+                let take = per.min(xs.len() / il);
+                if take == 0 {
+                    break;
+                }
+                let (xa, xrest) = xs.split_at(take * il);
+                let (la, lrest) = std::mem::take(&mut ls).split_at_mut(take * cl);
+                xs = xrest;
+                ls = lrest;
+                sc.spawn(move || {
+                    for (xrow, lrow) in xa.chunks_exact(il).zip(la.chunks_exact_mut(cl)) {
+                        forward_one(prep, plans, s, xrow, lrow, intra);
+                    }
+                });
+            }
+        });
     }
 
     /// Convenience single-image forward (allocates the result vector).
@@ -328,17 +337,178 @@ impl ScEngine {
     }
 }
 
-/// Flatten per-channel SI count tables into one channel-major LUT of
-/// signed output codes.
-fn flatten_si_luts(sis: &[SelectiveInterconnect], lut_w: usize) -> Vec<i32> {
-    let mut lut = Vec::with_capacity(sis.len() * lut_w);
-    for si in sis {
-        let off = (si.out_bsl() / 2) as i32;
-        let table = si.count_table();
-        assert_eq!(table.len(), lut_w, "SI in_width must equal the layer's BSN width");
-        lut.extend(table.into_iter().map(|v| v as i32 - off));
+/// One full image through the frozen network, entirely inside one
+/// scratch arena — the unit of work the batch sharding distributes.
+fn forward_one(
+    prep: &Prepared,
+    plans: &[ConvPlan],
+    s: &mut EngineScratch,
+    image: &[f32],
+    logits: &mut [i64],
+    threads: usize,
+) {
+    let EngineScratch { cols, acc, plane_a, plane_b, res_a, res_b, gap } = s;
+    let (c0, h0, w0) = prep.cfg.input;
+    let n0 = c0 * h0 * w0;
+    assert_eq!(image.len(), n0, "image length mismatch");
+    assert_eq!(logits.len(), prep.cfg.num_classes, "logits length mismatch");
+    // Input encoding at the trained scale (same rule as ScExecutor).
+    let halff = (prep.act_bsl() / 2) as f32;
+    for (dst, &v) in plane_a[..n0].iter_mut().zip(image.iter()) {
+        *dst = (v / prep.input_alpha).round().clamp(-halff, halff) as i32;
     }
-    lut
+    let rhalf = (prep.res_bsl() / 2) as i64;
+    let mut dims = prep.cfg.input;
+    let mut li = 0usize;
+    let mut gap_len: Option<usize> = None;
+    for l in &prep.cfg.layers {
+        match l {
+            LayerCfg::Conv { .. } => {
+                let pc = &prep.convs[li];
+                let plan = &plans[li];
+                let (cin, h, w) = plan.in_dims;
+                let npix = plan.oh * plan.ow;
+                let acc_w = plan.acc_w;
+                let cout = pc.shape.cout;
+                im2col_i32_into(
+                    &plane_a[..cin * h * w],
+                    (cin, h, w),
+                    &pc.shape,
+                    &mut cols[..npix * acc_w],
+                );
+                let cols_s = &cols[..npix * acc_w];
+                let counts = &mut acc[..cout * npix];
+                let out_plane = &mut plane_b[..cout * npix];
+                // Residual planes are empty slices on layers without
+                // the corresponding tap — conv_block keys off length.
+                let res_src: &[i32] =
+                    if plan.align_lut.is_some() { &res_a[..cout * npix] } else { &[] };
+                let res_plane: &mut [i32] =
+                    if pc.si_res.is_some() { &mut res_b[..cout * npix] } else { &mut [] };
+                let nb = threads.min(cout).max(1);
+                if nb <= 1 {
+                    conv_block(pc, plan, rhalf, cols_s, res_src, 0, counts, out_plane, res_plane);
+                } else {
+                    // Output-channel-block sharding: each scoped thread
+                    // owns a disjoint channel range (GEMM rows + count
+                    // LUTs), reading the shared im2col/residual planes.
+                    let per = cout.div_ceil(nb);
+                    std::thread::scope(|sc| {
+                        let mut counts = counts;
+                        let mut out_plane = out_plane;
+                        let mut res_plane = res_plane;
+                        let mut r0 = 0usize;
+                        while r0 < cout {
+                            let rows = per.min(cout - r0);
+                            let (cc, crest) =
+                                std::mem::take(&mut counts).split_at_mut(rows * npix);
+                            counts = crest;
+                            let (oc, orest) =
+                                std::mem::take(&mut out_plane).split_at_mut(rows * npix);
+                            out_plane = orest;
+                            let rlen = if res_plane.is_empty() { 0 } else { rows * npix };
+                            let (rc, rrest) = std::mem::take(&mut res_plane).split_at_mut(rlen);
+                            res_plane = rrest;
+                            sc.spawn(move || {
+                                conv_block(pc, plan, rhalf, cols_s, res_src, r0, cc, oc, rc);
+                            });
+                            r0 += rows;
+                        }
+                    });
+                }
+                std::mem::swap(plane_a, plane_b);
+                if pc.si_res.is_some() {
+                    std::mem::swap(res_a, res_b);
+                }
+                dims = (pc.shape.cout, plan.oh, plan.ow);
+                li += 1;
+            }
+            LayerCfg::GlobalAvgPool => {
+                let (c, h, w) = dims;
+                for ch in 0..c {
+                    let mut sum = 0i64;
+                    for &q in &plane_a[ch * h * w..(ch + 1) * h * w] {
+                        sum += q as i64;
+                    }
+                    gap[ch] = sum;
+                }
+                gap_len = Some(c);
+            }
+            LayerCfg::Linear { in_dim, out_dim } => {
+                assert_eq!(*out_dim, logits.len());
+                // Classifier through the shared ternary panel (zero
+                // weights skipped, adds/subs only).
+                let fc = &prep.fc_panels.ternary;
+                if let Some(n) = gap_len {
+                    assert_eq!(n, *in_dim);
+                    for (o, out) in logits.iter_mut().enumerate() {
+                        *out = fc.row_dot_i64(o, &gap[..*in_dim]);
+                    }
+                } else {
+                    let (c, h, w) = dims;
+                    assert_eq!(c * h * w, *in_dim);
+                    for (o, out) in logits.iter_mut().enumerate() {
+                        *out = fc.row_dot(o, &plane_a[..*in_dim]);
+                    }
+                }
+                return;
+            }
+        }
+    }
+    panic!("model has no classifier layer");
+}
+
+/// One output-channel block of one conv layer — the sharding work
+/// unit: GEMM the panel rows `r0..r0+rows` over the shared im2col
+/// matrix, then push the counts through the per-channel SI/residual
+/// LUTs. `counts`/`out` are the block's disjoint `rows × npix` chunks;
+/// `res_src` is the full residual input plane (empty when the layer
+/// consumes none) and `res_out` the block's residual-tap chunk (empty
+/// when the layer produces none).
+#[allow(clippy::too_many_arguments)]
+fn conv_block(
+    pc: &PreparedConv,
+    plan: &ConvPlan,
+    rhalf: i64,
+    cols: &[i32],
+    res_src: &[i32],
+    r0: usize,
+    counts: &mut [i64],
+    out: &mut [i32],
+    res_out: &mut [i32],
+) {
+    let npix = plan.oh * plan.ow;
+    let rows = counts.len() / npix.max(1);
+    pc.panels.ternary.gemm_rows_into(r0, r0 + rows, cols, npix, counts);
+    for l in 0..rows {
+        let co = r0 + l;
+        let arow = &counts[l * npix..(l + 1) * npix];
+        let main_lut = &plan.si_main_lut[co * plan.lut_w..(co + 1) * plan.lut_w];
+        let res_lut = plan
+            .si_res_lut
+            .as_deref()
+            .map(|t| &t[co * plan.lut_w..(co + 1) * plan.lut_w]);
+        let res_in = plan
+            .align_lut
+            .as_deref()
+            .map(|lut| (lut, &res_src[co * npix..(co + 1) * npix]));
+        let out_row = &mut out[l * npix..(l + 1) * npix];
+        for p in 0..npix {
+            // Product counts through TernaryMultiplier semantics:
+            // count(a·w) = a·w + L/2 per product, summed by the BSN —
+            // i.e. the GEMM dot plus the constant offset `acc_w · L/2`.
+            let mut count = plan.base + arow[p];
+            // Residual contribution (§III.C alignment).
+            if let Some((lut, rrow)) = res_in {
+                count += lut[(rrow[p] as i64 + rhalf) as usize];
+            }
+            let c = (count.max(0) as usize).min(plan.lut_w - 1);
+            out_row[p] = main_lut[c];
+            if let Some(rl) = res_lut {
+                res_out[l * npix + p] = rl[c];
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -413,6 +583,57 @@ mod tests {
             let mut one = vec![0i64; cl];
             engine.forward_into(&x[b * il..(b + 1) * il], &mut one);
             assert_eq!(&batched[b * cl..(b + 1) * cl], one.as_slice(), "image {b}");
+        }
+    }
+
+    #[test]
+    fn threaded_batch_is_bit_identical() {
+        let cfg = ModelCfg::tnn();
+        let prep = prep_for(
+            &cfg,
+            QuantConfig { act_bsl: Some(2), weight_ternary: true, residual_bsl: None },
+            31,
+        );
+        let mut seq = ScEngine::new(prep.clone());
+        let mut rng = Rng::new(37);
+        let batch = 5usize;
+        let il = seq.image_len();
+        let cl = seq.classes();
+        let x: Vec<f32> = (0..batch * il).map(|_| rng.normal() as f32).collect();
+        let mut expect = vec![0i64; batch * cl];
+        seq.forward_batch_into(&x, &mut expect);
+        // More threads than rows, equal, and fewer — all bit-identical.
+        for threads in [2usize, 3, 5, 8] {
+            let mut thr = ScEngine::with_threads(prep.clone(), threads);
+            assert_eq!(thr.threads(), threads);
+            let mut got = vec![0i64; batch * cl];
+            thr.forward_batch_into(&x, &mut got);
+            assert_eq!(got, expect, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn threaded_single_image_is_bit_identical() {
+        // batch < threads takes the output-channel-block path; so does
+        // forward_into on a threaded engine. Both model families.
+        for (cfg, quant, shape) in [
+            (
+                ModelCfg::tnn(),
+                QuantConfig { act_bsl: Some(2), weight_ternary: true, residual_bsl: None },
+                vec![1usize, 28, 28],
+            ),
+            (ModelCfg::scnet(10), QuantConfig::w2a2r16(), vec![3, 32, 32]),
+        ] {
+            let prep = prep_for(&cfg, quant, 43);
+            let mut seq = ScEngine::new(prep.clone());
+            let mut par = ScEngine::with_threads(prep, 4);
+            let mut rng = Rng::new(51);
+            let n: usize = shape.iter().product();
+            for _ in 0..2 {
+                let img =
+                    Tensor::from_vec(&shape, (0..n).map(|_| rng.normal() as f32 * 0.5).collect());
+                assert_eq!(par.forward(&img), seq.forward(&img), "{}", cfg.name);
+            }
         }
     }
 

@@ -24,6 +24,7 @@ use crate::circuits::rescale::RescaleBlock;
 use crate::circuits::si::{ActivationFn, SelectiveInterconnect};
 use crate::coding::{BitVec, Ternary, ThermCode};
 use crate::util::Rng;
+use super::gemm::WeightPanels;
 use super::layers::{im2col_i32_into, ConvShape};
 use super::model::{LayerCfg, ModelCfg, ModelParams};
 use super::quant::{QuantConfig, TernaryTensor};
@@ -45,6 +46,11 @@ pub struct PreparedConv {
     pub shape: ConvShape,
     /// Ternarized weights.
     pub wq: TernaryTensor,
+    /// `wq` packed once into the GEMM panel formats: zero-skipping
+    /// ternary index lists (SC family) and the dense i8 microkernel
+    /// panel (binary family). Every accumulation site routes through
+    /// these ([`crate::nn::gemm`]).
+    pub panels: WeightPanels,
     /// Scale of the accumulated products (`alpha_in · alpha_w`).
     pub alpha_acc: f32,
     /// Output scale (trained).
@@ -77,6 +83,8 @@ pub struct Prepared {
     pub convs: Vec<PreparedConv>,
     /// Ternarized classifier.
     pub fc: TernaryTensor,
+    /// Classifier weights packed into the GEMM panel formats.
+    pub fc_panels: WeightPanels,
 }
 
 /// Residual BSL used by the high-precision tap.
@@ -151,9 +159,13 @@ impl Prepared {
                     };
                     let si_main = mk_si(alpha_out, act_bsl);
                     let si_res = alpha_res_out.map(|a| mk_si(a, res_bsl));
+                    // Pack the weight panels once, here at freeze time:
+                    // the serving hot loops never re-walk raw weights.
+                    let panels = WeightPanels::pack(&wq.values, shape.cout, shape.acc_width());
                     convs.push(PreparedConv {
                         shape: *shape,
                         wq,
+                        panels,
                         alpha_acc,
                         alpha_out,
                         alpha_res_out,
@@ -172,12 +184,14 @@ impl Prepared {
             }
         }
         let fc = TernaryTensor::quantize(params.get("fc.w").expect("fc.w"));
+        let fc_panels = WeightPanels::pack(&fc.values, fc.shape[0], fc.shape[1]);
         Self {
             cfg: cfg.clone(),
             quant,
             input_alpha: params.scalar("input.alpha").unwrap(),
             convs,
             fc,
+            fc_panels,
         }
     }
 
@@ -257,10 +271,11 @@ impl ScExecutor {
         // emit res_out first, so `res` starts empty.
         let mut li = 0usize;
         let mut gap: Option<Vec<i64>> = None;
-        // Scratch reused across layers: the integer im2col buffer and
-        // (under fault injection) the bitstream work codes, so neither
-        // path allocates per product or per pixel.
+        // Scratch reused across layers: the integer im2col buffer, the
+        // GEMM count plane and (under fault injection) the bitstream
+        // work codes, so neither path allocates per product or pixel.
         let mut cols: Vec<i32> = Vec::new();
+        let mut acc: Vec<i64> = Vec::new();
         let mut scratch = FaultScratch::new();
         for l in &self.prep.cfg.layers {
             match l {
@@ -272,6 +287,7 @@ impl ScExecutor {
                         res.as_ref(),
                         rng.as_mut(),
                         &mut cols,
+                        &mut acc,
                         &mut scratch,
                     );
                     main = m;
@@ -295,13 +311,11 @@ impl ScExecutor {
                         main.q.iter().map(|&v| v as i64).collect()
                     });
                     assert_eq!(x.len(), *in_dim);
-                    let mut logits = vec![0i64; *out_dim];
-                    for o in 0..*out_dim {
-                        for i in 0..*in_dim {
-                            logits[o] +=
-                                x[i] * self.prep.fc.values[o * in_dim + i] as i64;
-                        }
-                    }
+                    // Classifier through the packed ternary panel:
+                    // zero weights skipped, adds/subs only.
+                    let fc = &self.prep.fc_panels.ternary;
+                    let logits: Vec<i64> =
+                        (0..*out_dim).map(|o| fc.row_dot_i64(o, &x)).collect();
                     return logits;
                 }
             }
@@ -339,6 +353,7 @@ impl ScExecutor {
         res: Option<&CodeMap>,
         mut rng: Option<&mut Rng>,
         cols: &mut Vec<i32>,
+        acc: &mut Vec<i64>,
         scratch: &mut FaultScratch,
     ) -> (CodeMap, Option<CodeMap>) {
         let act_bsl = main.bsl;
@@ -353,6 +368,22 @@ impl ScExecutor {
         cols.resize(npix * acc_w, 0);
         im2col_i32_into(&main.q, (cin, h, w), &pc.shape, cols);
         let half = (act_bsl / 2) as i64;
+        let base = acc_w as i64 * half;
+
+        // Fault-free accumulation is one cache-blocked ternary GEMM
+        // over the panels packed at freeze time: count(a·w) = a·w + L/2
+        // per product (TernaryMultiplier semantics, proven equal to the
+        // code path in unit tests), so the layer's counts are the GEMM
+        // dot plus the constant offset `acc_w · L/2`.
+        if rng.is_none() {
+            // Grow-only scratch, never cleared: gemm_into overwrites
+            // every element it hands out, so stale counts from another
+            // layer never survive into a read.
+            if acc.len() < pc.shape.cout * npix {
+                acc.resize(pc.shape.cout * npix, 0);
+            }
+            pc.panels.ternary.gemm_into(cols, npix, &mut acc[..pc.shape.cout * npix]);
+        }
 
         let mut out_main = vec![0i32; pc.shape.cout * npix];
         let mut out_res = pc
@@ -363,14 +394,14 @@ impl ScExecutor {
         for co in 0..pc.shape.cout {
             let wrow = &pc.wq.values[co * acc_w..(co + 1) * acc_w];
             for p in 0..npix {
-                let xr = &cols[p * acc_w..(p + 1) * acc_w];
                 // Product counts through the ternary multiplier.
-                let mut count: i64 = 0;
-                if let Some(r) = rng.as_deref_mut() {
+                let mut count: i64 = if let Some(r) = rng.as_deref_mut() {
                     // Bit-faithful path with fault injection, through
                     // the reusable scratch codes (no per-product
                     // allocation; same RNG draw order as before).
+                    let xr = &cols[p * acc_w..(p + 1) * acc_w];
                     let ber = self.fault.unwrap().ber;
+                    let mut c = 0i64;
                     for i in 0..acc_w {
                         ThermCode::encode_into(xr[i] as i64, act_bsl, &mut scratch.enc);
                         TernaryMultiplier::mult_bits_into(
@@ -379,16 +410,12 @@ impl ScExecutor {
                             scratch.prod.bits_mut(),
                         );
                         flip_bits(&mut scratch.prod, ber, r);
-                        count += scratch.prod.count() as i64;
+                        c += scratch.prod.count() as i64;
                     }
+                    c
                 } else {
-                    // Fast count arithmetic: count(a·w) = a·w + L/2
-                    // (proven equal to the code path in unit tests).
-                    for i in 0..acc_w {
-                        let q = (xr[i] as i64).clamp(-half, half);
-                        count += q * wrow[i] as i64 + half;
-                    }
-                }
+                    base + acc[co * npix + p]
+                };
                 // Residual contribution (§III.C alignment).
                 if pc.res_in {
                     let rm = res.expect("residual map required");

@@ -1,0 +1,193 @@
+//! The GEMM core's contract: packed kernels are **exactly** the naive
+//! triple loop, and the threaded engine is **exactly** the sequential
+//! engine.
+//!
+//! * Property tests pit [`TernaryPanel`]/[`I8Panel`] against
+//!   [`gemm_naive`] on random shapes, including ragged edges smaller
+//!   than the channel block ([`BLOCK_CO`]) and the 4-wide microkernel.
+//! * `ScEngine::forward_batch_into` must produce bit-identical logits
+//!   at every thread count, for both model families (plain ternary
+//!   `tnn` and the residual `scnet10`) — the order-safety claim of
+//!   DESIGN.md §Perf "Ternary GEMM + threading".
+//! * The serving pool honors `ServeConfig::threads` end to end: a
+//!   threaded `sc` pool answers with the same logits as a
+//!   single-threaded oracle over the same frozen model.
+
+use std::sync::Arc;
+
+use scnn::coordinator::{backend, Backend, Coordinator, ServeConfig};
+use scnn::nn::gemm::{gemm_naive, I8Panel, TernaryPanel, WeightPanels, BLOCK_CO};
+use scnn::nn::model::{ModelCfg, ModelParams};
+use scnn::nn::quant::QuantConfig;
+use scnn::nn::sc_exec::Prepared;
+use scnn::nn::ScEngine;
+use scnn::util::prop::check_simple;
+use scnn::util::Rng;
+
+/// One random GEMM problem instance.
+#[derive(Clone, Debug)]
+struct Case {
+    rows: usize,
+    k: usize,
+    n: usize,
+    w: Vec<i8>,
+    cols: Vec<i32>,
+}
+
+fn gen_case(rng: &mut Rng, ternary: bool) -> Case {
+    // Bias the shape distribution toward the ragged edges: sizes
+    // straddling the channel block and the 4-wide microkernel.
+    let rows = rng.gen_range_i64(1, 2 * BLOCK_CO as i64 + 2) as usize;
+    let k = rng.gen_range_i64(1, 160) as usize;
+    let n = rng.gen_range_i64(1, 40) as usize;
+    let w: Vec<i8> = (0..rows * k)
+        .map(|_| {
+            if ternary {
+                rng.gen_range_i64(-1, 1) as i8
+            } else {
+                rng.gen_range_i64(-128, 127) as i8
+            }
+        })
+        .collect();
+    let cols: Vec<i32> = (0..n * k).map(|_| rng.gen_range_i64(-100, 101) as i32).collect();
+    Case { rows, k, n, w, cols }
+}
+
+#[test]
+fn ternary_panel_equals_naive_on_random_shapes() {
+    check_simple(
+        0xCE11,
+        60,
+        |rng| gen_case(rng, true),
+        |c| {
+            let mut expect = vec![0i64; c.rows * c.n];
+            gemm_naive(&c.w, c.rows, c.k, &c.cols, c.n, &mut expect);
+            let panel = TernaryPanel::pack(&c.w, c.rows, c.k);
+            let mut got = vec![i64::MIN; c.rows * c.n];
+            panel.gemm_into(&c.cols, c.n, &mut got);
+            got == expect
+        },
+    );
+}
+
+#[test]
+fn i8_panel_equals_naive_on_random_shapes() {
+    check_simple(
+        0xDEA1,
+        60,
+        |rng| gen_case(rng, false),
+        |c| {
+            let mut expect = vec![0i64; c.rows * c.n];
+            gemm_naive(&c.w, c.rows, c.k, &c.cols, c.n, &mut expect);
+            let panel = I8Panel::pack(&c.w, c.rows, c.k);
+            let mut got = vec![i64::MIN; c.rows * c.n];
+            panel.gemm_into(&c.cols, c.n, &mut got);
+            got == expect
+        },
+    );
+}
+
+#[test]
+fn both_pack_formats_agree_on_ternary_panels() {
+    check_simple(
+        0xACC0,
+        40,
+        |rng| gen_case(rng, true),
+        |c| {
+            let p = WeightPanels::pack(&c.w, c.rows, c.k);
+            let mut a = vec![0i64; c.rows * c.n];
+            let mut b = vec![0i64; c.rows * c.n];
+            p.ternary.gemm_into(&c.cols, c.n, &mut a);
+            p.dense.gemm_into(&c.cols, c.n, &mut b);
+            a == b
+        },
+    );
+}
+
+#[test]
+fn ragged_edges_smaller_than_the_blocks() {
+    // Every dimension below its blocking factor at once.
+    let mut rng = Rng::new(7);
+    for (rows, k, n) in [(1usize, 1usize, 1usize), (3, 2, 3), (BLOCK_CO - 1, 5, 3)] {
+        let w: Vec<i8> = (0..rows * k).map(|_| rng.gen_range_i64(-1, 1) as i8).collect();
+        let cols: Vec<i32> = (0..n * k).map(|_| rng.gen_range_i64(-9, 10) as i32).collect();
+        let mut expect = vec![0i64; rows * n];
+        gemm_naive(&w, rows, k, &cols, n, &mut expect);
+        let mut t = vec![0i64; rows * n];
+        TernaryPanel::pack(&w, rows, k).gemm_into(&cols, n, &mut t);
+        let mut d = vec![0i64; rows * n];
+        I8Panel::pack(&w, rows, k).gemm_into(&cols, n, &mut d);
+        assert_eq!(t, expect, "ternary rows={rows} k={k} n={n}");
+        assert_eq!(d, expect, "dense rows={rows} k={k} n={n}");
+    }
+}
+
+fn prep_family(family: &str, seed: u64) -> (Arc<Prepared>, usize) {
+    let (cfg, quant) = match family {
+        "tnn" => (
+            ModelCfg::tnn(),
+            QuantConfig { act_bsl: Some(2), weight_ternary: true, residual_bsl: None },
+        ),
+        "scnet10" => (ModelCfg::scnet(10), QuantConfig::w2a2r16()),
+        other => panic!("unknown family {other}"),
+    };
+    let mut rng = Rng::new(seed);
+    let params = ModelParams::init(&cfg, &mut rng);
+    let (c, h, w) = cfg.input;
+    (Arc::new(Prepared::new(&cfg, &params, quant)), c * h * w)
+}
+
+#[test]
+fn threaded_batch_bit_identity_both_families() {
+    // The acceptance bar of the threading knob: for both model families
+    // and every thread count (1, fewer than batch, equal, more), the
+    // batched logits are bit-identical to the sequential path.
+    for family in ["tnn", "scnet10"] {
+        let (prep, il) = prep_family(family, 11);
+        let mut seq = ScEngine::new(prep.clone());
+        let cl = seq.classes();
+        let batch = 6usize;
+        let mut rng = Rng::new(29);
+        let x: Vec<f32> = (0..batch * il).map(|_| rng.normal() as f32 * 0.5).collect();
+        let mut expect = vec![0i64; batch * cl];
+        seq.forward_batch_into(&x, &mut expect);
+        for threads in [1usize, 2, 3, 6, 9] {
+            let mut eng = ScEngine::with_threads(prep.clone(), threads);
+            let mut got = vec![0i64; batch * cl];
+            eng.forward_batch_into(&x, &mut got);
+            assert_eq!(got, expect, "{family} threads={threads}");
+            // Scratch arenas are reused across calls: a second pass
+            // must reproduce the same bits.
+            let mut again = vec![0i64; batch * cl];
+            eng.forward_batch_into(&x, &mut again);
+            assert_eq!(again, expect, "{family} threads={threads} (second pass)");
+        }
+    }
+}
+
+#[test]
+fn sc_pool_honors_the_threads_knob() {
+    // End-to-end: a 2-worker x 2-thread sc pool serves the same logits
+    // as a single-threaded engine over the same frozen model.
+    let mut cfg = ServeConfig::new("artifacts", "tnn");
+    cfg.workers = 2;
+    cfg.threads = 2;
+    cfg.batch = 4;
+    cfg.queue_depth = 32;
+    cfg.seed = 77;
+    // Same freeze the backend performs: deterministic in the seed.
+    let mut oracle = ScEngine::new(backend::prepared_for(&cfg).expect("freeze model"));
+    let il = oracle.image_len();
+    let coord = Coordinator::start_backend(Backend::Sc, cfg).expect("start sc pool");
+    let client = coord.client();
+    let mut rng = Rng::new(5);
+    for i in 0..12 {
+        let x: Vec<f32> = (0..il).map(|_| rng.normal() as f32).collect();
+        let got = client.infer(x.clone()).expect("infer");
+        let mut want = vec![0i64; oracle.classes()];
+        oracle.forward_into(&x, &mut want);
+        let want_f: Vec<f32> = want.iter().map(|&v| v as f32).collect();
+        assert_eq!(got, want_f, "request {i}");
+    }
+    coord.shutdown();
+}
