@@ -11,9 +11,19 @@
 //!
 //! ```bash
 //! cargo run --release --example serve [-- backend=sc requests=2048 clients=8 workers=4 threads=2]
+//! cargo run --release --example serve -- net=1   # same demo over a loopback TCP socket
 //! ```
+//!
+//! With `net=1` the pool sits behind the `coordinator::net` TCP
+//! front-end on `127.0.0.1:0`: clients speak the length-prefixed
+//! binary protocol over real sockets, and the demo finishes with a
+//! Prometheus metrics scrape.
 
-use scnn::coordinator::{Backend, Coordinator, ServeConfig};
+use std::sync::Arc;
+
+use scnn::coordinator::{
+    Backend, Coordinator, ModelRegistry, NetClient, NetServer, ServeConfig, TenantPolicy,
+};
 use scnn::data::{Dataset, Split, SynthCifar};
 use scnn::runtime::{artifacts_ready, trainer::Knobs, Runtime, Trainer};
 
@@ -21,6 +31,62 @@ fn arg(name: &str, default: usize) -> usize {
     std::env::args()
         .find_map(|a| a.strip_prefix(&format!("{name}=")).and_then(|s| s.parse().ok()))
         .unwrap_or(default)
+}
+
+/// The `net=1` variant: same pool, reached over a loopback socket.
+fn net_demo(
+    backend: Backend,
+    clients: usize,
+    requests: usize,
+    cfg: ServeConfig,
+) -> scnn::Result<()> {
+    let resolved = backend.resolve("artifacts", "scnet10");
+    let registry = Arc::new(ModelRegistry::new(TenantPolicy::default()));
+    let _ = registry.register_backend(resolved, cfg)?;
+    let server = NetServer::bind("127.0.0.1:0", registry.clone())?;
+    let addr = server.local_addr();
+    println!("net front-end up on {addr} (backend {resolved})");
+    let t0 = std::time::Instant::now();
+    let mut handles = Vec::new();
+    for t in 0..clients {
+        let n = requests / clients;
+        handles.push(std::thread::spawn(move || -> scnn::Result<usize> {
+            let mut client = NetClient::connect(addr)?.with_tenant(&format!("client-{t}"));
+            let data = SynthCifar::new(10);
+            let mut hits = 0;
+            for i in 0..n {
+                let (x, y) = data.sample(Split::Test, t * 1_000_000 + i);
+                if client.classify("scnet10", &x.into_vec())? == y {
+                    hits += 1;
+                }
+            }
+            Ok(hits)
+        }));
+    }
+    let mut hits = 0;
+    for h in handles {
+        hits += h.join().unwrap()?;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let served = (requests / clients) * clients;
+    println!(
+        "served {served} requests over TCP in {wall:.2}s -> {:.0} req/s (accuracy {:.3})",
+        served as f64 / wall,
+        hits as f64 / served as f64
+    );
+    let scrape = NetClient::connect(addr)?.metrics_text()?;
+    let latency_lines: Vec<&str> =
+        scrape.lines().filter(|l| l.starts_with("scnn_request_latency_quantile")).collect();
+    println!("metrics scrape ({} lines):\n{}", scrape.lines().count(), latency_lines.join("\n"));
+    server.shutdown();
+    for (name, m) in registry.shutdown_all() {
+        println!(
+            "{name}: batches {}  occupancy {:.2}  p50 {:?}  p99 {:?}",
+            m.batches, m.occupancy, m.p50, m.p99
+        );
+    }
+    println!("serve OK");
+    Ok(())
 }
 
 fn main() -> scnn::Result<()> {
@@ -43,6 +109,9 @@ fn main() -> scnn::Result<()> {
     cfg.knobs = knobs;
     cfg.workers = workers;
     cfg.threads = threads;
+    if arg("net", 0) == 1 {
+        return net_demo(backend, clients, requests, cfg);
+    }
     let resolved = backend.resolve("artifacts", "scnet10");
     println!("backend: {resolved} (pass backend=sc for the native SC engine)");
     if resolved == Backend::Pjrt && artifacts_ready("artifacts", "scnet10") && warmup_steps > 0 {

@@ -129,6 +129,11 @@ impl std::fmt::Display for Backend {
     }
 }
 
+/// Every model name the serving stack can freeze from pure Rust —
+/// the universe `scnn serve --models all` expands to and the registry
+/// front-end routes between.
+pub const MODEL_NAMES: [&str; 3] = ["tnn", "scnet10", "scnet20"];
+
 /// The pure-Rust model configuration behind an artifact name.
 pub fn model_cfg_for(model: &str) -> Result<ModelCfg> {
     match model {
@@ -216,6 +221,13 @@ mod tests {
         assert_eq!(a.convs.len(), b.convs.len());
         assert_eq!(a.fc.values, b.fc.values);
         assert_eq!(a.input_alpha, b.input_alpha);
+    }
+
+    #[test]
+    fn model_names_const_matches_model_cfg_for() {
+        for name in MODEL_NAMES {
+            assert!(model_cfg_for(name).is_ok(), "{name} must be freezable");
+        }
     }
 
     #[test]

@@ -213,6 +213,13 @@ impl InferenceClient {
         self.classes
     }
 
+    /// Flattened image length (C·H·W floats) one request must carry —
+    /// the shape contract network front-ends validate before
+    /// submitting.
+    pub fn image_len(&self) -> usize {
+        self.image_len
+    }
+
     /// Number of pool workers behind this client.
     pub fn workers(&self) -> usize {
         self.shards.len()

@@ -1,9 +1,130 @@
 //! Serving metrics: request counts, latency percentiles, batch
 //! occupancy — one [`ServerMetrics`] per pool worker, aggregated into
-//! a single [`MetricsSnapshot`].
+//! a single [`MetricsSnapshot`] — plus the fixed-bucket
+//! [`LatencyHistogram`] behind the Prometheus text exposition
+//! ([`prometheus_text`]) the network front-end serves.
+//!
+//! Memory is bounded by construction: every latency lands in the
+//! histogram (constant size) and in a per-worker ring buffer of the
+//! most recent [`LATENCY_WINDOW`] samples (exact percentiles over the
+//! recent window), so a week of serving costs the same memory as a
+//! minute. Counters and the histogram `_sum`/`_count` cover the whole
+//! lifetime.
 
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
+
+/// Upper bounds (µs, inclusive) of the fixed latency buckets; one
+/// implicit `+Inf` bucket follows. Spans 50 µs … 1 s, roughly
+/// geometric — wide enough for the synthetic backend's
+/// sub-millisecond batches and the SC engine's tens-of-ms forwards.
+pub const LATENCY_BUCKET_BOUNDS_US: [u64; 14] = [
+    50, 100, 250, 500, 1_000, 2_500, 5_000, 10_000, 25_000, 50_000, 100_000, 250_000, 500_000,
+    1_000_000,
+];
+
+/// Number of histogram buckets, including the `+Inf` overflow bucket.
+pub const LATENCY_BUCKETS: usize = LATENCY_BUCKET_BOUNDS_US.len() + 1;
+
+/// Per-worker cap on the exact-percentile sample window. Latencies
+/// beyond this many recent samples survive only in the histogram
+/// (bucket-resolution percentiles, exact `_sum`/`_count`).
+pub const LATENCY_WINDOW: usize = 4096;
+
+/// Fixed-bucket cumulative latency histogram (Prometheus `histogram`
+/// semantics: `buckets[i]` counts samples ≤ bound `i`, the last bucket
+/// is `+Inf`, and `sum`/`count` are exact over the full lifetime).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct LatencyHistogram {
+    counts: [u64; LATENCY_BUCKETS],
+    sum_us: u64,
+    count: u64,
+}
+
+impl LatencyHistogram {
+    /// New, empty.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one latency sample.
+    pub fn record(&mut self, d: Duration) {
+        self.record_us(d.as_micros() as u64);
+    }
+
+    /// Record one latency sample in microseconds.
+    pub fn record_us(&mut self, us: u64) {
+        let idx = LATENCY_BUCKET_BOUNDS_US
+            .iter()
+            .position(|&b| us <= b)
+            .unwrap_or(LATENCY_BUCKET_BOUNDS_US.len());
+        self.counts[idx] += 1;
+        self.sum_us += us;
+        self.count += 1;
+    }
+
+    /// Fold another histogram into this one (bucket-wise sum).
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.sum_us += other.sum_us;
+        self.count += other.count;
+    }
+
+    /// Total samples recorded (the Prometheus `_count`).
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Sum of all samples in microseconds (the Prometheus `_sum`,
+    /// before the seconds conversion).
+    pub fn sum_us(&self) -> u64 {
+        self.sum_us
+    }
+
+    /// Per-bucket (non-cumulative) counts, `+Inf` last.
+    pub fn bucket_counts(&self) -> &[u64; LATENCY_BUCKETS] {
+        &self.counts
+    }
+
+    /// Cumulative counts per bucket in bound order (`+Inf` last) —
+    /// exactly the series a Prometheus `_bucket{le=...}` family wants.
+    /// Monotone non-decreasing; the last entry equals
+    /// [`LatencyHistogram::count`].
+    pub fn cumulative(&self) -> [u64; LATENCY_BUCKETS] {
+        let mut out = [0u64; LATENCY_BUCKETS];
+        let mut acc = 0u64;
+        for (o, c) in out.iter_mut().zip(self.counts.iter()) {
+            acc += c;
+            *o = acc;
+        }
+        out
+    }
+
+    /// Bucket-resolution quantile estimate: the upper bound of the
+    /// first bucket whose cumulative count reaches `q` of the total
+    /// (the `+Inf` bucket reports the largest finite bound). Zero when
+    /// empty.
+    pub fn quantile(&self, q: f64) -> Duration {
+        if self.count == 0 {
+            return Duration::ZERO;
+        }
+        let rank = (q.clamp(0.0, 1.0) * self.count as f64).ceil().max(1.0) as u64;
+        let mut acc = 0u64;
+        for (i, c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= rank {
+                let bound = LATENCY_BUCKET_BOUNDS_US
+                    .get(i)
+                    .copied()
+                    .unwrap_or(LATENCY_BUCKET_BOUNDS_US[LATENCY_BUCKET_BOUNDS_US.len() - 1]);
+                return Duration::from_micros(bound);
+            }
+        }
+        Duration::from_micros(LATENCY_BUCKET_BOUNDS_US[LATENCY_BUCKET_BOUNDS_US.len() - 1])
+    }
+}
 
 /// Thread-safe metrics accumulator (one per pool worker).
 #[derive(Debug, Default)]
@@ -17,7 +138,23 @@ struct Inner {
     batches: u64,
     padded_slots: u64,
     errors: u64,
-    latencies_us: Vec<u64>,
+    hist: LatencyHistogram,
+    /// Ring buffer of the most recent latencies (µs), capacity
+    /// [`LATENCY_WINDOW`]: exact percentiles without unbounded growth.
+    recent_us: Vec<u64>,
+    recent_next: usize,
+}
+
+impl Inner {
+    fn push_latency(&mut self, us: u64) {
+        self.hist.record_us(us);
+        if self.recent_us.len() < LATENCY_WINDOW {
+            self.recent_us.push(us);
+        } else {
+            self.recent_us[self.recent_next] = us;
+        }
+        self.recent_next = (self.recent_next + 1) % LATENCY_WINDOW;
+    }
 }
 
 /// Per-worker counters inside a [`MetricsSnapshot`].
@@ -42,15 +179,20 @@ pub struct MetricsSnapshot {
     pub batches: u64,
     /// Mean batch occupancy in [0, 1].
     pub occupancy: f64,
-    /// p50 request latency.
+    /// p50 request latency (exact over the recent
+    /// [`LATENCY_WINDOW`]-per-worker sample window).
     pub p50: Duration,
-    /// p99 request latency.
+    /// p95 request latency (same window).
+    pub p95: Duration,
+    /// p99 request latency (same window).
     pub p99: Duration,
-    /// Mean request latency.
+    /// Mean request latency (exact over the full lifetime, from the
+    /// histogram `_sum`/`_count`).
     pub mean: Duration,
     /// Requests that failed with an executor error.
     pub errors: u64,
-    /// Requests rejected by load shedding ([`OverloadPolicy::Shed`]).
+    /// Requests rejected by load shedding ([`OverloadPolicy::Shed`])
+    /// or tenant admission control.
     ///
     /// [`OverloadPolicy::Shed`]: super::OverloadPolicy::Shed
     pub shed: u64,
@@ -59,6 +201,8 @@ pub struct MetricsSnapshot {
     /// Peak number of requests queued/executing at once (high-water
     /// mark of the admission gauge).
     pub inflight_peak: usize,
+    /// Full-lifetime latency histogram (bucket-wise sum over workers).
+    pub hist: LatencyHistogram,
     /// Per-worker breakdown, indexed by worker.
     pub per_worker: Vec<WorkerCounts>,
 }
@@ -76,8 +220,9 @@ impl ServerMetrics {
         g.requests += latencies.len() as u64;
         g.batches += 1;
         g.padded_slots += (capacity - latencies.len()) as u64;
-        g.latencies_us
-            .extend(latencies.iter().map(|d| d.as_micros() as u64));
+        for d in latencies {
+            g.push_latency(d.as_micros() as u64);
+        }
     }
 
     /// Record `n` requests that failed with an executor error.
@@ -85,8 +230,15 @@ impl ServerMetrics {
         self.inner.lock().unwrap().errors += n;
     }
 
-    /// Single-worker snapshot (sorts latencies; intended for
-    /// end-of-run reporting).
+    /// Number of latency samples currently held for exact percentiles
+    /// — never exceeds [`LATENCY_WINDOW`] (the memory-cap invariant;
+    /// older samples live on in the histogram only).
+    pub fn latency_samples(&self) -> usize {
+        self.inner.lock().unwrap().recent_us.len()
+    }
+
+    /// Single-worker snapshot (sorts the recent-latency window;
+    /// intended for end-of-run reporting).
     pub fn snapshot(&self, capacity: usize) -> MetricsSnapshot {
         Self::merge([self].into_iter(), capacity, 0, 0)
     }
@@ -109,7 +261,8 @@ impl ServerMetrics {
         shed: u64,
         inflight_peak: usize,
     ) -> MetricsSnapshot {
-        let mut latencies: Vec<u64> = Vec::new();
+        let mut recent: Vec<u64> = Vec::new();
+        let mut hist = LatencyHistogram::new();
         let mut per_worker = Vec::new();
         let (mut requests, mut batches, mut padded, mut errors) = (0u64, 0u64, 0u64, 0u64);
         for (w, m) in workers.enumerate() {
@@ -118,7 +271,8 @@ impl ServerMetrics {
             batches += g.batches;
             padded += g.padded_slots;
             errors += g.errors;
-            latencies.extend_from_slice(&g.latencies_us);
+            hist.merge(&g.hist);
+            recent.extend_from_slice(&g.recent_us);
             per_worker.push(WorkerCounts {
                 worker: w,
                 requests: g.requests,
@@ -126,19 +280,19 @@ impl ServerMetrics {
                 errors: g.errors,
             });
         }
-        latencies.sort_unstable();
-        let n = latencies.len();
+        recent.sort_unstable();
+        let n = recent.len();
         let pick = |q: f64| -> Duration {
             if n == 0 {
                 return Duration::ZERO;
             }
             let idx = ((n as f64 - 1.0) * q).round() as usize;
-            Duration::from_micros(latencies[idx])
+            Duration::from_micros(recent[idx])
         };
-        let mean = if n == 0 {
+        let mean = if hist.count() == 0 {
             Duration::ZERO
         } else {
-            Duration::from_micros(latencies.iter().sum::<u64>() / n as u64)
+            Duration::from_micros(hist.sum_us() / hist.count())
         };
         let slots = batches * capacity as u64;
         MetricsSnapshot {
@@ -146,15 +300,139 @@ impl ServerMetrics {
             batches,
             occupancy: if slots == 0 { 0.0 } else { 1.0 - padded as f64 / slots as f64 },
             p50: pick(0.5),
+            p95: pick(0.95),
             p99: pick(0.99),
             mean,
             errors,
             shed,
             workers: per_worker.len(),
             inflight_peak,
+            hist,
             per_worker,
         }
     }
+}
+
+/// Escape a Prometheus label value (backslash, quote, newline).
+fn escape_label(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+/// Format microseconds as seconds the way Prometheus bounds are
+/// spelled (shortest float round-trip: `50 µs` → `0.00005`).
+fn secs(us: u64) -> String {
+    (us as f64 / 1e6).to_string()
+}
+
+/// Render one metric family: `# HELP` + `# TYPE` headers followed by
+/// one sample per `(labels, value)` row.
+fn family(out: &mut String, name: &str, kind: &str, help: &str, rows: &[(String, String)]) {
+    if rows.is_empty() {
+        return;
+    }
+    out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} {kind}\n"));
+    for (labels, value) in rows {
+        out.push_str(&format!("{name}{{{labels}}} {value}\n"));
+    }
+}
+
+/// Prometheus text exposition (text format 0.0.4) over a set of named
+/// model snapshots: request/error/shed counters, occupancy and
+/// in-flight gauges, the cumulative latency histogram
+/// (`scnn_request_latency_seconds_bucket{le=...}` + `_sum`/`_count`),
+/// and p50/p95/p99 quantile gauges per model.
+pub fn prometheus_text(models: &[(&str, MetricsSnapshot)]) -> String {
+    let mut out = String::new();
+    let label = |m: &str| format!("model=\"{}\"", escape_label(m));
+    let counter_rows = |f: &dyn Fn(&MetricsSnapshot) -> u64| -> Vec<(String, String)> {
+        models.iter().map(|(m, s)| (label(m), f(s).to_string())).collect()
+    };
+    family(
+        &mut out,
+        "scnn_requests_total",
+        "counter",
+        "Requests completed successfully.",
+        &counter_rows(&|s| s.requests),
+    );
+    family(
+        &mut out,
+        "scnn_request_errors_total",
+        "counter",
+        "Requests failed with an executor error.",
+        &counter_rows(&|s| s.errors),
+    );
+    family(
+        &mut out,
+        "scnn_requests_shed_total",
+        "counter",
+        "Requests rejected by load shedding or tenant admission.",
+        &counter_rows(&|s| s.shed),
+    );
+    family(
+        &mut out,
+        "scnn_batches_total",
+        "counter",
+        "Executor batch invocations.",
+        &counter_rows(&|s| s.batches),
+    );
+    family(
+        &mut out,
+        "scnn_batch_occupancy",
+        "gauge",
+        "Mean live-slot fraction per executed batch.",
+        &models.iter().map(|(m, s)| (label(m), s.occupancy.to_string())).collect::<Vec<_>>(),
+    );
+    family(
+        &mut out,
+        "scnn_inflight_peak",
+        "gauge",
+        "High-water mark of admitted, unanswered requests.",
+        &counter_rows(&|s| s.inflight_peak as u64),
+    );
+    // Histogram family: cumulative buckets, then _sum and _count.
+    let mut rows = Vec::new();
+    for (m, s) in models {
+        let cum = s.hist.cumulative();
+        for (i, &bound) in LATENCY_BUCKET_BOUNDS_US.iter().enumerate() {
+            rows.push((format!("{},le=\"{}\"", label(m), secs(bound)), cum[i].to_string()));
+        }
+        rows.push((format!("{},le=\"+Inf\"", label(m)), cum[LATENCY_BUCKETS - 1].to_string()));
+    }
+    family(
+        &mut out,
+        "scnn_request_latency_seconds_bucket",
+        "counter",
+        "Cumulative request-latency distribution.",
+        &rows,
+    );
+    family(
+        &mut out,
+        "scnn_request_latency_seconds_sum",
+        "counter",
+        "Sum of request latencies in seconds.",
+        &models.iter().map(|(m, s)| (label(m), secs(s.hist.sum_us()))).collect::<Vec<_>>(),
+    );
+    family(
+        &mut out,
+        "scnn_request_latency_seconds_count",
+        "counter",
+        "Count of latency samples.",
+        &counter_rows(&|s| s.hist.count()),
+    );
+    let mut qrows = Vec::new();
+    for (m, s) in models {
+        for (q, d) in [(0.5, s.p50), (0.95, s.p95), (0.99, s.p99)] {
+            qrows.push((format!("{},quantile=\"{}\"", label(m), q), secs(d.as_micros() as u64)));
+        }
+    }
+    family(
+        &mut out,
+        "scnn_request_latency_quantile_seconds",
+        "gauge",
+        "Exact latency quantiles over the recent sample window.",
+        &qrows,
+    );
+    out
 }
 
 #[cfg(test)]
@@ -164,10 +442,7 @@ mod tests {
     #[test]
     fn records_and_snapshots() {
         let m = ServerMetrics::new();
-        m.record_batch(
-            &[Duration::from_micros(100), Duration::from_micros(300)],
-            4,
-        );
+        m.record_batch(&[Duration::from_micros(100), Duration::from_micros(300)], 4);
         m.record_batch(&[Duration::from_micros(200)], 4);
         let s = m.snapshot(4);
         assert_eq!(s.requests, 3);
@@ -187,6 +462,8 @@ mod tests {
         assert_eq!(s.requests, 0);
         assert_eq!(s.p99, Duration::ZERO);
         assert_eq!(s.per_worker.len(), 1);
+        assert_eq!(s.hist.count(), 0);
+        assert_eq!(s.hist.quantile(0.5), Duration::ZERO);
     }
 
     #[test]
@@ -211,5 +488,112 @@ mod tests {
         // Latency pool is merged before percentiles: p50 of
         // [100,100,100,100,500] is 100µs.
         assert_eq!(s.p50, Duration::from_micros(100));
+        // The merged histogram agrees with the merged counters.
+        assert_eq!(s.hist.count(), 5);
+        assert_eq!(s.hist.sum_us(), 900);
+    }
+
+    #[test]
+    fn histogram_buckets_are_cumulative_and_monotone() {
+        let mut h = LatencyHistogram::new();
+        for us in [10, 50, 51, 100, 2_000, 9_999, 2_000_000] {
+            h.record_us(us);
+        }
+        assert_eq!(h.count(), 7);
+        assert_eq!(h.sum_us(), 10 + 50 + 51 + 100 + 2_000 + 9_999 + 2_000_000);
+        let cum = h.cumulative();
+        for w in cum.windows(2) {
+            assert!(w[0] <= w[1], "cumulative counts must be monotone: {cum:?}");
+        }
+        assert_eq!(cum[LATENCY_BUCKETS - 1], h.count());
+        // ≤ 50 µs: the 10 and 50 samples (bounds are inclusive).
+        assert_eq!(cum[0], 2);
+        // ≤ 100 µs adds 51 and 100.
+        assert_eq!(cum[1], 4);
+        // The 2 s sample lands only in +Inf.
+        assert_eq!(cum[LATENCY_BUCKETS - 2], 6);
+    }
+
+    #[test]
+    fn histogram_merge_and_quantile() {
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        for _ in 0..9 {
+            a.record_us(100);
+        }
+        b.record_us(400_000);
+        a.merge(&b);
+        assert_eq!(a.count(), 10);
+        // p50 falls in the ≤100 µs bucket, p99 in the ≤500 ms bucket.
+        assert_eq!(a.quantile(0.5), Duration::from_micros(100));
+        assert_eq!(a.quantile(0.99), Duration::from_micros(500_000));
+    }
+
+    #[test]
+    fn latency_window_is_capped() {
+        let m = ServerMetrics::new();
+        let total = LATENCY_WINDOW + 1_000;
+        for i in 0..total {
+            m.record_batch(&[Duration::from_micros(i as u64 + 1)], 1);
+        }
+        // The exact-percentile pool is capped; lifetime counters are not.
+        assert_eq!(m.latency_samples(), LATENCY_WINDOW);
+        let s = m.snapshot(1);
+        assert_eq!(s.requests, total as u64);
+        assert_eq!(s.hist.count(), total as u64);
+        // The ring holds the *most recent* window: its minimum is the
+        // first sample that was not overwritten.
+        assert!(s.p50 >= Duration::from_micros(1_000));
+        // Lifetime mean stays exact (sum of 1..=total over total).
+        let sum: u64 = (1..=total as u64).sum();
+        assert_eq!(s.mean, Duration::from_micros(sum / total as u64));
+    }
+
+    #[test]
+    fn prometheus_exposition_is_consistent() {
+        let m = ServerMetrics::new();
+        m.record_batch(
+            &[Duration::from_micros(80), Duration::from_micros(80), Duration::from_micros(30_000)],
+            4,
+        );
+        let s = m.snapshot(4);
+        let text = prometheus_text(&[("tnn", s.clone())]);
+        // _count and _sum agree with the snapshot's histogram.
+        assert!(text.contains(&format!(
+            "scnn_request_latency_seconds_count{{model=\"tnn\"}} {}",
+            s.hist.count()
+        )));
+        assert!(text.contains(&format!(
+            "scnn_request_latency_seconds_sum{{model=\"tnn\"}} {}",
+            s.hist.sum_us() as f64 / 1e6
+        )));
+        assert!(text.contains("scnn_requests_total{model=\"tnn\"} 3"));
+        // Bucket series is cumulative: two samples ≤ 100 µs, all three
+        // ≤ 50 ms and in +Inf.
+        let bucket = |le: &str, n: u64| {
+            format!("scnn_request_latency_seconds_bucket{{model=\"tnn\",le=\"{le}\"}} {n}")
+        };
+        assert!(text.contains(&bucket("0.0001", 2)), "{text}");
+        assert!(text.contains(&bucket("0.05", 3)), "{text}");
+        assert!(text.contains(&bucket("+Inf", 3)), "{text}");
+        // Quantile gauges are present per model.
+        let q50 = "scnn_request_latency_quantile_seconds{model=\"tnn\",quantile=\"0.5\"}";
+        assert!(text.contains(q50), "{text}");
+        // Every bucket line count is monotone in the order emitted.
+        let mut last = 0u64;
+        for line in text.lines().filter(|l| l.starts_with("scnn_request_latency_seconds_bucket")) {
+            let v: u64 = line.rsplit(' ').next().unwrap().parse().unwrap();
+            assert!(v >= last, "bucket series must be monotone: {text}");
+            last = v;
+        }
+        // HELP/TYPE headers come exactly once per family.
+        assert_eq!(text.matches("# TYPE scnn_requests_total counter").count(), 1);
+    }
+
+    #[test]
+    fn prometheus_escapes_label_values() {
+        let s = ServerMetrics::new().snapshot(1);
+        let text = prometheus_text(&[("we\"ird\\name", s)]);
+        assert!(text.contains("model=\"we\\\"ird\\\\name\""));
     }
 }

@@ -27,12 +27,22 @@
 //!   [`BatchPolicy`] (adaptive hold time), [`OverloadPolicy`]
 //!   (backpressure vs load shedding), [`ServeConfig`]/[`PoolConfig`].
 //! * [`metrics`] — [`ServerMetrics`] per worker, aggregated into one
-//!   [`MetricsSnapshot`].
+//!   [`MetricsSnapshot`] with fixed-bucket latency histograms and a
+//!   Prometheus text exposition.
+//! * [`registry`] — [`ModelRegistry`]: several named models behind one
+//!   front-end (hot add/swap, per-model pools) plus per-tenant
+//!   admission control ([`TenantPolicy`], [`Priority`]).
+//! * [`net`] — the TCP front-end: a length-prefixed binary protocol
+//!   over `std::net` ([`NetServer`], [`NetClient`], [`FrameReader`]),
+//!   one acceptor thread + per-connection reader threads feeding the
+//!   registry's pools.
 
 pub mod backend;
 pub mod batcher;
 pub mod executor;
 pub mod metrics;
+pub mod net;
+pub mod registry;
 
 pub use backend::Backend;
 pub use batcher::{
@@ -43,4 +53,6 @@ pub use executor::{
     BatchExecutor, BinaryBatchExecutor, ExecutorFactory, ExecutorSpec, PjrtExecutor,
     ScBatchExecutor, SyntheticExecutor,
 };
-pub use metrics::{MetricsSnapshot, ServerMetrics, WorkerCounts};
+pub use metrics::{prometheus_text, LatencyHistogram, MetricsSnapshot, ServerMetrics, WorkerCounts};
+pub use net::{Frame, FrameReader, InferRequest, InferResponse, NetClient, NetServer, Status};
+pub use registry::{ModelEntry, ModelRegistry, Priority, TenantCounters, TenantPolicy};

@@ -1,0 +1,888 @@
+//! Network serving front-end: a length-prefixed binary protocol over
+//! `std::net` (std-only, no async runtime), putting a real wire in
+//! front of the in-process coordinator pools.
+//!
+//! ## Wire protocol
+//!
+//! Every frame is `u32 LE length` + body; the body starts with a
+//! fixed header (`magic u32 LE`, `version u8`, `kind u8`) followed by
+//! kind-specific fields (all integers LE, all floats f32 LE):
+//!
+//! | kind | frame | body after header |
+//! |------|-------|-------------------|
+//! | 0 | infer request | `id u64`, `priority u8`, `model_len u8`, `tenant_len u8`, model utf-8, tenant utf-8, `count u32`, `count × f32` |
+//! | 1 | infer response | `id u64`, `status u8`, `count u32`, then `count × f32` logits (status 0) or `count` utf-8 message bytes |
+//! | 2 | metrics request | `id u64` |
+//! | 3 | metrics response | `id u64`, `count u32`, `count` utf-8 bytes (Prometheus text) |
+//!
+//! Frames longer than [`MAX_FRAME`] bytes, bad magic/version/kind,
+//! non-utf-8 ids, or bodies whose declared lengths disagree with the
+//! frame length are **malformed**: the server answers with a
+//! `BadRequest` response (id 0 if the id never decoded) and closes
+//! the connection — a corrupt byte stream cannot be resynchronized,
+//! but it must never panic a server thread.
+//!
+//! ## Threading model
+//!
+//! [`NetServer::bind`] spawns one acceptor thread; each accepted
+//! connection gets its own reader thread that decodes frames with a
+//! [`FrameReader`] (robust to any `read()` fragmentation, down to one
+//! byte at a time), serves each request *synchronously* through the
+//! [`ModelRegistry`] — tenant admission first, then the model pool's
+//! own Block/Shed policy — and writes the response back on the same
+//! socket. [`NetServer::shutdown`] stops the acceptor, lets every
+//! connection finish the frame it is serving (requests already
+//! buffered are drained, in-flight responses are written), and joins
+//! all threads before returning.
+
+use std::io::{ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::Result;
+use anyhow::Context;
+
+use super::batcher::{is_shed_error, SHED_ERROR};
+use super::registry::{ModelRegistry, Priority};
+
+/// Frame magic: `"SCNN"` read as a little-endian u32.
+pub const MAGIC: u32 = u32::from_le_bytes(*b"SCNN");
+
+/// Protocol version carried in every frame.
+pub const VERSION: u8 = 1;
+
+/// Hard cap on one frame's body length (16 MiB): anything larger is
+/// rejected as malformed before buffering, so a bogus length prefix
+/// cannot make the server allocate unboundedly.
+pub const MAX_FRAME: usize = 1 << 24;
+
+const KIND_INFER: u8 = 0;
+const KIND_RESPONSE: u8 = 1;
+const KIND_METRICS: u8 = 2;
+const KIND_METRICS_TEXT: u8 = 3;
+
+/// How often a connection thread re-checks the stop flag while idle.
+const READ_POLL: Duration = Duration::from_millis(50);
+
+/// Response status byte.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Status {
+    /// Success; the payload is the logits row.
+    Ok,
+    /// Rejected by load shedding (pool overload or tenant admission).
+    Shed,
+    /// Malformed frame or wrong payload shape.
+    BadRequest,
+    /// The frame named a model id the registry does not hold.
+    UnknownModel,
+    /// Executor/internal failure.
+    Error,
+}
+
+impl Status {
+    fn as_u8(self) -> u8 {
+        match self {
+            Status::Ok => 0,
+            Status::Shed => 1,
+            Status::BadRequest => 2,
+            Status::UnknownModel => 3,
+            Status::Error => 4,
+        }
+    }
+
+    fn from_u8(v: u8) -> Option<Status> {
+        match v {
+            0 => Some(Status::Ok),
+            1 => Some(Status::Shed),
+            2 => Some(Status::BadRequest),
+            3 => Some(Status::UnknownModel),
+            4 => Some(Status::Error),
+            _ => None,
+        }
+    }
+}
+
+/// One inference request as carried on the wire.
+#[derive(Clone, Debug, PartialEq)]
+pub struct InferRequest {
+    /// Client-chosen id, echoed in the response.
+    pub id: u64,
+    /// Admission priority (lower sheds first under tenant load).
+    pub priority: Priority,
+    /// Model id to route by (≤ 255 bytes utf-8).
+    pub model: String,
+    /// Tenant id for admission accounting (≤ 255 bytes utf-8).
+    pub tenant: String,
+    /// Flattened image (C·H·W floats).
+    pub payload: Vec<f32>,
+}
+
+/// One inference response as carried on the wire.
+#[derive(Clone, Debug, PartialEq)]
+pub struct InferResponse {
+    /// Echo of the request id (0 when the request never decoded).
+    pub id: u64,
+    /// Outcome.
+    pub status: Status,
+    /// Logits (empty unless `status == Ok`).
+    pub logits: Vec<f32>,
+    /// Error message (empty when `status == Ok`).
+    pub message: String,
+}
+
+impl InferResponse {
+    /// Success response.
+    pub fn ok(id: u64, logits: Vec<f32>) -> Self {
+        Self { id, status: Status::Ok, logits, message: String::new() }
+    }
+
+    /// Failure response.
+    pub fn fail(id: u64, status: Status, message: impl Into<String>) -> Self {
+        Self { id, status, logits: Vec::new(), message: message.into() }
+    }
+}
+
+/// Every frame the protocol speaks.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Frame {
+    /// Client → server inference request.
+    Infer(InferRequest),
+    /// Server → client inference response.
+    Response(InferResponse),
+    /// Client → server metrics scrape.
+    MetricsRequest {
+        /// Client-chosen id, echoed back.
+        id: u64,
+    },
+    /// Server → client Prometheus text exposition.
+    MetricsText {
+        /// Echo of the request id.
+        id: u64,
+        /// Prometheus text-format payload.
+        text: String,
+    },
+}
+
+/// Serialize one frame (length prefix included) onto `out`.
+pub fn encode_frame(frame: &Frame, out: &mut Vec<u8>) -> Result<()> {
+    let start = out.len();
+    out.extend_from_slice(&[0u8; 4]); // length placeholder
+    out.extend_from_slice(&MAGIC.to_le_bytes());
+    out.push(VERSION);
+    match frame {
+        Frame::Infer(r) => {
+            anyhow::ensure!(r.model.len() <= u8::MAX as usize, "model id too long");
+            anyhow::ensure!(r.tenant.len() <= u8::MAX as usize, "tenant id too long");
+            out.push(KIND_INFER);
+            out.extend_from_slice(&r.id.to_le_bytes());
+            out.push(r.priority.as_u8());
+            out.push(r.model.len() as u8);
+            out.push(r.tenant.len() as u8);
+            out.extend_from_slice(r.model.as_bytes());
+            out.extend_from_slice(r.tenant.as_bytes());
+            out.extend_from_slice(&(r.payload.len() as u32).to_le_bytes());
+            for v in &r.payload {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        Frame::Response(r) => {
+            out.push(KIND_RESPONSE);
+            out.extend_from_slice(&r.id.to_le_bytes());
+            out.push(r.status.as_u8());
+            if r.status == Status::Ok {
+                out.extend_from_slice(&(r.logits.len() as u32).to_le_bytes());
+                for v in &r.logits {
+                    out.extend_from_slice(&v.to_le_bytes());
+                }
+            } else {
+                out.extend_from_slice(&(r.message.len() as u32).to_le_bytes());
+                out.extend_from_slice(r.message.as_bytes());
+            }
+        }
+        Frame::MetricsRequest { id } => {
+            out.push(KIND_METRICS);
+            out.extend_from_slice(&id.to_le_bytes());
+        }
+        Frame::MetricsText { id, text } => {
+            out.push(KIND_METRICS_TEXT);
+            out.extend_from_slice(&id.to_le_bytes());
+            out.extend_from_slice(&(text.len() as u32).to_le_bytes());
+            out.extend_from_slice(text.as_bytes());
+        }
+    }
+    let body_len = out.len() - start - 4;
+    anyhow::ensure!(body_len <= MAX_FRAME, "frame body {body_len} bytes exceeds {MAX_FRAME}");
+    out[start..start + 4].copy_from_slice(&(body_len as u32).to_le_bytes());
+    Ok(())
+}
+
+/// Bounds-checked cursor over one frame body.
+struct Cur<'a> {
+    b: &'a [u8],
+    p: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        anyhow::ensure!(self.b.len() - self.p >= n, "malformed frame: truncated body");
+        let s = &self.b[self.p..self.p + n];
+        self.p += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn utf8(&mut self, n: usize) -> Result<String> {
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec()).map_err(|_| anyhow::anyhow!("malformed frame: bad utf-8"))
+    }
+
+    fn f32s(&mut self, n: usize) -> Result<Vec<f32>> {
+        let bytes = self.take(n.checked_mul(4).context("malformed frame: payload count")?)?;
+        Ok(bytes.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    fn done(&self) -> Result<()> {
+        anyhow::ensure!(self.p == self.b.len(), "malformed frame: trailing bytes");
+        Ok(())
+    }
+}
+
+/// Decode one frame body (the bytes after the length prefix).
+pub fn decode_body(body: &[u8]) -> Result<Frame> {
+    let mut c = Cur { b: body, p: 0 };
+    let magic = c.u32()?;
+    anyhow::ensure!(magic == MAGIC, "malformed frame: bad magic {magic:#010x}");
+    let version = c.u8()?;
+    anyhow::ensure!(version == VERSION, "malformed frame: version {version} (want {VERSION})");
+    let kind = c.u8()?;
+    let frame = match kind {
+        KIND_INFER => {
+            let id = c.u64()?;
+            let priority = Priority::from_u8(c.u8()?)
+                .ok_or_else(|| anyhow::anyhow!("malformed frame: bad priority byte"))?;
+            let model_len = c.u8()? as usize;
+            let tenant_len = c.u8()? as usize;
+            let model = c.utf8(model_len)?;
+            let tenant = c.utf8(tenant_len)?;
+            let count = c.u32()? as usize;
+            let payload = c.f32s(count)?;
+            Frame::Infer(InferRequest { id, priority, model, tenant, payload })
+        }
+        KIND_RESPONSE => {
+            let id = c.u64()?;
+            let status = Status::from_u8(c.u8()?)
+                .ok_or_else(|| anyhow::anyhow!("malformed frame: bad status byte"))?;
+            let count = c.u32()? as usize;
+            if status == Status::Ok {
+                let logits = c.f32s(count)?;
+                Frame::Response(InferResponse { id, status, logits, message: String::new() })
+            } else {
+                let message = c.utf8(count)?;
+                Frame::Response(InferResponse { id, status, logits: Vec::new(), message })
+            }
+        }
+        KIND_METRICS => Frame::MetricsRequest { id: c.u64()? },
+        KIND_METRICS_TEXT => {
+            let id = c.u64()?;
+            let count = c.u32()? as usize;
+            let text = c.utf8(count)?;
+            Frame::MetricsText { id, text }
+        }
+        other => anyhow::bail!("malformed frame: unknown kind {other}"),
+    };
+    c.done()?;
+    Ok(frame)
+}
+
+/// Incremental frame decoder: feed arbitrary byte chunks (any
+/// `read()` fragmentation, down to a 1-byte trickle), pull complete
+/// frames out. Malformed input returns `Err` — the caller must treat
+/// the stream as unrecoverable.
+#[derive(Debug, Default)]
+pub struct FrameReader {
+    buf: Vec<u8>,
+    pos: usize,
+}
+
+impl FrameReader {
+    /// New, empty.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append raw bytes from the transport.
+    pub fn feed(&mut self, bytes: &[u8]) {
+        if self.pos > 0 && self.pos == self.buf.len() {
+            self.buf.clear();
+            self.pos = 0;
+        }
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Bytes buffered but not yet decoded (a partial frame, or frames
+    /// not yet pulled).
+    pub fn buffered(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// Try to decode the next complete frame: `Ok(None)` means more
+    /// bytes are needed; `Err` means the stream is malformed (bad
+    /// magic/version/kind, oversized declared length, inconsistent
+    /// body) and must be dropped.
+    pub fn try_next(&mut self) -> Result<Option<Frame>> {
+        if self.buffered() < 4 {
+            return Ok(None);
+        }
+        let len_bytes: [u8; 4] = self.buf[self.pos..self.pos + 4].try_into().unwrap();
+        let len = u32::from_le_bytes(len_bytes) as usize;
+        anyhow::ensure!(len <= MAX_FRAME, "malformed frame: declared length {len} exceeds max");
+        if self.buffered() < 4 + len {
+            return Ok(None);
+        }
+        let frame = decode_body(&self.buf[self.pos + 4..self.pos + 4 + len]);
+        self.pos += 4 + len;
+        if self.pos == self.buf.len() {
+            self.buf.clear();
+            self.pos = 0;
+        } else if self.pos > (1 << 16) {
+            self.buf.drain(..self.pos);
+            self.pos = 0;
+        }
+        frame.map(Some)
+    }
+}
+
+/// State shared by the acceptor, the connection threads and the
+/// server handle.
+struct ServerShared {
+    registry: Arc<ModelRegistry>,
+    stop: AtomicBool,
+    accepted: AtomicU64,
+    active: AtomicUsize,
+    malformed: AtomicU64,
+}
+
+impl ServerShared {
+    /// Prometheus text: registry (per-model + per-tenant) families
+    /// plus the server's own connection counters.
+    fn metrics_text(&self) -> String {
+        let mut out = self.registry.prometheus();
+        out.push_str("# HELP scnn_connections_accepted_total Connections accepted.\n");
+        out.push_str("# TYPE scnn_connections_accepted_total counter\n");
+        out.push_str(&format!(
+            "scnn_connections_accepted_total {}\n",
+            self.accepted.load(Ordering::Relaxed)
+        ));
+        out.push_str("# HELP scnn_connections_active Connections currently open.\n");
+        out.push_str("# TYPE scnn_connections_active gauge\n");
+        out.push_str(&format!("scnn_connections_active {}\n", self.active.load(Ordering::Relaxed)));
+        out.push_str("# HELP scnn_frames_malformed_total Frames rejected as malformed.\n");
+        out.push_str("# TYPE scnn_frames_malformed_total counter\n");
+        out.push_str(&format!(
+            "scnn_frames_malformed_total {}\n",
+            self.malformed.load(Ordering::Relaxed)
+        ));
+        out
+    }
+}
+
+/// The running TCP front-end: one acceptor thread + one reader thread
+/// per connection, all serving through a shared [`ModelRegistry`].
+pub struct NetServer {
+    shared: Arc<ServerShared>,
+    local_addr: SocketAddr,
+    acceptor: Option<JoinHandle<()>>,
+    conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
+}
+
+impl NetServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral port) and
+    /// start accepting connections against `registry`.
+    pub fn bind(addr: &str, registry: Arc<ModelRegistry>) -> Result<NetServer> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+        let local_addr = listener.local_addr().context("resolving bound address")?;
+        let shared = Arc::new(ServerShared {
+            registry,
+            stop: AtomicBool::new(false),
+            accepted: AtomicU64::new(0),
+            active: AtomicUsize::new(0),
+            malformed: AtomicU64::new(0),
+        });
+        let conns: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+        let acceptor = {
+            let shared = shared.clone();
+            let conns = conns.clone();
+            std::thread::Builder::new()
+                .name("scnn-acceptor".into())
+                .spawn(move || loop {
+                    match listener.accept() {
+                        Ok((stream, _peer)) => {
+                            if shared.stop.load(Ordering::Relaxed) {
+                                // The shutdown wake-up (or a raced
+                                // late client): stop accepting.
+                                break;
+                            }
+                            shared.accepted.fetch_add(1, Ordering::Relaxed);
+                            let shared = shared.clone();
+                            let handle = std::thread::Builder::new()
+                                .name("scnn-conn".into())
+                                .spawn(move || {
+                                    shared.active.fetch_add(1, Ordering::Relaxed);
+                                    serve_connection(stream, &shared);
+                                    shared.active.fetch_sub(1, Ordering::Relaxed);
+                                });
+                            match handle {
+                                Ok(h) => conns.lock().unwrap().push(h),
+                                Err(_) => break,
+                            }
+                        }
+                        Err(_) => {
+                            if shared.stop.load(Ordering::Relaxed) {
+                                break;
+                            }
+                        }
+                    }
+                })
+                .context("spawning acceptor thread")?
+        };
+        Ok(NetServer { shared, local_addr, acceptor: Some(acceptor), conns })
+    }
+
+    /// The bound address (resolves `:0` to the ephemeral port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Connections accepted so far.
+    pub fn connections_accepted(&self) -> u64 {
+        self.shared.accepted.load(Ordering::Relaxed)
+    }
+
+    /// The Prometheus exposition a metrics frame returns (registry
+    /// families + server connection counters).
+    pub fn prometheus(&self) -> String {
+        self.shared.metrics_text()
+    }
+
+    /// Graceful shutdown: stop accepting, let every connection finish
+    /// (buffered requests are served, in-flight responses written),
+    /// and join all threads. Model pools are left running — shut the
+    /// registry down separately ([`ModelRegistry::shutdown_all`]).
+    pub fn shutdown(mut self) {
+        self.stop_and_wake();
+        if let Some(h) = self.acceptor.take() {
+            let _ = h.join();
+        }
+        let handles: Vec<JoinHandle<()>> = {
+            let mut g = self.conns.lock().unwrap();
+            g.drain(..).collect()
+        };
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+
+    fn stop_and_wake(&self) {
+        self.shared.stop.store(true, Ordering::Relaxed);
+        // Wake the acceptor out of its blocking accept().
+        let _ = TcpStream::connect(self.local_addr);
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        // Signal stop without joining: connection threads observe the
+        // flag at their next read poll (≤ 50 ms) and exit.
+        self.stop_and_wake();
+    }
+}
+
+/// One connection: decode frames, serve them in order, write replies
+/// on the same socket. Returns when the peer closes, the stream
+/// errors, a malformed frame arrives, or the server stops (after
+/// draining every complete frame already received).
+fn serve_connection(stream: TcpStream, shared: &Arc<ServerShared>) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(READ_POLL));
+    let mut stream = stream;
+    let mut reader = FrameReader::new();
+    let mut rbuf = [0u8; 8192];
+    let mut wbuf = Vec::new();
+    loop {
+        if !serve_buffered(&mut stream, &mut reader, &mut wbuf, shared) {
+            return;
+        }
+        let stopping = shared.stop.load(Ordering::Relaxed);
+        match stream.read(&mut rbuf) {
+            Ok(0) => return, // peer closed
+            Ok(n) => reader.feed(&rbuf[..n]),
+            Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {
+                if stopping {
+                    // Drain whatever arrived before the stop flag and
+                    // close; responses for frames already received
+                    // were written above.
+                    serve_buffered(&mut stream, &mut reader, &mut wbuf, shared);
+                    return;
+                }
+            }
+            Err(_) => return,
+        }
+    }
+}
+
+/// Serve every complete frame currently buffered; `false` means the
+/// connection must close (malformed input or a dead peer socket).
+fn serve_buffered(
+    stream: &mut TcpStream,
+    reader: &mut FrameReader,
+    wbuf: &mut Vec<u8>,
+    shared: &Arc<ServerShared>,
+) -> bool {
+    loop {
+        match reader.try_next() {
+            Ok(Some(frame)) => {
+                let reply = handle_frame(shared, frame);
+                if write_frame(stream, wbuf, &reply).is_err() {
+                    return false;
+                }
+            }
+            Ok(None) => return true,
+            Err(e) => {
+                shared.malformed.fetch_add(1, Ordering::Relaxed);
+                let reply = Frame::Response(InferResponse::fail(
+                    0,
+                    Status::BadRequest,
+                    format!("{e:#}"),
+                ));
+                let _ = write_frame(stream, wbuf, &reply);
+                return false;
+            }
+        }
+    }
+}
+
+fn write_frame(stream: &mut TcpStream, wbuf: &mut Vec<u8>, frame: &Frame) -> Result<()> {
+    wbuf.clear();
+    encode_frame(frame, wbuf)?;
+    stream.write_all(wbuf).context("writing frame")?;
+    stream.flush().context("flushing frame")?;
+    Ok(())
+}
+
+/// Serve one decoded frame.
+fn handle_frame(shared: &Arc<ServerShared>, frame: Frame) -> Frame {
+    match frame {
+        Frame::Infer(req) => Frame::Response(handle_infer(shared, req)),
+        Frame::MetricsRequest { id } => Frame::MetricsText { id, text: shared.metrics_text() },
+        Frame::Response(r) => Frame::Response(InferResponse::fail(
+            r.id,
+            Status::BadRequest,
+            "unexpected response frame from client",
+        )),
+        Frame::MetricsText { id, .. } => Frame::Response(InferResponse::fail(
+            id,
+            Status::BadRequest,
+            "unexpected metrics-text frame from client",
+        )),
+    }
+}
+
+/// Route one inference request: registry lookup → shape check →
+/// tenant admission → the model pool's own overload policy.
+fn handle_infer(shared: &Arc<ServerShared>, req: InferRequest) -> InferResponse {
+    let Some(entry) = shared.registry.get(&req.model) else {
+        let known = shared.registry.names().join("|");
+        let msg = format!("unknown model {:?} (registered: {known})", req.model);
+        return InferResponse::fail(req.id, Status::UnknownModel, msg);
+    };
+    let want = entry.client().image_len();
+    if req.payload.len() != want {
+        let msg = format!("payload length {} != model image length {want}", req.payload.len());
+        return InferResponse::fail(req.id, Status::BadRequest, msg);
+    }
+    let _guard = match shared.registry.admission().try_admit(&req.tenant, req.priority) {
+        Some(g) => g,
+        None => {
+            let msg = format!("{SHED_ERROR} (tenant {:?} over quota)", req.tenant);
+            return InferResponse::fail(req.id, Status::Shed, msg);
+        }
+    };
+    match entry.infer(req.payload) {
+        Ok(logits) => InferResponse::ok(req.id, logits),
+        Err(e) if is_shed_error(&e) => InferResponse::fail(req.id, Status::Shed, format!("{e:#}")),
+        Err(e) => InferResponse::fail(req.id, Status::Error, format!("{e:#}")),
+    }
+}
+
+/// Blocking client for the wire protocol: one TCP connection, one
+/// in-flight request at a time (`scnn client`, tests, examples).
+pub struct NetClient {
+    stream: TcpStream,
+    reader: FrameReader,
+    scratch: Vec<u8>,
+    next_id: u64,
+    tenant: String,
+    priority: Priority,
+}
+
+impl NetClient {
+    /// Connect to a serving front-end.
+    pub fn connect<A: ToSocketAddrs>(addr: A) -> Result<Self> {
+        let stream = TcpStream::connect(addr).context("connecting to scnn server")?;
+        let _ = stream.set_nodelay(true);
+        Ok(Self {
+            stream,
+            reader: FrameReader::new(),
+            scratch: Vec::new(),
+            next_id: 1,
+            tenant: "default".to_string(),
+            priority: Priority::Normal,
+        })
+    }
+
+    /// Set the tenant id carried on every request.
+    pub fn with_tenant(mut self, tenant: &str) -> Self {
+        self.tenant = tenant.to_string();
+        self
+    }
+
+    /// Set the priority carried on every request.
+    pub fn with_priority(mut self, priority: Priority) -> Self {
+        self.priority = priority;
+        self
+    }
+
+    /// Send one inference request and wait for its response frame
+    /// (status not interpreted — overload tests read `Status::Shed`
+    /// counts exactly from here).
+    pub fn request(&mut self, model: &str, x: &[f32]) -> Result<InferResponse> {
+        let id = self.next_id;
+        self.next_id += 1;
+        let frame = Frame::Infer(InferRequest {
+            id,
+            priority: self.priority,
+            model: model.to_string(),
+            tenant: self.tenant.clone(),
+            payload: x.to_vec(),
+        });
+        self.send(&frame)?;
+        match self.read_frame()? {
+            Frame::Response(r) => {
+                anyhow::ensure!(r.id == id || r.id == 0, "response id {} for request {id}", r.id);
+                Ok(r)
+            }
+            other => anyhow::bail!("unexpected frame from server: {other:?}"),
+        }
+    }
+
+    /// Blocking inference: `Ok(logits)` or an error (shed rejections
+    /// satisfy [`is_shed_error`], like the in-process client).
+    pub fn infer(&mut self, model: &str, x: &[f32]) -> Result<Vec<f32>> {
+        let r = self.request(model, x)?;
+        match r.status {
+            Status::Ok => Ok(r.logits),
+            Status::Shed if r.message.starts_with(SHED_ERROR) => anyhow::bail!("{}", r.message),
+            Status::Shed => anyhow::bail!("{SHED_ERROR}: {}", r.message),
+            s => anyhow::bail!("server rejected request ({s:?}): {}", r.message),
+        }
+    }
+
+    /// Classify one image (argmax over [`NetClient::infer`]).
+    pub fn classify(&mut self, model: &str, x: &[f32]) -> Result<usize> {
+        let logits = self.infer(model, x)?;
+        Ok(logits
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.total_cmp(b.1))
+            .map(|(i, _)| i)
+            .unwrap_or(0))
+    }
+
+    /// Scrape the server's Prometheus text exposition.
+    pub fn metrics_text(&mut self) -> Result<String> {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.send(&Frame::MetricsRequest { id })?;
+        match self.read_frame()? {
+            Frame::MetricsText { id: rid, text } => {
+                anyhow::ensure!(rid == id, "metrics response id {rid} for request {id}");
+                Ok(text)
+            }
+            Frame::Response(r) => anyhow::bail!("metrics scrape failed: {}", r.message),
+            other => anyhow::bail!("unexpected frame from server: {other:?}"),
+        }
+    }
+
+    fn send(&mut self, frame: &Frame) -> Result<()> {
+        self.scratch.clear();
+        encode_frame(frame, &mut self.scratch)?;
+        self.stream.write_all(&self.scratch).context("writing to server")?;
+        self.stream.flush().context("flushing to server")?;
+        Ok(())
+    }
+
+    fn read_frame(&mut self) -> Result<Frame> {
+        let mut buf = [0u8; 8192];
+        loop {
+            if let Some(f) = self.reader.try_next()? {
+                return Ok(f);
+            }
+            let n = self.stream.read(&mut buf).context("reading from server")?;
+            anyhow::ensure!(n > 0, "server closed the connection");
+            self.reader.feed(&buf[..n]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(frame: Frame) -> Frame {
+        let mut buf = Vec::new();
+        encode_frame(&frame, &mut buf).unwrap();
+        let mut r = FrameReader::new();
+        r.feed(&buf);
+        let out = r.try_next().unwrap().expect("one whole frame buffered");
+        assert_eq!(r.buffered(), 0, "no residue after a clean frame");
+        out
+    }
+
+    #[test]
+    fn frames_roundtrip() {
+        let req = Frame::Infer(InferRequest {
+            id: 7,
+            priority: Priority::Low,
+            model: "scnet10".into(),
+            tenant: "acme".into(),
+            payload: vec![0.5, -1.25, 3.0],
+        });
+        assert_eq!(roundtrip(req.clone()), req);
+        let ok = Frame::Response(InferResponse::ok(9, vec![1.0, 2.0]));
+        assert_eq!(roundtrip(ok.clone()), ok);
+        let fail = Frame::Response(InferResponse::fail(3, Status::Shed, "overloaded"));
+        assert_eq!(roundtrip(fail.clone()), fail);
+        let m = Frame::MetricsRequest { id: 11 };
+        assert_eq!(roundtrip(m.clone()), m);
+        let t = Frame::MetricsText { id: 11, text: "# HELP x\n".into() };
+        assert_eq!(roundtrip(t.clone()), t);
+    }
+
+    #[test]
+    fn reader_survives_one_byte_trickle_and_coalesced_frames() {
+        let a = Frame::Infer(InferRequest {
+            id: 1,
+            priority: Priority::High,
+            model: "m".into(),
+            tenant: "".into(),
+            payload: vec![0.25; 17],
+        });
+        let b = Frame::MetricsRequest { id: 2 };
+        let mut bytes = Vec::new();
+        encode_frame(&a, &mut bytes).unwrap();
+        encode_frame(&b, &mut bytes).unwrap();
+        // Trickle: one byte per feed, both frames must come out whole.
+        let mut r = FrameReader::new();
+        let mut got = Vec::new();
+        for byte in &bytes {
+            r.feed(std::slice::from_ref(byte));
+            while let Some(f) = r.try_next().unwrap() {
+                got.push(f);
+            }
+        }
+        assert_eq!(got, vec![a.clone(), b.clone()]);
+        // Coalesced: both frames in one feed.
+        let mut r = FrameReader::new();
+        r.feed(&bytes);
+        assert_eq!(r.try_next().unwrap(), Some(a));
+        assert_eq!(r.try_next().unwrap(), Some(b));
+        assert_eq!(r.try_next().unwrap(), None);
+    }
+
+    #[test]
+    fn bad_magic_version_kind_are_malformed() {
+        let mut buf = Vec::new();
+        encode_frame(&Frame::MetricsRequest { id: 1 }, &mut buf).unwrap();
+        // Corrupt the magic.
+        let mut bad = buf.clone();
+        bad[4] ^= 0xFF;
+        let mut r = FrameReader::new();
+        r.feed(&bad);
+        assert!(format!("{:#}", r.try_next().unwrap_err()).contains("bad magic"));
+        // Corrupt the version.
+        let mut bad = buf.clone();
+        bad[8] = 99;
+        let mut r = FrameReader::new();
+        r.feed(&bad);
+        assert!(format!("{:#}", r.try_next().unwrap_err()).contains("version"));
+        // Corrupt the kind.
+        let mut bad = buf.clone();
+        bad[9] = 42;
+        let mut r = FrameReader::new();
+        r.feed(&bad);
+        assert!(format!("{:#}", r.try_next().unwrap_err()).contains("unknown kind"));
+    }
+
+    #[test]
+    fn truncated_and_oversized_frames_are_malformed() {
+        // Body claims a payload longer than the frame carries.
+        let mut buf = Vec::new();
+        let req = Frame::Infer(InferRequest {
+            id: 1,
+            priority: Priority::Normal,
+            model: "m".into(),
+            tenant: "t".into(),
+            payload: vec![1.0, 2.0],
+        });
+        encode_frame(&req, &mut buf).unwrap();
+        let cut = buf.len() - 4; // drop one f32, keep the declared count
+        let body_len = (cut - 4) as u32;
+        let mut bad = buf[..cut].to_vec();
+        bad[0..4].copy_from_slice(&body_len.to_le_bytes());
+        let mut r = FrameReader::new();
+        r.feed(&bad);
+        let e = r.try_next().unwrap_err();
+        assert!(format!("{e:#}").contains("truncated"), "{e:#}");
+        // Declared length over MAX_FRAME is rejected before buffering.
+        let mut r = FrameReader::new();
+        r.feed(&((MAX_FRAME as u32 + 1).to_le_bytes()));
+        let e = r.try_next().unwrap_err();
+        assert!(format!("{e:#}").contains("exceeds max"), "{e:#}");
+        // Trailing junk after a valid body is malformed too.
+        let mut padded = Vec::new();
+        encode_frame(&Frame::MetricsRequest { id: 1 }, &mut padded).unwrap();
+        let len = u32::from_le_bytes(padded[0..4].try_into().unwrap()) + 1;
+        padded[0..4].copy_from_slice(&len.to_le_bytes());
+        padded.push(0xAB);
+        let mut r = FrameReader::new();
+        r.feed(&padded);
+        let e = r.try_next().unwrap_err();
+        assert!(format!("{e:#}").contains("trailing"), "{e:#}");
+    }
+
+    #[test]
+    fn long_ids_are_rejected_at_encode_time() {
+        let req = Frame::Infer(InferRequest {
+            id: 1,
+            priority: Priority::Normal,
+            model: "m".repeat(256),
+            tenant: "t".into(),
+            payload: vec![],
+        });
+        assert!(encode_frame(&req, &mut Vec::new()).is_err());
+    }
+}

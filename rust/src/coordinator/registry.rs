@@ -1,0 +1,514 @@
+//! Multi-model registry + per-tenant admission control.
+//!
+//! A [`ModelRegistry`] holds several named serving pools side by side
+//! — one [`Coordinator`] per model, all reachable through the network
+//! front-end ([`super::net`]) by the model id carried in each frame.
+//! Registration is **hot**: `register` on an existing name swaps the
+//! pool atomically (new requests route to the new pool, the old pool
+//! drains gracefully and its final [`MetricsSnapshot`] is returned),
+//! so a model can be re-frozen with new knobs under live traffic.
+//!
+//! Admission is **per tenant**, layered *in front of* the per-model
+//! [`OverloadPolicy`]: every request names a tenant and a
+//! [`Priority`], and a tenant may only hold [`TenantPolicy`]-bounded
+//! concurrent requests — lower priorities hit a lower bound first, so
+//! one noisy tenant starts shedding its own low-priority traffic
+//! before it can starve anyone else's. Whatever passes admission then
+//! still faces the pool's own Block/Shed backpressure.
+//!
+//! [`Coordinator`]: super::Coordinator
+//! [`OverloadPolicy`]: super::OverloadPolicy
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, RwLock};
+
+use crate::Result;
+
+use super::backend::Backend;
+use super::batcher::{Coordinator, InferenceClient, ServeConfig};
+use super::metrics::{self, MetricsSnapshot};
+
+/// Request priority carried on the wire (one byte) and consumed by
+/// tenant admission: lower priorities shed earlier under load.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Priority {
+    /// Interactive traffic: admitted up to the tenant's full quota.
+    High,
+    /// Default traffic: admitted up to 3/4 of the quota.
+    Normal,
+    /// Batch/backfill traffic: admitted up to 1/2 of the quota.
+    Low,
+}
+
+impl Priority {
+    /// Wire encoding (one byte).
+    pub fn as_u8(self) -> u8 {
+        match self {
+            Priority::High => 0,
+            Priority::Normal => 1,
+            Priority::Low => 2,
+        }
+    }
+
+    /// Decode the wire byte.
+    pub fn from_u8(v: u8) -> Option<Priority> {
+        match v {
+            0 => Some(Priority::High),
+            1 => Some(Priority::Normal),
+            2 => Some(Priority::Low),
+            _ => None,
+        }
+    }
+
+    /// Parse a CLI flag value.
+    pub fn parse(s: &str) -> Result<Priority> {
+        match s {
+            "high" => Ok(Priority::High),
+            "normal" => Ok(Priority::Normal),
+            "low" => Ok(Priority::Low),
+            other => anyhow::bail!("unknown priority {other:?} (high|normal|low)"),
+        }
+    }
+
+    /// The flag spelling.
+    pub fn name(self) -> &'static str {
+        match self {
+            Priority::High => "high",
+            Priority::Normal => "normal",
+            Priority::Low => "low",
+        }
+    }
+}
+
+/// Per-tenant admission policy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TenantPolicy {
+    /// Maximum concurrent (admitted, unanswered) requests one tenant
+    /// may hold at [`Priority::High`]; `0` disables admission control.
+    pub max_inflight: usize,
+}
+
+impl Default for TenantPolicy {
+    /// Admission control off: single-tenant serving stays unthrottled.
+    fn default() -> Self {
+        Self { max_inflight: 0 }
+    }
+}
+
+impl TenantPolicy {
+    /// The in-flight bound a request of priority `p` must stay under:
+    /// the full quota for `High`, ⌈3/4⌉ for `Normal`, ⌈1/2⌉ for `Low`
+    /// (so low-priority traffic sheds first while the quota is never
+    /// rounded to zero).
+    pub fn limit_for(&self, p: Priority) -> usize {
+        if self.max_inflight == 0 {
+            return usize::MAX;
+        }
+        match p {
+            Priority::High => self.max_inflight,
+            Priority::Normal => (self.max_inflight * 3).div_ceil(4),
+            Priority::Low => self.max_inflight.div_ceil(2),
+        }
+    }
+}
+
+#[derive(Debug, Default)]
+struct TenantState {
+    inflight: usize,
+    peak: usize,
+    admitted: u64,
+    shed: u64,
+}
+
+/// Point-in-time counters of one tenant, from
+/// [`TenantAdmission::counters`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TenantCounters {
+    /// Tenant id as carried on the wire.
+    pub tenant: String,
+    /// Requests admitted over the tenant's lifetime.
+    pub admitted: u64,
+    /// Requests shed by admission control (before reaching any pool).
+    pub shed: u64,
+    /// High-water mark of the tenant's concurrent requests.
+    pub peak: usize,
+    /// Currently admitted, unanswered requests.
+    pub inflight: usize,
+}
+
+/// Shared per-tenant admission state (one per registry). Admission is
+/// a short critical section over a tenant map; the returned
+/// [`TenantGuard`] releases the slot on drop, so every exit path of a
+/// request — response, executor error, panic unwind — gives the slot
+/// back.
+#[derive(Debug, Default)]
+pub struct TenantAdmission {
+    policy: TenantPolicy,
+    tenants: Mutex<HashMap<String, TenantState>>,
+}
+
+impl TenantAdmission {
+    /// New admission state under `policy`.
+    pub fn new(policy: TenantPolicy) -> Self {
+        Self { policy, tenants: Mutex::new(HashMap::new()) }
+    }
+
+    /// The configured policy.
+    pub fn policy(&self) -> TenantPolicy {
+        self.policy
+    }
+
+    /// Try to admit one request for `tenant` at priority `p`: `Some`
+    /// holds the slot until the guard drops, `None` means the request
+    /// must be shed (the tenant's shed counter is already bumped).
+    pub fn try_admit(self: &Arc<Self>, tenant: &str, p: Priority) -> Option<TenantGuard> {
+        let limit = self.policy.limit_for(p);
+        let mut g = self.tenants.lock().unwrap();
+        let state = g.entry(tenant.to_string()).or_default();
+        if state.inflight >= limit {
+            state.shed += 1;
+            return None;
+        }
+        state.inflight += 1;
+        state.peak = state.peak.max(state.inflight);
+        state.admitted += 1;
+        drop(g);
+        Some(TenantGuard { admission: self.clone(), tenant: tenant.to_string() })
+    }
+
+    /// Counters of every tenant seen so far, sorted by tenant id.
+    pub fn counters(&self) -> Vec<TenantCounters> {
+        let g = self.tenants.lock().unwrap();
+        let mut out: Vec<TenantCounters> = g
+            .iter()
+            .map(|(t, s)| TenantCounters {
+                tenant: t.clone(),
+                admitted: s.admitted,
+                shed: s.shed,
+                peak: s.peak,
+                inflight: s.inflight,
+            })
+            .collect();
+        out.sort_by(|a, b| a.tenant.cmp(&b.tenant));
+        out
+    }
+
+    fn release(&self, tenant: &str) {
+        let mut g = self.tenants.lock().unwrap();
+        if let Some(state) = g.get_mut(tenant) {
+            state.inflight = state.inflight.saturating_sub(1);
+        }
+    }
+}
+
+/// RAII admission slot: dropping it releases the tenant's in-flight
+/// slot.
+#[derive(Debug)]
+pub struct TenantGuard {
+    admission: Arc<TenantAdmission>,
+    tenant: String,
+}
+
+impl Drop for TenantGuard {
+    fn drop(&mut self) {
+        self.admission.release(&self.tenant);
+    }
+}
+
+/// One registered model: a name, a cheap-to-clone client, and the
+/// owning [`Coordinator`] (taken out on shutdown/swap).
+pub struct ModelEntry {
+    name: String,
+    client: InferenceClient,
+    coord: Mutex<Option<Coordinator>>,
+}
+
+impl ModelEntry {
+    fn new(name: &str, coord: Coordinator) -> Self {
+        Self { name: name.to_string(), client: coord.client(), coord: Mutex::new(Some(coord)) }
+    }
+
+    /// The model id requests route by.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// The pool's client handle (shape contract included).
+    pub fn client(&self) -> &InferenceClient {
+        &self.client
+    }
+
+    /// Blocking inference through the model's pool.
+    pub fn infer(&self, x: Vec<f32>) -> Result<Vec<f32>> {
+        self.client.infer(x)
+    }
+
+    /// Live metrics of the model's pool (`None` once shut down).
+    pub fn metrics(&self) -> Option<MetricsSnapshot> {
+        self.coord.lock().unwrap().as_ref().map(Coordinator::metrics)
+    }
+
+    /// Drain and join the pool, returning its final snapshot (`None`
+    /// if it was already shut down).
+    fn shutdown(&self) -> Option<MetricsSnapshot> {
+        self.coord.lock().unwrap().take().map(Coordinator::shutdown)
+    }
+}
+
+/// Named serving pools behind one front-end, with hot add/swap/remove
+/// and shared per-tenant admission.
+pub struct ModelRegistry {
+    models: RwLock<HashMap<String, Arc<ModelEntry>>>,
+    admission: Arc<TenantAdmission>,
+}
+
+impl ModelRegistry {
+    /// New, empty registry under a tenant policy
+    /// (`TenantPolicy::default()` disables admission control).
+    pub fn new(policy: TenantPolicy) -> Self {
+        Self {
+            models: RwLock::new(HashMap::new()),
+            admission: Arc::new(TenantAdmission::new(policy)),
+        }
+    }
+
+    /// Register (or hot-swap) `name` to serve through `coord`. New
+    /// lookups see the new pool immediately; when a pool is replaced,
+    /// it is drained (in-flight requests complete) and its final
+    /// snapshot returned.
+    pub fn register(&self, name: &str, coord: Coordinator) -> Option<MetricsSnapshot> {
+        let entry = Arc::new(ModelEntry::new(name, coord));
+        let old = self.models.write().unwrap().insert(name.to_string(), entry);
+        old.and_then(|e| e.shutdown())
+    }
+
+    /// Register (or hot-swap) a model by starting a pool over a named
+    /// [`Backend`]; the registry name is [`ServeConfig::model`].
+    pub fn register_backend(
+        &self,
+        backend: Backend,
+        cfg: ServeConfig,
+    ) -> Result<Option<MetricsSnapshot>> {
+        let name = cfg.model.clone();
+        let coord = Coordinator::start_backend(backend, cfg)?;
+        Ok(self.register(&name, coord))
+    }
+
+    /// Look up a model by id.
+    pub fn get(&self, name: &str) -> Option<Arc<ModelEntry>> {
+        self.models.read().unwrap().get(name).cloned()
+    }
+
+    /// Registered model ids, sorted.
+    pub fn names(&self) -> Vec<String> {
+        let mut out: Vec<String> = self.models.read().unwrap().keys().cloned().collect();
+        out.sort();
+        out
+    }
+
+    /// Number of registered models.
+    pub fn len(&self) -> usize {
+        self.models.read().unwrap().len()
+    }
+
+    /// True when no model is registered.
+    pub fn is_empty(&self) -> bool {
+        self.models.read().unwrap().is_empty()
+    }
+
+    /// Unregister `name`, draining its pool; returns the final
+    /// snapshot if the model existed.
+    pub fn remove(&self, name: &str) -> Option<MetricsSnapshot> {
+        let old = self.models.write().unwrap().remove(name);
+        old.and_then(|e| e.shutdown())
+    }
+
+    /// Drain and join every pool, returning `(name, final snapshot)`
+    /// sorted by name. The registry is empty afterwards.
+    pub fn shutdown_all(&self) -> Vec<(String, MetricsSnapshot)> {
+        let entries: Vec<(String, Arc<ModelEntry>)> =
+            self.models.write().unwrap().drain().collect();
+        let mut out: Vec<(String, MetricsSnapshot)> = entries
+            .into_iter()
+            .filter_map(|(name, e)| e.shutdown().map(|s| (name, s)))
+            .collect();
+        out.sort_by(|a, b| a.0.cmp(&b.0));
+        out
+    }
+
+    /// The shared tenant admission state.
+    pub fn admission(&self) -> &Arc<TenantAdmission> {
+        &self.admission
+    }
+
+    /// Prometheus text exposition over every live model (per-model
+    /// counters, latency histogram, quantiles) plus per-tenant
+    /// admission counters.
+    pub fn prometheus(&self) -> String {
+        let entries: Vec<(String, MetricsSnapshot)> = {
+            let g = self.models.read().unwrap();
+            let mut v: Vec<(String, MetricsSnapshot)> = g
+                .iter()
+                .filter_map(|(name, e)| e.metrics().map(|m| (name.clone(), m)))
+                .collect();
+            v.sort_by(|a, b| a.0.cmp(&b.0));
+            v
+        };
+        let pairs: Vec<(&str, MetricsSnapshot)> =
+            entries.iter().map(|(n, s)| (n.as_str(), s.clone())).collect();
+        let mut out = metrics::prometheus_text(&pairs);
+        let tenants = self.admission.counters();
+        if !tenants.is_empty() {
+            let label = |t: &str| {
+                let esc = t.replace('\\', "\\\\").replace('"', "\\\"");
+                format!("tenant=\"{esc}\"")
+            };
+            out.push_str("# HELP scnn_tenant_admitted_total Requests admitted per tenant.\n");
+            out.push_str("# TYPE scnn_tenant_admitted_total counter\n");
+            for t in &tenants {
+                out.push_str(&format!(
+                    "scnn_tenant_admitted_total{{{}}} {}\n",
+                    label(&t.tenant),
+                    t.admitted
+                ));
+            }
+            out.push_str("# HELP scnn_tenant_shed_total Requests shed by tenant admission.\n");
+            out.push_str("# TYPE scnn_tenant_shed_total counter\n");
+            for t in &tenants {
+                out.push_str(&format!(
+                    "scnn_tenant_shed_total{{{}}} {}\n",
+                    label(&t.tenant),
+                    t.shed
+                ));
+            }
+            out.push_str("# HELP scnn_tenant_inflight_peak Peak concurrent requests per tenant.\n");
+            out.push_str("# TYPE scnn_tenant_inflight_peak gauge\n");
+            for t in &tenants {
+                out.push_str(&format!(
+                    "scnn_tenant_inflight_peak{{{}}} {}\n",
+                    label(&t.tenant),
+                    t.peak
+                ));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    use super::super::batcher::PoolConfig;
+    use super::super::executor::{ExecutorSpec, SyntheticExecutor};
+
+    const SPEC: ExecutorSpec = ExecutorSpec { image_len: 6, batch: 2, classes: 3 };
+
+    fn pool() -> Coordinator {
+        Coordinator::start_with(
+            SyntheticExecutor::factory(SPEC, Duration::ZERO),
+            PoolConfig::default(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn priority_wire_roundtrip_and_parse() {
+        for p in [Priority::High, Priority::Normal, Priority::Low] {
+            assert_eq!(Priority::from_u8(p.as_u8()), Some(p));
+            assert_eq!(Priority::parse(p.name()).unwrap(), p);
+        }
+        assert_eq!(Priority::from_u8(3), None);
+        assert!(Priority::parse("urgent").is_err());
+    }
+
+    #[test]
+    fn tenant_limits_scale_with_priority() {
+        let p = TenantPolicy { max_inflight: 4 };
+        assert_eq!(p.limit_for(Priority::High), 4);
+        assert_eq!(p.limit_for(Priority::Normal), 3);
+        assert_eq!(p.limit_for(Priority::Low), 2);
+        // A quota of one admits every priority (ceil never rounds to 0).
+        let one = TenantPolicy { max_inflight: 1 };
+        assert_eq!(one.limit_for(Priority::Low), 1);
+        // Zero disables admission control entirely.
+        let off = TenantPolicy::default();
+        assert_eq!(off.limit_for(Priority::High), usize::MAX);
+    }
+
+    #[test]
+    fn admission_sheds_low_priority_first_and_releases_on_drop() {
+        let adm = Arc::new(TenantAdmission::new(TenantPolicy { max_inflight: 4 }));
+        let g1 = adm.try_admit("acme", Priority::Low).unwrap();
+        let g2 = adm.try_admit("acme", Priority::Low).unwrap();
+        // Low hits its 1/2 bound at 2 in-flight; Normal and High still fit.
+        assert!(adm.try_admit("acme", Priority::Low).is_none());
+        let g3 = adm.try_admit("acme", Priority::Normal).unwrap();
+        assert!(adm.try_admit("acme", Priority::Normal).is_none());
+        let g4 = adm.try_admit("acme", Priority::High).unwrap();
+        assert!(adm.try_admit("acme", Priority::High).is_none());
+        // Another tenant is unaffected by acme's saturation.
+        let other = adm.try_admit("quiet", Priority::Low).unwrap();
+        drop(other);
+        // Releasing slots re-opens admission.
+        drop(g4);
+        assert!(adm.try_admit("acme", Priority::High).is_some());
+        drop((g1, g2, g3));
+        let c = adm.counters();
+        assert_eq!(c.len(), 2);
+        assert_eq!(c[0].tenant, "acme");
+        assert_eq!(c[0].shed, 3);
+        assert_eq!(c[0].peak, 4);
+        assert_eq!(c[0].inflight, 1, "the re-admitted High guard is still alive");
+        assert_eq!(c[1].tenant, "quiet");
+        assert_eq!(c[1].shed, 0);
+    }
+
+    #[test]
+    fn registry_registers_routes_and_hot_swaps() {
+        let reg = ModelRegistry::new(TenantPolicy::default());
+        assert!(reg.is_empty());
+        assert!(reg.register("toy", pool()).is_none());
+        assert_eq!(reg.names(), vec!["toy".to_string()]);
+        let entry = reg.get("toy").expect("registered");
+        let logits = entry.infer(vec![0.5; SPEC.image_len]).unwrap();
+        assert_eq!(logits.len(), SPEC.classes);
+        assert!(reg.get("nope").is_none());
+        // Hot swap: the old pool's final snapshot records its traffic.
+        let old = reg.register("toy", pool()).expect("swap returns old snapshot");
+        assert_eq!(old.requests, 1);
+        // The swapped-in pool serves immediately.
+        let entry = reg.get("toy").unwrap();
+        assert_eq!(entry.infer(vec![0.25; SPEC.image_len]).unwrap().len(), SPEC.classes);
+        assert_eq!(reg.len(), 1);
+        let finals = reg.shutdown_all();
+        assert_eq!(finals.len(), 1);
+        assert_eq!(finals[0].1.requests, 1);
+        assert!(reg.is_empty());
+    }
+
+    #[test]
+    fn remove_drains_and_reports() {
+        let reg = ModelRegistry::new(TenantPolicy::default());
+        assert!(reg.register("a", pool()).is_none());
+        reg.get("a").unwrap().infer(vec![0.0; SPEC.image_len]).unwrap();
+        let snap = reg.remove("a").expect("existed");
+        assert_eq!(snap.requests, 1);
+        assert!(reg.remove("a").is_none());
+    }
+
+    #[test]
+    fn prometheus_covers_models_and_tenants() {
+        let reg = ModelRegistry::new(TenantPolicy { max_inflight: 1 });
+        assert!(reg.register("toy", pool()).is_none());
+        reg.get("toy").unwrap().infer(vec![0.1; SPEC.image_len]).unwrap();
+        let g = reg.admission().try_admit("acme", Priority::High).unwrap();
+        assert!(reg.admission().try_admit("acme", Priority::High).is_none());
+        drop(g);
+        let text = reg.prometheus();
+        assert!(text.contains("scnn_requests_total{model=\"toy\"} 1"), "{text}");
+        assert!(text.contains("scnn_tenant_admitted_total{tenant=\"acme\"} 1"), "{text}");
+        assert!(text.contains("scnn_tenant_shed_total{tenant=\"acme\"} 1"), "{text}");
+    }
+}

@@ -35,10 +35,12 @@
 //!   up per-layer ADP/energy (Fig 13, Table V).
 //! * [`runtime`] — PJRT client wrapper that loads the AOT-compiled JAX
 //!   artifacts (HLO text) and executes them from Rust.
-//! * [`coordinator`] — multi-worker inference pool: sharded request
-//!   queue, adaptive dynamic batcher with backpressure/load-shedding,
-//!   pluggable batch executors (PJRT or synthetic), aggregated
-//!   metrics.
+//! * [`coordinator`] — the serving layer: multi-worker inference pool
+//!   (sharded request queue, adaptive dynamic batcher with
+//!   backpressure/load-shedding, pluggable batch executors), a
+//!   multi-model registry with per-tenant admission control, latency
+//!   histograms with Prometheus exposition, and a std-only TCP
+//!   front-end speaking a length-prefixed binary protocol.
 //! * [`exp`] — one runner per paper table/figure (the benchmark harness).
 //!
 //! Layers 1–2 (Pallas kernel and the SC-friendly JAX model with

@@ -6,14 +6,23 @@
 //! scnn serve --model NAME [--workers N] [--clients N] [--requests N]
 //!            [--backend auto|pjrt|synthetic|sc|binary] [--batch N]
 //!            [--threads N] [--seed N] [--shed] [--artifacts DIR]
+//!            [--listen ADDR] [--models a,b|all] [--tenant-quota N]
+//!            [--duration SECS]
+//! scnn client --addr HOST:PORT [--model NAME] [--requests N]
+//!             [--tenant ID] [--priority high|normal|low] [--metrics]
 //! scnn info
 //! ```
 //!
 //! (The offline environment has no clap; arguments are parsed by hand.)
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
-use scnn::coordinator::{Backend, Coordinator, OverloadPolicy, ServeConfig};
+use scnn::coordinator::backend::MODEL_NAMES;
+use scnn::coordinator::{
+    Backend, Coordinator, ModelRegistry, NetClient, NetServer, OverloadPolicy, Priority,
+    ServeConfig, Status, TenantPolicy,
+};
 use scnn::data::{Dataset, Split, SynthCifar, SynthDigits};
 use scnn::exp;
 use scnn::runtime::{trainer::Knobs, Runtime, Trainer};
@@ -66,10 +75,11 @@ fn main() -> Result<()> {
         }
         "train" => cmd_train(&flags, &artifacts),
         "serve" => cmd_serve(&flags, &artifacts),
+        "client" => cmd_client(&flags),
         "info" => cmd_info(&artifacts),
         _ => {
             println!(
-                "usage: scnn <exp|train|serve|info> [...]\n\
+                "usage: scnn <exp|train|serve|client|info> [...]\n\
                  \n  exp <id>|all [--full] [--artifacts DIR] [--seed N]\n\
                  \n      ids: {}\n\
                  \n  train --model tnn|scnet10|scnet20 [--steps N] [--act-bsl B] [--res-bsl B]\n\
@@ -78,6 +88,10 @@ fn main() -> Result<()> {
                  \n        [--seed N] [--shed]\n\
                  \n        (--seed pins the sc/binary backends' deterministic model freeze;\n\
                  \n         --threads shards each sc-backend batch across N engine threads)\n\
+                 \n        [--listen ADDR] serve over TCP instead of an in-process loop:\n\
+                 \n        [--models a,b|all] [--tenant-quota N] [--duration SECS]\n\
+                 \n  client --addr HOST:PORT [--model NAME] [--requests N] [--tenant ID]\n\
+                 \n        [--priority high|normal|low] [--metrics]\n\
                  \n  info   print runtime/artifact status",
                 exp::ALL_IDS.join(" ")
             );
@@ -139,23 +153,17 @@ fn cmd_train(flags: &HashMap<String, String>, artifacts: &str) -> Result<()> {
     Ok(())
 }
 
-fn cmd_serve(flags: &HashMap<String, String>, artifacts: &str) -> Result<()> {
-    let model = flags.get("model").cloned().unwrap_or_else(|| "scnet10".into());
-    let requests: usize = flags.get("requests").and_then(|s| s.parse().ok()).unwrap_or(512);
-    let steps: usize = flags.get("steps").and_then(|s| s.parse().ok()).unwrap_or(0);
+/// Build one model's [`ServeConfig`] from the shared serve flags.
+fn serve_cfg(flags: &HashMap<String, String>, artifacts: &str, model: &str) -> ServeConfig {
     let workers: usize = flags.get("workers").and_then(|s| s.parse().ok()).unwrap_or(1).max(1);
     let threads: usize = flags.get("threads").and_then(|s| s.parse().ok()).unwrap_or(1).max(1);
-    let clients: usize = flags.get("clients").and_then(|s| s.parse().ok()).unwrap_or(4).max(1);
     let seed: u64 = flags.get("seed").and_then(|s| s.parse().ok()).unwrap_or(42);
-    let backend = Backend::parse(flags.get("backend").map(String::as_str).unwrap_or("auto"))?;
-    let knobs = knobs_from_flags(flags);
-    let data = dataset_for(&model);
     let mut policy = scnn::coordinator::BatchPolicy::default();
     if flags.contains_key("shed") {
         policy.overload = OverloadPolicy::Shed;
     }
-    let mut cfg = ServeConfig::new(artifacts, &model);
-    cfg.knobs = knobs;
+    let mut cfg = ServeConfig::new(artifacts, model);
+    cfg.knobs = knobs_from_flags(flags);
     cfg.workers = workers;
     cfg.threads = threads;
     cfg.policy = policy;
@@ -163,6 +171,21 @@ fn cmd_serve(flags: &HashMap<String, String>, artifacts: &str) -> Result<()> {
     if let Some(b) = flags.get("batch").and_then(|s| s.parse().ok()) {
         cfg.batch = b;
     }
+    cfg
+}
+
+fn cmd_serve(flags: &HashMap<String, String>, artifacts: &str) -> Result<()> {
+    if let Some(listen) = flags.get("listen") {
+        return cmd_serve_net(flags, artifacts, listen);
+    }
+    let model = flags.get("model").cloned().unwrap_or_else(|| "scnet10".into());
+    let requests: usize = flags.get("requests").and_then(|s| s.parse().ok()).unwrap_or(512);
+    let steps: usize = flags.get("steps").and_then(|s| s.parse().ok()).unwrap_or(0);
+    let clients: usize = flags.get("clients").and_then(|s| s.parse().ok()).unwrap_or(4).max(1);
+    let backend = Backend::parse(flags.get("backend").map(String::as_str).unwrap_or("auto"))?;
+    let data = dataset_for(&model);
+    let mut cfg = serve_cfg(flags, artifacts, &model);
+    let (workers, threads, knobs) = (cfg.workers, cfg.threads, cfg.knobs);
     let resolved = backend.resolve(artifacts, &model);
     println!("backend: {resolved}");
     if resolved == Backend::Pjrt && steps > 0 {
@@ -227,6 +250,101 @@ fn cmd_serve(flags: &HashMap<String, String>, artifacts: &str) -> Result<()> {
             w.worker, w.requests, w.batches, w.errors
         );
     }
+    Ok(())
+}
+
+/// `scnn serve --listen ADDR`: the TCP front-end over a multi-model
+/// registry, serving until `--duration SECS` elapses (forever when
+/// the flag is absent).
+fn cmd_serve_net(flags: &HashMap<String, String>, artifacts: &str, listen: &str) -> Result<()> {
+    let models: Vec<String> = match flags.get("models").map(String::as_str) {
+        Some("all") => MODEL_NAMES.iter().map(|s| s.to_string()).collect(),
+        Some(list) => {
+            list.split(',').map(str::trim).filter(|s| !s.is_empty()).map(String::from).collect()
+        }
+        None => vec![flags.get("model").cloned().unwrap_or_else(|| "scnet10".into())],
+    };
+    anyhow::ensure!(!models.is_empty(), "--models expanded to an empty list");
+    let quota: usize = flags.get("tenant-quota").and_then(|s| s.parse().ok()).unwrap_or(0);
+    let backend = Backend::parse(flags.get("backend").map(String::as_str).unwrap_or("auto"))?;
+    let registry = Arc::new(ModelRegistry::new(TenantPolicy { max_inflight: quota }));
+    for name in &models {
+        let cfg = serve_cfg(flags, artifacts, name);
+        let resolved = backend.resolve(artifacts, name);
+        println!("model {name}: backend {resolved}");
+        let _ = registry.register_backend(resolved, cfg)?;
+    }
+    let server = NetServer::bind(listen, registry.clone())?;
+    println!(
+        "listening on {} ({} models: {}; tenant quota {})",
+        server.local_addr(),
+        registry.len(),
+        registry.names().join(", "),
+        if quota == 0 { "off".to_string() } else { quota.to_string() }
+    );
+    match flags.get("duration").and_then(|s| s.parse::<f64>().ok()) {
+        Some(secs) => std::thread::sleep(std::time::Duration::from_secs_f64(secs)),
+        None => loop {
+            std::thread::park();
+        },
+    }
+    server.shutdown();
+    for (name, m) in registry.shutdown_all() {
+        println!(
+            "{name}: {} requests in {} batches, p50 {:?} p99 {:?}, shed {}",
+            m.requests, m.batches, m.p50, m.p99, m.shed
+        );
+    }
+    Ok(())
+}
+
+/// `scnn client`: smoke traffic (or a metrics scrape) against a
+/// running `scnn serve --listen` front-end.
+fn cmd_client(flags: &HashMap<String, String>) -> Result<()> {
+    let addr = flags
+        .get("addr")
+        .ok_or_else(|| anyhow::anyhow!("client requires --addr HOST:PORT"))?;
+    let model = flags.get("model").cloned().unwrap_or_else(|| "scnet10".into());
+    let requests: usize = flags.get("requests").and_then(|s| s.parse().ok()).unwrap_or(16);
+    let tenant = flags.get("tenant").cloned().unwrap_or_else(|| "default".into());
+    let priority = Priority::parse(flags.get("priority").map(String::as_str).unwrap_or("normal"))?;
+    let mut client =
+        NetClient::connect(addr.as_str())?.with_tenant(&tenant).with_priority(priority);
+    if flags.contains_key("metrics") {
+        print!("{}", client.metrics_text()?);
+        return Ok(());
+    }
+    let data = dataset_for(&model);
+    let (mut ok, mut shed, mut hits) = (0usize, 0usize, 0usize);
+    let t0 = std::time::Instant::now();
+    for i in 0..requests {
+        let (x, y) = data.sample(Split::Test, i);
+        let resp = client.request(&model, &x.into_vec())?;
+        match resp.status {
+            Status::Ok => {
+                ok += 1;
+                let pred = resp
+                    .logits
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.total_cmp(b.1))
+                    .map(|(i, _)| i)
+                    .unwrap_or(0);
+                if pred == y {
+                    hits += 1;
+                }
+            }
+            Status::Shed => shed += 1,
+            s => anyhow::bail!("server rejected request ({s:?}): {}", resp.message),
+        }
+    }
+    let dt = t0.elapsed();
+    println!(
+        "{ok}/{requests} ok ({shed} shed) in {:.2}s -> {:.0} req/s; accuracy {:.4}",
+        dt.as_secs_f64(),
+        requests as f64 / dt.as_secs_f64().max(1e-9),
+        hits as f64 / ok.max(1) as f64
+    );
     Ok(())
 }
 
