@@ -5,7 +5,8 @@
 //!
 //! With `BENCH_JSON=<path>` (what `make bench-json` sets) sorter
 //! throughput is also written as machine-readable JSON — in Mbit/s per
-//! width — so sorter-level wins are tracked separately from the
+//! width, plus a scalar-vs-SIMD series for the raw packed-word kernels
+//! (`bitvec/*`) — so sorter-level wins are tracked separately from the
 //! end-to-end serving wins in `BENCH_sc.json`. `BENCH_QUICK=1` runs a
 //! reduced configuration for CI.
 
@@ -13,10 +14,54 @@ use scnn::accel;
 use scnn::circuits::Bsn;
 use scnn::coding::BitVec;
 use scnn::util::bench::{Bench, JsonReport};
+use scnn::util::simd::Dispatch;
 use scnn::util::Rng;
 
 fn quick() -> bool {
     std::env::var("BENCH_QUICK").is_ok_and(|v| v != "0")
+}
+
+/// The raw packed-word kernels behind every `BitVec` bulk op, scalar
+/// arm vs the dispatched table, in Mbit/s over a buffer the size of a
+/// big BSN stream. Fixed `_scalar`/`_simd` entry names keep the JSON
+/// series machine-comparable; equality of results is asserted inline.
+fn bitvec_kernels(report: &mut JsonReport, b: &Bench, rng: &mut Rng) {
+    let level = Dispatch::active().level().name();
+    let sc = Dispatch::scalar();
+    let act = Dispatch::active();
+    println!("\n== BitVec word kernels scalar vs SIMD (dispatched level: {level}) ==");
+    let words = if quick() { 1usize << 10 } else { 1 << 14 };
+    let bits = (words * 64) as u64;
+    let a: Vec<u64> = (0..words).map(|_| rng.next_u64()).collect();
+    let c: Vec<u64> = (0..words).map(|_| rng.next_u64()).collect();
+    let mut dst = vec![0u64; words];
+    assert_eq!(act.popcount(&a), sc.popcount(&a));
+    assert_eq!(act.count_and(&a, &c), sc.count_and(&a, &c));
+    for (arm, d) in [("scalar", sc), ("simd", act)] {
+        let mp = b.run(&format!("bsn/bitvec/popcount_{arm}"), bits, || d.popcount(&a));
+        let mc = b.run(&format!("bsn/bitvec/count_and_{arm}"), bits, || d.count_and(&a, &c));
+        let ma = b.run(&format!("bsn/bitvec/and_{arm}"), bits, || {
+            dst.copy_from_slice(&a);
+            d.and_words(&mut dst, &c);
+            dst[0]
+        });
+        let mf = b.run(&format!("bsn/bitvec/funnel_shr_{arm}"), bits, || {
+            d.funnel_shr(&a, 17, &mut dst);
+            dst[0]
+        });
+        let measures = [("popcount", mp), ("count_and", mc), ("and", ma), ("funnel_shr", mf)];
+        for (kernel, m) in measures {
+            report.add_scalar(
+                &format!("bitvec/{kernel}_{arm}/throughput"),
+                bits as f64 / m.median_s.max(1e-12) / 1e6,
+                "Mbit/s",
+            );
+        }
+    }
+    act.funnel_shr(&a, 17, &mut dst);
+    let mut want = vec![0u64; words];
+    sc.funnel_shr(&a, 17, &mut want);
+    assert_eq!(dst, want, "funnel_shr arms diverged");
 }
 
 fn main() {
@@ -44,6 +89,8 @@ fn main() {
             "Mbit/s",
         );
     }
+
+    bitvec_kernels(&mut report, &b, &mut rng);
 
     println!("\n== functional accumulate (count domain) ==");
     for width in [4608usize, 9216] {

@@ -26,6 +26,7 @@ use scnn::nn::quant::QuantConfig;
 use scnn::nn::sc_engine::ScEngine;
 use scnn::nn::sc_exec::{Prepared, ScExecutor};
 use scnn::util::bench::{Bench, JsonReport};
+use scnn::util::simd::Dispatch;
 use scnn::util::Rng;
 
 fn quick() -> bool {
@@ -75,6 +76,61 @@ fn gemm_vs_naive(report: &mut JsonReport) {
         report.add_scalar(&format!("gemm/ternary/{label}_speedup"), st, "x");
         report.add_scalar(&format!("gemm/dense/{label}_speedup"), sd, "x");
     }
+}
+
+/// The same packed kernels with the SIMD arm pinned off vs the
+/// dispatched table — the MACs/s step the `util::simd` microkernels
+/// buy on this machine. Entry names are fixed (`_scalar` / `_simd`) so
+/// the JSON series stays machine-comparable; the dispatched level is
+/// printed alongside. Outputs are asserted identical, which is the
+/// whole point of exact i64 counts.
+fn gemm_simd_vs_scalar(report: &mut JsonReport) {
+    let b = if quick() { Bench::quick() } else { Bench::default() };
+    let level = Dispatch::active().level().name();
+    let sc = Dispatch::scalar();
+    println!("\n== packed GEMM scalar vs SIMD (dispatched level: {level}) ==");
+    for (label, rows, k, n) in
+        [("tnn_l2", 16usize, 72usize, 49usize), ("scnet_rb2", 32, 288, 256), ("ragged", 13, 37, 19)]
+    {
+        let mut rng = Rng::new(0x51D + rows as u64);
+        let w: Vec<i8> = (0..rows * k).map(|_| rng.gen_range_i64(-1, 1) as i8).collect();
+        let cols: Vec<i32> = (0..n * k).map(|_| rng.gen_range_i64(-8, 9) as i32).collect();
+        let macs = (rows * k * n) as u64;
+        let ternary = TernaryPanel::pack(&w, rows, k);
+        let dense = I8Panel::pack(&w, rows, k);
+        let mut out = vec![0i64; rows * n];
+        let mts = b.run(&format!("sc_serve/gemm/ternary_scalar/{label}"), macs, || {
+            ternary.gemm_into_with(sc, &cols, n, &mut out);
+            out[0]
+        });
+        let expect = out.clone();
+        let mtv = b.run(&format!("sc_serve/gemm/ternary_simd/{label}"), macs, || {
+            ternary.gemm_into(&cols, n, &mut out);
+            out[0]
+        });
+        assert_eq!(out, expect, "{label}: SIMD ternary kernel diverged from scalar");
+        let mds = b.run(&format!("sc_serve/gemm/dense_scalar/{label}"), macs, || {
+            dense.gemm_into_with(sc, &cols, n, &mut out);
+            out[0]
+        });
+        let expect = out.clone();
+        let mdv = b.run(&format!("sc_serve/gemm/dense_simd/{label}"), macs, || {
+            dense.gemm_into(&cols, n, &mut out);
+            out[0]
+        });
+        assert_eq!(out, expect, "{label}: SIMD dense kernel diverged from scalar");
+        report.add(&format!("gemm/ternary_scalar/{label}"), &mts, macs);
+        report.add(&format!("gemm/ternary_simd/{label}"), &mtv, macs);
+        report.add(&format!("gemm/dense_scalar/{label}"), &mds, macs);
+        report.add(&format!("gemm/dense_simd/{label}"), &mdv, macs);
+        let st = mts.median_s / mtv.median_s.max(1e-12);
+        let sd = mds.median_s / mdv.median_s.max(1e-12);
+        println!("   -> {label}: ternary {st:.2}x, dense {sd:.2}x ({level} over scalar)");
+        report.add_scalar(&format!("gemm/simd/{label}_ternary_speedup"), st, "x");
+        report.add_scalar(&format!("gemm/simd/{label}_dense_speedup"), sd, "x");
+    }
+    let is_scalar = if level == "scalar" { 1.0 } else { 0.0 };
+    report.add_scalar("gemm/simd/level_is_scalar", is_scalar, "bool");
 }
 
 /// Engine throughput at N intra-engine threads (imgs/s on a fixed
@@ -230,6 +286,7 @@ fn pool_sweep_sc(report: &mut JsonReport) {
 fn main() {
     let mut report = JsonReport::new("sc_serve");
     gemm_vs_naive(&mut report);
+    gemm_simd_vs_scalar(&mut report);
     engine_vs_executor(&mut report);
     engine_threads_sweep(&mut report);
     pool_sweep_sc(&mut report);

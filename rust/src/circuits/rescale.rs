@@ -82,14 +82,14 @@ impl RescaleBlock {
         assert_eq!(self.bsl, 16, "the paper's divider pads 8 bits; BSL must be 16");
         assert_eq!(code.bsl(), 16);
         // Select every other bit (even lanes of the sorted stream keep
-        // ceil(count/2) ones) with a SWAR even-bit compress of the one
-        // 16-lane word, then append the pad pattern as a constant:
-        // DIV_PAD = "11110000" occupies lanes 8..11 -> 0x0f00.
+        // ceil(count/2) ones) with the dispatched even-bit compress
+        // (SWAR scalar, `pext` on BMI2 hardware) of the one 16-lane
+        // word — bits past lane 15 are zero by the tail invariant, so
+        // the 64-lane compress reduces to the 16-lane one — then append
+        // the pad pattern as a constant: DIV_PAD = "11110000" occupies
+        // lanes 8..11 -> 0x0f00.
         let w = code.bits().as_words()[0];
-        let mut x = w & 0x5555;
-        x = (x ^ (x >> 1)) & 0x3333;
-        x = (x ^ (x >> 2)) & 0x0f0f;
-        x = (x ^ (x >> 4)) & 0x00ff;
+        let x = crate::util::simd::Dispatch::active().compress_even(w);
         let bits = out.bits_mut();
         bits.reset(16);
         bits.as_mut_words()[0] = x | 0x0f00;

@@ -202,6 +202,25 @@ impl SelectiveInterconnect {
         }
     }
 
+    /// Fused tap + popcount: the number of 1s
+    /// [`SelectiveInterconnect::apply_bits`] would produce, without
+    /// assembling the output vector. The fault path only needs the
+    /// tapped *count* (it re-encodes from it), so this drops the whole
+    /// temp-buffer write/read pass — the same fusion
+    /// [`crate::coding::BitVec::count_and`] provides for word-aligned
+    /// AND+popcount taps.
+    pub fn apply_bits_count(&self, sorted: &BitVec) -> usize {
+        assert_eq!(sorted.len(), self.in_width);
+        self.taps
+            .iter()
+            .filter(|t| match t {
+                SelTap::Zero => false,
+                SelTap::One => true,
+                SelTap::Bit(p) => sorted.get(*p),
+            })
+            .count()
+    }
+
     /// The full count-transfer table `count ↦ apply_count(count)` for
     /// `count ∈ 0..=in_width` — what a serving engine precomputes once
     /// per channel so the steady-state inner loop is a single indexed
@@ -351,6 +370,8 @@ mod tests {
             let sorted = ThermCode::from_count(c, 24);
             si.apply_bits_into(sorted.bits(), &mut out);
             assert_eq!(out, si.apply_bits(sorted.bits()));
+            // Fused tap+count path agrees with the materialized one.
+            assert_eq!(si.apply_bits_count(sorted.bits()), out.popcount());
         }
     }
 

@@ -21,6 +21,8 @@ pub mod thermometer;
 pub use ternary::{Ternary, TernaryCode};
 pub use thermometer::ThermCode;
 
+use crate::util::simd::Dispatch;
+
 /// A plain bit vector, LSB-first in push order. Thermometer streams store
 /// their 1s at the *front* (low indices) per the paper's convention.
 ///
@@ -31,7 +33,10 @@ pub use thermometer::ThermCode;
 /// thermometer ones-prefix fill — runs word-at-a-time, which is what
 /// lets the gate-level circuit stages in `crate::circuits` evaluate ~64
 /// lanes per instruction without ever transposing to a byte-per-bit
-/// form.
+/// form. The word loops themselves route through the runtime-dispatched
+/// SIMD table ([`crate::util::simd::Dispatch`]): AVX2/NEON when the CPU
+/// has them, the bit-identical scalar kernels otherwise (or always,
+/// under `SCNN_NO_SIMD=1`).
 ///
 /// Invariants maintained by every method:
 /// * `words.len() == len.div_ceil(64)`;
@@ -138,9 +143,33 @@ impl BitVec {
         self.words[i / 64] ^= 1 << (i % 64);
     }
 
-    /// Number of 1s — one `popcnt` per 64 lanes.
+    /// Number of 1s — SIMD-dispatched, at worst one `popcnt` per 64
+    /// lanes.
     pub fn popcount(&self) -> usize {
-        self.words.iter().map(|w| w.count_ones() as usize).sum()
+        debug_assert!(self.tail_is_zero(), "BitVec: stale bits past len in the last word");
+        Dispatch::active().popcount(&self.words) as usize
+    }
+
+    /// Number of positions where both this vector and `other` hold a 1
+    /// — a fused AND + popcount in one pass over the words, with no
+    /// materialized intermediate vector (the SI/count-tap hot path).
+    pub fn count_and(&self, other: &BitVec) -> usize {
+        assert_eq!(self.len, other.len, "count_and: length mismatch");
+        debug_assert!(self.tail_is_zero(), "BitVec: stale bits past len in the last word");
+        debug_assert!(other.tail_is_zero(), "BitVec: stale bits past len in the last word");
+        Dispatch::active().count_and(&self.words, &other.words) as usize
+    }
+
+    /// True when every bit past [`BitVec::len`] in the last storage
+    /// word is zero — the invariant each mutating method restores, and
+    /// the one [`BitVec::as_mut_words`] callers must uphold. Word-level
+    /// consumers (`popcount`, `count_and`, `extend_from`,
+    /// `complement_reversed_from`) `debug_assert!` it.
+    pub fn tail_is_zero(&self) -> bool {
+        match self.words.last() {
+            Some(&last) => last & !Self::tail_mask(self.len) == 0,
+            None => true,
+        }
     }
 
     /// Borrow the packed storage words (LSB-first lanes; bits past
@@ -151,7 +180,9 @@ impl BitVec {
 
     /// Mutably borrow the packed storage words. The caller must keep
     /// bits past [`BitVec::len`] in the last word zero — every other
-    /// method relies on that invariant.
+    /// method relies on that invariant, and the word-level consumers
+    /// `debug_assert!` [`BitVec::tail_is_zero`] (so a violation fails
+    /// fast in debug/test builds instead of corrupting counts).
     pub fn as_mut_words(&mut self) -> &mut [u64] {
         &mut self.words
     }
@@ -201,6 +232,7 @@ impl BitVec {
     /// are shifted into place (two shifts + two ORs per 64 bits), so
     /// stream concatenation ahead of the BSN never walks single bits.
     pub fn extend_from(&mut self, other: &BitVec) {
+        debug_assert!(other.tail_is_zero(), "BitVec: stale bits past len in the last word");
         if other.len == 0 {
             return;
         }
@@ -245,11 +277,10 @@ impl BitVec {
         if off == 0 {
             self.words.copy_from_slice(&src.words[sw..sw + nw]);
         } else {
-            for k in 0..nw {
-                let lo = src.words[sw + k] >> off;
-                let hi = src.words.get(sw + k + 1).copied().unwrap_or(0) << (64 - off);
-                self.words[k] = lo | hi;
-            }
+            // `src.words[sw..]` always holds at least `nw` words: the
+            // range check above gives sw*64 + off + len <= src words'
+            // bit span, and off >= 1.
+            Dispatch::active().funnel_shr(&src.words[sw..], off as u32, &mut self.words);
         }
         self.mask_tail();
     }
@@ -276,6 +307,7 @@ impl BitVec {
     /// `reverse_bits` + funnel shift + NOT per word instead of a
     /// per-bit scan.
     pub fn complement_reversed_from(&mut self, src: &BitVec) {
+        debug_assert!(src.tail_is_zero(), "BitVec: stale bits past len in the last word");
         let l = src.len;
         self.reset(l);
         if l == 0 {
@@ -302,25 +334,19 @@ impl BitVec {
     /// In-place bitwise AND with an equal-length vector.
     pub fn and_with(&mut self, other: &BitVec) {
         assert_eq!(self.len, other.len, "and_with: length mismatch");
-        for (a, b) in self.words.iter_mut().zip(&other.words) {
-            *a &= b;
-        }
+        Dispatch::active().and_words(&mut self.words, &other.words);
     }
 
     /// In-place bitwise OR with an equal-length vector.
     pub fn or_with(&mut self, other: &BitVec) {
         assert_eq!(self.len, other.len, "or_with: length mismatch");
-        for (a, b) in self.words.iter_mut().zip(&other.words) {
-            *a |= b;
-        }
+        Dispatch::active().or_words(&mut self.words, &other.words);
     }
 
     /// In-place bitwise XOR with an equal-length vector.
     pub fn xor_with(&mut self, other: &BitVec) {
         assert_eq!(self.len, other.len, "xor_with: length mismatch");
-        for (a, b) in self.words.iter_mut().zip(&other.words) {
-            *a ^= b;
-        }
+        Dispatch::active().xor_words(&mut self.words, &other.words);
     }
 
     /// In-place bitwise NOT over all `len` lanes.
@@ -485,6 +511,8 @@ mod tests {
         x.not_inplace();
         assert_eq!(x.to_str01(), "010110");
         assert_eq!(x.popcount(), 3);
+        // Fused AND+popcount agrees with the two-step path.
+        assert_eq!(a0.count_and(&b0), a.popcount());
     }
 
     #[test]

@@ -35,10 +35,21 @@
 //! shard output blocks freely and still produce **bit-identical**
 //! logits (asserted in `rust/tests/gemm.rs`).
 //!
+//! Both panel kernels route their inner dots through the
+//! runtime-dispatched SIMD table ([`Dispatch`]): the dense microkernel
+//! becomes a widened 8-lane AVX2 multiply-accumulate and the ternary
+//! index lists a gathered accumulate, while `SCNN_NO_SIMD=1` (or the
+//! `_with` variants taking [`Dispatch::scalar`]) pins the original
+//! scalar loops. Exact i64 accumulation makes every arm bit-identical
+//! — `ScEngine`, `ScExecutor`, `BinaryExecutor` and the classifier
+//! arms inherit the vector paths with zero call-site changes.
+//!
 //! [`gemm_naive`] is the reference triple loop the packed kernels are
 //! property-tested against; `rust/benches/sc_serve.rs` tracks the
 //! packed-vs-naive ratio in `BENCH_sc.json` (DESIGN.md §Perf,
 //! "Ternary GEMM + threading").
+
+use crate::util::simd::Dispatch;
 
 /// Output-channel block width of the cache-blocked kernels. Eight i64
 /// accumulator lanes per activation-row pass: small enough to live in
@@ -142,37 +153,39 @@ impl TernaryPanel {
     }
 
     /// Dot of row `r` with one im2col row (`k` i32 codes): adds and
-    /// subtracts only, zero weights never touched.
+    /// subtracts only, zero weights never touched — a gathered
+    /// accumulate on the SIMD arms.
     #[inline]
     pub fn row_dot(&self, r: usize, x: &[i32]) -> i64 {
-        debug_assert_eq!(x.len(), self.k);
+        self.row_dot_with(Dispatch::active(), r, x)
+    }
+
+    /// [`TernaryPanel::row_dot`] through an explicit kernel table —
+    /// [`Dispatch::scalar`] pins the reference arm (benches, property
+    /// tests); the active table is what [`TernaryPanel::row_dot`] uses.
+    #[inline]
+    pub fn row_dot_with(&self, d: &Dispatch, r: usize, x: &[i32]) -> i64 {
+        assert_eq!(x.len(), self.k, "TernaryPanel::row_dot: activation row width");
         let (plus, minus) = self.row_lists(r);
-        let mut pos = 0i64;
-        for &i in plus {
-            pos += x[i as usize] as i64;
-        }
-        let mut neg = 0i64;
-        for &i in minus {
-            neg += x[i as usize] as i64;
-        }
-        pos - neg
+        // SAFETY: pack() stores only column indices < k, and x.len()
+        // == k was just asserted, so every gathered index is in bounds.
+        unsafe { d.gather_sub_i32(plus, minus, x) }
     }
 
     /// [`TernaryPanel::row_dot`] over `i64` inputs — the classifier
     /// path, where the GAP accumulator is already 64-bit.
     #[inline]
     pub fn row_dot_i64(&self, r: usize, x: &[i64]) -> i64 {
-        debug_assert_eq!(x.len(), self.k);
+        self.row_dot_i64_with(Dispatch::active(), r, x)
+    }
+
+    /// [`TernaryPanel::row_dot_i64`] through an explicit kernel table.
+    #[inline]
+    pub fn row_dot_i64_with(&self, d: &Dispatch, r: usize, x: &[i64]) -> i64 {
+        assert_eq!(x.len(), self.k, "TernaryPanel::row_dot_i64: activation row width");
         let (plus, minus) = self.row_lists(r);
-        let mut pos = 0i64;
-        for &i in plus {
-            pos += x[i as usize];
-        }
-        let mut neg = 0i64;
-        for &i in minus {
-            neg += x[i as usize];
-        }
-        pos - neg
+        // SAFETY: pack() stores only column indices < k == x.len().
+        unsafe { d.gather_sub_i64(plus, minus, x) }
     }
 
     /// Cache-blocked GEMM: `out[r·n + p] = row_dot(r, cols row p)`.
@@ -184,12 +197,31 @@ impl TernaryPanel {
         self.gemm_rows_into(0, self.rows, cols, n, out);
     }
 
+    /// [`TernaryPanel::gemm_into`] through an explicit kernel table.
+    pub fn gemm_into_with(&self, d: &Dispatch, cols: &[i32], n: usize, out: &mut [i64]) {
+        self.gemm_rows_into_with(d, 0, self.rows, cols, n, out);
+    }
+
     /// [`TernaryPanel::gemm_into`] restricted to weight rows
     /// `r0..r1`, writing into a `(r1−r0) × n` chunk — the work unit of
     /// the engine's output-channel-block sharding (each thread owns a
     /// disjoint row range, so the full result is assembled without
     /// synchronization and stays bit-identical to the full-panel call).
     pub fn gemm_rows_into(&self, r0: usize, r1: usize, cols: &[i32], n: usize, out: &mut [i64]) {
+        self.gemm_rows_into_with(Dispatch::active(), r0, r1, cols, n, out);
+    }
+
+    /// [`TernaryPanel::gemm_rows_into`] through an explicit kernel
+    /// table.
+    pub fn gemm_rows_into_with(
+        &self,
+        d: &Dispatch,
+        r0: usize,
+        r1: usize,
+        cols: &[i32],
+        n: usize,
+        out: &mut [i64],
+    ) {
         assert!(r0 <= r1 && r1 <= self.rows, "TernaryPanel::gemm_rows_into: row range");
         assert_eq!(cols.len(), n * self.k, "TernaryPanel::gemm_rows_into: cols size mismatch");
         assert_eq!(out.len(), (r1 - r0) * n, "TernaryPanel::gemm_rows_into: out size mismatch");
@@ -201,7 +233,7 @@ impl TernaryPanel {
             let b1 = (b0 + BLOCK_CO).min(r1);
             for (p, x) in cols.chunks_exact(self.k).enumerate() {
                 for r in b0..b1 {
-                    out[(r - r0) * n + p] = self.row_dot(r, x);
+                    out[(r - r0) * n + p] = self.row_dot_with(d, r, x);
                 }
             }
         }
@@ -242,18 +274,24 @@ impl I8Panel {
         &self.data[r * self.k..(r + 1) * self.k]
     }
 
-    /// Dot of row `r` with one activation row.
+    /// Dot of row `r` with one activation row — the widened
+    /// multiply-accumulate kernel on the SIMD arms.
     #[inline]
     pub fn row_dot(&self, r: usize, x: &[i32]) -> i64 {
-        debug_assert_eq!(x.len(), self.k);
-        let mut s = 0i64;
-        for (&xv, &wv) in x.iter().zip(self.row(r)) {
-            s += xv as i64 * wv as i64;
-        }
-        s
+        self.row_dot_with(Dispatch::active(), r, x)
     }
 
-    /// [`I8Panel::row_dot`] over `i64` inputs (classifier path).
+    /// [`I8Panel::row_dot`] through an explicit kernel table.
+    #[inline]
+    pub fn row_dot_with(&self, d: &Dispatch, r: usize, x: &[i32]) -> i64 {
+        assert_eq!(x.len(), self.k, "I8Panel::row_dot: activation row width");
+        d.i8_dot(self.row(r), x)
+    }
+
+    /// [`I8Panel::row_dot`] over `i64` inputs (classifier path). Stays
+    /// on the scalar loop: the classifier calls it once per class per
+    /// image, far off the hot path, and an i64×i64 lane product has no
+    /// AVX2 win.
     #[inline]
     pub fn row_dot_i64(&self, r: usize, x: &[i64]) -> i64 {
         debug_assert_eq!(x.len(), self.k);
@@ -271,6 +309,11 @@ impl I8Panel {
     /// walked flat (channel blocking buys nothing here; it belongs to
     /// the ternary kernel's gather pattern).
     pub fn gemm_into(&self, cols: &[i32], n: usize, out: &mut [i64]) {
+        self.gemm_into_with(Dispatch::active(), cols, n, out);
+    }
+
+    /// [`I8Panel::gemm_into`] through an explicit kernel table.
+    pub fn gemm_into_with(&self, d: &Dispatch, cols: &[i32], n: usize, out: &mut [i64]) {
         assert_eq!(cols.len(), n * self.k, "I8Panel::gemm_into: cols size mismatch");
         assert_eq!(out.len(), self.rows * n, "I8Panel::gemm_into: out size mismatch");
         let k = self.k;
@@ -278,30 +321,22 @@ impl I8Panel {
             let wrow = self.row(r);
             let orow = &mut out[r * n..(r + 1) * n];
             let mut p = 0usize;
-            // Microkernel: 4 pixel columns per pass, one weight load
-            // feeding 4 accumulators.
+            // Microkernel: 4 pixel columns per pass, one (widened)
+            // weight load feeding 4 accumulators.
             while p + 4 <= n {
-                let x0 = &cols[p * k..(p + 1) * k];
-                let x1 = &cols[(p + 1) * k..(p + 2) * k];
-                let x2 = &cols[(p + 2) * k..(p + 3) * k];
-                let x3 = &cols[(p + 3) * k..(p + 4) * k];
-                let (mut a0, mut a1, mut a2, mut a3) = (0i64, 0i64, 0i64, 0i64);
-                for i in 0..k {
-                    let w = wrow[i] as i64;
-                    a0 += x0[i] as i64 * w;
-                    a1 += x1[i] as i64 * w;
-                    a2 += x2[i] as i64 * w;
-                    a3 += x3[i] as i64 * w;
-                }
-                orow[p] = a0;
-                orow[p + 1] = a1;
-                orow[p + 2] = a2;
-                orow[p + 3] = a3;
+                let x = [
+                    &cols[p * k..(p + 1) * k],
+                    &cols[(p + 1) * k..(p + 2) * k],
+                    &cols[(p + 2) * k..(p + 3) * k],
+                    &cols[(p + 3) * k..(p + 4) * k],
+                ];
+                let acc = d.i8_dot4(wrow, x);
+                orow[p..p + 4].copy_from_slice(&acc);
                 p += 4;
             }
             // Ragged edge narrower than the microkernel.
             while p < n {
-                orow[p] = self.row_dot(r, &cols[p * k..(p + 1) * k]);
+                orow[p] = self.row_dot_with(d, r, &cols[p * k..(p + 1) * k]);
                 p += 1;
             }
         }

@@ -22,7 +22,7 @@ use std::sync::Arc;
 use crate::circuits::multiplier::TernaryMultiplier;
 use crate::circuits::rescale::RescaleBlock;
 use crate::circuits::si::{ActivationFn, SelectiveInterconnect};
-use crate::coding::{BitVec, Ternary, ThermCode};
+use crate::coding::{Ternary, ThermCode};
 use crate::util::Rng;
 use super::gemm::WeightPanels;
 use super::layers::{im2col_i32_into, ConvShape};
@@ -492,14 +492,14 @@ pub fn flip_bits(code: &mut ThermCode, ber: f64, rng: &mut Rng) {
 }
 
 /// Reusable bitstream work area for the fault-injection path: the
-/// encoded activation, the multiplier product, the reconstructed sorted
-/// stream and the SI tap output. All packed [`BitVec`]s, reset in place
-/// each use.
+/// encoded activation, the multiplier product and the reconstructed
+/// sorted stream. All packed bit vectors, reset in place each use. (The
+/// SI tap output no longer needs a buffer — the fused
+/// [`SelectiveInterconnect::apply_bits_count`] counts taps directly.)
 struct FaultScratch {
     enc: ThermCode,
     prod: ThermCode,
     sorted: ThermCode,
-    tapped: BitVec,
 }
 
 impl FaultScratch {
@@ -508,14 +508,15 @@ impl FaultScratch {
             enc: ThermCode::from_count(0, 2),
             prod: ThermCode::from_count(0, 2),
             sorted: ThermCode::from_count(0, 2),
-            tapped: BitVec::zeros(0),
         }
     }
 }
 
 /// SI application on a fault-corrupted sorted stream: build the sorted
 /// code from the count, flip stream bits, then tap — all in the
-/// caller's scratch buffers.
+/// caller's scratch buffers. The tap + popcount is fused
+/// ([`SelectiveInterconnect::apply_bits_count`]), so no tap-output
+/// vector is ever materialized.
 fn apply_si_faulty(
     si: &SelectiveInterconnect,
     count: usize,
@@ -525,8 +526,7 @@ fn apply_si_faulty(
 ) -> usize {
     ThermCode::from_count_into(count.min(si.in_width()), si.in_width(), &mut scratch.sorted);
     flip_bits(&mut scratch.sorted, ber, rng);
-    si.apply_bits_into(scratch.sorted.bits(), &mut scratch.tapped);
-    scratch.tapped.popcount()
+    si.apply_bits_count(scratch.sorted.bits())
 }
 
 #[cfg(test)]

@@ -1,10 +1,12 @@
 //! In-tree utilities replacing crates unavailable in the offline build
 //! environment: a deterministic PRNG ([`rng`]), a micro-benchmark
-//! harness ([`bench`]) and a tiny property-testing helper ([`prop`]).
+//! harness ([`bench`]), a tiny property-testing helper ([`prop`]) and
+//! the runtime-dispatched SIMD kernel table ([`simd`]).
 
 pub mod bench;
 pub mod prop;
 pub mod rng;
+pub mod simd;
 
 pub use rng::Rng;
 

@@ -1,0 +1,992 @@
+//! Runtime-dispatched SIMD kernels for the two serving hot loops.
+//!
+//! PR 3 made the bit-level stages word-parallel and PR 4 turned
+//! accumulation into a cache-blocked integer GEMM, which leaves serving
+//! throughput dominated by two scalar-u64 loop families: the
+//! [`TernaryPanel`](crate::nn::gemm::TernaryPanel) /
+//! [`I8Panel`](crate::nn::gemm::I8Panel) row dots in `nn::gemm`, and
+//! the packed word ops of [`BitVec`](crate::coding::BitVec) (popcount,
+//! bitwise combination, funnel-shift range copy, the residual divider's
+//! even-bit compress). This module gives each of those kernels an
+//! explicit `std::arch` vector path — AVX2 on x86_64, NEON on aarch64 —
+//! behind a [`Dispatch`] table of plain `fn` pointers selected **once**
+//! at first use by runtime CPU-feature detection, with the portable
+//! scalar code kept as the always-available reference arm.
+//!
+//! Every vector kernel is **bit-identical** to its scalar twin: all
+//! accumulation here is exact integer arithmetic in i64 lanes, which is
+//! associative, so lane order cannot change a result the way float
+//! summation order would (`nn::gemm::dot_f32` deliberately stays
+//! scalar-sequential for exactly that reason). The equivalence is
+//! enforced by property tests pitting [`Dispatch::active`] against
+//! [`Dispatch::scalar`] over ragged lengths and non-word-aligned
+//! offsets (`rust/tests/packed_bitvec.rs`, `rust/tests/gemm.rs`), and
+//! CI runs the whole suite a second time with `SCNN_NO_SIMD=1` so the
+//! scalar arm stays a first-class citizen on any machine
+//! (DESIGN.md §Perf "SIMD dispatch").
+
+use std::sync::OnceLock;
+
+/// Which instruction set a [`Dispatch`] table targets.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Level {
+    /// Portable scalar u64 code — always available, the reference arm.
+    Scalar,
+    /// x86_64 AVX2 (detected at runtime; BMI2, when also present,
+    /// upgrades the even-bit compress to a hardware `pext`).
+    Avx2,
+    /// aarch64 NEON (baseline on every aarch64 target).
+    Neon,
+}
+
+impl Level {
+    /// Short label for bench series and log lines.
+    pub fn name(self) -> &'static str {
+        match self {
+            Level::Scalar => "scalar",
+            Level::Avx2 => "avx2",
+            Level::Neon => "neon",
+        }
+    }
+}
+
+/// The dispatch table: one `fn` pointer per vectorized kernel, filled
+/// in once at startup ([`Dispatch::active`]) from runtime CPU-feature
+/// detection. Consumers hold `&'static Dispatch` and pay one indirect
+/// call per kernel invocation — no per-call feature checks, no
+/// monomorphization fan-out.
+#[derive(Clone, Copy)]
+pub struct Dispatch {
+    level: Level,
+    popcount: fn(&[u64]) -> u64,
+    count_and: fn(&[u64], &[u64]) -> u64,
+    and: fn(&mut [u64], &[u64]),
+    or: fn(&mut [u64], &[u64]),
+    xor: fn(&mut [u64], &[u64]),
+    funnel_shr: fn(&[u64], u32, &mut [u64]),
+    compress_even: fn(u64) -> u64,
+    i8_dot: fn(&[i8], &[i32]) -> i64,
+    i8_dot4: fn(&[i8], [&[i32]; 4]) -> [i64; 4],
+    gather_sub_i32: fn(&[u32], &[u32], &[i32]) -> i64,
+    gather_sub_i64: fn(&[u32], &[u32], &[i64]) -> i64,
+}
+
+/// The scalar reference table (also the fallback on unknown ISAs).
+static SCALAR: Dispatch = Dispatch {
+    level: Level::Scalar,
+    popcount: popcount_scalar,
+    count_and: count_and_scalar,
+    and: and_scalar,
+    or: or_scalar,
+    xor: xor_scalar,
+    funnel_shr: funnel_shr_scalar,
+    compress_even: compress_even_scalar,
+    i8_dot: i8_dot_scalar,
+    i8_dot4: i8_dot4_scalar,
+    gather_sub_i32: gather_sub_i32_scalar,
+    gather_sub_i64: gather_sub_i64_scalar,
+};
+
+impl Dispatch {
+    /// The table selected for this process: scalar when `SCNN_NO_SIMD`
+    /// is set (to anything but `0`), else the best vector arm the CPU
+    /// supports — AVX2 on x86_64 (checked with
+    /// `is_x86_feature_detected!`), NEON on aarch64 — falling back to
+    /// scalar. Detection runs once behind a `OnceLock`.
+    pub fn active() -> &'static Dispatch {
+        static ACTIVE: OnceLock<Dispatch> = OnceLock::new();
+        ACTIVE.get_or_init(|| {
+            if std::env::var("SCNN_NO_SIMD").is_ok_and(|v| v != "0") {
+                return SCALAR;
+            }
+            detect_arch()
+        })
+    }
+
+    /// The always-available scalar reference table — what every vector
+    /// path is property-tested against, and the forced-scalar override
+    /// for debugging (`SCNN_NO_SIMD=1` makes [`Dispatch::active`]
+    /// return the same kernels).
+    pub fn scalar() -> &'static Dispatch {
+        &SCALAR
+    }
+
+    /// Which instruction set this table targets.
+    pub fn level(&self) -> Level {
+        self.level
+    }
+
+    /// Total number of 1 bits across a packed word slice.
+    #[inline]
+    pub fn popcount(&self, words: &[u64]) -> u64 {
+        (self.popcount)(words)
+    }
+
+    /// Fused AND + popcount of two equal-length word slices — the
+    /// number of positions where both are 1, in one pass with no
+    /// materialized temporary.
+    #[inline]
+    pub fn count_and(&self, a: &[u64], b: &[u64]) -> u64 {
+        assert_eq!(a.len(), b.len(), "count_and: word count mismatch");
+        (self.count_and)(a, b)
+    }
+
+    /// `dst[i] &= src[i]` lane-wise over equal-length word slices.
+    #[inline]
+    pub fn and_words(&self, dst: &mut [u64], src: &[u64]) {
+        assert_eq!(dst.len(), src.len(), "and_words: word count mismatch");
+        (self.and)(dst, src)
+    }
+
+    /// `dst[i] |= src[i]` lane-wise over equal-length word slices.
+    #[inline]
+    pub fn or_words(&self, dst: &mut [u64], src: &[u64]) {
+        assert_eq!(dst.len(), src.len(), "or_words: word count mismatch");
+        (self.or)(dst, src)
+    }
+
+    /// `dst[i] ^= src[i]` lane-wise over equal-length word slices.
+    #[inline]
+    pub fn xor_words(&self, dst: &mut [u64], src: &[u64]) {
+        assert_eq!(dst.len(), src.len(), "xor_words: word count mismatch");
+        (self.xor)(dst, src)
+    }
+
+    /// Word-parallel funnel shift right: for every `k < dst.len()`,
+    /// `dst[k] = (src[k] >> off) | (src[k+1] << (64-off))`, where a
+    /// high word past `src.len()` reads as zero. `off` must be in
+    /// `1..=63` and `src` at least as long as `dst` (the word-misaligned
+    /// arm of `BitVec::copy_range_from`).
+    #[inline]
+    pub fn funnel_shr(&self, src: &[u64], off: u32, dst: &mut [u64]) {
+        assert!((1..64u32).contains(&off), "funnel_shr: off {off} outside 1..=63");
+        assert!(src.len() >= dst.len(), "funnel_shr: src shorter than dst");
+        (self.funnel_shr)(src, off, dst)
+    }
+
+    /// Compress the even-index bits of `w` into the low half: output
+    /// bit `i` is input bit `2i` (odd-index input bits are dropped).
+    /// The residual divider's select-1-of-2 step, generalized to all
+    /// 64 lanes.
+    #[inline]
+    pub fn compress_even(&self, w: u64) -> u64 {
+        (self.compress_even)(w)
+    }
+
+    /// Exact `Σ x[i] · w[i]` with i8 weights widened into vector
+    /// lanes and accumulation in i64 (the dense-panel row dot).
+    #[inline]
+    pub fn i8_dot(&self, w: &[i8], x: &[i32]) -> i64 {
+        assert_eq!(w.len(), x.len(), "i8_dot: length mismatch");
+        (self.i8_dot)(w, x)
+    }
+
+    /// Four-column variant of [`Dispatch::i8_dot`]: one weight row
+    /// against four equal-length pixel columns — the dense GEMM
+    /// microkernel (each widened weight chunk feeds four accumulators).
+    #[inline]
+    pub fn i8_dot4(&self, w: &[i8], x: [&[i32]; 4]) -> [i64; 4] {
+        let k = w.len();
+        assert!(x.iter().all(|c| c.len() == k), "i8_dot4: length mismatch");
+        (self.i8_dot4)(w, x)
+    }
+
+    /// `Σ x[plus] − Σ x[minus]` over i32 values via gathered loads
+    /// (the ternary-panel row dot: add the `+1` list, subtract the
+    /// `−1` list).
+    ///
+    /// # Safety
+    ///
+    /// Every index in `plus` and `minus` must be `< x.len()`: the
+    /// vector arm issues hardware gathers without per-element bounds
+    /// checks. `TernaryPanel::pack` guarantees this for its index
+    /// lists (indices are column positions `< k`).
+    #[inline]
+    pub unsafe fn gather_sub_i32(&self, plus: &[u32], minus: &[u32], x: &[i32]) -> i64 {
+        (self.gather_sub_i32)(plus, minus, x)
+    }
+
+    /// [`Dispatch::gather_sub_i32`] over i64 values (the classifier
+    /// path, where the GAP accumulator is already 64-bit).
+    ///
+    /// # Safety
+    ///
+    /// Every index in `plus` and `minus` must be `< x.len()` — same
+    /// contract as [`Dispatch::gather_sub_i32`].
+    #[inline]
+    pub unsafe fn gather_sub_i64(&self, plus: &[u32], minus: &[u32], x: &[i64]) -> i64 {
+        (self.gather_sub_i64)(plus, minus, x)
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn detect_arch() -> Dispatch {
+    if std::arch::is_x86_feature_detected!("avx2") {
+        x86::table(std::arch::is_x86_feature_detected!("bmi2"))
+    } else {
+        SCALAR
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+fn detect_arch() -> Dispatch {
+    neon::table()
+}
+
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+fn detect_arch() -> Dispatch {
+    SCALAR
+}
+
+// ---------------------------------------------------------------------
+// Scalar reference kernels (one instruction per 64 lanes; also the
+// remainder loops of the vector arms).
+// ---------------------------------------------------------------------
+
+fn popcount_scalar(words: &[u64]) -> u64 {
+    words.iter().map(|w| w.count_ones() as u64).sum()
+}
+
+fn count_and_scalar(a: &[u64], b: &[u64]) -> u64 {
+    a.iter().zip(b).map(|(x, y)| (x & y).count_ones() as u64).sum()
+}
+
+fn and_scalar(dst: &mut [u64], src: &[u64]) {
+    for (a, b) in dst.iter_mut().zip(src) {
+        *a &= b;
+    }
+}
+
+fn or_scalar(dst: &mut [u64], src: &[u64]) {
+    for (a, b) in dst.iter_mut().zip(src) {
+        *a |= b;
+    }
+}
+
+fn xor_scalar(dst: &mut [u64], src: &[u64]) {
+    for (a, b) in dst.iter_mut().zip(src) {
+        *a ^= b;
+    }
+}
+
+fn funnel_shr_scalar(src: &[u64], off: u32, dst: &mut [u64]) {
+    debug_assert!((1..64u32).contains(&off));
+    debug_assert!(src.len() >= dst.len());
+    for (k, d) in dst.iter_mut().enumerate() {
+        let lo = src[k] >> off;
+        let hi = src.get(k + 1).copied().unwrap_or(0) << (64 - off);
+        *d = lo | hi;
+    }
+}
+
+/// SWAR even-bit compress: 6 mask/shift rounds fold bit `2i` down to
+/// bit `i` (the 64-lane generalization of the divider's 16-lane
+/// version; on x86 with BMI2 this whole function is one `pext`).
+fn compress_even_scalar(w: u64) -> u64 {
+    let mut x = w & 0x5555_5555_5555_5555;
+    x = (x ^ (x >> 1)) & 0x3333_3333_3333_3333;
+    x = (x ^ (x >> 2)) & 0x0f0f_0f0f_0f0f_0f0f;
+    x = (x ^ (x >> 4)) & 0x00ff_00ff_00ff_00ff;
+    x = (x ^ (x >> 8)) & 0x0000_ffff_0000_ffff;
+    x = (x ^ (x >> 16)) & 0x0000_0000_ffff_ffff;
+    x
+}
+
+fn i8_dot_scalar(w: &[i8], x: &[i32]) -> i64 {
+    let mut s = 0i64;
+    for (&wv, &xv) in w.iter().zip(x) {
+        s += xv as i64 * wv as i64;
+    }
+    s
+}
+
+fn i8_dot4_scalar(w: &[i8], x: [&[i32]; 4]) -> [i64; 4] {
+    let [x0, x1, x2, x3] = x;
+    let (mut a0, mut a1, mut a2, mut a3) = (0i64, 0i64, 0i64, 0i64);
+    for (i, &wv) in w.iter().enumerate() {
+        let wl = wv as i64;
+        a0 += x0[i] as i64 * wl;
+        a1 += x1[i] as i64 * wl;
+        a2 += x2[i] as i64 * wl;
+        a3 += x3[i] as i64 * wl;
+    }
+    [a0, a1, a2, a3]
+}
+
+fn gather_sub_i32_scalar(plus: &[u32], minus: &[u32], x: &[i32]) -> i64 {
+    let mut pos = 0i64;
+    for &i in plus {
+        pos += x[i as usize] as i64;
+    }
+    let mut neg = 0i64;
+    for &i in minus {
+        neg += x[i as usize] as i64;
+    }
+    pos - neg
+}
+
+fn gather_sub_i64_scalar(plus: &[u32], minus: &[u32], x: &[i64]) -> i64 {
+    let mut pos = 0i64;
+    for &i in plus {
+        pos += x[i as usize];
+    }
+    let mut neg = 0i64;
+    for &i in minus {
+        neg += x[i as usize];
+    }
+    pos - neg
+}
+
+// ---------------------------------------------------------------------
+// AVX2 kernels (x86_64). Each `#[target_feature]` kernel is wrapped by
+// a safe entry fn; the wrapper's `unsafe` is justified by the dispatch
+// selection (the table only installs these after
+// `is_x86_feature_detected!("avx2")` succeeded).
+// ---------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use super::*;
+    use std::arch::x86_64::*;
+
+    pub(super) fn table(bmi2: bool) -> Dispatch {
+        Dispatch {
+            level: Level::Avx2,
+            popcount: popcount_entry,
+            count_and: count_and_entry,
+            and: and_entry,
+            or: or_entry,
+            xor: xor_entry,
+            funnel_shr: funnel_shr_entry,
+            compress_even: if bmi2 {
+                compress_even_entry
+            } else {
+                compress_even_scalar
+            },
+            i8_dot: i8_dot_entry,
+            i8_dot4: i8_dot4_entry,
+            gather_sub_i32: gather_sub_i32_entry,
+            gather_sub_i64: gather_sub_i64_entry,
+        }
+    }
+
+    fn popcount_entry(words: &[u64]) -> u64 {
+        // SAFETY: installed only after AVX2 was detected.
+        unsafe { popcount_avx2(words) }
+    }
+
+    fn count_and_entry(a: &[u64], b: &[u64]) -> u64 {
+        // SAFETY: installed only after AVX2 was detected.
+        unsafe { count_and_avx2(a, b) }
+    }
+
+    fn and_entry(dst: &mut [u64], src: &[u64]) {
+        // SAFETY: installed only after AVX2 was detected.
+        unsafe { and_avx2(dst, src) }
+    }
+
+    fn or_entry(dst: &mut [u64], src: &[u64]) {
+        // SAFETY: installed only after AVX2 was detected.
+        unsafe { or_avx2(dst, src) }
+    }
+
+    fn xor_entry(dst: &mut [u64], src: &[u64]) {
+        // SAFETY: installed only after AVX2 was detected.
+        unsafe { xor_avx2(dst, src) }
+    }
+
+    fn funnel_shr_entry(src: &[u64], off: u32, dst: &mut [u64]) {
+        // SAFETY: installed only after AVX2 was detected.
+        unsafe { funnel_shr_avx2(src, off, dst) }
+    }
+
+    fn compress_even_entry(w: u64) -> u64 {
+        // SAFETY: installed only after BMI2 was detected.
+        unsafe { compress_even_bmi2(w) }
+    }
+
+    fn i8_dot_entry(w: &[i8], x: &[i32]) -> i64 {
+        // SAFETY: installed only after AVX2 was detected.
+        unsafe { i8_dot_avx2(w, x) }
+    }
+
+    fn i8_dot4_entry(w: &[i8], x: [&[i32]; 4]) -> [i64; 4] {
+        // SAFETY: installed only after AVX2 was detected.
+        unsafe { i8_dot4_avx2(w, x) }
+    }
+
+    fn gather_sub_i32_entry(plus: &[u32], minus: &[u32], x: &[i32]) -> i64 {
+        if x.len() > i32::MAX as usize {
+            // Gather indices are signed 32-bit; beyond that the scalar
+            // path is the only correct one.
+            return gather_sub_i32_scalar(plus, minus, x);
+        }
+        // SAFETY: AVX2 detected at init; `Dispatch::gather_sub_i32`'s
+        // contract guarantees every index < x.len(), which fits i32.
+        unsafe { gather_sum_i32(plus, x) - gather_sum_i32(minus, x) }
+    }
+
+    fn gather_sub_i64_entry(plus: &[u32], minus: &[u32], x: &[i64]) -> i64 {
+        if x.len() > i32::MAX as usize {
+            return gather_sub_i64_scalar(plus, minus, x);
+        }
+        // SAFETY: AVX2 detected at init; `Dispatch::gather_sub_i64`'s
+        // contract guarantees every index < x.len(), which fits i32.
+        unsafe { gather_sum_i64(plus, x) - gather_sum_i64(minus, x) }
+    }
+
+    /// Horizontal sum of the four i64 lanes.
+    #[target_feature(enable = "avx2")]
+    unsafe fn hsum_i64(v: __m256i) -> i64 {
+        let lo = _mm256_castsi256_si128(v);
+        let hi = _mm256_extracti128_si256::<1>(v);
+        let s = _mm_add_epi64(lo, hi);
+        _mm_cvtsi128_si64(s).wrapping_add(_mm_extract_epi64::<1>(s))
+    }
+
+    /// Per-byte popcount of a 256-bit vector (Mula nibble LUT), summed
+    /// into the four i64 lanes by `_mm256_sad_epu8`.
+    #[target_feature(enable = "avx2")]
+    unsafe fn popcnt_lanes_i64(v: __m256i) -> __m256i {
+        let lut = _mm256_setr_epi8(
+            0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4, //
+            0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4,
+        );
+        let low = _mm256_set1_epi8(0x0f);
+        let lo = _mm256_shuffle_epi8(lut, _mm256_and_si256(v, low));
+        let hi = _mm256_shuffle_epi8(lut, _mm256_and_si256(_mm256_srli_epi16::<4>(v), low));
+        _mm256_sad_epu8(_mm256_add_epi8(lo, hi), _mm256_setzero_si256())
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn popcount_avx2(words: &[u64]) -> u64 {
+        let mut acc = _mm256_setzero_si256();
+        for c in words.chunks_exact(4) {
+            let v = _mm256_loadu_si256(c.as_ptr().cast());
+            acc = _mm256_add_epi64(acc, popcnt_lanes_i64(v));
+        }
+        let mut total = hsum_i64(acc) as u64;
+        for &w in words.chunks_exact(4).remainder() {
+            total += w.count_ones() as u64;
+        }
+        total
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn count_and_avx2(a: &[u64], b: &[u64]) -> u64 {
+        debug_assert_eq!(a.len(), b.len());
+        let mut acc = _mm256_setzero_si256();
+        for (ca, cb) in a.chunks_exact(4).zip(b.chunks_exact(4)) {
+            let va = _mm256_loadu_si256(ca.as_ptr().cast());
+            let vb = _mm256_loadu_si256(cb.as_ptr().cast());
+            acc = _mm256_add_epi64(acc, popcnt_lanes_i64(_mm256_and_si256(va, vb)));
+        }
+        let mut total = hsum_i64(acc) as u64;
+        let ra = a.chunks_exact(4).remainder();
+        let rb = b.chunks_exact(4).remainder();
+        for (x, y) in ra.iter().zip(rb) {
+            total += (x & y).count_ones() as u64;
+        }
+        total
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn and_avx2(dst: &mut [u64], src: &[u64]) {
+        debug_assert_eq!(dst.len(), src.len());
+        let n = dst.len();
+        let mut k = 0usize;
+        while k + 4 <= n {
+            let a = _mm256_loadu_si256(dst.as_ptr().add(k).cast());
+            let b = _mm256_loadu_si256(src.as_ptr().add(k).cast());
+            _mm256_storeu_si256(dst.as_mut_ptr().add(k).cast(), _mm256_and_si256(a, b));
+            k += 4;
+        }
+        while k < n {
+            dst[k] &= src[k];
+            k += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn or_avx2(dst: &mut [u64], src: &[u64]) {
+        debug_assert_eq!(dst.len(), src.len());
+        let n = dst.len();
+        let mut k = 0usize;
+        while k + 4 <= n {
+            let a = _mm256_loadu_si256(dst.as_ptr().add(k).cast());
+            let b = _mm256_loadu_si256(src.as_ptr().add(k).cast());
+            _mm256_storeu_si256(dst.as_mut_ptr().add(k).cast(), _mm256_or_si256(a, b));
+            k += 4;
+        }
+        while k < n {
+            dst[k] |= src[k];
+            k += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn xor_avx2(dst: &mut [u64], src: &[u64]) {
+        debug_assert_eq!(dst.len(), src.len());
+        let n = dst.len();
+        let mut k = 0usize;
+        while k + 4 <= n {
+            let a = _mm256_loadu_si256(dst.as_ptr().add(k).cast());
+            let b = _mm256_loadu_si256(src.as_ptr().add(k).cast());
+            _mm256_storeu_si256(dst.as_mut_ptr().add(k).cast(), _mm256_xor_si256(a, b));
+            k += 4;
+        }
+        while k < n {
+            dst[k] ^= src[k];
+            k += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn funnel_shr_avx2(src: &[u64], off: u32, dst: &mut [u64]) {
+        debug_assert!((1..64u32).contains(&off));
+        debug_assert!(src.len() >= dst.len());
+        let n = dst.len();
+        let rsh = _mm_cvtsi32_si128(off as i32);
+        let lsh = _mm_cvtsi32_si128(64 - off as i32);
+        let mut k = 0usize;
+        // The vector body reads src[k+1..k+5], so it stops one short
+        // of the end; the scalar tail supplies the implicit zero high
+        // word past src.len().
+        while k + 4 <= n && k + 5 <= src.len() {
+            let v0 = _mm256_loadu_si256(src.as_ptr().add(k).cast());
+            let v1 = _mm256_loadu_si256(src.as_ptr().add(k + 1).cast());
+            let w = _mm256_or_si256(_mm256_srl_epi64(v0, rsh), _mm256_sll_epi64(v1, lsh));
+            _mm256_storeu_si256(dst.as_mut_ptr().add(k).cast(), w);
+            k += 4;
+        }
+        while k < n {
+            let lo = src[k] >> off;
+            let hi = src.get(k + 1).copied().unwrap_or(0) << (64 - off);
+            dst[k] = lo | hi;
+            k += 1;
+        }
+    }
+
+    #[target_feature(enable = "bmi2")]
+    unsafe fn compress_even_bmi2(w: u64) -> u64 {
+        _pext_u64(w, 0x5555_5555_5555_5555)
+    }
+
+    /// The eight exact i32×i32→i64 products of two 8-lane vectors,
+    /// folded pairwise into four i64 lanes: `_mm256_mul_epi32`
+    /// sign-extends the low dword of each qword, so the even lanes
+    /// multiply directly and the odd lanes after a 32-bit lane shift.
+    #[target_feature(enable = "avx2")]
+    unsafe fn mul_i32_pairs(a: __m256i, b: __m256i) -> __m256i {
+        let even = _mm256_mul_epi32(a, b);
+        let odd = _mm256_mul_epi32(_mm256_srli_epi64::<32>(a), _mm256_srli_epi64::<32>(b));
+        _mm256_add_epi64(even, odd)
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn i8_dot_avx2(w: &[i8], x: &[i32]) -> i64 {
+        debug_assert_eq!(w.len(), x.len());
+        let k = w.len();
+        let mut acc = _mm256_setzero_si256();
+        let mut i = 0usize;
+        while i + 8 <= k {
+            let w32 = _mm256_cvtepi8_epi32(_mm_loadl_epi64(w.as_ptr().add(i).cast()));
+            let xv = _mm256_loadu_si256(x.as_ptr().add(i).cast());
+            acc = _mm256_add_epi64(acc, mul_i32_pairs(w32, xv));
+            i += 8;
+        }
+        let mut s = hsum_i64(acc);
+        while i < k {
+            s += x[i] as i64 * w[i] as i64;
+            i += 1;
+        }
+        s
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn i8_dot4_avx2(w: &[i8], x: [&[i32]; 4]) -> [i64; 4] {
+        let [x0, x1, x2, x3] = x;
+        let k = w.len();
+        debug_assert!(x0.len() == k && x1.len() == k && x2.len() == k && x3.len() == k);
+        let mut a0 = _mm256_setzero_si256();
+        let mut a1 = _mm256_setzero_si256();
+        let mut a2 = _mm256_setzero_si256();
+        let mut a3 = _mm256_setzero_si256();
+        let mut i = 0usize;
+        while i + 8 <= k {
+            // One widened weight chunk feeds all four accumulators —
+            // the same reuse lever as the scalar microkernel.
+            let w32 = _mm256_cvtepi8_epi32(_mm_loadl_epi64(w.as_ptr().add(i).cast()));
+            let v0 = _mm256_loadu_si256(x0.as_ptr().add(i).cast());
+            let v1 = _mm256_loadu_si256(x1.as_ptr().add(i).cast());
+            let v2 = _mm256_loadu_si256(x2.as_ptr().add(i).cast());
+            let v3 = _mm256_loadu_si256(x3.as_ptr().add(i).cast());
+            a0 = _mm256_add_epi64(a0, mul_i32_pairs(w32, v0));
+            a1 = _mm256_add_epi64(a1, mul_i32_pairs(w32, v1));
+            a2 = _mm256_add_epi64(a2, mul_i32_pairs(w32, v2));
+            a3 = _mm256_add_epi64(a3, mul_i32_pairs(w32, v3));
+            i += 8;
+        }
+        let mut out = [hsum_i64(a0), hsum_i64(a1), hsum_i64(a2), hsum_i64(a3)];
+        while i < k {
+            let wl = w[i] as i64;
+            out[0] += x0[i] as i64 * wl;
+            out[1] += x1[i] as i64 * wl;
+            out[2] += x2[i] as i64 * wl;
+            out[3] += x3[i] as i64 * wl;
+            i += 1;
+        }
+        out
+    }
+
+    /// `Σ x[idx]` over one index list via 8-wide hardware gathers.
+    /// Caller guarantees every index `< x.len() <= i32::MAX` (see the
+    /// entry fns and `Dispatch::gather_sub_i32`).
+    #[target_feature(enable = "avx2")]
+    unsafe fn gather_sum_i32(idx: &[u32], x: &[i32]) -> i64 {
+        let base = x.as_ptr();
+        let mut acc = _mm256_setzero_si256();
+        let mut i = 0usize;
+        while i + 8 <= idx.len() {
+            let iv = _mm256_loadu_si256(idx.as_ptr().add(i).cast());
+            let g = _mm256_i32gather_epi32::<4>(base, iv);
+            let lo = _mm256_cvtepi32_epi64(_mm256_castsi256_si128(g));
+            let hi = _mm256_cvtepi32_epi64(_mm256_extracti128_si256::<1>(g));
+            acc = _mm256_add_epi64(acc, _mm256_add_epi64(lo, hi));
+            i += 8;
+        }
+        let mut s = hsum_i64(acc);
+        for &j in &idx[i..] {
+            s += x[j as usize] as i64;
+        }
+        s
+    }
+
+    /// `Σ x[idx]` over i64 values via 4-wide hardware gathers; same
+    /// contract as [`gather_sum_i32`].
+    #[target_feature(enable = "avx2")]
+    unsafe fn gather_sum_i64(idx: &[u32], x: &[i64]) -> i64 {
+        let base = x.as_ptr();
+        let mut acc = _mm256_setzero_si256();
+        let mut i = 0usize;
+        while i + 4 <= idx.len() {
+            let iv = _mm_loadu_si128(idx.as_ptr().add(i).cast());
+            acc = _mm256_add_epi64(acc, _mm256_i32gather_epi64::<8>(base, iv));
+            i += 4;
+        }
+        let mut s = hsum_i64(acc);
+        for &j in &idx[i..] {
+            s += x[j as usize];
+        }
+        s
+    }
+}
+
+// ---------------------------------------------------------------------
+// NEON kernels (aarch64). NEON is baseline on aarch64, so the table
+// installs unconditionally; gathers and the even-bit compress have no
+// NEON win and stay on the scalar kernels.
+// ---------------------------------------------------------------------
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use super::*;
+    use std::arch::aarch64::*;
+
+    pub(super) fn table() -> Dispatch {
+        Dispatch {
+            level: Level::Neon,
+            popcount: popcount_entry,
+            count_and: count_and_entry,
+            and: and_entry,
+            or: or_entry,
+            xor: xor_entry,
+            funnel_shr: funnel_shr_entry,
+            compress_even: compress_even_scalar,
+            i8_dot: i8_dot_entry,
+            i8_dot4: i8_dot4_entry,
+            gather_sub_i32: gather_sub_i32_scalar,
+            gather_sub_i64: gather_sub_i64_scalar,
+        }
+    }
+
+    fn popcount_entry(words: &[u64]) -> u64 {
+        // SAFETY: NEON is baseline on aarch64.
+        unsafe { popcount_neon(words) }
+    }
+
+    fn count_and_entry(a: &[u64], b: &[u64]) -> u64 {
+        // SAFETY: NEON is baseline on aarch64.
+        unsafe { count_and_neon(a, b) }
+    }
+
+    fn and_entry(dst: &mut [u64], src: &[u64]) {
+        // SAFETY: NEON is baseline on aarch64.
+        unsafe { and_neon(dst, src) }
+    }
+
+    fn or_entry(dst: &mut [u64], src: &[u64]) {
+        // SAFETY: NEON is baseline on aarch64.
+        unsafe { or_neon(dst, src) }
+    }
+
+    fn xor_entry(dst: &mut [u64], src: &[u64]) {
+        // SAFETY: NEON is baseline on aarch64.
+        unsafe { xor_neon(dst, src) }
+    }
+
+    fn funnel_shr_entry(src: &[u64], off: u32, dst: &mut [u64]) {
+        // SAFETY: NEON is baseline on aarch64.
+        unsafe { funnel_shr_neon(src, off, dst) }
+    }
+
+    fn i8_dot_entry(w: &[i8], x: &[i32]) -> i64 {
+        // SAFETY: NEON is baseline on aarch64.
+        unsafe { i8_dot_neon(w, x) }
+    }
+
+    fn i8_dot4_entry(w: &[i8], x: [&[i32]; 4]) -> [i64; 4] {
+        let [x0, x1, x2, x3] = x;
+        [i8_dot_entry(w, x0), i8_dot_entry(w, x1), i8_dot_entry(w, x2), i8_dot_entry(w, x3)]
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn popcount_neon(words: &[u64]) -> u64 {
+        let mut acc = vdupq_n_u64(0);
+        for c in words.chunks_exact(2) {
+            let v = vreinterpretq_u8_u64(vld1q_u64(c.as_ptr()));
+            acc = vaddq_u64(acc, vpaddlq_u32(vpaddlq_u16(vpaddlq_u8(vcntq_u8(v)))));
+        }
+        let mut total = vaddvq_u64(acc);
+        for &w in words.chunks_exact(2).remainder() {
+            total += w.count_ones() as u64;
+        }
+        total
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn count_and_neon(a: &[u64], b: &[u64]) -> u64 {
+        debug_assert_eq!(a.len(), b.len());
+        let mut acc = vdupq_n_u64(0);
+        for (ca, cb) in a.chunks_exact(2).zip(b.chunks_exact(2)) {
+            let v = vandq_u64(vld1q_u64(ca.as_ptr()), vld1q_u64(cb.as_ptr()));
+            let bytes = vcntq_u8(vreinterpretq_u8_u64(v));
+            acc = vaddq_u64(acc, vpaddlq_u32(vpaddlq_u16(vpaddlq_u8(bytes))));
+        }
+        let mut total = vaddvq_u64(acc);
+        let ra = a.chunks_exact(2).remainder();
+        let rb = b.chunks_exact(2).remainder();
+        for (x, y) in ra.iter().zip(rb) {
+            total += (x & y).count_ones() as u64;
+        }
+        total
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn and_neon(dst: &mut [u64], src: &[u64]) {
+        debug_assert_eq!(dst.len(), src.len());
+        let n = dst.len();
+        let mut k = 0usize;
+        while k + 2 <= n {
+            let a = vld1q_u64(dst.as_ptr().add(k));
+            let b = vld1q_u64(src.as_ptr().add(k));
+            vst1q_u64(dst.as_mut_ptr().add(k), vandq_u64(a, b));
+            k += 2;
+        }
+        if k < n {
+            dst[k] &= src[k];
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn or_neon(dst: &mut [u64], src: &[u64]) {
+        debug_assert_eq!(dst.len(), src.len());
+        let n = dst.len();
+        let mut k = 0usize;
+        while k + 2 <= n {
+            let a = vld1q_u64(dst.as_ptr().add(k));
+            let b = vld1q_u64(src.as_ptr().add(k));
+            vst1q_u64(dst.as_mut_ptr().add(k), vorrq_u64(a, b));
+            k += 2;
+        }
+        if k < n {
+            dst[k] |= src[k];
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn xor_neon(dst: &mut [u64], src: &[u64]) {
+        debug_assert_eq!(dst.len(), src.len());
+        let n = dst.len();
+        let mut k = 0usize;
+        while k + 2 <= n {
+            let a = vld1q_u64(dst.as_ptr().add(k));
+            let b = vld1q_u64(src.as_ptr().add(k));
+            vst1q_u64(dst.as_mut_ptr().add(k), veorq_u64(a, b));
+            k += 2;
+        }
+        if k < n {
+            dst[k] ^= src[k];
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn funnel_shr_neon(src: &[u64], off: u32, dst: &mut [u64]) {
+        debug_assert!((1..64u32).contains(&off));
+        debug_assert!(src.len() >= dst.len());
+        let n = dst.len();
+        // NEON shifts left by the per-lane signed count; negative
+        // counts shift right.
+        let rsh = vdupq_n_s64(-(off as i64));
+        let lsh = vdupq_n_s64(64 - off as i64);
+        let mut k = 0usize;
+        while k + 2 <= n && k + 3 <= src.len() {
+            let v0 = vld1q_u64(src.as_ptr().add(k));
+            let v1 = vld1q_u64(src.as_ptr().add(k + 1));
+            let w = vorrq_u64(vshlq_u64(v0, rsh), vshlq_u64(v1, lsh));
+            vst1q_u64(dst.as_mut_ptr().add(k), w);
+            k += 2;
+        }
+        while k < n {
+            let lo = src[k] >> off;
+            let hi = src.get(k + 1).copied().unwrap_or(0) << (64 - off);
+            dst[k] = lo | hi;
+            k += 1;
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn i8_dot_neon(w: &[i8], x: &[i32]) -> i64 {
+        debug_assert_eq!(w.len(), x.len());
+        let k = w.len();
+        let mut acc = vdupq_n_s64(0);
+        let mut i = 0usize;
+        while i + 8 <= k {
+            let w16 = vmovl_s8(vld1_s8(w.as_ptr().add(i)));
+            let wlo = vmovl_s16(vget_low_s16(w16));
+            let whi = vmovl_s16(vget_high_s16(w16));
+            let xlo = vld1q_s32(x.as_ptr().add(i));
+            let xhi = vld1q_s32(x.as_ptr().add(i + 4));
+            acc = vaddq_s64(acc, vmull_s32(vget_low_s32(wlo), vget_low_s32(xlo)));
+            acc = vaddq_s64(acc, vmull_s32(vget_high_s32(wlo), vget_high_s32(xlo)));
+            acc = vaddq_s64(acc, vmull_s32(vget_low_s32(whi), vget_low_s32(xhi)));
+            acc = vaddq_s64(acc, vmull_s32(vget_high_s32(whi), vget_high_s32(xhi)));
+            i += 8;
+        }
+        let mut s = vaddvq_s64(acc);
+        while i < k {
+            s += x[i] as i64 * w[i] as i64;
+            i += 1;
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn words(rng: &mut Rng, n: usize) -> Vec<u64> {
+        (0..n).map(|_| rng.next_u64()).collect()
+    }
+
+    #[test]
+    fn level_names() {
+        assert_eq!(Level::Scalar.name(), "scalar");
+        assert_eq!(Level::Avx2.name(), "avx2");
+        assert_eq!(Level::Neon.name(), "neon");
+        assert_eq!(Dispatch::scalar().level(), Level::Scalar);
+    }
+
+    #[test]
+    fn compress_even_ground_truth() {
+        // Bit i of the output must be bit 2i of the input, per table.
+        for (w, want) in [
+            (0u64, 0u64),
+            (0b01, 0b1),
+            (0b10, 0b0),
+            (0b0101, 0b11),
+            (0x5555_5555_5555_5555, 0xffff_ffff),
+            (u64::MAX, 0xffff_ffff),
+            (0x0f0f, 0b0011_0011),
+        ] {
+            assert_eq!(compress_even_scalar(w), want, "w={w:#x}");
+        }
+        // Active arm (pext on BMI2 hardware) agrees everywhere.
+        let mut rng = Rng::new(5);
+        for _ in 0..200 {
+            let w = rng.next_u64();
+            assert_eq!(Dispatch::active().compress_even(w), compress_even_scalar(w));
+        }
+    }
+
+    #[test]
+    fn active_matches_scalar_on_word_kernels() {
+        let mut rng = Rng::new(77);
+        let a5 = Dispatch::active();
+        let sc = Dispatch::scalar();
+        for n in [0usize, 1, 2, 3, 4, 5, 7, 8, 9, 16, 33, 144] {
+            let a = words(&mut rng, n);
+            let b = words(&mut rng, n);
+            assert_eq!(a5.popcount(&a), sc.popcount(&a), "popcount n={n}");
+            assert_eq!(a5.count_and(&a, &b), sc.count_and(&a, &b), "count_and n={n}");
+            for off in [1u32, 7, 31, 63] {
+                let mut d1 = vec![0u64; n];
+                let mut d2 = vec![0u64; n];
+                a5.funnel_shr(&a, off, &mut d1);
+                sc.funnel_shr(&a, off, &mut d2);
+                assert_eq!(d1, d2, "funnel n={n} off={off}");
+            }
+            let (mut x1, mut x2) = (a.clone(), a.clone());
+            a5.and_words(&mut x1, &b);
+            sc.and_words(&mut x2, &b);
+            assert_eq!(x1, x2, "and n={n}");
+            let (mut o1, mut o2) = (a.clone(), a.clone());
+            a5.or_words(&mut o1, &b);
+            sc.or_words(&mut o2, &b);
+            assert_eq!(o1, o2, "or n={n}");
+            let (mut e1, mut e2) = (a.clone(), a.clone());
+            a5.xor_words(&mut e1, &b);
+            sc.xor_words(&mut e2, &b);
+            assert_eq!(e1, e2, "xor n={n}");
+        }
+    }
+
+    #[test]
+    fn active_matches_scalar_on_dot_kernels() {
+        let mut rng = Rng::new(91);
+        let a5 = Dispatch::active();
+        let sc = Dispatch::scalar();
+        for k in [0usize, 1, 3, 7, 8, 9, 15, 16, 17, 40, 129] {
+            let w: Vec<i8> = (0..k).map(|_| rng.gen_range_i64(-128, 127) as i8).collect();
+            let cols: Vec<Vec<i32>> = (0..4)
+                .map(|_| (0..k).map(|_| rng.gen_range_i64(-1000, 1000) as i32).collect())
+                .collect();
+            let x = [&cols[0][..], &cols[1][..], &cols[2][..], &cols[3][..]];
+            assert_eq!(a5.i8_dot(&w, x[0]), sc.i8_dot(&w, x[0]), "i8_dot k={k}");
+            assert_eq!(a5.i8_dot4(&w, x), sc.i8_dot4(&w, x), "i8_dot4 k={k}");
+            // Gather lists: every index < k, ragged lengths.
+            if k > 0 {
+                let plus: Vec<u32> =
+                    (0..rng.gen_index(2 * k + 1)).map(|_| rng.gen_index(k) as u32).collect();
+                let minus: Vec<u32> =
+                    (0..rng.gen_index(2 * k + 1)).map(|_| rng.gen_index(k) as u32).collect();
+                let x64: Vec<i64> = x[0].iter().map(|&v| v as i64).collect();
+                // SAFETY: indices drawn from 0..k above.
+                unsafe {
+                    assert_eq!(
+                        a5.gather_sub_i32(&plus, &minus, x[0]),
+                        sc.gather_sub_i32(&plus, &minus, x[0]),
+                        "gather_sub_i32 k={k}"
+                    );
+                    assert_eq!(
+                        a5.gather_sub_i64(&plus, &minus, &x64),
+                        sc.gather_sub_i64(&plus, &minus, &x64),
+                        "gather_sub_i64 k={k}"
+                    );
+                }
+            }
+        }
+    }
+}

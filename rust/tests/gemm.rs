@@ -5,6 +5,10 @@
 //! * Property tests pit [`TernaryPanel`]/[`I8Panel`] against
 //!   [`gemm_naive`] on random shapes, including ragged edges smaller
 //!   than the channel block ([`BLOCK_CO`]) and the 4-wide microkernel.
+//! * The runtime-dispatched SIMD arms are pitted against the pinned
+//!   scalar table (`Dispatch::scalar()`) for every kernel entry point;
+//!   CI re-runs the whole suite under `SCNN_NO_SIMD=1` so the
+//!   forced-scalar arm is exercised as the dispatched one too.
 //! * `ScEngine::forward_batch_into` must produce bit-identical logits
 //!   at every thread count, for both model families (plain ternary
 //!   `tnn` and the residual `scnet10`) — the order-safety claim of
@@ -22,6 +26,7 @@ use scnn::nn::quant::QuantConfig;
 use scnn::nn::sc_exec::Prepared;
 use scnn::nn::ScEngine;
 use scnn::util::prop::check_simple;
+use scnn::util::simd::Dispatch;
 use scnn::util::Rng;
 
 /// One random GEMM problem instance.
@@ -120,6 +125,118 @@ fn ragged_edges_smaller_than_the_blocks() {
         assert_eq!(t, expect, "ternary rows={rows} k={k} n={n}");
         assert_eq!(d, expect, "dense rows={rows} k={k} n={n}");
     }
+}
+
+#[test]
+fn edge_shapes_pinned_against_naive() {
+    // The shapes the vector kernels must survive: k = 0 (empty
+    // reduction — the kernels never run), single-pixel n = 1 (the
+    // microkernel never engages), and k straddling the 8-wide SIMD
+    // chunk so the remainder loop carries 0..=7 lanes.
+    let mut rng = Rng::new(13);
+    let shapes = [
+        (3usize, 0usize, 4usize),
+        (1, 0, 1),
+        (5, 9, 1),
+        (2, 7, 1),
+        (4, 7, 5),
+        (4, 8, 5),
+        (4, 9, 5),
+        (3, 15, 2),
+        (3, 16, 2),
+        (3, 17, 2),
+        (BLOCK_CO + 1, 33, 4),
+    ];
+    for (rows, k, n) in shapes {
+        for ternary in [true, false] {
+            let w: Vec<i8> = (0..rows * k)
+                .map(|_| {
+                    if ternary {
+                        rng.gen_range_i64(-1, 1) as i8
+                    } else {
+                        rng.gen_range_i64(-128, 127) as i8
+                    }
+                })
+                .collect();
+            let cols: Vec<i32> =
+                (0..n * k).map(|_| rng.gen_range_i64(-100, 101) as i32).collect();
+            let mut expect = vec![0i64; rows * n];
+            gemm_naive(&w, rows, k, &cols, n, &mut expect);
+            let mut got = vec![i64::MIN; rows * n];
+            if ternary {
+                TernaryPanel::pack(&w, rows, k).gemm_into(&cols, n, &mut got);
+            } else {
+                I8Panel::pack(&w, rows, k).gemm_into(&cols, n, &mut got);
+            }
+            assert_eq!(got, expect, "ternary={ternary} rows={rows} k={k} n={n}");
+        }
+    }
+}
+
+#[test]
+fn all_zero_ternary_rows_have_empty_index_lists() {
+    // Rows that pack to empty +1/−1 lists must still produce exact
+    // zeros through the gathered-accumulate path.
+    let (rows, k, n) = (4usize, 12usize, 3usize);
+    let w = vec![0i8; rows * k];
+    let cols: Vec<i32> = (0..n * k).map(|i| i as i32 - 7).collect();
+    let panel = TernaryPanel::pack(&w, rows, k);
+    assert_eq!(panel.nnz(), 0);
+    let mut got = vec![i64::MIN; rows * n];
+    panel.gemm_into(&cols, n, &mut got);
+    assert_eq!(got, vec![0i64; rows * n]);
+    assert_eq!(panel.row_dot(0, &cols[..k]), 0);
+}
+
+#[test]
+fn dispatched_gemm_matches_forced_scalar() {
+    // The acceptance bar of the SIMD step: the dispatched table (AVX2 /
+    // NEON / scalar, whatever this machine selected) and the pinned
+    // scalar table produce bit-identical results for every kernel entry
+    // point, on random ragged shapes.
+    let sc = Dispatch::scalar();
+    check_simple(
+        0x51D0,
+        40,
+        |rng| gen_case(rng, true),
+        |c| {
+            let panel = TernaryPanel::pack(&c.w, c.rows, c.k);
+            let mut active = vec![0i64; c.rows * c.n];
+            let mut scalar = vec![i64::MIN; c.rows * c.n];
+            panel.gemm_into(&c.cols, c.n, &mut active);
+            panel.gemm_into_with(sc, &c.cols, c.n, &mut scalar);
+            assert_eq!(active, scalar, "ternary gemm");
+            let x = &c.cols[..c.k];
+            let x64: Vec<i64> = x.iter().map(|&v| v as i64).collect();
+            for r in 0..c.rows {
+                assert_eq!(panel.row_dot(r, x), panel.row_dot_with(sc, r, x), "row_dot r={r}");
+                assert_eq!(
+                    panel.row_dot_i64(r, &x64),
+                    panel.row_dot_i64_with(sc, r, &x64),
+                    "row_dot_i64 r={r}"
+                );
+            }
+            true
+        },
+    );
+    check_simple(
+        0x51D1,
+        40,
+        |rng| gen_case(rng, false),
+        |c| {
+            let panel = I8Panel::pack(&c.w, c.rows, c.k);
+            let mut active = vec![0i64; c.rows * c.n];
+            let mut scalar = vec![i64::MIN; c.rows * c.n];
+            panel.gemm_into(&c.cols, c.n, &mut active);
+            panel.gemm_into_with(sc, &c.cols, c.n, &mut scalar);
+            assert_eq!(active, scalar, "dense gemm");
+            let x = &c.cols[..c.k];
+            for r in 0..c.rows {
+                assert_eq!(panel.row_dot(r, x), panel.row_dot_with(sc, r, x), "row_dot r={r}");
+            }
+            true
+        },
+    );
 }
 
 fn prep_family(family: &str, seed: u64) -> (Arc<Prepared>, usize) {

@@ -10,7 +10,12 @@
 //! 2. every gate-level circuit stage (ternary multiplier, BSN sort,
 //!    selective interconnect, rescale divider, approximate and
 //!    spatial-temporal BSNs) is checked packed-vs-scalar on random —
-//!    including non-canonical — streams.
+//!    including non-canonical — streams;
+//! 3. every SIMD word kernel behind the runtime [`Dispatch`] table is
+//!    pitted against the always-available scalar arm over ragged word
+//!    counts and non-word-aligned funnel offsets — on this machine's
+//!    dispatched table AND under the `SCNN_NO_SIMD=1` forced-scalar
+//!    override (CI runs the suite both ways).
 
 use scnn::circuits::approx_bsn::{ApproxBsn, ApproxStage, SubSample};
 use scnn::circuits::multiplier::TernaryMultiplier;
@@ -20,6 +25,7 @@ use scnn::circuits::st_bsn::SpatialTemporalBsn;
 use scnn::circuits::Bsn;
 use scnn::coding::{BitVec, Ternary, ThermCode};
 use scnn::util::prop::check_simple;
+use scnn::util::simd::{Dispatch, Level};
 use scnn::util::Rng;
 
 /// Naive byte-per-bit reference model.
@@ -341,6 +347,98 @@ fn prop_approx_bsn_packed_bits_equal_counts() {
             .collect();
         assert_eq!(a.eval_bits(&bv).popcount(), a.eval_counts(&counts));
     }
+}
+
+/// Every dispatched word kernel is bit-identical to the scalar arm on
+/// ragged word counts and every funnel offset class. When the process
+/// runs under `SCNN_NO_SIMD=1` the two tables are the same functions
+/// and this degenerates to a self-check — CI runs it both ways.
+#[test]
+fn prop_simd_word_kernels_match_scalar() {
+    check_simple(
+        157,
+        150,
+        |rng| {
+            let n = rng.gen_index(40);
+            let a: Vec<u64> = (0..n).map(|_| rng.next_u64()).collect();
+            let b: Vec<u64> = (0..n).map(|_| rng.next_u64()).collect();
+            let off = 1 + rng.gen_index(63) as u32;
+            (a, b, off)
+        },
+        |(a, b, off)| {
+            let act = Dispatch::active();
+            let sc = Dispatch::scalar();
+            assert_eq!(act.popcount(a), sc.popcount(a), "popcount");
+            assert_eq!(act.count_and(a, b), sc.count_and(a, b), "count_and");
+            let (mut d1, mut d2) = (vec![0u64; a.len()], vec![0u64; a.len()]);
+            act.funnel_shr(a, *off, &mut d1);
+            sc.funnel_shr(a, *off, &mut d2);
+            assert_eq!(d1, d2, "funnel_shr off={off}");
+            for (name, f) in [
+                ("and", Dispatch::and_words as fn(&Dispatch, &mut [u64], &[u64])),
+                ("or", Dispatch::or_words),
+                ("xor", Dispatch::xor_words),
+            ] {
+                let (mut x1, mut x2) = (a.clone(), a.clone());
+                f(act, &mut x1, b);
+                f(sc, &mut x2, b);
+                assert_eq!(x1, x2, "{name}");
+            }
+            for &w in a.iter() {
+                assert_eq!(act.compress_even(w), sc.compress_even(w), "compress_even");
+            }
+            true
+        },
+    );
+}
+
+/// The fused AND+popcount equals the two-step path on the `BitVec`
+/// level, including lengths with a partial tail word.
+#[test]
+fn prop_count_and_matches_two_step() {
+    check_simple(
+        163,
+        200,
+        |rng| {
+            let n = 1 + rng.gen_index(300);
+            (rand_bools(rng, n, 0.5), rand_bools(rng, n, 0.5))
+        },
+        |(a, b)| {
+            let (pa, pb) = (to_bitvec(a), to_bitvec(b));
+            let mut anded = pa.clone();
+            anded.and_with(&pb);
+            let reference = a.iter().zip(b).filter(|&(&x, &y)| x && y).count();
+            pa.count_and(&pb) == anded.popcount() && pa.count_and(&pb) == reference
+        },
+    );
+}
+
+/// `Dispatch::scalar()` is always the scalar table, and when the
+/// forced-scalar override is set the dispatched table collapses onto
+/// it. (The override assertion only bites in the CI lane that exports
+/// `SCNN_NO_SIMD=1` — detection runs once per process, so the default
+/// lane can't probe it in-process.)
+#[test]
+fn forced_scalar_override() {
+    assert_eq!(Dispatch::scalar().level(), Level::Scalar);
+    if std::env::var("SCNN_NO_SIMD").is_ok_and(|v| v != "0") {
+        assert_eq!(Dispatch::active().level(), Level::Scalar);
+    }
+}
+
+/// Violating the tail-bits-zero invariant through `as_mut_words` is
+/// caught by the `debug_assert!` in the word-level consumers instead
+/// of silently corrupting counts — the SIMD kernels depend on it.
+#[test]
+#[cfg(debug_assertions)]
+#[should_panic(expected = "stale bits")]
+fn tail_invariant_violation_is_caught() {
+    let mut b = BitVec::zeros(70);
+    assert!(b.tail_is_zero());
+    // Plant a bit at position 74 — past len, inside the last word.
+    b.as_mut_words()[1] |= 1 << 10;
+    assert!(!b.tail_is_zero());
+    let _ = b.popcount();
 }
 
 /// Spatial-temporal BSN bit path with word-parallel chunk extraction
