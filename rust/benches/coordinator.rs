@@ -82,7 +82,7 @@ fn sweep_batch_policy() {
             adaptive,
             ..BatchPolicy::default()
         };
-        let pool = PoolConfig { workers: 1, policy, queue_depth: 64 };
+        let pool = PoolConfig { workers: 1, policy, queue_depth: 64, ..PoolConfig::default() };
         let coord = Coordinator::start_with(factory, pool).expect("start pool");
         // 2 clients against batch 8: occupancy is low, so the adaptive
         // policy should stop holding batches open and cut p50.

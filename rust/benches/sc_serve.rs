@@ -1,8 +1,9 @@
 //! Native SC serving benchmarks (§Perf): the packed GEMM kernels vs
 //! the naive triple loop, the batched `ScEngine` vs the per-image
-//! `ScExecutor`, the engine's imgs/s at N threads, and a
-//! worker-scaling sweep of the pool on the **real SC model** (backend
-//! `sc`) instead of the synthetic stand-in.
+//! `ScExecutor`, the engine's imgs/s at N threads, a worker-scaling
+//! sweep of the pool on the **real SC model** (backend `sc`) instead
+//! of the synthetic stand-in, and a chaos-degradation series (goodput
+//! + p99 of the supervised pool under injected worker panics).
 //!
 //! With `BENCH_JSON=<path>` (what `make bench-json` sets) the results
 //! are also written as machine-readable JSON so the perf trajectory is
@@ -16,9 +17,12 @@
 //! uses to keep the artifact-producing run short (fewer measurement
 //! iterations, pool sweep capped at 2 workers).
 
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
-use scnn::coordinator::{Backend, Coordinator, ServeConfig};
+use scnn::coordinator::{
+    chaos_factory, Backend, ChaosSwitch, Coordinator, ExecutorSpec, PoolConfig, ServeConfig,
+    SyntheticExecutor,
+};
 use scnn::data::{Dataset, Split, SynthCifar, SynthDigits};
 use scnn::nn::gemm::{gemm_naive, I8Panel, TernaryPanel};
 use scnn::nn::model::{ModelCfg, ModelParams};
@@ -283,6 +287,82 @@ fn pool_sweep_sc(report: &mut JsonReport) {
     report.add_scalar(&format!("pool/sc/speedup_n{top}_vs_n1"), speedup, "x");
 }
 
+/// Degradation-under-chaos series: goodput (successfully answered
+/// req/s) and p99 latency of a supervised pool while worker panics
+/// are injected at increasing rates. The synthetic backend isolates
+/// supervision overhead (panic → typed error → in-thread respawn)
+/// from model compute, so the series tracks the fault-tolerance
+/// layer's own cost.
+fn chaos_degradation(report: &mut JsonReport) {
+    println!("\n== degradation under injected worker panics (supervised pool) ==");
+    let spec = ExecutorSpec { image_len: 64, batch: 8, classes: 10 };
+    let rates: &[f64] = if quick() { &[0.0, 0.05] } else { &[0.0, 0.01, 0.05, 0.2] };
+    let mut goodput0 = 0.0f64;
+    for &rate in rates {
+        let switch = ChaosSwitch::new(0.0);
+        let factory = chaos_factory(
+            SyntheticExecutor::factory(spec, Duration::from_micros(500)),
+            switch.clone(),
+            0xBAD,
+        );
+        let coord = Coordinator::start_with(
+            factory,
+            PoolConfig {
+                workers: 2,
+                queue_depth: 64,
+                restart_budget: 1_000_000,
+                ..PoolConfig::default()
+            },
+        )
+        .expect("start supervised pool");
+        switch.set_rate(rate);
+        let clients = 4usize;
+        let per_client = if quick() { 64usize } else { 256usize };
+        let t0 = Instant::now();
+        let mut handles = Vec::new();
+        for t in 0..clients {
+            let client = coord.client();
+            handles.push(std::thread::spawn(move || {
+                let mut rng = Rng::new(0xD00D + t as u64);
+                let mut ok = 0u64;
+                for _ in 0..per_client {
+                    let x: Vec<f32> = (0..spec.image_len).map(|_| rng.f64() as f32).collect();
+                    if client.infer_within(x, Some(Duration::from_secs(5))).is_ok() {
+                        ok += 1;
+                    }
+                }
+                ok
+            }));
+        }
+        let mut ok = 0u64;
+        for h in handles {
+            ok += h.join().expect("bench client");
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let goodput = ok as f64 / wall.max(1e-9);
+        switch.off();
+        let m = coord.shutdown();
+        let total = (clients * per_client) as u64;
+        println!(
+            "sc_serve/chaos/rate={rate}  goodput {goodput:>7.0} req/s  ok {ok}/{total}  \
+             p99 {:?}  panics {}  respawns {}",
+            m.p99, m.worker_panics, m.worker_respawns
+        );
+        report.add_scalar(&format!("chaos/goodput/rate={rate}"), goodput, "req/s");
+        report.add_scalar(&format!("chaos/p99_ms/rate={rate}"), m.p99.as_secs_f64() * 1e3, "ms");
+        if rate == 0.0 {
+            goodput0 = goodput;
+        } else {
+            report.add_scalar(
+                &format!("chaos/goodput_retained/rate={rate}"),
+                goodput / goodput0.max(1e-9),
+                "frac",
+            );
+        }
+        assert!(ok > 0, "rate {rate}: supervised pool must keep serving");
+    }
+}
+
 fn main() {
     let mut report = JsonReport::new("sc_serve");
     gemm_vs_naive(&mut report);
@@ -290,6 +370,7 @@ fn main() {
     engine_vs_executor(&mut report);
     engine_threads_sweep(&mut report);
     pool_sweep_sc(&mut report);
+    chaos_degradation(&mut report);
     if let Ok(path) = std::env::var("BENCH_JSON") {
         report.write(&path).expect("write BENCH_JSON");
         println!("\nwrote {} entries to {path}", report.len());

@@ -179,6 +179,7 @@ pub fn prepared_for(cfg: &ServeConfig) -> Result<Arc<Prepared>> {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
 

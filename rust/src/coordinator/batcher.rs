@@ -26,7 +26,25 @@
 //! Shutdown is graceful: [`Coordinator::shutdown`] signals stop,
 //! workers drain every queued request into final batches, and the call
 //! joins them before returning the last snapshot.
+//!
+//! Faults are supervised: the executor call of every batch runs under
+//! [`std::panic::catch_unwind`], so a panicking model fails exactly
+//! the requests of that batch — each with a typed
+//! [`WORKER_PANIC_ERROR`] instead of a hung client — and the worker
+//! rebuilds its executor from the shared [`ExecutorFactory`] up to
+//! [`PoolConfig::restart_budget`] respawns before giving up its
+//! shard. A worker that dies for good leaves the pool degraded
+//! ([`Coordinator::healthy`] turns false) but still serving on the
+//! surviving shards.
+//!
+//! Deadlines are enforced pool-side: a request may carry one
+//! ([`InferenceClient::infer_within`]), and workers check it at
+//! dequeue and again at batch admission, shedding expired work with a
+//! typed [`DEADLINE_EXPIRED_ERROR`] and a distinct
+//! `deadline_expired` counter rather than spending executor time on
+//! an answer nobody is waiting for.
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{self, RecvTimeoutError, TrySendError};
 use std::sync::Arc;
@@ -93,7 +111,17 @@ impl BatchPolicy {
 struct Request {
     x: Vec<f32>,
     t0: Instant,
+    /// Absolute point after which the pool sheds instead of executes
+    /// (`None` = wait forever, the pre-deadline behavior).
+    deadline: Option<Instant>,
     resp: mpsc::SyncSender<Result<Vec<f32>>>,
+}
+
+impl Request {
+    /// True once the request's deadline (if any) has passed.
+    fn expired(&self, now: Instant) -> bool {
+        self.deadline.is_some_and(|d| now > d)
+    }
 }
 
 /// State shared by the coordinator, its clients and its workers.
@@ -103,6 +131,14 @@ struct Shared {
     rr: AtomicUsize,
     inflight: AtomicUsize,
     inflight_peak: AtomicUsize,
+    /// Executor panics caught by worker supervision.
+    worker_panics: AtomicU64,
+    /// Executors rebuilt after a caught panic.
+    worker_respawns: AtomicU64,
+    /// Requests shed because their deadline passed while queued.
+    deadline_expired: AtomicU64,
+    /// Worker threads currently serving their shard.
+    live_workers: AtomicUsize,
 }
 
 impl Shared {
@@ -113,6 +149,10 @@ impl Shared {
             rr: AtomicUsize::new(0),
             inflight: AtomicUsize::new(0),
             inflight_peak: AtomicUsize::new(0),
+            worker_panics: AtomicU64::new(0),
+            worker_respawns: AtomicU64::new(0),
+            deadline_expired: AtomicU64::new(0),
+            live_workers: AtomicUsize::new(0),
         }
     }
 
@@ -163,12 +203,42 @@ impl InferenceClient {
     /// # }
     /// ```
     pub fn infer(&self, x: Vec<f32>) -> Result<Vec<f32>> {
+        self.infer_within(x, None)
+    }
+
+    /// Blocking inference with a deadline: after `timeout` the pool
+    /// sheds the request (typed [`DEADLINE_EXPIRED_ERROR`], counted in
+    /// [`super::MetricsSnapshot::deadline_expired`]) instead of
+    /// executing it. `None` waits forever, like
+    /// [`InferenceClient::infer`]. The call itself never outlives the
+    /// deadline by more than a fixed grace period, even against a
+    /// wedged pool.
+    pub fn infer_within(&self, x: Vec<f32>, timeout: Option<Duration>) -> Result<Vec<f32>> {
         anyhow::ensure!(x.len() == self.image_len, "image length mismatch");
+        let deadline = timeout.map(|t| Instant::now() + t);
         let (tx, rx) = mpsc::sync_channel(1);
-        self.submit(Request { x, t0: Instant::now(), resp: tx })?;
-        match rx.recv() {
+        self.submit(Request { x, t0: Instant::now(), deadline, resp: tx })?;
+        let received = match deadline {
+            None => rx.recv().map_err(|_| RecvTimeoutError::Disconnected),
+            // Workers shed expired work themselves, so the verdict
+            // (logits or the typed expiry) normally arrives promptly;
+            // waiting a grace past the deadline only guards against a
+            // wedged pool and keeps "no caller ever hangs" true
+            // unconditionally.
+            Some(d) => {
+                rx.recv_timeout(d.saturating_duration_since(Instant::now()) + DEADLINE_GRACE)
+            }
+        };
+        match received {
             Ok(result) => result,
-            Err(_) => {
+            Err(RecvTimeoutError::Timeout) => {
+                // Abandon the response channel; the worker still owns
+                // the request and accounts for it (shed or executed)
+                // when it gets there, so the gauge is not repaired
+                // here.
+                anyhow::bail!("{} (no verdict within deadline + grace)", DEADLINE_EXPIRED_ERROR);
+            }
+            Err(RecvTimeoutError::Disconnected) => {
                 // The response channel died without an answer: the
                 // request raced a shutdown past the worker's final
                 // drain (or the worker died). Either way it is
@@ -315,6 +385,10 @@ pub struct ServeConfig {
     /// sharding so the threads still cut latency). Total serving
     /// threads scale as `workers × threads`.
     pub threads: usize,
+    /// Executor respawns each worker may spend recovering from caught
+    /// panics before it gives up its shard (see
+    /// [`PoolConfig::restart_budget`]).
+    pub restart_budget: usize,
 }
 
 impl ServeConfig {
@@ -331,6 +405,7 @@ impl ServeConfig {
             seed: 42,
             batch: 8,
             threads: 1,
+            restart_budget: DEFAULT_RESTART_BUDGET,
         }
     }
 }
@@ -345,19 +420,49 @@ pub struct PoolConfig {
     pub policy: BatchPolicy,
     /// Per-shard request queue depth (backpressure bound).
     pub queue_depth: usize,
+    /// How many times one worker may rebuild its executor after a
+    /// caught panic before giving up its shard. `0` means a single
+    /// panic retires the worker; the pool keeps serving on whatever
+    /// shards survive.
+    pub restart_budget: usize,
 }
 
 impl Default for PoolConfig {
     fn default() -> Self {
-        Self { workers: 1, policy: BatchPolicy::default(), queue_depth: 1024 }
+        Self {
+            workers: 1,
+            policy: BatchPolicy::default(),
+            queue_depth: 1024,
+            restart_budget: DEFAULT_RESTART_BUDGET,
+        }
     }
 }
 
 /// How often an idle worker re-checks the stop flag.
 const IDLE_POLL: Duration = Duration::from_millis(20);
 
+/// Default [`PoolConfig::restart_budget`]: generous enough to ride
+/// out a flaky model, small enough that a deterministically-crashing
+/// one retires its workers instead of burning CPU on rebuilds.
+pub const DEFAULT_RESTART_BUDGET: usize = 3;
+
+/// How long past its deadline [`InferenceClient::infer_within`] waits
+/// for the pool's verdict before abandoning the response channel.
+/// Workers answer expired requests with the typed shed error as soon
+/// as they reach them, so this bound only matters against a wedged
+/// pool.
+const DEADLINE_GRACE: Duration = Duration::from_secs(1);
+
 /// Marker prefix of load-shedding rejections (see [`is_shed_error`]).
 pub const SHED_ERROR: &str = "overloaded: request shed";
+
+/// Marker prefix of requests failed by a supervised executor panic
+/// (see [`is_worker_panic_error`]).
+pub const WORKER_PANIC_ERROR: &str = "worker panicked: request failed";
+
+/// Marker prefix of requests shed because their deadline passed (see
+/// [`is_deadline_error`]).
+pub const DEADLINE_EXPIRED_ERROR: &str = "deadline expired: request shed";
 
 /// True when an [`InferenceClient::infer`]/`classify` error is a
 /// load-shedding rejection ([`OverloadPolicy::Shed`]) rather than a
@@ -365,6 +470,42 @@ pub const SHED_ERROR: &str = "overloaded: request shed";
 /// text themselves.
 pub fn is_shed_error(e: &anyhow::Error) -> bool {
     format!("{e}").starts_with(SHED_ERROR)
+}
+
+/// True when an error reports the supervised panic of the worker that
+/// held the request. The request did not execute to completion;
+/// retrying on another connection (or after the respawn) is safe.
+pub fn is_worker_panic_error(e: &anyhow::Error) -> bool {
+    format!("{e}").starts_with(WORKER_PANIC_ERROR)
+}
+
+/// True when an error reports a deadline-expired shed — the pool
+/// never executed the request (distinct from overload sheds, see
+/// [`is_shed_error`], and from admission sheds, which also use the
+/// [`SHED_ERROR`] marker).
+pub fn is_deadline_error(e: &anyhow::Error) -> bool {
+    format!("{e}").starts_with(DEADLINE_EXPIRED_ERROR)
+}
+
+/// Why a worker's serve loop returned to its supervisor.
+enum WorkerExit {
+    /// Stop was signaled (drain done) or every sender disconnected.
+    Clean,
+    /// The executor panicked mid-batch; its state is suspect and must
+    /// be rebuilt before serving again.
+    Panicked,
+}
+
+/// Best-effort text of a caught panic payload (the `&str`/`String`
+/// payloads `panic!` produces; anything else gets a placeholder).
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> &str {
+    if let Some(s) = payload.downcast_ref::<&'static str>() {
+        s
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.as_str()
+    } else {
+        "non-string panic payload"
+    }
 }
 
 /// The running pool (owns the worker threads).
@@ -382,8 +523,12 @@ impl Coordinator {
     /// against the artifact store; every other backend is taken
     /// literally. Blocks until every worker has built its executor.
     pub fn start_backend(backend: Backend, cfg: ServeConfig) -> Result<Self> {
-        let pool =
-            PoolConfig { workers: cfg.workers, policy: cfg.policy, queue_depth: cfg.queue_depth };
+        let pool = PoolConfig {
+            workers: cfg.workers,
+            policy: cfg.policy,
+            queue_depth: cfg.queue_depth,
+            restart_budget: cfg.restart_budget,
+        };
         let factory = backend.factory(cfg)?;
         Self::start_with(factory, pool)
     }
@@ -407,6 +552,7 @@ impl Coordinator {
                 workers: cfg.workers,
                 policy: cfg.policy,
                 queue_depth: cfg.queue_depth,
+                restart_budget: cfg.restart_budget,
             };
             let (image_len, classes) = fallback;
             Self::start_with(super::SyntheticExecutor::demo_factory(image_len, classes), pool)
@@ -433,13 +579,28 @@ impl Coordinator {
             let shared = shared.clone();
             let ready_tx = ready_tx.clone();
             let policy = pool.policy;
+            let restart_budget = pool.restart_budget;
             let handle = std::thread::Builder::new()
                 .name(format!("scnn-worker-{w}"))
                 .spawn(move || match (factory.as_ref())(w) {
-                    Ok(mut exec) => {
+                    Ok(exec) => {
+                        // Count the worker live *before* reporting
+                        // ready, so `healthy()` is true the moment
+                        // `start_with` returns.
+                        shared.live_workers.fetch_add(1, Ordering::Relaxed);
                         let _ = ready_tx.send(Ok(exec.spec()));
                         drop(ready_tx);
-                        Self::worker_loop(exec.as_mut(), policy, &rx, &m, &shared);
+                        Self::supervise(
+                            w,
+                            exec,
+                            &factory,
+                            policy,
+                            restart_budget,
+                            &rx,
+                            &m,
+                            &shared,
+                        );
+                        shared.live_workers.fetch_sub(1, Ordering::Relaxed);
                     }
                     Err(e) => {
                         let _ = ready_tx.send(Err(e));
@@ -460,7 +621,9 @@ impl Coordinator {
                 ),
             }
         }
-        let spec = spec.expect("n >= 1 workers reported ready");
+        let Some(spec) = spec else {
+            anyhow::bail!("no worker reported ready");
+        };
         let client = InferenceClient {
             shards,
             shared: shared.clone(),
@@ -471,6 +634,57 @@ impl Coordinator {
         Ok(Self { client, workers, metrics, shared, batch: spec.batch })
     }
 
+    /// Run one worker under supervision: serve until the loop exits
+    /// cleanly, and after a caught panic rebuild the executor from the
+    /// factory — up to `restart_budget` respawns — and keep serving
+    /// the same shard. The shard receiver stays alive across respawns,
+    /// so queued requests survive the executor they were queued
+    /// behind; only budget exhaustion (or a failing factory)
+    /// disconnects the shard, degrading the pool to its surviving
+    /// workers.
+    #[allow(clippy::too_many_arguments)]
+    fn supervise(
+        w: usize,
+        mut exec: Box<dyn BatchExecutor>,
+        factory: &ExecutorFactory,
+        policy: BatchPolicy,
+        restart_budget: usize,
+        rx: &mpsc::Receiver<Request>,
+        metrics: &ServerMetrics,
+        shared: &Shared,
+    ) {
+        let mut respawns = 0usize;
+        loop {
+            // The catch_unwind around the whole loop is a backstop for
+            // panics outside the executor call (which has its own,
+            // per-batch catch in `execute_batch`): clients of requests
+            // dropped mid-unwind see a closed channel, not a hang.
+            let exit = catch_unwind(AssertUnwindSafe(|| {
+                Self::worker_loop(exec.as_mut(), policy, rx, metrics, shared)
+            }));
+            match exit {
+                Ok(WorkerExit::Clean) => break,
+                Ok(WorkerExit::Panicked) | Err(_) => {
+                    shared.worker_panics.fetch_add(1, Ordering::Relaxed);
+                    if respawns >= restart_budget {
+                        break;
+                    }
+                    // The unwound executor's state is suspect; rebuild
+                    // from scratch. A factory that fails (or panics)
+                    // retires the worker on the spot.
+                    match catch_unwind(AssertUnwindSafe(|| (factory)(w))) {
+                        Ok(Ok(fresh)) => {
+                            exec = fresh;
+                            respawns += 1;
+                            shared.worker_respawns.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Ok(Err(_)) | Err(_) => break,
+                    }
+                }
+            }
+        }
+    }
+
     /// One worker: batch its shard queue into the executor until the
     /// pool stops (then drain) or every sender disappears.
     fn worker_loop(
@@ -479,7 +693,7 @@ impl Coordinator {
         rx: &mpsc::Receiver<Request>,
         metrics: &ServerMetrics,
         shared: &Shared,
-    ) {
+    ) -> WorkerExit {
         let spec = exec.spec();
         // Start pessimistic (assume load) so cold-start bursts batch well.
         let mut occupancy_ewma = 1.0f64;
@@ -487,6 +701,9 @@ impl Coordinator {
             // Block for the first request, re-checking stop while idle.
             let first = loop {
                 match rx.recv_timeout(IDLE_POLL) {
+                    // Dequeue-time deadline check: expired work is
+                    // shed before it can seed (and hold open) a batch.
+                    Ok(r) if r.expired(Instant::now()) => Self::shed_expired(r, shared),
                     Ok(r) => break r,
                     Err(RecvTimeoutError::Timeout) => {
                         if shared.stop.load(Ordering::Relaxed) {
@@ -521,7 +738,9 @@ impl Coordinator {
             }
             occupancy_ewma = 0.8 * occupancy_ewma
                 + 0.2 * (pending.len() as f64 / spec.batch.max(1) as f64);
-            Self::execute_batch(exec, &spec, pending, metrics, shared);
+            if !Self::execute_batch(exec, &spec, pending, metrics, shared) {
+                return WorkerExit::Panicked;
+            }
         }
         // Graceful drain: serve everything still queued, then exit.
         loop {
@@ -535,32 +754,80 @@ impl Coordinator {
             if pending.is_empty() {
                 break;
             }
-            Self::execute_batch(exec, &spec, pending, metrics, shared);
+            if !Self::execute_batch(exec, &spec, pending, metrics, shared) {
+                return WorkerExit::Panicked;
+            }
         }
+        WorkerExit::Clean
     }
 
-    /// Pad, execute, fan out, record.
+    /// Answer one expired request with the typed deadline error.
+    /// `deadline_expired` is the only counter that moves — never
+    /// `shed` or `errors` — so operators can separate deadline sheds
+    /// from overload sheds and executor failures exactly.
+    fn shed_expired(r: Request, shared: &Shared) {
+        let queued = r.t0.elapsed();
+        let _ = r.resp.send(Err(anyhow::anyhow!(
+            "{} (queued {:.1} ms)",
+            DEADLINE_EXPIRED_ERROR,
+            queued.as_secs_f64() * 1e3
+        )));
+        shared.deadline_expired.fetch_add(1, Ordering::Relaxed);
+        shared.note_done(1);
+    }
+
+    /// Pad, execute (panic-supervised), fan out, record. Returns
+    /// `false` when the executor panicked: every request of the batch
+    /// has been answered with the typed [`WORKER_PANIC_ERROR`] and the
+    /// caller must rebuild the executor before serving again.
     fn execute_batch(
         exec: &mut dyn BatchExecutor,
         spec: &ExecutorSpec,
         pending: Vec<Request>,
         metrics: &ServerMetrics,
         shared: &Shared,
-    ) {
+    ) -> bool {
+        // Batch-admission deadline check: work that expired while
+        // queued behind earlier batches (or while this one was held
+        // open) is shed, not executed.
+        let now = Instant::now();
+        let (pending, dead): (Vec<Request>, Vec<Request>) =
+            pending.into_iter().partition(|r| !r.expired(now));
+        for r in dead {
+            Self::shed_expired(r, shared);
+        }
+        if pending.is_empty() {
+            return true;
+        }
         let filled = pending.len();
         let mut x = vec![0.0f32; spec.batch * spec.image_len];
         for (i, r) in pending.iter().enumerate() {
             x[i * spec.image_len..(i + 1) * spec.image_len].copy_from_slice(&r.x);
         }
-        let result = exec.run_batch(&x, filled).and_then(|logits| {
-            anyhow::ensure!(
-                logits.len() == spec.batch * spec.classes,
-                "executor returned {} logits, expected {}",
-                logits.len(),
-                spec.batch * spec.classes
-            );
-            Ok(logits)
-        });
+        let result = match catch_unwind(AssertUnwindSafe(|| exec.run_batch(&x, filled))) {
+            Ok(result) => result.and_then(|logits| {
+                anyhow::ensure!(
+                    logits.len() == spec.batch * spec.classes,
+                    "executor returned {} logits, expected {}",
+                    logits.len(),
+                    spec.batch * spec.classes
+                );
+                Ok(logits)
+            }),
+            Err(payload) => {
+                // The executor panicked mid-batch: fail exactly these
+                // requests with the typed marker (clients holding them
+                // get an error, not a dead channel) and report the
+                // poisoned executor to the supervisor.
+                let msg = panic_message(payload.as_ref());
+                for r in pending {
+                    let _ = r.resp.send(Err(anyhow::anyhow!("{}: {}", WORKER_PANIC_ERROR, msg)));
+                }
+                metrics.record_errors(filled as u64);
+                shared.note_done(filled);
+                return false;
+            }
+        };
         match result {
             Ok(logits) => {
                 let mut latencies = Vec::with_capacity(filled);
@@ -580,6 +847,7 @@ impl Coordinator {
             }
         }
         shared.note_done(filled);
+        true
     }
 
     /// A cloneable client handle.
@@ -592,13 +860,33 @@ impl Coordinator {
         self.metrics.len()
     }
 
+    /// Workers currently serving their shard (a worker that exhausted
+    /// its restart budget no longer counts).
+    pub fn live_workers(&self) -> usize {
+        self.shared.live_workers.load(Ordering::Relaxed)
+    }
+
+    /// True while the pool is fully staffed: not stopped and every
+    /// worker thread still serving. A worker retired by restart-budget
+    /// exhaustion leaves the pool degraded — still serving on the
+    /// surviving shards, but unhealthy.
+    pub fn healthy(&self) -> bool {
+        !self.shared.stop.load(Ordering::Relaxed) && self.live_workers() == self.workers()
+    }
+
     /// Aggregated metrics snapshot across all workers.
     pub fn metrics(&self) -> super::MetricsSnapshot {
         ServerMetrics::aggregate(
             &self.metrics,
             self.batch,
-            self.shared.shed.load(Ordering::Relaxed),
-            self.shared.inflight_peak.load(Ordering::Relaxed),
+            super::PoolCounters {
+                shed: self.shared.shed.load(Ordering::Relaxed),
+                inflight_peak: self.shared.inflight_peak.load(Ordering::Relaxed),
+                worker_panics: self.shared.worker_panics.load(Ordering::Relaxed),
+                worker_respawns: self.shared.worker_respawns.load(Ordering::Relaxed),
+                deadline_expired: self.shared.deadline_expired.load(Ordering::Relaxed),
+                live_workers: self.shared.live_workers.load(Ordering::Relaxed),
+            },
         )
     }
 
@@ -624,6 +912,7 @@ impl Drop for Coordinator {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
 
@@ -658,5 +947,39 @@ mod tests {
         let cfg = ServeConfig::new("artifacts", "scnet10");
         assert_eq!(cfg.workers, 1);
         assert_eq!(cfg.queue_depth, 1024);
+        assert_eq!(cfg.restart_budget, DEFAULT_RESTART_BUDGET);
+        assert_eq!(PoolConfig::default().restart_budget, DEFAULT_RESTART_BUDGET);
+    }
+
+    #[test]
+    fn error_markers_are_distinguishable() {
+        let shed = anyhow::anyhow!("{} (4 shard queues full)", SHED_ERROR);
+        let panic = anyhow::anyhow!("{}: boom", WORKER_PANIC_ERROR);
+        let expired = anyhow::anyhow!("{} (queued 7.0 ms)", DEADLINE_EXPIRED_ERROR);
+        assert!(is_shed_error(&shed) && !is_worker_panic_error(&shed) && !is_deadline_error(&shed));
+        assert!(is_worker_panic_error(&panic) && !is_shed_error(&panic));
+        assert!(is_deadline_error(&expired) && !is_shed_error(&expired));
+        assert!(!is_deadline_error(&panic) && !is_worker_panic_error(&expired));
+    }
+
+    #[test]
+    fn panic_message_extracts_common_payloads() {
+        let s = catch_unwind(|| std::panic::panic_any("static str")).unwrap_err();
+        assert_eq!(panic_message(s.as_ref()), "static str");
+        let owned = catch_unwind(|| std::panic::panic_any("owned".to_string())).unwrap_err();
+        assert_eq!(panic_message(owned.as_ref()), "owned");
+        let odd = catch_unwind(|| std::panic::panic_any(42u32)).unwrap_err();
+        assert_eq!(panic_message(odd.as_ref()), "non-string panic payload");
+    }
+
+    #[test]
+    fn request_expiry_is_deadline_relative() {
+        let (tx, _rx) = mpsc::sync_channel(1);
+        let now = Instant::now();
+        let r = Request { x: vec![], t0: now, deadline: None, resp: tx.clone() };
+        assert!(!r.expired(now + Duration::from_secs(3600)));
+        let r = Request { x: vec![], t0: now, deadline: Some(now), resp: tx };
+        assert!(!r.expired(now), "a deadline is inclusive");
+        assert!(r.expired(now + Duration::from_nanos(1)));
     }
 }

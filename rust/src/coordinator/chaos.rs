@@ -1,0 +1,233 @@
+//! Chaos injection for the serving stack: deliberately break things
+//! at configurable rates so the fault-tolerance layer (worker
+//! supervision, deadlines, client retries) can be exercised by real
+//! tests and benchmarks instead of trusted on faith.
+//!
+//! Like [`SyntheticExecutor`], this module is always compiled but is
+//! test/bench infrastructure: nothing in the serving path depends on
+//! it. The pieces:
+//!
+//! - [`ChaosSwitch`] — a shared, atomically updatable panic rate.
+//! - [`chaos_factory`] — wraps any [`ExecutorFactory`] so each built
+//!   executor panics inside `run_batch` with probability `rate` per
+//!   batch (deterministic per worker: seed ⊕ worker index).
+//! - Connection-chaos helpers ([`malformed_frame`], [`slow_writer`],
+//!   [`drop_after`]) — byte-level misbehavior for socket tests:
+//!   garbage frames, stalled writes, connections cut mid-frame.
+//!
+//! Injected panics carry the [`CHAOS_PANIC`] marker so a test can
+//! tell a deliberate crash from a real bug escaping into the harness.
+
+use std::io::Write;
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::util::Rng;
+use crate::Result;
+
+use super::executor::{BatchExecutor, ExecutorFactory, ExecutorSpec};
+
+/// Panic-message prefix for injected worker panics.
+pub const CHAOS_PANIC: &str = "chaos: injected worker panic";
+
+/// A shared dial for the injected panic rate, adjustable while the
+/// pool is running (the f64 rate is stored as its bit pattern in an
+/// `AtomicU64`). Clone the [`Arc`] into the factory and keep one
+/// handle in the test to turn injection on and off.
+#[derive(Debug)]
+pub struct ChaosSwitch {
+    rate_bits: AtomicU64,
+}
+
+impl ChaosSwitch {
+    /// New switch at `rate` (probability per batch, clamped to [0, 1]).
+    pub fn new(rate: f64) -> Arc<Self> {
+        let s = Arc::new(Self { rate_bits: AtomicU64::new(0) });
+        s.set_rate(rate);
+        s
+    }
+
+    /// Current panic probability per batch.
+    pub fn rate(&self) -> f64 {
+        f64::from_bits(self.rate_bits.load(Ordering::Relaxed))
+    }
+
+    /// Update the panic probability (clamped to [0, 1]); takes effect
+    /// on the next batch of every worker sharing the switch.
+    pub fn set_rate(&self, rate: f64) {
+        self.rate_bits.store(rate.clamp(0.0, 1.0).to_bits(), Ordering::Relaxed);
+    }
+
+    /// Shorthand for `set_rate(0.0)`.
+    pub fn off(&self) {
+        self.set_rate(0.0);
+    }
+}
+
+/// An executor wrapper that panics before delegating with the
+/// probability its [`ChaosSwitch`] currently reads.
+struct ChaosExecutor {
+    inner: Box<dyn BatchExecutor>,
+    switch: Arc<ChaosSwitch>,
+    rng: Rng,
+    batches: u64,
+}
+
+impl BatchExecutor for ChaosExecutor {
+    fn spec(&self) -> ExecutorSpec {
+        self.inner.spec()
+    }
+
+    fn run_batch(&mut self, x: &[f32], filled: usize) -> Result<Vec<f32>> {
+        self.batches += 1;
+        let rate = self.switch.rate();
+        if rate > 0.0 && self.rng.gen_bool(rate) {
+            panic!("{CHAOS_PANIC} (batch {})", self.batches);
+        }
+        self.inner.run_batch(x, filled)
+    }
+}
+
+/// Wrap `inner` so every executor it builds injects panics at the
+/// switch's current rate. Each worker draws from its own
+/// deterministic stream (`seed ⊕ worker index`), so a given (seed,
+/// rate, traffic) combination crashes reproducibly. Respawned workers
+/// keep advancing their stream — the factory hands out a freshly
+/// seeded wrapper per *build*, counting builds per worker.
+pub fn chaos_factory(
+    inner: ExecutorFactory,
+    switch: Arc<ChaosSwitch>,
+    seed: u64,
+) -> ExecutorFactory {
+    // Per-worker build counter so a respawned worker's wrapper does
+    // not replay the identical panic schedule of its predecessor.
+    let builds = Arc::new(AtomicU64::new(0));
+    Box::new(move |worker| {
+        let exec = (inner)(worker)?;
+        let build = builds.fetch_add(1, Ordering::Relaxed);
+        let stream = seed ^ (worker as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ (build << 32);
+        Ok(Box::new(ChaosExecutor {
+            inner: exec,
+            switch: switch.clone(),
+            rng: Rng::new(stream | 1),
+            batches: 0,
+        }))
+    })
+}
+
+/// Bytes that are *not* a valid frame: correct length prefix, corrupt
+/// magic. Feeding these to a server must yield a `BadRequest`
+/// response and a closed connection — never a crash.
+pub fn malformed_frame() -> Vec<u8> {
+    let body = [0xDEu8, 0xAD, 0xBE, 0xEF, 0x01, 0x00];
+    let mut out = Vec::with_capacity(4 + body.len());
+    out.extend_from_slice(&(body.len() as u32).to_le_bytes());
+    out.extend_from_slice(&body);
+    out
+}
+
+/// Write `bytes` one byte at a time with `stall` between bytes — a
+/// slow-reader/slow-writer stall. Returns early on the first socket
+/// error (the peer may legitimately cut us off).
+pub fn slow_writer(stream: &mut TcpStream, bytes: &[u8], stall: Duration) -> Result<()> {
+    for b in bytes {
+        if stream.write_all(std::slice::from_ref(b)).is_err() {
+            anyhow::bail!("peer closed during slow write");
+        }
+        let _ = stream.flush();
+        std::thread::sleep(stall);
+    }
+    Ok(())
+}
+
+/// Write only the first `n` bytes of `bytes` and drop the connection
+/// (the stream is consumed and closed on return) — a client dying
+/// mid-frame. The server must discard the partial frame without
+/// wedging the connection slot.
+pub fn drop_after(stream: TcpStream, bytes: &[u8], n: usize) {
+    let mut stream = stream;
+    let n = n.min(bytes.len());
+    let _ = stream.write_all(&bytes[..n]);
+    let _ = stream.flush();
+    drop(stream);
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+    use crate::coordinator::executor::SyntheticExecutor;
+
+    const SPEC: ExecutorSpec = ExecutorSpec { image_len: 4, batch: 2, classes: 3 };
+
+    #[test]
+    fn switch_clamps_and_updates() {
+        let s = ChaosSwitch::new(2.0);
+        assert_eq!(s.rate(), 1.0);
+        s.set_rate(-1.0);
+        assert_eq!(s.rate(), 0.0);
+        s.set_rate(0.25);
+        assert_eq!(s.rate(), 0.25);
+        s.off();
+        assert_eq!(s.rate(), 0.0);
+    }
+
+    #[test]
+    fn zero_rate_is_transparent() {
+        let switch = ChaosSwitch::new(0.0);
+        let factory =
+            chaos_factory(SyntheticExecutor::factory(SPEC, Duration::ZERO), switch, 42);
+        let mut exec = factory(0).unwrap();
+        assert_eq!(exec.spec(), SPEC);
+        let x = vec![0.5; SPEC.image_len * SPEC.batch];
+        let oracle = SyntheticExecutor::factory(SPEC, Duration::ZERO)(0)
+            .unwrap()
+            .run_batch(&x, SPEC.batch)
+            .unwrap();
+        for _ in 0..64 {
+            assert_eq!(exec.run_batch(&x, SPEC.batch).unwrap(), oracle);
+        }
+    }
+
+    #[test]
+    fn full_rate_panics_with_marker() {
+        let switch = ChaosSwitch::new(1.0);
+        let factory =
+            chaos_factory(SyntheticExecutor::factory(SPEC, Duration::ZERO), switch, 42);
+        let mut exec = factory(0).unwrap();
+        let x = vec![0.0; SPEC.image_len * SPEC.batch];
+        let payload = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _ = exec.run_batch(&x, SPEC.batch);
+        }))
+        .expect_err("rate 1.0 must panic");
+        let msg = payload
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_else(|| "non-string payload".into());
+        assert!(msg.starts_with(CHAOS_PANIC), "{msg}");
+    }
+
+    #[test]
+    fn respawned_builds_draw_distinct_streams() {
+        let switch = ChaosSwitch::new(0.0);
+        let factory =
+            chaos_factory(SyntheticExecutor::factory(SPEC, Duration::ZERO), switch, 7);
+        // Two builds for the same worker index must not share a seed
+        // (the wrapper varies the stream by build count).
+        let _ = factory(0).unwrap();
+        let _ = factory(0).unwrap();
+    }
+
+    #[test]
+    fn malformed_frame_is_length_consistent_but_bad() {
+        let bytes = malformed_frame();
+        let mut len = [0u8; 4];
+        len.copy_from_slice(&bytes[0..4]);
+        assert_eq!(u32::from_le_bytes(len) as usize, bytes.len() - 4);
+        let mut r = crate::coordinator::net::FrameReader::new();
+        r.feed(&bytes);
+        assert!(r.try_next().is_err(), "must decode as malformed");
+    }
+}

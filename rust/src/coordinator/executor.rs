@@ -307,6 +307,7 @@ impl BatchExecutor for SyntheticExecutor {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
 

@@ -11,8 +11,16 @@
 //! minute. Counters and the histogram `_sum`/`_count` cover the whole
 //! lifetime.
 
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
 use std::time::Duration;
+
+/// Lock a mutex, recovering the guard from a poisoned lock. Serving
+/// metrics must survive a panicking thread elsewhere in the pool —
+/// the supervisor accounts the panic; the counters (monotone u64s and
+/// a histogram) are meaningful regardless of where the panic landed.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
 
 /// Upper bounds (µs, inclusive) of the fixed latency buckets; one
 /// implicit `+Inf` bucket follows. Spans 50 µs … 1 s, roughly
@@ -170,6 +178,25 @@ pub struct WorkerCounts {
     pub errors: u64,
 }
 
+/// Pool-level counters merged into a [`MetricsSnapshot`]: they live
+/// in the pool's shared admission/supervision state, not in any
+/// per-worker accumulator.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PoolCounters {
+    /// Requests rejected by load shedding or tenant admission.
+    pub shed: u64,
+    /// High-water mark of admitted, unanswered requests.
+    pub inflight_peak: usize,
+    /// Executor panics caught by worker supervision.
+    pub worker_panics: u64,
+    /// Executors rebuilt after a caught panic.
+    pub worker_respawns: u64,
+    /// Requests shed because their deadline passed while queued.
+    pub deadline_expired: u64,
+    /// Worker threads currently serving their shard.
+    pub live_workers: usize,
+}
+
 /// A point-in-time snapshot aggregated over the whole pool.
 #[derive(Clone, Debug)]
 pub struct MetricsSnapshot {
@@ -201,6 +228,18 @@ pub struct MetricsSnapshot {
     /// Peak number of requests queued/executing at once (high-water
     /// mark of the admission gauge).
     pub inflight_peak: usize,
+    /// Executor panics caught by worker supervision (each failed one
+    /// batch of requests with a typed error).
+    pub worker_panics: u64,
+    /// Executors rebuilt from the factory after a caught panic
+    /// (bounded by the pool's restart budget).
+    pub worker_respawns: u64,
+    /// Requests shed because their deadline passed before execution
+    /// (disjoint from `shed` and `errors`).
+    pub deadline_expired: u64,
+    /// Worker threads currently serving; less than `workers` once a
+    /// worker exhausts its restart budget.
+    pub live_workers: usize,
     /// Full-lifetime latency histogram (bucket-wise sum over workers).
     pub hist: LatencyHistogram,
     /// Per-worker breakdown, indexed by worker.
@@ -216,7 +255,7 @@ impl ServerMetrics {
     /// Record one executed batch: `filled` live requests with their
     /// end-to-end latencies, `capacity` total slots.
     pub fn record_batch(&self, latencies: &[Duration], capacity: usize) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock(&self.inner);
         g.requests += latencies.len() as u64;
         g.batches += 1;
         g.padded_slots += (capacity - latencies.len()) as u64;
@@ -227,46 +266,48 @@ impl ServerMetrics {
 
     /// Record `n` requests that failed with an executor error.
     pub fn record_errors(&self, n: u64) {
-        self.inner.lock().unwrap().errors += n;
+        lock(&self.inner).errors += n;
     }
 
     /// Number of latency samples currently held for exact percentiles
     /// — never exceeds [`LATENCY_WINDOW`] (the memory-cap invariant;
     /// older samples live on in the histogram only).
     pub fn latency_samples(&self) -> usize {
-        self.inner.lock().unwrap().recent_us.len()
+        lock(&self.inner).recent_us.len()
     }
 
     /// Single-worker snapshot (sorts the recent-latency window;
     /// intended for end-of-run reporting).
     pub fn snapshot(&self, capacity: usize) -> MetricsSnapshot {
-        Self::merge([self].into_iter(), capacity, 0, 0)
+        Self::merge(
+            [self].into_iter(),
+            capacity,
+            PoolCounters { live_workers: 1, ..PoolCounters::default() },
+        )
     }
 
     /// Aggregate the per-worker accumulators of a pool into one
-    /// snapshot. `shed` and `inflight_peak` come from the pool's
-    /// shared admission state.
+    /// snapshot. The [`PoolCounters`] come from the pool's shared
+    /// admission/supervision state.
     pub fn aggregate(
         workers: &[Arc<ServerMetrics>],
         capacity: usize,
-        shed: u64,
-        inflight_peak: usize,
+        counters: PoolCounters,
     ) -> MetricsSnapshot {
-        Self::merge(workers.iter().map(Arc::as_ref), capacity, shed, inflight_peak)
+        Self::merge(workers.iter().map(Arc::as_ref), capacity, counters)
     }
 
     fn merge<'a>(
         workers: impl Iterator<Item = &'a ServerMetrics>,
         capacity: usize,
-        shed: u64,
-        inflight_peak: usize,
+        counters: PoolCounters,
     ) -> MetricsSnapshot {
         let mut recent: Vec<u64> = Vec::new();
         let mut hist = LatencyHistogram::new();
         let mut per_worker = Vec::new();
         let (mut requests, mut batches, mut padded, mut errors) = (0u64, 0u64, 0u64, 0u64);
         for (w, m) in workers.enumerate() {
-            let g = m.inner.lock().unwrap();
+            let g = lock(&m.inner);
             requests += g.requests;
             batches += g.batches;
             padded += g.padded_slots;
@@ -304,9 +345,13 @@ impl ServerMetrics {
             p99: pick(0.99),
             mean,
             errors,
-            shed,
+            shed: counters.shed,
             workers: per_worker.len(),
-            inflight_peak,
+            inflight_peak: counters.inflight_peak,
+            worker_panics: counters.worker_panics,
+            worker_respawns: counters.worker_respawns,
+            deadline_expired: counters.deadline_expired,
+            live_workers: counters.live_workers,
             hist,
             per_worker,
         }
@@ -389,6 +434,34 @@ pub fn prometheus_text(models: &[(&str, MetricsSnapshot)]) -> String {
         "High-water mark of admitted, unanswered requests.",
         &counter_rows(&|s| s.inflight_peak as u64),
     );
+    family(
+        &mut out,
+        "scnn_worker_panics_total",
+        "counter",
+        "Executor panics caught by worker supervision.",
+        &counter_rows(&|s| s.worker_panics),
+    );
+    family(
+        &mut out,
+        "scnn_worker_respawns_total",
+        "counter",
+        "Executors rebuilt after a caught panic.",
+        &counter_rows(&|s| s.worker_respawns),
+    );
+    family(
+        &mut out,
+        "scnn_deadline_expired_total",
+        "counter",
+        "Requests shed because their deadline passed while queued.",
+        &counter_rows(&|s| s.deadline_expired),
+    );
+    family(
+        &mut out,
+        "scnn_workers_live",
+        "gauge",
+        "Worker threads currently serving their shard.",
+        &counter_rows(&|s| s.live_workers as u64),
+    );
     // Histogram family: cumulative buckets, then _sum and _count.
     let mut rows = Vec::new();
     for (m, s) in models {
@@ -436,6 +509,7 @@ pub fn prometheus_text(models: &[(&str, MetricsSnapshot)]) -> String {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
 
@@ -473,13 +547,25 @@ mod tests {
         a.record_batch(&[Duration::from_micros(100); 4], 4);
         b.record_batch(&[Duration::from_micros(500)], 4);
         b.record_errors(2);
-        let s = ServerMetrics::aggregate(&[a, b], 4, 3, 17);
+        let counters = PoolCounters {
+            shed: 3,
+            inflight_peak: 17,
+            worker_panics: 2,
+            worker_respawns: 1,
+            deadline_expired: 5,
+            live_workers: 2,
+        };
+        let s = ServerMetrics::aggregate(&[a, b], 4, counters);
         assert_eq!(s.requests, 5);
         assert_eq!(s.batches, 2);
         assert_eq!(s.errors, 2);
         assert_eq!(s.shed, 3);
         assert_eq!(s.workers, 2);
         assert_eq!(s.inflight_peak, 17);
+        assert_eq!(s.worker_panics, 2);
+        assert_eq!(s.worker_respawns, 1);
+        assert_eq!(s.deadline_expired, 5);
+        assert_eq!(s.live_workers, 2);
         assert!((s.occupancy - 5.0 / 8.0).abs() < 1e-9);
         assert_eq!(s.p99, Duration::from_micros(500));
         assert_eq!(s.per_worker[0].requests, 4);
@@ -568,6 +654,12 @@ mod tests {
             s.hist.sum_us() as f64 / 1e6
         )));
         assert!(text.contains("scnn_requests_total{model=\"tnn\"} 3"));
+        // Fault-tolerance families are always exposed, even at zero,
+        // so dashboards can alert on the first panic ever.
+        assert!(text.contains("scnn_worker_panics_total{model=\"tnn\"} 0"), "{text}");
+        assert!(text.contains("scnn_worker_respawns_total{model=\"tnn\"} 0"), "{text}");
+        assert!(text.contains("scnn_deadline_expired_total{model=\"tnn\"} 0"), "{text}");
+        assert!(text.contains("scnn_workers_live{model=\"tnn\"} 1"), "{text}");
         // Bucket series is cumulative: two samples ≤ 100 µs, all three
         // ≤ 50 ms and in +Inf.
         let bucket = |le: &str, n: u64| {

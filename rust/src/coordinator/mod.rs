@@ -36,9 +36,21 @@
 //!   over `std::net` ([`NetServer`], [`NetClient`], [`FrameReader`]),
 //!   one acceptor thread + per-connection reader threads feeding the
 //!   registry's pools.
+//! * [`chaos`] — fault injection for tests/benches: [`ChaosSwitch`] +
+//!   [`chaos_factory`] crash workers at a configurable rate, plus
+//!   byte-level connection chaos helpers.
+//!
+//! Fault tolerance runs through every layer: workers are supervised
+//! (`catch_unwind` + respawn up to [`PoolConfig::restart_budget`],
+//! panics surfaced as [`WORKER_PANIC_ERROR`]), requests carry
+//! deadlines end-to-end (shed as [`DEADLINE_EXPIRED_ERROR`], checked
+//! at dequeue and batch admission), and [`NetClient`] never hangs
+//! (timeouts + [`RetryPolicy`] with jittered backoff on idempotent
+//! calls). See `docs/SERVING.md` §Failure model.
 
 pub mod backend;
 pub mod batcher;
+pub mod chaos;
 pub mod executor;
 pub mod metrics;
 pub mod net;
@@ -46,13 +58,20 @@ pub mod registry;
 
 pub use backend::Backend;
 pub use batcher::{
-    is_shed_error, BatchPolicy, Coordinator, InferenceClient, OverloadPolicy, PoolConfig,
-    ServeConfig, SHED_ERROR,
+    is_deadline_error, is_shed_error, is_worker_panic_error, BatchPolicy, Coordinator,
+    InferenceClient, OverloadPolicy, PoolConfig, ServeConfig, DEADLINE_EXPIRED_ERROR,
+    DEFAULT_RESTART_BUDGET, SHED_ERROR, WORKER_PANIC_ERROR,
 };
+pub use chaos::{chaos_factory, ChaosSwitch, CHAOS_PANIC};
 pub use executor::{
     BatchExecutor, BinaryBatchExecutor, ExecutorFactory, ExecutorSpec, PjrtExecutor,
     ScBatchExecutor, SyntheticExecutor,
 };
-pub use metrics::{prometheus_text, LatencyHistogram, MetricsSnapshot, ServerMetrics, WorkerCounts};
-pub use net::{Frame, FrameReader, InferRequest, InferResponse, NetClient, NetServer, Status};
+pub use metrics::{
+    prometheus_text, LatencyHistogram, MetricsSnapshot, PoolCounters, ServerMetrics, WorkerCounts,
+};
+pub use net::{
+    is_timeout_error, Frame, FrameReader, InferRequest, InferResponse, NetClient, NetServer,
+    RetryPolicy, Status, TIMEOUT_ERROR,
+};
 pub use registry::{ModelEntry, ModelRegistry, Priority, TenantCounters, TenantPolicy};

@@ -10,10 +10,19 @@
 //!
 //! | kind | frame | body after header |
 //! |------|-------|-------------------|
-//! | 0 | infer request | `id u64`, `priority u8`, `model_len u8`, `tenant_len u8`, model utf-8, tenant utf-8, `count u32`, `count × f32` |
+//! | 0 | infer request | `id u64`, `priority u8`, `deadline_ms u32` (v2+), `model_len u8`, `tenant_len u8`, model utf-8, tenant utf-8, `count u32`, `count × f32` |
 //! | 1 | infer response | `id u64`, `status u8`, `count u32`, then `count × f32` logits (status 0) or `count` utf-8 message bytes |
 //! | 2 | metrics request | `id u64` |
 //! | 3 | metrics response | `id u64`, `count u32`, `count` utf-8 bytes (Prometheus text) |
+//!
+//! **Versioning**: the current version is [`VERSION`]; every version
+//! down to [`MIN_VERSION`] still decodes. v2 added the per-request
+//! `deadline_ms` field (`0` = no deadline) — a v1 frame simply has no
+//! deadline, so old clients keep working with deadline = ∞. The
+//! server stamps each reply with the version of the request it
+//! answers, so a v1 client never sees a v2 frame (nor the v2-only
+//! `Expired` status, which requires sending a deadline in the first
+//! place).
 //!
 //! Frames longer than [`MAX_FRAME`] bytes, bad magic/version/kind,
 //! non-utf-8 ids, or bodies whose declared lengths disagree with the
@@ -34,25 +43,51 @@
 //! connection finish the frame it is serving (requests already
 //! buffered are drained, in-flight responses are written), and joins
 //! all threads before returning.
+//!
+//! ## Failure handling
+//!
+//! Connection-handle bookkeeping is bounded: finished reader threads
+//! are reaped on every accept and by a periodic sweeper, so an
+//! always-on server does not leak one [`JoinHandle`] per past
+//! connection. [`NetClient`] never blocks forever: connects, reads
+//! and writes all carry timeouts (a hung server surfaces as a typed
+//! [`TIMEOUT_ERROR`]), per-request deadlines ride the v2 wire header
+//! into the pool, and idempotent exchanges (infer/classify/metrics)
+//! retry over a fresh connection with jittered exponential backoff
+//! under a bounded [`RetryPolicy`].
 
 use std::io::{ErrorKind, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
+use crate::util::Rng;
 use crate::Result;
 use anyhow::Context;
 
-use super::batcher::{is_shed_error, SHED_ERROR};
+use super::batcher::{
+    is_deadline_error, is_shed_error, DEADLINE_EXPIRED_ERROR, SHED_ERROR, WORKER_PANIC_ERROR,
+};
 use super::registry::{ModelRegistry, Priority};
+
+/// Lock, recovering from poison (a panicking connection thread must
+/// not wedge the acceptor's handle bookkeeping).
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
 
 /// Frame magic: `"SCNN"` read as a little-endian u32.
 pub const MAGIC: u32 = u32::from_le_bytes(*b"SCNN");
 
-/// Protocol version carried in every frame.
-pub const VERSION: u8 = 1;
+/// Protocol version stamped on frames this build encodes by default.
+/// v2 added the infer-request `deadline_ms` field.
+pub const VERSION: u8 = 2;
+
+/// Oldest protocol version this build still decodes (and can encode,
+/// for replies to old peers).
+pub const MIN_VERSION: u8 = 1;
 
 /// Hard cap on one frame's body length (16 MiB): anything larger is
 /// rejected as malformed before buffering, so a bogus length prefix
@@ -67,6 +102,38 @@ const KIND_METRICS_TEXT: u8 = 3;
 /// How often a connection thread re-checks the stop flag while idle.
 const READ_POLL: Duration = Duration::from_millis(50);
 
+/// How often the server's sweeper thread reaps finished connection
+/// handles (accept-time reaping covers busy servers; the sweeper
+/// covers idle ones).
+const REAP_INTERVAL: Duration = Duration::from_millis(250);
+
+/// Default client connect timeout.
+pub const CONNECT_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// Default client read (response-wait) timeout.
+pub const READ_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Default client write timeout.
+pub const WRITE_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Socket-level read slice the client polls at so it can enforce its
+/// own response budget without hanging in the kernel.
+const CLIENT_READ_SLICE: Duration = Duration::from_millis(50);
+
+/// Extra slack the client waits past its own deadline before giving
+/// up on the socket — lets the server's `deadline expired` response
+/// arrive instead of a generic timeout.
+const CLIENT_DEADLINE_GRACE: Duration = Duration::from_secs(1);
+
+/// Marker prefix for client-side socket timeouts; test with
+/// [`is_timeout_error`].
+pub const TIMEOUT_ERROR: &str = "timed out: no response from server";
+
+/// `true` when `e` is a client-side socket timeout.
+pub fn is_timeout_error(e: &anyhow::Error) -> bool {
+    format!("{e}").starts_with(TIMEOUT_ERROR)
+}
+
 /// Response status byte.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Status {
@@ -80,6 +147,9 @@ pub enum Status {
     UnknownModel,
     /// Executor/internal failure.
     Error,
+    /// The request's deadline passed before execution; the pool shed
+    /// it (v2+ — only ever sent to peers that set a deadline).
+    Expired,
 }
 
 impl Status {
@@ -90,6 +160,7 @@ impl Status {
             Status::BadRequest => 2,
             Status::UnknownModel => 3,
             Status::Error => 4,
+            Status::Expired => 5,
         }
     }
 
@@ -100,6 +171,7 @@ impl Status {
             2 => Some(Status::BadRequest),
             3 => Some(Status::UnknownModel),
             4 => Some(Status::Error),
+            5 => Some(Status::Expired),
             _ => None,
         }
     }
@@ -112,6 +184,9 @@ pub struct InferRequest {
     pub id: u64,
     /// Admission priority (lower sheds first under tenant load).
     pub priority: Priority,
+    /// Per-request deadline in milliseconds from server receipt; `0`
+    /// means none (the v1 behavior — v1 frames decode to `0`).
+    pub deadline_ms: u32,
     /// Model id to route by (≤ 255 bytes utf-8).
     pub model: String,
     /// Tenant id for admission accounting (≤ 255 bytes utf-8).
@@ -166,12 +241,25 @@ pub enum Frame {
     },
 }
 
-/// Serialize one frame (length prefix included) onto `out`.
+/// Serialize one frame (length prefix included) onto `out` at the
+/// current [`VERSION`].
 pub fn encode_frame(frame: &Frame, out: &mut Vec<u8>) -> Result<()> {
+    encode_frame_v(frame, VERSION, out)
+}
+
+/// Serialize one frame at an explicit protocol version in
+/// `MIN_VERSION..=VERSION` — the server answers every peer at the
+/// version it spoke, so old clients never receive frames they cannot
+/// decode.
+pub fn encode_frame_v(frame: &Frame, version: u8, out: &mut Vec<u8>) -> Result<()> {
+    anyhow::ensure!(
+        (MIN_VERSION..=VERSION).contains(&version),
+        "unsupported protocol version {version} (supported {MIN_VERSION}..={VERSION})"
+    );
     let start = out.len();
     out.extend_from_slice(&[0u8; 4]); // length placeholder
     out.extend_from_slice(&MAGIC.to_le_bytes());
-    out.push(VERSION);
+    out.push(version);
     match frame {
         Frame::Infer(r) => {
             anyhow::ensure!(r.model.len() <= u8::MAX as usize, "model id too long");
@@ -179,6 +267,14 @@ pub fn encode_frame(frame: &Frame, out: &mut Vec<u8>) -> Result<()> {
             out.push(KIND_INFER);
             out.extend_from_slice(&r.id.to_le_bytes());
             out.push(r.priority.as_u8());
+            if version >= 2 {
+                out.extend_from_slice(&r.deadline_ms.to_le_bytes());
+            } else {
+                // A v1 frame has nowhere to carry the deadline; encode
+                // only deadline-free requests rather than dropping it
+                // silently.
+                anyhow::ensure!(r.deadline_ms == 0, "deadlines need protocol v2");
+            }
             out.push(r.model.len() as u8);
             out.push(r.tenant.len() as u8);
             out.extend_from_slice(r.model.as_bytes());
@@ -238,11 +334,15 @@ impl<'a> Cur<'a> {
     }
 
     fn u32(&mut self) -> Result<u32> {
-        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+        let mut a = [0u8; 4];
+        a.copy_from_slice(self.take(4)?);
+        Ok(u32::from_le_bytes(a))
     }
 
     fn u64(&mut self) -> Result<u64> {
-        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+        let mut a = [0u8; 8];
+        a.copy_from_slice(self.take(8)?);
+        Ok(u64::from_le_bytes(a))
     }
 
     fn utf8(&mut self, n: usize) -> Result<String> {
@@ -252,7 +352,14 @@ impl<'a> Cur<'a> {
 
     fn f32s(&mut self, n: usize) -> Result<Vec<f32>> {
         let bytes = self.take(n.checked_mul(4).context("malformed frame: payload count")?)?;
-        Ok(bytes.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| {
+                let mut a = [0u8; 4];
+                a.copy_from_slice(c);
+                f32::from_le_bytes(a)
+            })
+            .collect())
     }
 
     fn done(&self) -> Result<()> {
@@ -261,26 +368,38 @@ impl<'a> Cur<'a> {
     }
 }
 
-/// Decode one frame body (the bytes after the length prefix).
+/// Decode one frame body (the bytes after the length prefix),
+/// discarding the version it was encoded at.
 pub fn decode_body(body: &[u8]) -> Result<Frame> {
+    decode_body_v(body).map(|(_, f)| f)
+}
+
+/// Decode one frame body, returning `(version, frame)`. Accepts any
+/// version in `MIN_VERSION..=VERSION`; v1 infer frames carry no
+/// deadline field and decode with `deadline_ms == 0` (no deadline).
+pub fn decode_body_v(body: &[u8]) -> Result<(u8, Frame)> {
     let mut c = Cur { b: body, p: 0 };
     let magic = c.u32()?;
     anyhow::ensure!(magic == MAGIC, "malformed frame: bad magic {magic:#010x}");
     let version = c.u8()?;
-    anyhow::ensure!(version == VERSION, "malformed frame: version {version} (want {VERSION})");
+    anyhow::ensure!(
+        (MIN_VERSION..=VERSION).contains(&version),
+        "malformed frame: version {version} (supported {MIN_VERSION}..={VERSION})"
+    );
     let kind = c.u8()?;
     let frame = match kind {
         KIND_INFER => {
             let id = c.u64()?;
             let priority = Priority::from_u8(c.u8()?)
                 .ok_or_else(|| anyhow::anyhow!("malformed frame: bad priority byte"))?;
+            let deadline_ms = if version >= 2 { c.u32()? } else { 0 };
             let model_len = c.u8()? as usize;
             let tenant_len = c.u8()? as usize;
             let model = c.utf8(model_len)?;
             let tenant = c.utf8(tenant_len)?;
             let count = c.u32()? as usize;
             let payload = c.f32s(count)?;
-            Frame::Infer(InferRequest { id, priority, model, tenant, payload })
+            Frame::Infer(InferRequest { id, priority, deadline_ms, model, tenant, payload })
         }
         KIND_RESPONSE => {
             let id = c.u64()?;
@@ -305,23 +424,38 @@ pub fn decode_body(body: &[u8]) -> Result<Frame> {
         other => anyhow::bail!("malformed frame: unknown kind {other}"),
     };
     c.done()?;
-    Ok(frame)
+    Ok((version, frame))
 }
 
 /// Incremental frame decoder: feed arbitrary byte chunks (any
 /// `read()` fragmentation, down to a 1-byte trickle), pull complete
 /// frames out. Malformed input returns `Err` — the caller must treat
 /// the stream as unrecoverable.
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct FrameReader {
     buf: Vec<u8>,
     pos: usize,
+    last_version: u8,
+}
+
+impl Default for FrameReader {
+    fn default() -> Self {
+        Self { buf: Vec::new(), pos: 0, last_version: VERSION }
+    }
 }
 
 impl FrameReader {
     /// New, empty.
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Protocol version of the most recently decoded frame (the
+    /// current [`VERSION`] until a frame has been decoded). The server
+    /// answers each peer at this version so v1 clients never receive
+    /// v2 frames.
+    pub fn last_version(&self) -> u8 {
+        self.last_version
     }
 
     /// Append raw bytes from the transport.
@@ -347,13 +481,14 @@ impl FrameReader {
         if self.buffered() < 4 {
             return Ok(None);
         }
-        let len_bytes: [u8; 4] = self.buf[self.pos..self.pos + 4].try_into().unwrap();
+        let mut len_bytes = [0u8; 4];
+        len_bytes.copy_from_slice(&self.buf[self.pos..self.pos + 4]);
         let len = u32::from_le_bytes(len_bytes) as usize;
         anyhow::ensure!(len <= MAX_FRAME, "malformed frame: declared length {len} exceeds max");
         if self.buffered() < 4 + len {
             return Ok(None);
         }
-        let frame = decode_body(&self.buf[self.pos + 4..self.pos + 4 + len]);
+        let decoded = decode_body_v(&self.buf[self.pos + 4..self.pos + 4 + len]);
         self.pos += 4 + len;
         if self.pos == self.buf.len() {
             self.buf.clear();
@@ -362,7 +497,10 @@ impl FrameReader {
             self.buf.drain(..self.pos);
             self.pos = 0;
         }
-        frame.map(Some)
+        decoded.map(|(version, frame)| {
+            self.last_version = version;
+            Some(frame)
+        })
     }
 }
 
@@ -374,6 +512,7 @@ struct ServerShared {
     accepted: AtomicU64,
     active: AtomicUsize,
     malformed: AtomicU64,
+    reaped: AtomicU64,
 }
 
 impl ServerShared {
@@ -396,7 +535,39 @@ impl ServerShared {
             "scnn_frames_malformed_total {}\n",
             self.malformed.load(Ordering::Relaxed)
         ));
+        out.push_str("# HELP scnn_connections_reaped_total Finished connection handles reaped.\n");
+        out.push_str("# TYPE scnn_connections_reaped_total counter\n");
+        out.push_str(&format!(
+            "scnn_connections_reaped_total {}\n",
+            self.reaped.load(Ordering::Relaxed)
+        ));
         out
+    }
+}
+
+/// Drop (join) every finished connection handle in `conns`, crediting
+/// the count to the server's reaped counter. Called on every accept
+/// and by the periodic sweeper so the handle vector stays bounded by
+/// the number of *live* connections, not the connection history.
+fn reap_finished(conns: &Mutex<Vec<JoinHandle<()>>>, shared: &ServerShared) {
+    let finished: Vec<JoinHandle<()>> = {
+        let mut g = lock(conns);
+        let mut done = Vec::new();
+        let mut i = 0;
+        while i < g.len() {
+            if g[i].is_finished() {
+                done.push(g.swap_remove(i));
+            } else {
+                i += 1;
+            }
+        }
+        done
+    };
+    if !finished.is_empty() {
+        shared.reaped.fetch_add(finished.len() as u64, Ordering::Relaxed);
+        for h in finished {
+            let _ = h.join(); // already finished: join is immediate
+        }
     }
 }
 
@@ -406,6 +577,7 @@ pub struct NetServer {
     shared: Arc<ServerShared>,
     local_addr: SocketAddr,
     acceptor: Option<JoinHandle<()>>,
+    sweeper: Option<JoinHandle<()>>,
     conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
 }
 
@@ -421,6 +593,7 @@ impl NetServer {
             accepted: AtomicU64::new(0),
             active: AtomicUsize::new(0),
             malformed: AtomicU64::new(0),
+            reaped: AtomicU64::new(0),
         });
         let conns: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
         let acceptor = {
@@ -437,6 +610,7 @@ impl NetServer {
                                 break;
                             }
                             shared.accepted.fetch_add(1, Ordering::Relaxed);
+                            reap_finished(&conns, &shared);
                             let shared = shared.clone();
                             let handle = std::thread::Builder::new()
                                 .name("scnn-conn".into())
@@ -446,7 +620,7 @@ impl NetServer {
                                     shared.active.fetch_sub(1, Ordering::Relaxed);
                                 });
                             match handle {
-                                Ok(h) => conns.lock().unwrap().push(h),
+                                Ok(h) => lock(&conns).push(h),
                                 Err(_) => break,
                             }
                         }
@@ -459,7 +633,34 @@ impl NetServer {
                 })
                 .context("spawning acceptor thread")?
         };
-        Ok(NetServer { shared, local_addr, acceptor: Some(acceptor), conns })
+        let sweeper = {
+            let shared = shared.clone();
+            let conns = conns.clone();
+            std::thread::Builder::new()
+                .name("scnn-reaper".into())
+                .spawn(move || {
+                    // Poll the stop flag more often than we sweep so
+                    // shutdown never waits a full sweep interval.
+                    let slice = Duration::from_millis(25);
+                    let mut since_sweep = Duration::ZERO;
+                    while !shared.stop.load(Ordering::Relaxed) {
+                        std::thread::sleep(slice);
+                        since_sweep += slice;
+                        if since_sweep >= REAP_INTERVAL {
+                            reap_finished(&conns, &shared);
+                            since_sweep = Duration::ZERO;
+                        }
+                    }
+                })
+                .context("spawning reaper thread")?
+        };
+        Ok(NetServer {
+            shared,
+            local_addr,
+            acceptor: Some(acceptor),
+            sweeper: Some(sweeper),
+            conns,
+        })
     }
 
     /// The bound address (resolves `:0` to the ephemeral port).
@@ -470,6 +671,18 @@ impl NetServer {
     /// Connections accepted so far.
     pub fn connections_accepted(&self) -> u64 {
         self.shared.accepted.load(Ordering::Relaxed)
+    }
+
+    /// Connection handles currently tracked (live connections plus
+    /// any finished ones not yet reaped) — bounded on long-lived
+    /// servers, unlike the pre-reaping accept history.
+    pub fn tracked_connections(&self) -> usize {
+        lock(&self.conns).len()
+    }
+
+    /// Finished connection handles reaped so far.
+    pub fn connections_reaped(&self) -> u64 {
+        self.shared.reaped.load(Ordering::Relaxed)
     }
 
     /// The Prometheus exposition a metrics frame returns (registry
@@ -487,8 +700,11 @@ impl NetServer {
         if let Some(h) = self.acceptor.take() {
             let _ = h.join();
         }
+        if let Some(h) = self.sweeper.take() {
+            let _ = h.join();
+        }
         let handles: Vec<JoinHandle<()>> = {
-            let mut g = self.conns.lock().unwrap();
+            let mut g = lock(&self.conns);
             g.drain(..).collect()
         };
         for h in handles {
@@ -555,8 +771,11 @@ fn serve_buffered(
     loop {
         match reader.try_next() {
             Ok(Some(frame)) => {
+                // Answer at the version the peer spoke: a v1 client
+                // never receives a v2 frame.
+                let version = reader.last_version();
                 let reply = handle_frame(shared, frame);
-                if write_frame(stream, wbuf, &reply).is_err() {
+                if write_frame(stream, wbuf, &reply, version).is_err() {
                     return false;
                 }
             }
@@ -568,16 +787,21 @@ fn serve_buffered(
                     Status::BadRequest,
                     format!("{e:#}"),
                 ));
-                let _ = write_frame(stream, wbuf, &reply);
+                let _ = write_frame(stream, wbuf, &reply, reader.last_version());
                 return false;
             }
         }
     }
 }
 
-fn write_frame(stream: &mut TcpStream, wbuf: &mut Vec<u8>, frame: &Frame) -> Result<()> {
+fn write_frame(
+    stream: &mut TcpStream,
+    wbuf: &mut Vec<u8>,
+    frame: &Frame,
+    version: u8,
+) -> Result<()> {
     wbuf.clear();
-    encode_frame(frame, wbuf)?;
+    encode_frame_v(frame, version, wbuf)?;
     stream.write_all(wbuf).context("writing frame")?;
     stream.flush().context("flushing frame")?;
     Ok(())
@@ -621,37 +845,110 @@ fn handle_infer(shared: &Arc<ServerShared>, req: InferRequest) -> InferResponse 
             return InferResponse::fail(req.id, Status::Shed, msg);
         }
     };
-    match entry.infer(req.payload) {
+    // deadline_ms counts from server receipt of the frame; the queue
+    // and the batcher check it at dequeue and at batch admission.
+    let timeout = (req.deadline_ms > 0).then(|| Duration::from_millis(req.deadline_ms as u64));
+    match entry.infer_within(req.payload, timeout) {
         Ok(logits) => InferResponse::ok(req.id, logits),
         Err(e) if is_shed_error(&e) => InferResponse::fail(req.id, Status::Shed, format!("{e:#}")),
+        Err(e) if is_deadline_error(&e) => {
+            InferResponse::fail(req.id, Status::Expired, format!("{e:#}"))
+        }
         Err(e) => InferResponse::fail(req.id, Status::Error, format!("{e:#}")),
+    }
+}
+
+/// Retry discipline for [`NetClient`]: up to `retries` *re*-attempts
+/// after the first try, sleeping a jittered exponential backoff
+/// (`backoff_base × 2^attempt`, capped at `backoff_max`, scaled by a
+/// uniform factor in `[0.5, 1.0)`) between attempts. Only idempotent
+/// exchanges retry — infer, classify and metrics scrapes — and only
+/// through the retrying wrappers; [`NetClient::request`] stays
+/// single-shot so tests can count shed responses exactly.
+#[derive(Clone, Copy, Debug)]
+pub struct RetryPolicy {
+    /// Re-attempts after the first try (0 = never retry).
+    pub retries: u32,
+    /// Backoff before the first retry.
+    pub backoff_base: Duration,
+    /// Backoff ceiling.
+    pub backoff_max: Duration,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        Self {
+            retries: 2,
+            backoff_base: Duration::from_millis(25),
+            backoff_max: Duration::from_secs(1),
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// The jittered sleep before retry number `attempt` (0-based).
+    fn backoff(&self, attempt: u32, rng: &mut Rng) -> Duration {
+        let exp = self
+            .backoff_base
+            .saturating_mul(1u32.checked_shl(attempt).unwrap_or(u32::MAX))
+            .min(self.backoff_max);
+        exp.mul_f64(0.5 + 0.5 * rng.f64())
     }
 }
 
 /// Blocking client for the wire protocol: one TCP connection, one
 /// in-flight request at a time (`scnn client`, tests, examples).
+///
+/// Never hangs: connects, reads and writes all carry timeouts
+/// (defaults [`CONNECT_TIMEOUT`] / [`READ_TIMEOUT`] /
+/// [`WRITE_TIMEOUT`]), a hung server surfaces as [`TIMEOUT_ERROR`],
+/// and a broken stream reconnects on the next attempt. Idempotent
+/// calls ([`NetClient::infer`], [`NetClient::classify`],
+/// [`NetClient::metrics_text`]) retry under the configured
+/// [`RetryPolicy`].
 pub struct NetClient {
-    stream: TcpStream,
+    addrs: Vec<SocketAddr>,
+    stream: Option<TcpStream>,
     reader: FrameReader,
     scratch: Vec<u8>,
     next_id: u64,
     tenant: String,
     priority: Priority,
+    deadline: Option<Duration>,
+    retry: RetryPolicy,
+    connect_timeout: Duration,
+    read_timeout: Duration,
+    write_timeout: Duration,
+    rng: Rng,
 }
 
 impl NetClient {
-    /// Connect to a serving front-end.
+    /// Connect to a serving front-end (with [`CONNECT_TIMEOUT`]).
     pub fn connect<A: ToSocketAddrs>(addr: A) -> Result<Self> {
-        let stream = TcpStream::connect(addr).context("connecting to scnn server")?;
-        let _ = stream.set_nodelay(true);
-        Ok(Self {
-            stream,
+        let addrs: Vec<SocketAddr> =
+            addr.to_socket_addrs().context("resolving scnn server address")?.collect();
+        anyhow::ensure!(!addrs.is_empty(), "scnn server address resolved to nothing");
+        // Seed backoff jitter from the process's hash randomness —
+        // distinct clients must not retry in lockstep.
+        use std::hash::{BuildHasher, Hasher};
+        let seed = std::collections::hash_map::RandomState::new().build_hasher().finish();
+        let mut client = Self {
+            addrs,
+            stream: None,
             reader: FrameReader::new(),
             scratch: Vec::new(),
             next_id: 1,
             tenant: "default".to_string(),
             priority: Priority::Normal,
-        })
+            deadline: None,
+            retry: RetryPolicy::default(),
+            connect_timeout: CONNECT_TIMEOUT,
+            read_timeout: READ_TIMEOUT,
+            write_timeout: WRITE_TIMEOUT,
+            rng: Rng::new(seed | 1),
+        };
+        client.ensure_connected()?;
+        Ok(client)
     }
 
     /// Set the tenant id carried on every request.
@@ -666,37 +963,76 @@ impl NetClient {
         self
     }
 
-    /// Send one inference request and wait for its response frame
-    /// (status not interpreted — overload tests read `Status::Shed`
-    /// counts exactly from here).
-    pub fn request(&mut self, model: &str, x: &[f32]) -> Result<InferResponse> {
-        let id = self.next_id;
-        self.next_id += 1;
-        let frame = Frame::Infer(InferRequest {
-            id,
-            priority: self.priority,
-            model: model.to_string(),
-            tenant: self.tenant.clone(),
-            payload: x.to_vec(),
-        });
-        self.send(&frame)?;
-        match self.read_frame()? {
-            Frame::Response(r) => {
-                anyhow::ensure!(r.id == id || r.id == 0, "response id {} for request {id}", r.id);
-                Ok(r)
+    /// Set the per-request deadline carried on every infer request
+    /// (`None` = no deadline). Sub-millisecond deadlines round up to
+    /// 1 ms so they stay expressible on the wire.
+    pub fn with_deadline(mut self, deadline: Option<Duration>) -> Self {
+        self.deadline = deadline;
+        self
+    }
+
+    /// Replace the retry policy.
+    pub fn with_retry(mut self, retry: RetryPolicy) -> Self {
+        self.retry = retry;
+        self
+    }
+
+    /// Set just the retry budget, keeping default backoff.
+    pub fn with_retries(mut self, retries: u32) -> Self {
+        self.retry.retries = retries;
+        self
+    }
+
+    /// Override the connect/read/write timeouts.
+    pub fn with_timeouts(mut self, connect: Duration, read: Duration, write: Duration) -> Self {
+        self.connect_timeout = connect;
+        self.read_timeout = read;
+        self.write_timeout = write;
+        if let Some(s) = &self.stream {
+            let _ = s.set_write_timeout(Some(self.write_timeout));
+        }
+        self
+    }
+
+    /// The deadline_ms wire field for the configured deadline.
+    fn deadline_ms(&self) -> u32 {
+        match self.deadline {
+            None => 0,
+            Some(d) => {
+                let ms = d.as_millis().clamp(1, u32::MAX as u128);
+                ms as u32
             }
-            other => anyhow::bail!("unexpected frame from server: {other:?}"),
         }
     }
 
+    /// Send one inference request and wait for its response frame
+    /// (status not interpreted — overload tests read `Status::Shed`
+    /// counts exactly from here). Single-shot: no retries.
+    pub fn request(&mut self, model: &str, x: &[f32]) -> Result<InferResponse> {
+        self.request_once(model, x)
+    }
+
     /// Blocking inference: `Ok(logits)` or an error (shed rejections
-    /// satisfy [`is_shed_error`], like the in-process client).
+    /// satisfy [`is_shed_error`], deadline expiry [`is_deadline_error`],
+    /// socket timeouts [`is_timeout_error`]). Retries transport
+    /// failures under the client's [`RetryPolicy`] — inference is
+    /// idempotent, so a response lost to a broken stream is safe to
+    /// re-request.
     pub fn infer(&mut self, model: &str, x: &[f32]) -> Result<Vec<f32>> {
-        let r = self.request(model, x)?;
+        let r = self.retrying(|c| c.request_once(model, x))?;
         match r.status {
             Status::Ok => Ok(r.logits),
             Status::Shed if r.message.starts_with(SHED_ERROR) => anyhow::bail!("{}", r.message),
             Status::Shed => anyhow::bail!("{SHED_ERROR}: {}", r.message),
+            Status::Expired if r.message.starts_with(DEADLINE_EXPIRED_ERROR) => {
+                anyhow::bail!("{}", r.message)
+            }
+            Status::Expired => anyhow::bail!("{DEADLINE_EXPIRED_ERROR}: {}", r.message),
+            // Typed pool failures (e.g. the worker-panic marker) keep
+            // their marker prefix across the wire.
+            Status::Error if r.message.starts_with(WORKER_PANIC_ERROR) => {
+                anyhow::bail!("{}", r.message)
+            }
             s => anyhow::bail!("server rejected request ({s:?}): {}", r.message),
         }
     }
@@ -712,8 +1048,13 @@ impl NetClient {
             .unwrap_or(0))
     }
 
-    /// Scrape the server's Prometheus text exposition.
+    /// Scrape the server's Prometheus text exposition (idempotent —
+    /// retries under the client's [`RetryPolicy`]).
     pub fn metrics_text(&mut self) -> Result<String> {
+        self.retrying(|c| c.metrics_once())
+    }
+
+    fn metrics_once(&mut self) -> Result<String> {
         let id = self.next_id;
         self.next_id += 1;
         self.send(&Frame::MetricsRequest { id })?;
@@ -727,28 +1068,144 @@ impl NetClient {
         }
     }
 
+    fn request_once(&mut self, model: &str, x: &[f32]) -> Result<InferResponse> {
+        let id = self.next_id;
+        self.next_id += 1;
+        let frame = Frame::Infer(InferRequest {
+            id,
+            priority: self.priority,
+            deadline_ms: self.deadline_ms(),
+            model: model.to_string(),
+            tenant: self.tenant.clone(),
+            payload: x.to_vec(),
+        });
+        self.send(&frame)?;
+        match self.read_frame()? {
+            Frame::Response(r) => {
+                anyhow::ensure!(r.id == id || r.id == 0, "response id {} for request {id}", r.id);
+                Ok(r)
+            }
+            other => anyhow::bail!("unexpected frame from server: {other:?}"),
+        }
+    }
+
+    /// Run `op`, retrying transport failures (connect errors, broken
+    /// streams, socket timeouts) up to the retry budget with jittered
+    /// exponential backoff. Application-level rejections — shed,
+    /// expired, bad request — come back as `Ok(response)` from
+    /// `request_once` and are never retried here.
+    fn retrying<T>(&mut self, mut op: impl FnMut(&mut Self) -> Result<T>) -> Result<T> {
+        let mut attempt = 0u32;
+        loop {
+            match op(self) {
+                Ok(v) => return Ok(v),
+                Err(e) => {
+                    if attempt >= self.retry.retries {
+                        return Err(e);
+                    }
+                    let sleep = self.retry.backoff(attempt, &mut self.rng);
+                    attempt += 1;
+                    std::thread::sleep(sleep);
+                }
+            }
+        }
+    }
+
+    /// Connect if not already connected (the send/read paths drop the
+    /// stream on any transport error, so the next attempt redials).
+    fn ensure_connected(&mut self) -> Result<()> {
+        if self.stream.is_some() {
+            return Ok(());
+        }
+        let mut last: Option<anyhow::Error> = None;
+        for addr in &self.addrs {
+            match TcpStream::connect_timeout(addr, self.connect_timeout) {
+                Ok(stream) => {
+                    let _ = stream.set_nodelay(true);
+                    // Short slices so read_frame can enforce its own
+                    // budget; one write timeout covers a whole frame.
+                    let _ = stream.set_read_timeout(Some(CLIENT_READ_SLICE));
+                    let _ = stream.set_write_timeout(Some(self.write_timeout));
+                    self.stream = Some(stream);
+                    self.reader = FrameReader::new();
+                    return Ok(());
+                }
+                Err(e) => last = Some(anyhow::Error::from(e)),
+            }
+        }
+        match last {
+            Some(e) => Err(e.context("connecting to scnn server")),
+            None => anyhow::bail!("connecting to scnn server: no addresses"),
+        }
+    }
+
+    fn disconnect(&mut self) {
+        self.stream = None;
+        self.reader = FrameReader::new();
+    }
+
     fn send(&mut self, frame: &Frame) -> Result<()> {
+        self.ensure_connected()?;
         self.scratch.clear();
         encode_frame(frame, &mut self.scratch)?;
-        self.stream.write_all(&self.scratch).context("writing to server")?;
-        self.stream.flush().context("flushing to server")?;
-        Ok(())
+        let Some(stream) = self.stream.as_mut() else {
+            anyhow::bail!("not connected");
+        };
+        let sent = stream
+            .write_all(&self.scratch)
+            .and_then(|()| stream.flush())
+            .context("writing to server");
+        if sent.is_err() {
+            self.disconnect();
+        }
+        sent
     }
 
     fn read_frame(&mut self) -> Result<Frame> {
+        // Budget: the request deadline plus grace (so the server's
+        // own `deadline expired` reply wins the race), else the
+        // configured read timeout.
+        let budget = match self.deadline {
+            Some(d) => d + CLIENT_DEADLINE_GRACE,
+            None => self.read_timeout,
+        };
+        let give_up = Instant::now() + budget;
         let mut buf = [0u8; 8192];
         loop {
-            if let Some(f) = self.reader.try_next()? {
-                return Ok(f);
+            match self.reader.try_next() {
+                Ok(Some(f)) => return Ok(f),
+                Ok(None) => {}
+                Err(e) => {
+                    self.disconnect();
+                    return Err(e);
+                }
             }
-            let n = self.stream.read(&mut buf).context("reading from server")?;
-            anyhow::ensure!(n > 0, "server closed the connection");
-            self.reader.feed(&buf[..n]);
+            let Some(stream) = self.stream.as_mut() else {
+                anyhow::bail!("not connected");
+            };
+            match stream.read(&mut buf) {
+                Ok(0) => {
+                    self.disconnect();
+                    anyhow::bail!("server closed the connection");
+                }
+                Ok(n) => self.reader.feed(&buf[..n]),
+                Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {
+                    if Instant::now() >= give_up {
+                        self.disconnect();
+                        anyhow::bail!("{TIMEOUT_ERROR} (waited {budget:?})");
+                    }
+                }
+                Err(e) => {
+                    self.disconnect();
+                    return Err(e).context("reading from server");
+                }
+            }
         }
     }
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
 
@@ -767,6 +1224,7 @@ mod tests {
         let req = Frame::Infer(InferRequest {
             id: 7,
             priority: Priority::Low,
+            deadline_ms: 250,
             model: "scnet10".into(),
             tenant: "acme".into(),
             payload: vec![0.5, -1.25, 3.0],
@@ -787,6 +1245,7 @@ mod tests {
         let a = Frame::Infer(InferRequest {
             id: 1,
             priority: Priority::High,
+            deadline_ms: 0,
             model: "m".into(),
             tenant: "".into(),
             payload: vec![0.25; 17],
@@ -844,6 +1303,7 @@ mod tests {
         let req = Frame::Infer(InferRequest {
             id: 1,
             priority: Priority::Normal,
+            deadline_ms: 0,
             model: "m".into(),
             tenant: "t".into(),
             payload: vec![1.0, 2.0],
@@ -879,10 +1339,109 @@ mod tests {
         let req = Frame::Infer(InferRequest {
             id: 1,
             priority: Priority::Normal,
+            deadline_ms: 0,
             model: "m".repeat(256),
             tenant: "t".into(),
             payload: vec![],
         });
         assert!(encode_frame(&req, &mut Vec::new()).is_err());
+    }
+
+    /// Hand-encode a v1 infer frame (no deadline field) the way a
+    /// pre-deadline client would.
+    fn encode_v1_infer(id: u64, model: &str, tenant: &str, payload: &[f32]) -> Vec<u8> {
+        let mut out = vec![0u8; 4];
+        out.extend_from_slice(&MAGIC.to_le_bytes());
+        out.push(1); // version 1
+        out.push(KIND_INFER);
+        out.extend_from_slice(&id.to_le_bytes());
+        out.push(Priority::Normal.as_u8());
+        out.push(model.len() as u8);
+        out.push(tenant.len() as u8);
+        out.extend_from_slice(model.as_bytes());
+        out.extend_from_slice(tenant.as_bytes());
+        out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        for v in payload {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        let body_len = (out.len() - 4) as u32;
+        out[0..4].copy_from_slice(&body_len.to_le_bytes());
+        out
+    }
+
+    #[test]
+    fn v1_frames_decode_with_no_deadline() {
+        let bytes = encode_v1_infer(42, "m", "t", &[1.0, 2.0]);
+        let mut r = FrameReader::new();
+        r.feed(&bytes);
+        let frame = r.try_next().unwrap().expect("one whole v1 frame");
+        assert_eq!(r.last_version(), 1);
+        let Frame::Infer(req) = frame else { panic!("not an infer frame") };
+        assert_eq!(req.id, 42);
+        assert_eq!(req.deadline_ms, 0, "v1 has no deadline field: deadline = none");
+        assert_eq!(req.payload, vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn v1_encoding_roundtrips_and_rejects_deadlines() {
+        let req = Frame::Infer(InferRequest {
+            id: 5,
+            priority: Priority::High,
+            deadline_ms: 0,
+            model: "m".into(),
+            tenant: "t".into(),
+            payload: vec![0.5],
+        });
+        let mut buf = Vec::new();
+        encode_frame_v(&req, 1, &mut buf).unwrap();
+        assert_eq!(buf, encode_v1_infer(5, "m", "t", &[0.5]));
+        let mut r = FrameReader::new();
+        r.feed(&buf);
+        assert_eq!(r.try_next().unwrap(), Some(req));
+        assert_eq!(r.last_version(), 1);
+        // A deadline cannot ride a v1 frame.
+        let with_deadline = Frame::Infer(InferRequest {
+            id: 5,
+            priority: Priority::High,
+            deadline_ms: 10,
+            model: "m".into(),
+            tenant: "t".into(),
+            payload: vec![0.5],
+        });
+        assert!(encode_frame_v(&with_deadline, 1, &mut Vec::new()).is_err());
+        // Out-of-range versions are rejected at encode time.
+        assert!(encode_frame_v(&req, 0, &mut Vec::new()).is_err());
+        assert!(encode_frame_v(&req, VERSION + 1, &mut Vec::new()).is_err());
+    }
+
+    #[test]
+    fn v1_priority_byte_is_still_priority_not_deadline() {
+        // Regression guard on field order: in a v1 body the byte after
+        // `id` is the priority, and the model length follows directly.
+        let bytes = encode_v1_infer(1, "ab", "c", &[]);
+        let frame = decode_body(&bytes[4..]).unwrap();
+        let Frame::Infer(req) = frame else { panic!("not an infer frame") };
+        assert_eq!(req.priority, Priority::Normal);
+        assert_eq!(req.model, "ab");
+        assert_eq!(req.tenant, "c");
+    }
+
+    #[test]
+    fn retry_backoff_is_capped_and_jittered() {
+        let policy = RetryPolicy {
+            retries: 5,
+            backoff_base: Duration::from_millis(100),
+            backoff_max: Duration::from_millis(350),
+        };
+        let mut rng = Rng::new(7);
+        for attempt in 0..10 {
+            let d = policy.backoff(attempt, &mut rng);
+            let cap = Duration::from_millis(350);
+            let exp = Duration::from_millis(100)
+                .saturating_mul(1u32.checked_shl(attempt).unwrap_or(u32::MAX))
+                .min(cap);
+            assert!(d <= exp, "jitter never exceeds the exponential step");
+            assert!(d >= exp.mul_f64(0.5), "jitter keeps at least half the step");
+        }
     }
 }

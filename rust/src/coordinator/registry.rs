@@ -20,9 +20,28 @@
 //! [`OverloadPolicy`]: super::OverloadPolicy
 
 use std::collections::HashMap;
-use std::sync::{Arc, Mutex, RwLock};
+use std::sync::{
+    Arc, Mutex, MutexGuard, PoisonError, RwLock, RwLockReadGuard, RwLockWriteGuard,
+};
+use std::time::Duration;
 
 use crate::Result;
+
+/// Lock, recovering from poison: registry state (model map, tenant
+/// counters) stays valid across a panic elsewhere — worker panics are
+/// supervised and accounted separately, and a poisoned registry lock
+/// must not take the whole front-end down with it.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+fn read<T>(l: &RwLock<T>) -> RwLockReadGuard<'_, T> {
+    l.read().unwrap_or_else(PoisonError::into_inner)
+}
+
+fn write<T>(l: &RwLock<T>) -> RwLockWriteGuard<'_, T> {
+    l.write().unwrap_or_else(PoisonError::into_inner)
+}
 
 use super::backend::Backend;
 use super::batcher::{Coordinator, InferenceClient, ServeConfig};
@@ -163,7 +182,7 @@ impl TenantAdmission {
     /// must be shed (the tenant's shed counter is already bumped).
     pub fn try_admit(self: &Arc<Self>, tenant: &str, p: Priority) -> Option<TenantGuard> {
         let limit = self.policy.limit_for(p);
-        let mut g = self.tenants.lock().unwrap();
+        let mut g = lock(&self.tenants);
         let state = g.entry(tenant.to_string()).or_default();
         if state.inflight >= limit {
             state.shed += 1;
@@ -178,7 +197,7 @@ impl TenantAdmission {
 
     /// Counters of every tenant seen so far, sorted by tenant id.
     pub fn counters(&self) -> Vec<TenantCounters> {
-        let g = self.tenants.lock().unwrap();
+        let g = lock(&self.tenants);
         let mut out: Vec<TenantCounters> = g
             .iter()
             .map(|(t, s)| TenantCounters {
@@ -194,7 +213,7 @@ impl TenantAdmission {
     }
 
     fn release(&self, tenant: &str) {
-        let mut g = self.tenants.lock().unwrap();
+        let mut g = lock(&self.tenants);
         if let Some(state) = g.get_mut(tenant) {
             state.inflight = state.inflight.saturating_sub(1);
         }
@@ -243,15 +262,30 @@ impl ModelEntry {
         self.client.infer(x)
     }
 
+    /// Blocking inference with a deadline: the pool sheds the request
+    /// (typed deadline error) instead of executing it once `timeout`
+    /// passes; `None` waits forever. See
+    /// [`InferenceClient::infer_within`].
+    pub fn infer_within(&self, x: Vec<f32>, timeout: Option<Duration>) -> Result<Vec<f32>> {
+        self.client.infer_within(x, timeout)
+    }
+
+    /// True while the model's pool is fully staffed (see
+    /// [`Coordinator::healthy`]); false once any worker exhausted its
+    /// restart budget, or after shutdown/swap took the pool away.
+    pub fn healthy(&self) -> bool {
+        lock(&self.coord).as_ref().map(Coordinator::healthy).unwrap_or(false)
+    }
+
     /// Live metrics of the model's pool (`None` once shut down).
     pub fn metrics(&self) -> Option<MetricsSnapshot> {
-        self.coord.lock().unwrap().as_ref().map(Coordinator::metrics)
+        lock(&self.coord).as_ref().map(Coordinator::metrics)
     }
 
     /// Drain and join the pool, returning its final snapshot (`None`
     /// if it was already shut down).
     fn shutdown(&self) -> Option<MetricsSnapshot> {
-        self.coord.lock().unwrap().take().map(Coordinator::shutdown)
+        lock(&self.coord).take().map(Coordinator::shutdown)
     }
 }
 
@@ -278,7 +312,7 @@ impl ModelRegistry {
     /// snapshot returned.
     pub fn register(&self, name: &str, coord: Coordinator) -> Option<MetricsSnapshot> {
         let entry = Arc::new(ModelEntry::new(name, coord));
-        let old = self.models.write().unwrap().insert(name.to_string(), entry);
+        let old = write(&self.models).insert(name.to_string(), entry);
         old.and_then(|e| e.shutdown())
     }
 
@@ -296,30 +330,30 @@ impl ModelRegistry {
 
     /// Look up a model by id.
     pub fn get(&self, name: &str) -> Option<Arc<ModelEntry>> {
-        self.models.read().unwrap().get(name).cloned()
+        read(&self.models).get(name).cloned()
     }
 
     /// Registered model ids, sorted.
     pub fn names(&self) -> Vec<String> {
-        let mut out: Vec<String> = self.models.read().unwrap().keys().cloned().collect();
+        let mut out: Vec<String> = read(&self.models).keys().cloned().collect();
         out.sort();
         out
     }
 
     /// Number of registered models.
     pub fn len(&self) -> usize {
-        self.models.read().unwrap().len()
+        read(&self.models).len()
     }
 
     /// True when no model is registered.
     pub fn is_empty(&self) -> bool {
-        self.models.read().unwrap().is_empty()
+        read(&self.models).is_empty()
     }
 
     /// Unregister `name`, draining its pool; returns the final
     /// snapshot if the model existed.
     pub fn remove(&self, name: &str) -> Option<MetricsSnapshot> {
-        let old = self.models.write().unwrap().remove(name);
+        let old = write(&self.models).remove(name);
         old.and_then(|e| e.shutdown())
     }
 
@@ -327,7 +361,7 @@ impl ModelRegistry {
     /// sorted by name. The registry is empty afterwards.
     pub fn shutdown_all(&self) -> Vec<(String, MetricsSnapshot)> {
         let entries: Vec<(String, Arc<ModelEntry>)> =
-            self.models.write().unwrap().drain().collect();
+            write(&self.models).drain().collect();
         let mut out: Vec<(String, MetricsSnapshot)> = entries
             .into_iter()
             .filter_map(|(name, e)| e.shutdown().map(|s| (name, s)))
@@ -346,7 +380,7 @@ impl ModelRegistry {
     /// admission counters.
     pub fn prometheus(&self) -> String {
         let entries: Vec<(String, MetricsSnapshot)> = {
-            let g = self.models.read().unwrap();
+            let g = read(&self.models);
             let mut v: Vec<(String, MetricsSnapshot)> = g
                 .iter()
                 .filter_map(|(name, e)| e.metrics().map(|m| (name.clone(), m)))
@@ -396,9 +430,9 @@ impl ModelRegistry {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
-    use std::time::Duration;
 
     use super::super::batcher::PoolConfig;
     use super::super::executor::{ExecutorSpec, SyntheticExecutor};
@@ -472,8 +506,11 @@ mod tests {
         assert!(reg.register("toy", pool()).is_none());
         assert_eq!(reg.names(), vec!["toy".to_string()]);
         let entry = reg.get("toy").expect("registered");
+        assert!(entry.healthy(), "fresh pool is fully staffed");
         let logits = entry.infer(vec![0.5; SPEC.image_len]).unwrap();
         assert_eq!(logits.len(), SPEC.classes);
+        let bounded = entry.infer_within(vec![0.5; SPEC.image_len], Some(Duration::from_secs(5)));
+        assert_eq!(bounded.unwrap(), logits, "deadline path returns identical logits");
         assert!(reg.get("nope").is_none());
         // Hot swap: the old pool's final snapshot records its traffic.
         let old = reg.register("toy", pool()).expect("swap returns old snapshot");

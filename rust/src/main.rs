@@ -5,11 +5,12 @@
 //! scnn train --model NAME [--steps N] [--act-bsl B] [--artifacts DIR]
 //! scnn serve --model NAME [--workers N] [--clients N] [--requests N]
 //!            [--backend auto|pjrt|synthetic|sc|binary] [--batch N]
-//!            [--threads N] [--seed N] [--shed] [--artifacts DIR]
-//!            [--listen ADDR] [--models a,b|all] [--tenant-quota N]
-//!            [--duration SECS]
+//!            [--threads N] [--seed N] [--shed] [--restart-budget N]
+//!            [--artifacts DIR] [--listen ADDR] [--models a,b|all]
+//!            [--tenant-quota N] [--duration SECS]
 //! scnn client --addr HOST:PORT [--model NAME] [--requests N]
-//!             [--tenant ID] [--priority high|normal|low] [--metrics]
+//!             [--tenant ID] [--priority high|normal|low]
+//!             [--deadline-ms N] [--retries N] [--metrics]
 //! scnn info
 //! ```
 //!
@@ -85,13 +86,14 @@ fn main() -> Result<()> {
                  \n  train --model tnn|scnet10|scnet20 [--steps N] [--act-bsl B] [--res-bsl B]\n\
                  \n  serve --model NAME [--workers N] [--clients N] [--requests N] [--steps N]\n\
                  \n        [--backend auto|pjrt|synthetic|sc|binary] [--batch N] [--threads N]\n\
-                 \n        [--seed N] [--shed]\n\
+                 \n        [--seed N] [--shed] [--restart-budget N]\n\
                  \n        (--seed pins the sc/binary backends' deterministic model freeze;\n\
-                 \n         --threads shards each sc-backend batch across N engine threads)\n\
+                 \n         --threads shards each sc-backend batch across N engine threads;\n\
+                 \n         --restart-budget caps worker respawns after panics, default 3)\n\
                  \n        [--listen ADDR] serve over TCP instead of an in-process loop:\n\
                  \n        [--models a,b|all] [--tenant-quota N] [--duration SECS]\n\
                  \n  client --addr HOST:PORT [--model NAME] [--requests N] [--tenant ID]\n\
-                 \n        [--priority high|normal|low] [--metrics]\n\
+                 \n        [--priority high|normal|low] [--deadline-ms N] [--retries N] [--metrics]\n\
                  \n  info   print runtime/artifact status",
                 exp::ALL_IDS.join(" ")
             );
@@ -170,6 +172,9 @@ fn serve_cfg(flags: &HashMap<String, String>, artifacts: &str, model: &str) -> S
     cfg.seed = seed;
     if let Some(b) = flags.get("batch").and_then(|s| s.parse().ok()) {
         cfg.batch = b;
+    }
+    if let Some(r) = flags.get("restart-budget").and_then(|s| s.parse().ok()) {
+        cfg.restart_budget = r;
     }
     cfg
 }
@@ -308,14 +313,23 @@ fn cmd_client(flags: &HashMap<String, String>) -> Result<()> {
     let requests: usize = flags.get("requests").and_then(|s| s.parse().ok()).unwrap_or(16);
     let tenant = flags.get("tenant").cloned().unwrap_or_else(|| "default".into());
     let priority = Priority::parse(flags.get("priority").map(String::as_str).unwrap_or("normal"))?;
+    let deadline = flags
+        .get("deadline-ms")
+        .and_then(|s| s.parse::<u64>().ok())
+        .filter(|&ms| ms > 0)
+        .map(std::time::Duration::from_millis);
     let mut client =
         NetClient::connect(addr.as_str())?.with_tenant(&tenant).with_priority(priority);
+    client = client.with_deadline(deadline);
+    if let Some(r) = flags.get("retries").and_then(|s| s.parse().ok()) {
+        client = client.with_retries(r);
+    }
     if flags.contains_key("metrics") {
         print!("{}", client.metrics_text()?);
         return Ok(());
     }
     let data = dataset_for(&model);
-    let (mut ok, mut shed, mut hits) = (0usize, 0usize, 0usize);
+    let (mut ok, mut shed, mut expired, mut hits) = (0usize, 0usize, 0usize, 0usize);
     let t0 = std::time::Instant::now();
     for i in 0..requests {
         let (x, y) = data.sample(Split::Test, i);
@@ -335,12 +349,13 @@ fn cmd_client(flags: &HashMap<String, String>) -> Result<()> {
                 }
             }
             Status::Shed => shed += 1,
+            Status::Expired => expired += 1,
             s => anyhow::bail!("server rejected request ({s:?}): {}", resp.message),
         }
     }
     let dt = t0.elapsed();
     println!(
-        "{ok}/{requests} ok ({shed} shed) in {:.2}s -> {:.0} req/s; accuracy {:.4}",
+        "{ok}/{requests} ok ({shed} shed, {expired} expired) in {:.2}s -> {:.0} req/s; accuracy {:.4}",
         dt.as_secs_f64(),
         requests as f64 / dt.as_secs_f64().max(1e-9),
         hits as f64 / ok.max(1) as f64

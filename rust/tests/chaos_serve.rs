@@ -1,0 +1,317 @@
+//! Chaos tests of the fault-tolerance layer over real loopback
+//! sockets: worker panics injected at runtime (no client request may
+//! hang — every one completes with oracle-bit-identical logits or a
+//! typed error), restart-budget exhaustion marking a model unhealthy,
+//! exact deadline-shed accounting, v1 (pre-deadline) frames served by
+//! a v2 server, and byte-level connection chaos (malformed frames,
+//! mid-frame drops, slow writers) that must never wedge the server.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use scnn::coordinator::batcher::{is_deadline_error, is_worker_panic_error};
+use scnn::coordinator::chaos::{
+    chaos_factory, drop_after, malformed_frame, slow_writer, ChaosSwitch,
+};
+use scnn::coordinator::net::MAGIC;
+use scnn::coordinator::{
+    is_shed_error, is_timeout_error, BatchPolicy, Coordinator, ExecutorSpec, Frame, FrameReader,
+    ModelRegistry, NetClient, NetServer, OverloadPolicy, PoolConfig, Status, SyntheticExecutor,
+    TenantPolicy,
+};
+
+const SPEC: ExecutorSpec = ExecutorSpec { image_len: 12, batch: 4, classes: 5 };
+
+/// A deterministic fake "image" for request index `i`.
+fn image(i: usize) -> Vec<f32> {
+    (0..SPEC.image_len).map(|p| ((i * 31 + p * 7) % 17) as f32 * 0.125 - 1.0).collect()
+}
+
+/// Registry + server over a chaos-wrapped synthetic pool; returns the
+/// switch so tests can dial the panic rate while traffic flows.
+fn serve_chaos(
+    workers: usize,
+    latency: Duration,
+    restart_budget: usize,
+) -> (Arc<ChaosSwitch>, Arc<ModelRegistry>, NetServer) {
+    let switch = ChaosSwitch::new(0.0);
+    let factory = chaos_factory(SyntheticExecutor::factory(SPEC, latency), switch.clone(), 0xC4A0);
+    let coord = Coordinator::start_with(
+        factory,
+        PoolConfig { workers, restart_budget, ..PoolConfig::default() },
+    )
+    .expect("start chaos pool");
+    let registry = Arc::new(ModelRegistry::new(TenantPolicy::default()));
+    assert!(registry.register("toy", coord).is_none());
+    let server = NetServer::bind("127.0.0.1:0", registry.clone()).expect("bind loopback");
+    (switch, registry, server)
+}
+
+/// The headline acceptance test: with worker panics injected at
+/// runtime, no request ever hangs — each completes with logits
+/// bit-identical to the in-process oracle or a typed error — and once
+/// injection stops the pool respawns back to full, correct service.
+#[test]
+fn injected_panics_never_hang_clients_and_pool_recovers() {
+    let (switch, registry, server) = serve_chaos(2, Duration::from_millis(1), 10_000);
+    let addr = server.local_addr();
+    let oracle = SyntheticExecutor::new(SPEC);
+    switch.set_rate(0.3);
+    let clients = 4usize;
+    let per_client = 24usize;
+    let mut handles = Vec::new();
+    for t in 0..clients {
+        handles.push(std::thread::spawn(move || -> (usize, usize) {
+            let mut client = NetClient::connect(addr)
+                .expect("connect")
+                .with_deadline(Some(Duration::from_secs(5)))
+                .with_retries(0);
+            let oracle = SyntheticExecutor::new(SPEC);
+            let (mut ok, mut typed) = (0usize, 0usize);
+            for i in 0..per_client {
+                let idx = t * per_client + i;
+                match client.infer("toy", &image(idx)) {
+                    Ok(logits) => {
+                        assert_eq!(logits, oracle.reference_logits(&image(idx)), "request {idx}");
+                        ok += 1;
+                    }
+                    Err(e) => {
+                        assert!(
+                            is_worker_panic_error(&e)
+                                || is_shed_error(&e)
+                                || is_deadline_error(&e)
+                                || is_timeout_error(&e),
+                            "request {idx}: error must be typed, got: {e:#}"
+                        );
+                        typed += 1;
+                    }
+                }
+            }
+            (ok, typed)
+        }));
+    }
+    let (mut ok, mut typed) = (0usize, 0usize);
+    for h in handles {
+        let (o, e) = h.join().expect("client thread must complete — no hangs");
+        ok += o;
+        typed += e;
+    }
+    assert_eq!(ok + typed, clients * per_client, "every request accounted for");
+    assert!(typed > 0, "a 30% panic rate over {} requests must fail some", clients * per_client);
+    switch.off();
+    // Recovery: the pool respawned through every injected panic, so it
+    // must come back healthy and bit-exact at full worker count.
+    let entry = registry.get("toy").expect("model registered");
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while !entry.healthy() {
+        assert!(Instant::now() < deadline, "pool never recovered after injection stopped");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    let mut client = NetClient::connect(addr).expect("reconnect");
+    for i in 0..16 {
+        let x = image(1000 + i);
+        assert_eq!(client.infer("toy", &x).expect("post-chaos infer"), oracle.reference_logits(&x));
+    }
+    server.shutdown();
+    let (_, m) = registry.shutdown_all().remove(0);
+    assert!(m.worker_panics > 0, "panics were injected: {m:?}");
+    assert!(m.worker_respawns > 0, "workers must have respawned: {m:?}");
+    assert_eq!(m.worker_panics, m.worker_respawns, "budget 10k: every panic respawns");
+}
+
+/// A worker that exhausts its restart budget stays down: the model
+/// reports unhealthy in the registry, and requests keep failing
+/// typed — never hanging.
+#[test]
+fn restart_budget_exhaustion_marks_model_unhealthy() {
+    let (switch, registry, server) = serve_chaos(1, Duration::ZERO, 0);
+    switch.set_rate(1.0);
+    let entry = registry.get("toy").expect("model registered");
+    assert!(entry.healthy(), "healthy before any panic");
+    // First request crashes the only worker; budget 0 forbids respawn.
+    let err = entry
+        .infer_within(image(0), Some(Duration::from_secs(5)))
+        .expect_err("rate-1.0 panic must fail the request");
+    assert!(is_worker_panic_error(&err), "typed worker-panic error, got: {err:#}");
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while entry.healthy() {
+        assert!(Instant::now() < deadline, "exhausted pool must turn unhealthy");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    // The dead shard answers immediately with a typed error — no hang.
+    let err = entry
+        .infer_within(image(1), Some(Duration::from_secs(5)))
+        .expect_err("dead pool must reject");
+    let msg = format!("{err:#}");
+    assert!(!msg.is_empty());
+    server.shutdown();
+    let (_, m) = registry.shutdown_all().remove(0);
+    assert_eq!(m.worker_respawns, 0, "budget 0 permits no respawn: {m:?}");
+    assert!(m.worker_panics >= 1, "{m:?}");
+    assert_eq!(m.live_workers, 0, "{m:?}");
+}
+
+/// Requests whose deadline lapses in the queue are shed at dequeue
+/// with exact `deadline_expired` accounting — the executor never
+/// spends a batch on them.
+#[test]
+fn queued_deadline_expiry_sheds_with_exact_accounting() {
+    let policy = BatchPolicy { overload: OverloadPolicy::Block, ..BatchPolicy::default() };
+    let coord = Coordinator::start_with(
+        SyntheticExecutor::factory(SPEC, Duration::from_millis(200)),
+        PoolConfig { workers: 1, policy, queue_depth: 16, ..PoolConfig::default() },
+    )
+    .expect("start pool");
+    // Occupy the single worker with a deadline-free request...
+    let occupant = {
+        let client = coord.client();
+        std::thread::spawn(move || client.infer(image(0)))
+    };
+    std::thread::sleep(Duration::from_millis(50));
+    // ...then queue requests whose 5 ms deadline lapses long before
+    // the 200 ms batch in front of them completes.
+    let expired = 3usize;
+    let mut handles = Vec::new();
+    for i in 1..=expired {
+        let client = coord.client();
+        handles.push(std::thread::spawn(move || {
+            client.infer_within(image(i), Some(Duration::from_millis(5)))
+        }));
+    }
+    for h in handles {
+        let err = h.join().expect("no hang").expect_err("queued past its deadline");
+        assert!(is_deadline_error(&err), "typed deadline error, got: {err:#}");
+    }
+    assert!(occupant.join().expect("no hang").is_ok(), "occupant unaffected");
+    let m = coord.metrics();
+    assert_eq!(m.deadline_expired, expired as u64, "exact expiry accounting: {m:?}");
+    assert_eq!(m.shed, 0, "deadline sheds are not overload sheds: {m:?}");
+    assert_eq!(m.requests, 1, "only the occupant reached the executor: {m:?}");
+    coord.shutdown();
+}
+
+/// Hand-encode a v1 infer frame — the pre-deadline wire layout an old
+/// client still speaks.
+fn encode_v1_infer(id: u64, model: &str, payload: &[f32]) -> Vec<u8> {
+    let mut out = vec![0u8; 4];
+    out.extend_from_slice(&MAGIC.to_le_bytes());
+    out.push(1); // protocol version 1
+    out.push(0); // kind: infer
+    out.extend_from_slice(&id.to_le_bytes());
+    out.push(1); // priority: normal
+    out.push(model.len() as u8);
+    out.push(7u8); // tenant "default"
+    out.extend_from_slice(model.as_bytes());
+    out.extend_from_slice(b"default");
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    for v in payload {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    let body_len = (out.len() - 4) as u32;
+    out[0..4].copy_from_slice(&body_len.to_le_bytes());
+    out
+}
+
+/// An old (v1) client gets correct logits back in a v1-stamped reply:
+/// the server answers each peer at the version it spoke.
+#[test]
+fn v1_client_round_trips_against_v2_server() {
+    let (_switch, registry, server) = serve_chaos(1, Duration::ZERO, 3);
+    let addr = server.local_addr();
+    let x = image(7);
+    let bytes = encode_v1_infer(99, "toy", &x);
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    stream.write_all(&bytes).expect("send v1 frame");
+    stream.flush().expect("flush");
+    let mut reader = FrameReader::new();
+    let mut buf = [0u8; 4096];
+    let frame = loop {
+        let n = stream.read(&mut buf).expect("read reply");
+        assert!(n > 0, "server closed before replying");
+        reader.feed(&buf[..n]);
+        if let Some(f) = reader.try_next().expect("well-formed reply") {
+            break f;
+        }
+    };
+    assert_eq!(reader.last_version(), 1, "reply must be stamped v1 for a v1 peer");
+    let Frame::Response(r) = frame else { panic!("expected a response frame, got {frame:?}") };
+    assert_eq!(r.id, 99);
+    assert_eq!(r.status, Status::Ok, "{}", r.message);
+    assert_eq!(r.logits, SyntheticExecutor::new(SPEC).reference_logits(&x));
+    server.shutdown();
+    registry.shutdown_all();
+}
+
+/// Byte-level connection chaos — malformed frames, a client dying
+/// mid-frame, a one-byte-per-write slow sender — must never wedge the
+/// server, and finished connection handles get reaped.
+#[test]
+fn connection_chaos_does_not_wedge_the_server_and_handles_are_reaped() {
+    let (_switch, registry, server) = serve_chaos(1, Duration::ZERO, 3);
+    let addr = server.local_addr();
+    // Malformed frame: the server answers BadRequest and closes.
+    let mut bad = TcpStream::connect(addr).expect("connect");
+    bad.write_all(&malformed_frame()).expect("send garbage");
+    bad.flush().expect("flush");
+    let mut reply = Vec::new();
+    bad.read_to_end(&mut reply).expect("server must close the bad connection");
+    let mut reader = FrameReader::new();
+    reader.feed(&reply);
+    match reader.try_next().expect("reply decodes") {
+        Some(Frame::Response(r)) => assert_eq!(r.status, Status::BadRequest),
+        other => panic!("expected BadRequest response, got {other:?}"),
+    }
+    // A client dropping mid-frame leaves no wedged connection slot.
+    let partial = encode_v1_infer(1, "toy", &image(1));
+    let cut = partial.len() / 2;
+    for _ in 0..4 {
+        let stream = TcpStream::connect(addr).expect("connect");
+        drop_after(stream, &partial, cut);
+    }
+    // A slow writer trickling a whole valid frame still gets served.
+    let mut slow = TcpStream::connect(addr).expect("connect");
+    slow_writer(&mut slow, &encode_v1_infer(2, "toy", &image(2)), Duration::from_millis(1))
+        .expect("trickle a full frame");
+    let mut reader = FrameReader::new();
+    let mut buf = [0u8; 4096];
+    let frame = loop {
+        let n = slow.read(&mut buf).expect("read reply");
+        assert!(n > 0, "server closed on the slow writer");
+        reader.feed(&buf[..n]);
+        if let Some(f) = reader.try_next().expect("well-formed reply") {
+            break f;
+        }
+    };
+    let Frame::Response(r) = frame else { panic!("expected response, got {frame:?}") };
+    assert_eq!(r.status, Status::Ok, "{}", r.message);
+    drop(slow);
+    drop(bad);
+    // Throughout the chaos, a normal client is served correctly.
+    let mut client = NetClient::connect(addr).expect("connect");
+    let x = image(3);
+    assert_eq!(
+        client.infer("toy", &x).expect("healthy request"),
+        SyntheticExecutor::new(SPEC).reference_logits(&x)
+    );
+    // Closed connections get their handles reaped (accept-time reap +
+    // 250 ms sweeper), so tracking stays bounded by live connections.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while server.connections_reaped() < 5 {
+        assert!(
+            Instant::now() < deadline,
+            "reaper never collected finished handles: tracked={}, reaped={}",
+            server.tracked_connections(),
+            server.connections_reaped()
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    assert!(
+        server.tracked_connections() <= 2,
+        "only live connections may stay tracked, got {}",
+        server.tracked_connections()
+    );
+    server.shutdown();
+    registry.shutdown_all();
+}

@@ -105,7 +105,7 @@ fn load_shedding_rejects_and_counts_overflow() {
     let policy = BatchPolicy { overload: OverloadPolicy::Shed, ..BatchPolicy::default() };
     let coord = Coordinator::start_with(
         SyntheticExecutor::factory(SPEC, Duration::from_millis(25)),
-        PoolConfig { workers: 1, policy, queue_depth: 2 },
+        PoolConfig { workers: 1, policy, queue_depth: 2, ..PoolConfig::default() },
     )
     .expect("start pool");
     let clients = 12usize;

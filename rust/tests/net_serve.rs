@@ -135,7 +135,7 @@ fn shed_accounting_is_exact_under_overload() {
     let registry = Arc::new(ModelRegistry::new(TenantPolicy::default()));
     let coord = Coordinator::start_with(
         SyntheticExecutor::factory(SPEC, Duration::from_millis(25)),
-        PoolConfig { workers: 1, policy, queue_depth: 2 },
+        PoolConfig { workers: 1, policy, queue_depth: 2, ..PoolConfig::default() },
     )
     .unwrap();
     assert!(registry.register("toy", coord).is_none());
@@ -400,7 +400,14 @@ fn random_request(rng: &mut Rng, payload_len: usize) -> Frame {
     let tenant: String = (0..tenant_len).map(|i| (b'A' + (i % 26) as u8) as char).collect();
     let priority = Priority::from_u8((rng.next_u64() % 3) as u8).unwrap();
     let payload: Vec<f32> = (0..payload_len).map(|_| (rng.f64() * 4.0 - 2.0) as f32).collect();
-    Frame::Infer(InferRequest { id: rng.next_u64(), priority, model, tenant, payload })
+    Frame::Infer(InferRequest {
+        id: rng.next_u64(),
+        priority,
+        deadline_ms: 0,
+        model,
+        tenant,
+        payload,
+    })
 }
 
 #[test]
