@@ -15,11 +15,13 @@ bench:
 	cargo bench
 
 # Machine-readable perf record: engine throughput + SC-backend pool
-# sweep in BENCH_sc.json, plus sorter-level Mbit/s in BENCH_bsn.json
-# (both tracked across PRs; CI uploads them as the `bench-json`
-# artifact with BENCH_QUICK=1).
+# sweep in BENCH_sc.json, sorter-level Mbit/s in BENCH_bsn.json, and
+# datapath/SI costs plus the faulted-vs-clean/guarded engine overhead
+# in BENCH_datapath.json (all tracked across PRs; CI uploads them as
+# the `bench-json` artifact with BENCH_QUICK=1).
 bench-json:
 	BENCH_JSON=BENCH_sc.json cargo bench --bench sc_serve
 	BENCH_JSON=BENCH_bsn.json cargo bench --bench bsn
+	BENCH_JSON=BENCH_datapath.json cargo bench --bench datapath
 
 .PHONY: artifacts build test bench bench-json

@@ -1,16 +1,32 @@
-//! Conv-datapath benchmarks: the Table IV / Fig 2 cost units plus the
-//! SI synthesis cost (a per-layer setup operation in the executors).
+//! Conv-datapath benchmarks: the Table IV / Fig 2 cost units, the SI
+//! synthesis cost (a per-layer setup operation in the executors), and
+//! the fault layer's serving overhead — the packed engine forwarding
+//! clean vs under injected BER vs with the integrity guard armed.
+//!
+//! With `BENCH_JSON=<path>` (what `make bench-json` sets) the results
+//! are written as machine-readable JSON (`BENCH_datapath.json` in CI),
+//! so the faulted-vs-clean throughput ratio is tracked across PRs.
+//! `BENCH_QUICK=1` selects the short CI configuration.
+
+use std::sync::Arc;
 
 use scnn::circuits::si::{ActivationFn, SelectiveInterconnect};
 use scnn::circuits::{BsnKind, ConvDatapath, DatapathConfig};
 use scnn::coding::Ternary;
-use scnn::util::bench::Bench;
+use scnn::fault::guard::{DatapathGuard, GuardCounters};
+use scnn::nn::model::{ModelCfg, ModelParams};
+use scnn::nn::quant::QuantConfig;
+use scnn::nn::sc_exec::{FaultCfg, Prepared};
+use scnn::nn::ScEngine;
+use scnn::util::bench::{Bench, JsonReport};
 use scnn::util::Rng;
 
-fn main() {
-    let b = Bench::default();
+fn quick() -> bool {
+    std::env::var("BENCH_QUICK").is_ok_and(|v| v != "0")
+}
+
+fn datapath_eval(report: &mut JsonReport, b: &Bench, rng: &mut Rng) {
     println!("== datapath functional eval (one output pixel) ==");
-    let mut rng = Rng::new(5);
     for (label, acc_width, act_bsl) in
         [("2-2", 576usize, 2usize), ("2-4", 576, 4), ("2-2-wide", 4608, 2)]
     {
@@ -26,14 +42,15 @@ fn main() {
         let acts: Vec<i64> = (0..acc_width).map(|_| rng.gen_range_i64(-half, half)).collect();
         let ws: Vec<Ternary> =
             (0..acc_width).map(|_| Ternary::from_i64(rng.gen_range_i64(-1, 1))).collect();
-        b.run(&format!("datapath/eval/{label}"), acc_width as u64, || {
+        let m = b.run(&format!("datapath/eval/{label}"), acc_width as u64, || {
             dp.eval(&acts, &ws, None)
         });
+        report.add(&format!("datapath/eval/{label}"), &m, acc_width as u64);
     }
 
     println!("\n== datapath cost roll-up (used by fig2/tab4 sweeps) ==");
     for act_bsl in [2usize, 4, 8, 16] {
-        b.run(&format!("datapath/cost/a{act_bsl}"), 1, || {
+        let m = b.run(&format!("datapath/cost/a{act_bsl}"), 1, || {
             ConvDatapath::new(DatapathConfig {
                 acc_width: 4608,
                 act_bsl,
@@ -44,17 +61,21 @@ fn main() {
             })
             .cost()
         });
+        report.add(&format!("datapath/cost/a{act_bsl}"), &m, 0);
     }
+}
 
+fn si_series(report: &mut JsonReport, b: &Bench) {
     println!("\n== SI synthesis (per-channel, per-layer setup) ==");
     for in_w in [1152usize, 9216] {
-        b.run(&format!("si/synthesize/{in_w}->16"), in_w as u64, || {
+        let m = b.run(&format!("si/synthesize/{in_w}->16"), in_w as u64, || {
             SelectiveInterconnect::for_activation(
                 &ActivationFn::BnRelu { gamma: 1.2, beta: 3.0, ratio: 0.05 },
                 in_w,
                 16,
             )
         });
+        report.add(&format!("si/synthesize/{in_w}->16"), &m, in_w as u64);
     }
 
     println!("\n== SI apply ==");
@@ -63,5 +84,78 @@ fn main() {
         9216,
         16,
     );
-    b.run("si/apply_count/9216", 1, || si.apply_count(5000));
+    let m = b.run("si/apply_count/9216", 1, || si.apply_count(5000));
+    report.add("si/apply_count/9216", &m, 1);
+}
+
+/// The integrity layer's serving cost: one engine forwarding the same
+/// image clean, under injected BER (count-domain mask folding), and
+/// with the datapath guard verifying every GEMM row block.
+fn fault_overhead(report: &mut JsonReport, b: &Bench, rng: &mut Rng) {
+    println!("\n== engine forward: clean vs faulted vs guarded (tnn, BSL 2) ==");
+    let cfg = ModelCfg::tnn();
+    let params = ModelParams::init(&cfg, &mut Rng::new(11));
+    let prep = Arc::new(Prepared::new(
+        &cfg,
+        &params,
+        QuantConfig { act_bsl: Some(2), weight_ternary: true, residual_bsl: None },
+    ));
+    let (c, h, w) = prep.cfg.input;
+    let image: Vec<f32> = (0..c * h * w).map(|_| rng.normal() as f32 * 0.5).collect();
+    let mut engine = ScEngine::new(prep);
+    let cl = engine.classes();
+    let mut logits = vec![0i64; cl];
+
+    let clean = b.run("engine/forward/clean", 1, || {
+        engine.forward_into(&image, &mut logits);
+        logits[0]
+    });
+    report.add("engine/forward/clean", &clean, 1);
+
+    for ber in [1e-3f64, 1e-2] {
+        engine.set_fault(Some(FaultCfg { ber, seed: 7 }));
+        let name = format!("engine/forward/faulted_ber={ber:.0e}");
+        let m = b.run(&name, 1, || {
+            engine.forward_into(&image, &mut logits);
+            logits[0]
+        });
+        report.add(&name, &m, 1);
+        if m.median_s > 0.0 {
+            report.add_scalar(
+                &format!("engine/forward/clean_over_faulted_ber={ber:.0e}"),
+                clean.median_s / m.median_s,
+                "x",
+            );
+        }
+    }
+    engine.set_fault(None);
+
+    engine.set_guard(Some(Arc::new(DatapathGuard::new(Arc::new(GuardCounters::default())))));
+    let guarded = b.run("engine/forward/guarded", 1, || {
+        engine.forward_into(&image, &mut logits);
+        logits[0]
+    });
+    report.add("engine/forward/guarded", &guarded, 1);
+    if guarded.median_s > 0.0 {
+        report.add_scalar(
+            "engine/forward/clean_over_guarded",
+            clean.median_s / guarded.median_s,
+            "x",
+        );
+    }
+}
+
+fn main() {
+    let b = if quick() { Bench::quick() } else { Bench::default() };
+    let mut report = JsonReport::new("datapath");
+    let mut rng = Rng::new(5);
+    datapath_eval(&mut report, &b, &mut rng);
+    si_series(&mut report, &b);
+    fault_overhead(&mut report, &b, &mut rng);
+    if let Ok(path) = std::env::var("BENCH_JSON") {
+        report.write(&path).expect("write BENCH_JSON");
+        println!("\nwrote {} entries to {path}", report.len());
+    } else {
+        println!("\n(set BENCH_JSON=BENCH_datapath.json or run `make bench-json` for JSON output)");
+    }
 }

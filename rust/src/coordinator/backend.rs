@@ -23,6 +23,7 @@
 
 use std::sync::Arc;
 
+use crate::fault::guard::GuardCounters;
 use crate::nn::model::{ModelCfg, ModelParams};
 use crate::nn::quant::QuantConfig;
 use crate::nn::sc_exec::Prepared;
@@ -101,6 +102,17 @@ impl Backend {
     /// trained-parameter blobs into the worker closure instead of
     /// deep-cloning them.
     pub fn factory(self, cfg: ServeConfig) -> Result<ExecutorFactory> {
+        self.factory_with(cfg, None)
+    }
+
+    /// [`Backend::factory`] with an optional datapath-guard counter
+    /// block (see [`ServeConfig::guard`]). Only the `sc` backend has a
+    /// count-domain datapath to guard; the other backends ignore it.
+    pub fn factory_with(
+        self,
+        cfg: ServeConfig,
+        guard: Option<Arc<GuardCounters>>,
+    ) -> Result<ExecutorFactory> {
         match self.resolve(&cfg.artifacts, &cfg.model) {
             Backend::Pjrt => {
                 let ServeConfig { artifacts, model, params, knobs, .. } = cfg;
@@ -114,9 +126,12 @@ impl Backend {
                 let (c, h, w) = mc.input;
                 Ok(SyntheticExecutor::demo_factory(c * h * w, mc.num_classes))
             }
-            Backend::Sc => {
-                Ok(ScBatchExecutor::factory(prepared_for(&cfg)?, cfg.batch, cfg.threads))
-            }
+            Backend::Sc => Ok(ScBatchExecutor::factory_with(
+                prepared_for(&cfg)?,
+                cfg.batch,
+                cfg.threads,
+                guard,
+            )),
             Backend::Binary => Ok(BinaryBatchExecutor::factory(prepared_for(&cfg)?, cfg.batch)),
             Backend::Auto => unreachable!("resolve() never returns Auto"),
         }

@@ -51,6 +51,7 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+use crate::fault::guard::GuardCounters;
 use crate::runtime::trainer::Knobs;
 use crate::Result;
 use anyhow::Context;
@@ -389,6 +390,12 @@ pub struct ServeConfig {
     /// panics before it gives up its shard (see
     /// [`PoolConfig::restart_budget`]).
     pub restart_budget: usize,
+    /// Attach the count-domain [`crate::fault::guard::DatapathGuard`]
+    /// to the native `sc` backend: every GEMM row block is
+    /// checksum-verified and scalar-re-executed on violation, with
+    /// detections/recoveries reported through the pool metrics
+    /// (`scnn serve --guard`). Other backends ignore it.
+    pub guard: bool,
 }
 
 impl ServeConfig {
@@ -406,6 +413,7 @@ impl ServeConfig {
             batch: 8,
             threads: 1,
             restart_budget: DEFAULT_RESTART_BUDGET,
+            guard: false,
         }
     }
 }
@@ -515,6 +523,9 @@ pub struct Coordinator {
     metrics: Vec<Arc<ServerMetrics>>,
     shared: Arc<Shared>,
     batch: usize,
+    /// Integrity counters of the datapath guard, when
+    /// [`ServeConfig::guard`] armed one on the backend.
+    guard: Option<Arc<GuardCounters>>,
 }
 
 impl Coordinator {
@@ -529,8 +540,11 @@ impl Coordinator {
             queue_depth: cfg.queue_depth,
             restart_budget: cfg.restart_budget,
         };
-        let factory = backend.factory(cfg)?;
-        Self::start_with(factory, pool)
+        let guard = cfg.guard.then(|| Arc::new(GuardCounters::default()));
+        let factory = backend.factory_with(cfg, guard.clone())?;
+        let mut coord = Self::start_with(factory, pool)?;
+        coord.guard = guard;
+        Ok(coord)
     }
 
     /// Start a PJRT-backed pool; blocks until every worker has
@@ -631,7 +645,7 @@ impl Coordinator {
             image_len: spec.image_len,
             classes: spec.classes,
         };
-        Ok(Self { client, workers, metrics, shared, batch: spec.batch })
+        Ok(Self { client, workers, metrics, shared, batch: spec.batch, guard: None })
     }
 
     /// Run one worker under supervision: serve until the loop exits
@@ -886,6 +900,8 @@ impl Coordinator {
                 worker_respawns: self.shared.worker_respawns.load(Ordering::Relaxed),
                 deadline_expired: self.shared.deadline_expired.load(Ordering::Relaxed),
                 live_workers: self.shared.live_workers.load(Ordering::Relaxed),
+                integrity_detected: self.guard.as_ref().map_or(0, |g| g.detected()),
+                integrity_recovered: self.guard.as_ref().map_or(0, |g| g.recovered()),
             },
         )
     }
@@ -948,6 +964,7 @@ mod tests {
         assert_eq!(cfg.workers, 1);
         assert_eq!(cfg.queue_depth, 1024);
         assert_eq!(cfg.restart_budget, DEFAULT_RESTART_BUDGET);
+        assert!(!cfg.guard, "the integrity guard is opt-in");
         assert_eq!(PoolConfig::default().restart_budget, DEFAULT_RESTART_BUDGET);
     }
 

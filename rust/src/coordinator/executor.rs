@@ -19,6 +19,7 @@
 use std::sync::Arc;
 use std::time::Duration;
 
+use crate::fault::guard::{DatapathGuard, GuardCounters};
 use crate::nn::binary_exec::BinaryExecutor;
 use crate::nn::sc_engine::ScEngine;
 use crate::nn::sc_exec::Prepared;
@@ -139,7 +140,25 @@ impl ScBatchExecutor {
     /// Factory for [`super::Coordinator::start_with`]: every worker
     /// shares `prep`, each builds its own engine in-thread.
     pub fn factory(prep: Arc<Prepared>, batch: usize, threads: usize) -> ExecutorFactory {
-        Box::new(move |_worker| Ok(Box::new(ScBatchExecutor::new(prep.clone(), batch, threads))))
+        Self::factory_with(prep, batch, threads, None)
+    }
+
+    /// [`ScBatchExecutor::factory`] with the count-domain integrity
+    /// guard armed: one [`DatapathGuard`] (shared `Arc`) checks every
+    /// worker's GEMM row blocks, so detections and recoveries
+    /// aggregate across the fleet into the given counters.
+    pub fn factory_with(
+        prep: Arc<Prepared>,
+        batch: usize,
+        threads: usize,
+        guard: Option<Arc<GuardCounters>>,
+    ) -> ExecutorFactory {
+        let guard = guard.map(|c| Arc::new(DatapathGuard::new(c)));
+        Box::new(move |_worker| {
+            let mut exec = ScBatchExecutor::new(prep.clone(), batch, threads);
+            exec.engine.set_guard(guard.clone());
+            Ok(Box::new(exec))
+        })
     }
 }
 

@@ -195,6 +195,12 @@ pub struct PoolCounters {
     pub deadline_expired: u64,
     /// Worker threads currently serving their shard.
     pub live_workers: usize,
+    /// GEMM rows that failed a datapath-guard integrity check
+    /// (`ServeConfig.guard`).
+    pub integrity_detected: u64,
+    /// Guard-detected rows whose scalar re-execution restored a
+    /// passing check.
+    pub integrity_recovered: u64,
 }
 
 /// A point-in-time snapshot aggregated over the whole pool.
@@ -240,6 +246,12 @@ pub struct MetricsSnapshot {
     /// Worker threads currently serving; less than `workers` once a
     /// worker exhausts its restart budget.
     pub live_workers: usize,
+    /// GEMM rows that failed the datapath guard's count-domain
+    /// integrity checks (zero when the guard is off).
+    pub integrity_detected: u64,
+    /// Guard-detected rows healed by scalar re-execution. Equal to
+    /// `integrity_detected` while recovery holds its 100% contract.
+    pub integrity_recovered: u64,
     /// Full-lifetime latency histogram (bucket-wise sum over workers).
     pub hist: LatencyHistogram,
     /// Per-worker breakdown, indexed by worker.
@@ -352,6 +364,8 @@ impl ServerMetrics {
             worker_respawns: counters.worker_respawns,
             deadline_expired: counters.deadline_expired,
             live_workers: counters.live_workers,
+            integrity_detected: counters.integrity_detected,
+            integrity_recovered: counters.integrity_recovered,
             hist,
             per_worker,
         }
@@ -462,6 +476,20 @@ pub fn prometheus_text(models: &[(&str, MetricsSnapshot)]) -> String {
         "Worker threads currently serving their shard.",
         &counter_rows(&|s| s.live_workers as u64),
     );
+    family(
+        &mut out,
+        "scnn_integrity_faults_detected_total",
+        "counter",
+        "GEMM rows that failed a datapath-guard integrity check.",
+        &counter_rows(&|s| s.integrity_detected),
+    );
+    family(
+        &mut out,
+        "scnn_integrity_recovered_total",
+        "counter",
+        "Guard-detected rows healed by scalar re-execution.",
+        &counter_rows(&|s| s.integrity_recovered),
+    );
     // Histogram family: cumulative buckets, then _sum and _count.
     let mut rows = Vec::new();
     for (m, s) in models {
@@ -554,6 +582,8 @@ mod tests {
             worker_respawns: 1,
             deadline_expired: 5,
             live_workers: 2,
+            integrity_detected: 4,
+            integrity_recovered: 4,
         };
         let s = ServerMetrics::aggregate(&[a, b], 4, counters);
         assert_eq!(s.requests, 5);
@@ -566,6 +596,8 @@ mod tests {
         assert_eq!(s.worker_respawns, 1);
         assert_eq!(s.deadline_expired, 5);
         assert_eq!(s.live_workers, 2);
+        assert_eq!(s.integrity_detected, 4);
+        assert_eq!(s.integrity_recovered, 4);
         assert!((s.occupancy - 5.0 / 8.0).abs() < 1e-9);
         assert_eq!(s.p99, Duration::from_micros(500));
         assert_eq!(s.per_worker[0].requests, 4);
@@ -660,6 +692,8 @@ mod tests {
         assert!(text.contains("scnn_worker_respawns_total{model=\"tnn\"} 0"), "{text}");
         assert!(text.contains("scnn_deadline_expired_total{model=\"tnn\"} 0"), "{text}");
         assert!(text.contains("scnn_workers_live{model=\"tnn\"} 1"), "{text}");
+        assert!(text.contains("scnn_integrity_faults_detected_total{model=\"tnn\"} 0"), "{text}");
+        assert!(text.contains("scnn_integrity_recovered_total{model=\"tnn\"} 0"), "{text}");
         // Bucket series is cumulative: two samples ≤ 100 µs, all three
         // ≤ 50 ms and in +Inf.
         let bucket = |le: &str, n: u64| {

@@ -1,0 +1,96 @@
+//! BER-sweep harness over the packed engine (`scnn exp ber`).
+//!
+//! Unlike the PJRT-trained Fig 5 runner ([`super::accuracy_exp::fig5`]),
+//! this experiment needs no artifacts and no training: the network is
+//! frozen deterministically from the seed ([`ModelParams::init`]) and
+//! the reference labels are the *clean engine's own predictions*, so
+//! every number measures pure fault-induced disagreement with the
+//! fault-free datapath. The sweep itself is the parallel
+//! [`fault::ber_sweep_on`] harness — the (BER × repeat) grid sharded
+//! across threads, each point's faults a pure function of
+//! `(seed, ber, repeat, image index)`.
+//!
+//! Two tables come out: accuracy vs BER at each activation stream
+//! length, and accuracy vs stream length at the harshest BER (longer
+//! streams average more flips away — the SC robustness argument).
+//! Machine-readable results land in `RESULTS_fault.json`.
+
+use std::sync::Arc;
+
+use anyhow::Context;
+
+use crate::data::{Dataset, Split, SynthDigits};
+use crate::fault;
+use crate::nn::model::{ModelCfg, ModelParams};
+use crate::nn::quant::QuantConfig;
+use crate::nn::sc_exec::Prepared;
+use crate::nn::ScEngine;
+use crate::util::bench::JsonReport;
+use crate::util::Rng;
+use crate::Result;
+
+use super::{banner, Opts, Report};
+
+/// Output path of the machine-readable sweep results.
+pub const RESULTS_PATH: &str = "RESULTS_fault.json";
+
+/// Activation stream lengths swept (the accuracy-vs-stream-length
+/// axis).
+const ACT_BSLS: [usize; 3] = [2, 4, 8];
+
+/// `scnn exp ber`: accuracy vs BER and vs stream length on the packed
+/// engine, no PJRT required.
+pub fn ber(opts: &Opts) -> Result<Report> {
+    banner("BER sweep — packed-engine fault injection");
+    let mut rep = Report::new("ber");
+    let data = SynthDigits::new();
+    let n_img = if opts.quick { 24 } else { 128 };
+    let repeats = if opts.quick { 1 } else { 3 };
+    let bers: &[f64] =
+        if opts.quick { &[1e-4, 1e-3, 1e-2] } else { &[1e-5, 1e-4, 1e-3, 3e-3, 1e-2, 3e-2] };
+    let (images, _) = data.batch(Split::Test, 0, n_img);
+    let cfg = ModelCfg::tnn();
+    let mut rng = Rng::new(opts.seed);
+    let params = ModelParams::init(&cfg, &mut rng);
+    let mut json = JsonReport::new("ber");
+    let top_ber = bers[bers.len() - 1];
+    println!("{n_img} images, {repeats} repeat(s), seed {}", opts.seed);
+    for act_bsl in ACT_BSLS {
+        let prep = Arc::new(Prepared::new(
+            &cfg,
+            &params,
+            QuantConfig { act_bsl: Some(act_bsl), weight_ternary: true, residual_bsl: None },
+        ));
+        // Self-labels: the clean engine's predictions become ground
+        // truth, so soft accuracy is 1.0 by construction and every
+        // faulted point reads directly as agreement with the fault-free
+        // datapath.
+        let labels = ScEngine::new(prep.clone()).predict(&images);
+        let sweep = fault::ber_sweep_on(&prep, &images, &labels, bers, repeats, opts.seed);
+        println!("--- act BSL {act_bsl} ---");
+        println!("{:<10} {:>10} {:>10}", "BER", "acc SC", "acc bin");
+        for p in &sweep.points {
+            println!("{:<10.0e} {:>10.4} {:>10.4}", p.ber, p.acc_sc, p.acc_binary);
+            let row = format!("bsl{act_bsl}/{:.0e}", p.ber);
+            rep.push(&row, "acc_sc", p.acc_sc);
+            rep.push(&row, "acc_binary", p.acc_binary);
+            json.add_scalar(&format!("ber/{row}/acc_sc"), p.acc_sc, "accuracy");
+            json.add_scalar(&format!("ber/{row}/acc_binary"), p.acc_binary, "accuracy");
+        }
+        let red = sweep.avg_loss_reduction();
+        rep.push(&format!("bsl{act_bsl}"), "loss_reduction", red);
+        json.add_scalar(&format!("ber/bsl{act_bsl}/loss_reduction"), red, "fraction");
+    }
+    // The stream-length table: SC accuracy at the harshest BER across
+    // stream lengths (one flip is 1/L of the signal, so longer streams
+    // should hold more accuracy).
+    println!("--- SC accuracy at BER {top_ber:.0e} vs stream length ---");
+    for act_bsl in ACT_BSLS {
+        if let Some(acc) = rep.get(&format!("bsl{act_bsl}/{top_ber:.0e}"), "acc_sc") {
+            println!("BSL {act_bsl:<4} {acc:>10.4}");
+        }
+    }
+    json.write(RESULTS_PATH).with_context(|| format!("writing {RESULTS_PATH}"))?;
+    println!("wrote {RESULTS_PATH} ({} entries)", json.len());
+    Ok(rep)
+}

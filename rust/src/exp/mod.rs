@@ -23,9 +23,11 @@
 //! | tab3  | quantization ablation                            | [`accuracy_exp`] |
 //! | fig8  | high-precision-residual ablation                 | [`accuracy_exp`] |
 //! | tab4  | W-A-R configs: area/ADP/accuracy                 | [`accuracy_exp`] |
+//! | ber   | engine BER sweep → `RESULTS_fault.json`          | [`fault_exp`] |
 
 pub mod accuracy_exp;
 pub mod circuits_exp;
+pub mod fault_exp;
 
 use crate::Result;
 
@@ -77,9 +79,9 @@ impl Report {
 }
 
 /// All experiment ids in run order.
-pub const ALL_IDS: [&str; 15] = [
+pub const ALL_IDS: [&str; 16] = [
     "tab2", "fig1", "fig4", "fig7", "fig9", "fig10", "fig11", "fig12", "tab5",
-    "fig13", "fig2", "fig5", "tab3", "fig8", "tab4",
+    "fig13", "fig2", "fig5", "tab3", "fig8", "tab4", "ber",
 ];
 
 /// Run one experiment by id.
@@ -100,6 +102,7 @@ pub fn run(id: &str, opts: &Opts) -> Result<Report> {
         "tab3" => accuracy_exp::tab3(opts),
         "fig8" => accuracy_exp::fig8(opts),
         "tab4" => accuracy_exp::tab4(opts),
+        "ber" => fault_exp::ber(opts),
         other => anyhow::bail!("unknown experiment id {other}; known: {ALL_IDS:?}"),
     }
 }

@@ -1,0 +1,227 @@
+//! Count-domain integrity guards over the packed GEMM datapath.
+//!
+//! The SC design computes in exact integers, which buys invariants a
+//! float datapath never has: every per-neuron accumulation is bounded
+//! by the stream length (`|Σ wᵢxᵢ| ≤ acc_width · bsl/2`), and a row of
+//! GEMM counts must sum to the weight row dotted with the column-sum
+//! vector — an i64 checksum that any single corrupted count breaks.
+//! [`DatapathGuard`] checks both after each `gemm_rows_into` block;
+//! on violation it re-executes the affected row through the pinned
+//! scalar kernel ([`Dispatch::scalar()`]), rechecks, and counts the
+//! outcome in [`GuardCounters`] for the serving metrics
+//! (`scnn_integrity_faults_detected_total` /
+//! `scnn_integrity_recovered_total`).
+//!
+//! The chaos knob ([`DatapathGuard::with_chaos`]) deliberately corrupts
+//! every Nth row *before* the check — the self-test used by
+//! `rust/tests/gemm.rs` to prove detection and recovery are 100% on the
+//! live engine path.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::nn::gemm::TernaryPanel;
+use crate::util::simd::Dispatch;
+
+/// Shared detection/recovery counters, reported through
+/// `coordinator::metrics` when the guard serves behind a pool.
+#[derive(Debug, Default)]
+pub struct GuardCounters {
+    detected: AtomicU64,
+    recovered: AtomicU64,
+}
+
+impl GuardCounters {
+    /// Rows that failed an integrity check.
+    pub fn detected(&self) -> u64 {
+        self.detected.load(Ordering::Relaxed)
+    }
+
+    /// Rows whose scalar re-execution restored a passing check.
+    pub fn recovered(&self) -> u64 {
+        self.recovered.load(Ordering::Relaxed)
+    }
+}
+
+/// Integrity guard over GEMM row blocks. One guard (behind an `Arc`)
+/// is shared by every engine thread and pool worker; all state is
+/// atomic.
+#[derive(Debug)]
+pub struct DatapathGuard {
+    counters: Arc<GuardCounters>,
+    /// Chaos knob: corrupt every Nth checked row before verifying.
+    corrupt_every: Option<u64>,
+    tick: AtomicU64,
+}
+
+impl DatapathGuard {
+    /// Production guard: verify and recover, never corrupt.
+    pub fn new(counters: Arc<GuardCounters>) -> Self {
+        Self { counters, corrupt_every: None, tick: AtomicU64::new(0) }
+    }
+
+    /// Test/chaos guard: corrupt every `every`-th checked row (1 ⇒
+    /// every row) before running the check, so detection and recovery
+    /// can be asserted end to end.
+    pub fn with_chaos(counters: Arc<GuardCounters>, every: u64) -> Self {
+        Self { counters, corrupt_every: Some(every.max(1)), tick: AtomicU64::new(0) }
+    }
+
+    /// The shared counters.
+    pub fn counters(&self) -> &Arc<GuardCounters> {
+        &self.counters
+    }
+
+    /// Verify (and on violation re-execute) the GEMM rows
+    /// `[r0, r0 + rows)` of `panel`, whose counts occupy
+    /// `counts[l · npix ..][..npix]` for local row `l`. `colsum` is the
+    /// per-k column-sum vector of `cols` and `base` the per-count
+    /// magnitude bound (`acc_width · bsl/2`).
+    ///
+    /// The checksum oracle and the re-execution both run on the pinned
+    /// scalar kernel table, independent of whatever SIMD arm produced
+    /// the counts.
+    #[allow(clippy::too_many_arguments)]
+    pub fn verify_rows(
+        &self,
+        panel: &TernaryPanel,
+        r0: usize,
+        rows: usize,
+        cols: &[i32],
+        npix: usize,
+        colsum: &[i64],
+        base: i64,
+        counts: &mut [i64],
+    ) {
+        debug_assert_eq!(counts.len(), rows * npix);
+        let sc = Dispatch::scalar();
+        for l in 0..rows {
+            let row = &mut counts[l * npix..(l + 1) * npix];
+            if let Some(every) = self.corrupt_every {
+                if self.tick.fetch_add(1, Ordering::Relaxed) % every == 0 {
+                    // A shift past the count bound: caught by the
+                    // magnitude check even when the checksum were
+                    // somehow fooled.
+                    row[0] = row[0].wrapping_add(4 * base.max(1) + 1);
+                }
+            }
+            let expect = panel.row_dot_i64_with(sc, r0 + l, colsum);
+            if row_ok(row, base, expect) {
+                continue;
+            }
+            self.counters.detected.fetch_add(1, Ordering::Relaxed);
+            panel.gemm_rows_into_with(sc, r0 + l, r0 + l + 1, cols, npix, row);
+            if row_ok(row, base, expect) {
+                self.counters.recovered.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+}
+
+/// Both invariants of one GEMM row: every count within the stream-
+/// length bound, and the row checksum exact.
+fn row_ok(row: &[i64], base: i64, expect: i64) -> bool {
+    let mut sum = 0i64;
+    for &v in row {
+        if v.abs() > base {
+            return false;
+        }
+        sum = sum.wrapping_add(v);
+    }
+    sum == expect
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+    use crate::nn::gemm::column_sums;
+    use crate::util::Rng;
+
+    fn random_problem(seed: u64) -> (TernaryPanel, Vec<i32>, usize, usize, i64) {
+        let mut rng = Rng::new(seed);
+        let (rows, k, npix) = (5usize, 36usize, 7usize);
+        let w: Vec<i8> = (0..rows * k).map(|_| rng.gen_range_i64(-1, 1) as i8).collect();
+        // Activations within the BSL-8 range so `base` is the real
+        // per-count bound.
+        let cols: Vec<i32> = (0..npix * k).map(|_| rng.gen_range_i64(-4, 4) as i32).collect();
+        (TernaryPanel::pack(&w, rows, k), cols, k, npix, (k * 4) as i64)
+    }
+
+    #[test]
+    fn clean_rows_pass_untouched() {
+        let (panel, cols, k, npix, base) = random_problem(3);
+        let mut counts = vec![0i64; panel.rows() * npix];
+        panel.gemm_into(&cols, npix, &mut counts);
+        let before = counts.clone();
+        let mut colsum = Vec::new();
+        column_sums(&cols, k, &mut colsum);
+        let g = DatapathGuard::new(Arc::new(GuardCounters::default()));
+        g.verify_rows(&panel, 0, panel.rows(), &cols, npix, &colsum, base, &mut counts);
+        assert_eq!(counts, before);
+        assert_eq!(g.counters().detected(), 0);
+        assert_eq!(g.counters().recovered(), 0);
+    }
+
+    #[test]
+    fn every_corrupted_row_is_detected_and_recovered() {
+        // 100% detection + recovery over many random corruption
+        // patterns — the acceptance bar of the guard layer.
+        for seed in 0..20u64 {
+            let (panel, cols, k, npix, base) = random_problem(seed);
+            let mut counts = vec![0i64; panel.rows() * npix];
+            panel.gemm_into(&cols, npix, &mut counts);
+            let clean = counts.clone();
+            let mut colsum = Vec::new();
+            column_sums(&cols, k, &mut colsum);
+            let mut rng = Rng::new(seed ^ 0xC0FFEE);
+            // Corrupt a random set of elements (at least one).
+            let n_corrupt = 1 + rng.gen_index(4);
+            let mut hit_rows = std::collections::BTreeSet::new();
+            for _ in 0..n_corrupt {
+                let i = rng.gen_index(counts.len());
+                counts[i] = counts[i].wrapping_add(1 + rng.gen_range_i64(0, 1 << 20));
+                hit_rows.insert(i / npix);
+            }
+            let g = DatapathGuard::new(Arc::new(GuardCounters::default()));
+            g.verify_rows(&panel, 0, panel.rows(), &cols, npix, &colsum, base, &mut counts);
+            assert_eq!(counts, clean, "seed {seed}: recovery must restore exact counts");
+            assert_eq!(g.counters().detected(), hit_rows.len() as u64, "seed {seed}");
+            assert_eq!(g.counters().recovered(), hit_rows.len() as u64, "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn single_count_offsets_cannot_hide_from_the_checksum() {
+        // A ±1 nudge stays inside the magnitude bound but must still
+        // trip the row checksum.
+        let (panel, cols, k, npix, base) = random_problem(9);
+        let mut counts = vec![0i64; panel.rows() * npix];
+        panel.gemm_into(&cols, npix, &mut counts);
+        let clean = counts.clone();
+        counts[2 * npix + 3] += 1;
+        let mut colsum = Vec::new();
+        column_sums(&cols, k, &mut colsum);
+        let g = DatapathGuard::new(Arc::new(GuardCounters::default()));
+        g.verify_rows(&panel, 0, panel.rows(), &cols, npix, &colsum, base, &mut counts);
+        assert_eq!(counts, clean);
+        assert_eq!(g.counters().detected(), 1);
+        assert_eq!(g.counters().recovered(), 1);
+    }
+
+    #[test]
+    fn chaos_guard_corrupts_then_heals_itself() {
+        let (panel, cols, k, npix, base) = random_problem(4);
+        let mut counts = vec![0i64; panel.rows() * npix];
+        panel.gemm_into(&cols, npix, &mut counts);
+        let clean = counts.clone();
+        let mut colsum = Vec::new();
+        column_sums(&cols, k, &mut colsum);
+        let g = DatapathGuard::with_chaos(Arc::new(GuardCounters::default()), 2);
+        g.verify_rows(&panel, 0, panel.rows(), &cols, npix, &colsum, base, &mut counts);
+        // Rows 0, 2, 4 corrupted (every 2nd tick), all recovered.
+        assert_eq!(counts, clean);
+        assert_eq!(g.counters().detected(), 3);
+        assert_eq!(g.counters().recovered(), 3);
+    }
+}

@@ -1,0 +1,322 @@
+//! Deterministic word-level fault masks for the packed datapath.
+//!
+//! The fault model is **stage-output-lane** injection: every circuit
+//! stage that produces a bit stream — the ternary multiplier products,
+//! the rescale alignment output, the BSN's sorted stream, and each
+//! selective interconnect's output lanes — gets an independent sparse
+//! bitflip mask drawn at the configured bit-error rate. A mask is a
+//! sorted list of lane indices to XOR.
+//!
+//! Masks are derived from `(seed, image, layer, channel, pixel, stage)`
+//! through a SplitMix64-style mixer, so *any* executor draws exactly
+//! the same faults for a given site regardless of evaluation order,
+//! threading, or batching. This is what lets the packed count-domain
+//! [`crate::nn::ScEngine`] and the scalar stream-materializing
+//! [`crate::nn::sc_exec::ScExecutor`] produce bit-identical faulted
+//! logits (property-tested in `rust/tests/gemm.rs`), and what makes
+//! [`crate::fault::ber_sweep`] reproducible under any point order or
+//! parallel schedule.
+//!
+//! Sparse masks keep the faulted path at packed speed: at BER `p` over
+//! a `w`-lane stage the expected mask length is `p·w`, and mask
+//! generation skips over fault-free gaps geometrically instead of
+//! drawing one Bernoulli per lane.
+
+use crate::coding::BitVec;
+use crate::util::Rng;
+
+/// The circuit stages whose output lanes take faults, in datapath
+/// order. The discriminant feeds the site derivation, so the values
+/// are part of the reproducibility contract.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u64)]
+pub enum Stage {
+    /// Ternary-multiplier product lanes (one mask over the
+    /// `acc_width · act_bsl` concatenated product streams).
+    Mult = 0,
+    /// Aligned residual stream out of the rescale block.
+    Rescale = 1,
+    /// The BSN's sorted stream (shared by both SIs reading it).
+    Bsn = 2,
+    /// Main-path SI output lanes.
+    SiMain = 3,
+    /// Residual-path SI output lanes.
+    SiRes = 4,
+}
+
+/// SplitMix64 finalizer — the avalanche step that decorrelates the
+/// site coordinates.
+#[inline]
+fn mix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Deterministic seed for one fault site. Each coordinate passes
+/// through the mixer before combining, so neighbouring sites (pixel
+/// `p` vs `p+1`, stage `k` vs `k+1`) get unrelated streams.
+#[must_use]
+pub fn site_seed(
+    seed: u64,
+    image: u64,
+    layer: usize,
+    channel: usize,
+    pixel: usize,
+    stage: Stage,
+) -> u64 {
+    let mut h = mix64(seed);
+    h = mix64(h ^ image);
+    h = mix64(h ^ (layer as u64));
+    h = mix64(h ^ (channel as u64));
+    h = mix64(h ^ (pixel as u64));
+    mix64(h ^ stage as u64)
+}
+
+/// RNG for one fault site (see [`site_seed`]).
+#[must_use]
+pub fn site_rng(
+    seed: u64,
+    image: u64,
+    layer: usize,
+    channel: usize,
+    pixel: usize,
+    stage: Stage,
+) -> Rng {
+    Rng::new(site_seed(seed, image, layer, channel, pixel, stage))
+}
+
+/// Per-image seed for executors that keep a single fault stream per
+/// forward pass (the binary baseline): decorrelates images without a
+/// shared sequential draw order.
+#[must_use]
+pub fn image_seed(seed: u64, image: u64) -> u64 {
+    mix64(mix64(seed) ^ image)
+}
+
+/// Per-sweep-point seed for [`crate::fault::ber_sweep`]: a pure
+/// function of `(seed, ber, repeat)`, so reordering or parallelizing
+/// the (BER × repeat) grid cannot change any point's draws.
+#[must_use]
+pub fn point_seed(seed: u64, ber: f64, repeat: u64) -> u64 {
+    mix64(mix64(mix64(seed) ^ ber.to_bits()) ^ repeat)
+}
+
+/// Fill `out` with the sorted fault-lane indices of one `width`-lane
+/// stage at bit-error rate `ber`.
+///
+/// Gap-skipping sampler: the distance to the next faulted lane is
+/// geometric, `skip = ⌊ln(1−u) / ln(1−ber)⌋` with `u ∈ [0, 1)`, so the
+/// cost is proportional to the number of faults, not the width.
+/// `ber ≤ 0` (or zero width) yields an empty mask without consuming a
+/// draw; `ber ≥ 1` faults every lane.
+pub fn fill_mask(rng: &mut Rng, ber: f64, width: usize, out: &mut Vec<u32>) {
+    out.clear();
+    if width == 0 || ber <= 0.0 {
+        return;
+    }
+    debug_assert!(width <= u32::MAX as usize, "stage width {width} exceeds mask range");
+    if ber >= 1.0 {
+        out.extend(0..width as u32);
+        return;
+    }
+    // ln(1 − ber) < 0 for 0 < ber < 1.
+    let denom = (1.0 - ber).ln();
+    let mut pos = 0usize;
+    loop {
+        // u ∈ [0, 1) ⇒ 1 − u ∈ (0, 1] ⇒ ln(1 − u) ∈ (−∞, 0] ⇒ skip ≥ 0.
+        let u = rng.f64();
+        // Saturating cast: a tiny BER can produce a skip beyond any
+        // representable width, which simply means "no fault here".
+        let skip = ((1.0 - u).ln() / denom).floor() as usize;
+        pos = pos.saturating_add(skip);
+        if pos >= width {
+            return;
+        }
+        out.push(pos as u32);
+        pos += 1;
+    }
+}
+
+/// XOR the mask into a packed stream, word-level. Every index must be
+/// `< bits.len()`, which also preserves the `BitVec` tail-bits-zero
+/// invariant its word-wise consumers depend on.
+pub fn apply_mask(mask: &[u32], bits: &mut BitVec) {
+    let len = bits.len();
+    let words = bits.as_mut_words();
+    for &g in mask {
+        let g = g as usize;
+        assert!(g < len, "mask index {g} out of range for stream of {len} lanes");
+        words[g / 64] ^= 1u64 << (g % 64);
+    }
+}
+
+/// Apply the sub-range `[lo, hi)` of a sorted mask to a stream,
+/// rebasing indices to `g − lo` — the per-product view of the one
+/// `Mult` mask spanning all `acc_width` concatenated product streams.
+pub fn apply_mask_range(mask: &[u32], lo: usize, hi: usize, bits: &mut BitVec) {
+    debug_assert!(is_sorted(mask), "mask must be sorted");
+    let a = mask.partition_point(|&g| (g as usize) < lo);
+    let b = mask.partition_point(|&g| (g as usize) < hi);
+    let len = bits.len();
+    let words = bits.as_mut_words();
+    for &g in &mask[a..b] {
+        let i = g as usize - lo;
+        assert!(i < len, "mask index {i} out of range for stream of {len} lanes");
+        words[i / 64] ^= 1u64 << (i % 64);
+    }
+}
+
+/// Popcount delta from XOR-ing a sorted mask into a canonical
+/// ones-prefix stream with `count` leading ones: each faulted lane
+/// below `count` clears a one (−1), each at or above sets a zero (+1).
+#[must_use]
+pub fn prefix_flip_delta(mask: &[u32], count: usize) -> i64 {
+    debug_assert!(is_sorted(mask), "mask must be sorted");
+    let k = mask.partition_point(|&g| (g as usize) < count);
+    (mask.len() - k) as i64 - k as i64
+}
+
+/// Whether a sorted mask faults lane `g` (binary search).
+#[must_use]
+pub fn contains(mask: &[u32], g: usize) -> bool {
+    g <= u32::MAX as usize && mask.binary_search(&(g as u32)).is_ok()
+}
+
+fn is_sorted(mask: &[u32]) -> bool {
+    mask.windows(2).all(|w| w[0] < w[1])
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn site_seeds_are_distinct_across_every_coordinate() {
+        let base = site_seed(1, 2, 3, 4, 5, Stage::Bsn);
+        assert_ne!(base, site_seed(9, 2, 3, 4, 5, Stage::Bsn));
+        assert_ne!(base, site_seed(1, 9, 3, 4, 5, Stage::Bsn));
+        assert_ne!(base, site_seed(1, 2, 9, 4, 5, Stage::Bsn));
+        assert_ne!(base, site_seed(1, 2, 3, 9, 5, Stage::Bsn));
+        assert_ne!(base, site_seed(1, 2, 3, 4, 9, Stage::Bsn));
+        assert_ne!(base, site_seed(1, 2, 3, 4, 5, Stage::SiMain));
+        // Swapping values between coordinates must not collide either
+        // (each passes the mixer before combining).
+        assert_ne!(site_seed(1, 2, 3, 4, 5, Stage::Mult), site_seed(2, 1, 3, 4, 5, Stage::Mult));
+        assert_ne!(site_seed(1, 2, 3, 4, 5, Stage::Mult), site_seed(1, 2, 4, 3, 5, Stage::Mult));
+    }
+
+    #[test]
+    fn point_seed_depends_only_on_its_coordinates() {
+        assert_eq!(point_seed(42, 1e-3, 2), point_seed(42, 1e-3, 2));
+        assert_ne!(point_seed(42, 1e-3, 2), point_seed(42, 1e-2, 2));
+        assert_ne!(point_seed(42, 1e-3, 2), point_seed(42, 1e-3, 3));
+        assert_ne!(point_seed(42, 1e-3, 2), point_seed(43, 1e-3, 2));
+    }
+
+    #[test]
+    fn fill_mask_edges() {
+        let mut rng = Rng::new(7);
+        let mut m = Vec::new();
+        fill_mask(&mut rng, 0.0, 128, &mut m);
+        assert!(m.is_empty());
+        fill_mask(&mut rng, -1.0, 128, &mut m);
+        assert!(m.is_empty());
+        fill_mask(&mut rng, 0.5, 0, &mut m);
+        assert!(m.is_empty());
+        fill_mask(&mut rng, 1.0, 5, &mut m);
+        assert_eq!(m, vec![0, 1, 2, 3, 4]);
+        fill_mask(&mut rng, 2.0, 3, &mut m);
+        assert_eq!(m, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn fill_mask_is_sorted_in_range_and_rate_accurate() {
+        let mut rng = Rng::new(11);
+        let mut m = Vec::new();
+        let (width, ber, trials) = (1000usize, 0.05f64, 200usize);
+        let mut total = 0usize;
+        for _ in 0..trials {
+            fill_mask(&mut rng, ber, width, &mut m);
+            assert!(is_sorted(&m));
+            assert!(m.iter().all(|&g| (g as usize) < width));
+            total += m.len();
+        }
+        let rate = total as f64 / (width * trials) as f64;
+        assert!(
+            (rate - ber).abs() < 0.01,
+            "observed fault rate {rate} far from requested {ber}"
+        );
+    }
+
+    #[test]
+    fn fill_mask_is_deterministic_in_the_rng_seed() {
+        let (mut a, mut b) = (Rng::new(3), Rng::new(3));
+        let (mut ma, mut mb) = (Vec::new(), Vec::new());
+        for _ in 0..10 {
+            fill_mask(&mut a, 0.03, 500, &mut ma);
+            fill_mask(&mut b, 0.03, 500, &mut mb);
+            assert_eq!(ma, mb);
+        }
+    }
+
+    #[test]
+    fn apply_mask_flips_exactly_the_masked_lanes() {
+        let mut bits = BitVec::zeros(130);
+        bits.set(0, true);
+        bits.set(64, true);
+        apply_mask(&[0, 63, 64, 129], &mut bits);
+        assert!(!bits.get(0)); // 1 → 0
+        assert!(bits.get(63)); // 0 → 1
+        assert!(!bits.get(64)); // 1 → 0
+        assert!(bits.get(129)); // 0 → 1
+        assert!(bits.tail_is_zero());
+        assert_eq!(bits.popcount(), 2);
+    }
+
+    #[test]
+    fn apply_mask_range_rebases_indices() {
+        // One concatenated mask over 2 products of 64 lanes each; the
+        // second product's slice lands at bit g − 64.
+        let mask = [3u32, 64, 70, 127];
+        let mut prod = BitVec::zeros(64);
+        apply_mask_range(&mask, 64, 128, &mut prod);
+        assert!(prod.get(0) && prod.get(6) && prod.get(63));
+        assert_eq!(prod.popcount(), 3);
+        let mut first = BitVec::zeros(64);
+        apply_mask_range(&mask, 0, 64, &mut first);
+        assert!(first.get(3));
+        assert_eq!(first.popcount(), 1);
+    }
+
+    #[test]
+    fn prefix_flip_delta_matches_materialized_popcount() {
+        let mut rng = Rng::new(19);
+        for width in [63usize, 64, 65, 127, 128, 130] {
+            for _ in 0..20 {
+                let count = rng.gen_index(width + 1);
+                let mut m = Vec::new();
+                fill_mask(&mut rng, 0.2, width, &mut m);
+                let mut bits = BitVec::zeros(0);
+                bits.set_ones_prefix(width, count);
+                apply_mask(&m, &mut bits);
+                assert_eq!(
+                    bits.popcount() as i64,
+                    count as i64 + prefix_flip_delta(&m, count),
+                    "width {width} count {count} mask {m:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn contains_agrees_with_linear_scan() {
+        let m = [1u32, 5, 64, 65, 200];
+        for g in 0..256usize {
+            assert_eq!(contains(&m, g), m.iter().any(|&x| x as usize == g), "lane {g}");
+        }
+        assert!(!contains(&m, usize::MAX));
+    }
+}

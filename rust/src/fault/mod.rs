@@ -1,16 +1,41 @@
-//! Fault-tolerance experiment harness (paper Fig 5).
+//! Datapath fault model: injection, integrity guards, and the BER
+//! sweep experiment (paper Fig 5).
 //!
-//! Sweeps bit-error rate over both executors on the same frozen network
-//! and reports accuracy loss relative to the fault-free ("soft")
-//! accuracy. The paper's claim: SC reduces average accuracy loss by
-//! ~70% versus the conventional binary design, because an SC bit flip
-//! perturbs the result by one quantization step while a binary MSB flip
-//! perturbs it by half the range.
+//! * [`inject`] — deterministic word-level bitflip masks for every
+//!   circuit stage, derived per `(seed, image, layer, channel, pixel,
+//!   stage)` site so the packed [`ScEngine`] and the scalar
+//!   stream-materializing executor draw identical faults.
+//! * [`guard`] — count-domain integrity checks over the GEMM
+//!   accumulation with scalar re-execution on violation, serving
+//!   behind `scnn serve --guard`.
+//! * [`ber_sweep`] / [`ber_sweep_on`] — the Fig 5 experiment: sweep
+//!   bit-error rate over the SC and binary designs on the same frozen
+//!   network and report accuracy loss relative to the fault-free
+//!   ("soft") accuracy. The paper's claim: SC reduces average accuracy
+//!   loss by ~70% versus the conventional binary design, because an SC
+//!   bit flip perturbs the result by one quantization step while a
+//!   binary MSB flip perturbs it by half the range.
+//!
+//! The sweep shards its (BER × repeat) grid across threads, each
+//! worker running the packed engine; every point's RNG is a pure
+//! function of `(seed, ber, repeat)` and every image's masks of its
+//! index, so results are identical under any sweep order or degree of
+//! parallelism.
+//!
+//! Injection sites, the count-domain folding algebra, and the
+//! output-lane-vs-internal-wire modelling deviation are documented in
+//! DESIGN.md §Fault model.
+
+pub mod guard;
+pub mod inject;
+
+use std::sync::Arc;
 
 use crate::data::{Dataset, Split};
 use crate::nn::binary_exec::BinaryExecutor;
-use crate::nn::sc_exec::{FaultCfg, Prepared, ScExecutor};
+use crate::nn::sc_exec::{FaultCfg, Prepared};
 use crate::nn::tensor::Tensor;
+use crate::nn::ScEngine;
 
 /// One row of the Fig 5 sweep.
 #[derive(Clone, Copy, Debug)]
@@ -53,7 +78,8 @@ impl BerSweep {
 }
 
 /// Run the Fig-5 sweep: evaluate `n_eval` test images at each BER with
-/// `repeats` fault seeds and average.
+/// `repeats` fault seeds and average. Convenience wrapper over
+/// [`ber_sweep_on`].
 pub fn ber_sweep(
     prep: &Prepared,
     data: &dyn Dataset,
@@ -65,30 +91,85 @@ pub fn ber_sweep(
     let (images, labels) = data.batch(Split::Test, 0, n_eval);
     // One frozen model shared by every executor in the sweep (the Arc
     // clone is a refcount bump, not a copy of the weights/SI tables).
-    let prep = std::sync::Arc::new(prep.clone());
-    let clean = ScExecutor::new(prep.clone());
-    let soft = clean.accuracy(&images, &labels);
-    let mut points = Vec::with_capacity(bers.len());
-    for (bi, &ber) in bers.iter().enumerate() {
-        let mut acc_sc = 0.0;
-        let mut acc_bin = 0.0;
-        for r in 0..repeats {
-            let fc = FaultCfg { ber, seed: seed ^ ((bi as u64) << 32) ^ r as u64 };
-            acc_sc += ScExecutor::with_faults(prep.clone(), fc).accuracy(&images, &labels);
-            acc_bin +=
-                BinaryExecutor::with_faults(prep.clone(), fc).accuracy(&images, &labels);
+    let prep = Arc::new(prep.clone());
+    ber_sweep_on(&prep, &images, &labels, bers, repeats, seed)
+}
+
+/// The BER sweep over an explicit image/label set.
+///
+/// The (BER × repeat) grid is sharded across `available_parallelism`
+/// scoped worker threads, each owning one packed [`ScEngine`] (the
+/// production datapath, re-seeded per point via
+/// [`inject::point_seed`]) and the binary baseline. Every worker
+/// writes a disjoint chunk of the result grid and every point's draws
+/// are pure functions of `(seed, ber, repeat, image index)`, so the
+/// result is bit-identical under any worker count or point order.
+pub fn ber_sweep_on(
+    prep: &Arc<Prepared>,
+    images: &[Tensor],
+    labels: &[usize],
+    bers: &[f64],
+    repeats: usize,
+    seed: u64,
+) -> BerSweep {
+    let repeats = repeats.max(1);
+    // Fault-free ("soft") accuracy, measured on the same packed engine
+    // the faulted points run on.
+    let soft = engine_accuracy(&mut ScEngine::new(prep.clone()), images, labels);
+    let npts = bers.len() * repeats;
+    let mut grid = vec![(0.0f64, 0.0f64); npts];
+    let workers = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(npts.max(1));
+    let per = npts.div_ceil(workers.max(1)).max(1);
+    std::thread::scope(|sc| {
+        for (w, chunk) in grid.chunks_mut(per).enumerate() {
+            sc.spawn(move || {
+                let mut engine = ScEngine::new(prep.clone());
+                for (k, slot) in chunk.iter_mut().enumerate() {
+                    let idx = w * per + k;
+                    let (bi, r) = (idx / repeats, idx % repeats);
+                    let ber = bers[bi];
+                    let fc = FaultCfg { ber, seed: inject::point_seed(seed, ber, r as u64) };
+                    engine.set_fault(Some(fc));
+                    let acc_sc = engine_accuracy(&mut engine, images, labels);
+                    let acc_bin =
+                        BinaryExecutor::with_faults(prep.clone(), fc).accuracy(images, labels);
+                    *slot = (acc_sc, acc_bin);
+                }
+            });
         }
-        acc_sc /= repeats as f64;
-        acc_bin /= repeats as f64;
-        points.push(BerPoint {
-            ber,
-            acc_sc,
-            acc_binary: acc_bin,
-            loss_sc: soft - acc_sc,
-            loss_binary: soft - acc_bin,
-        });
-    }
+    });
+    let points = bers
+        .iter()
+        .enumerate()
+        .map(|(bi, &ber)| {
+            let (mut acc_sc, mut acc_bin) = (0.0, 0.0);
+            for &(s, b) in &grid[bi * repeats..(bi + 1) * repeats] {
+                acc_sc += s;
+                acc_bin += b;
+            }
+            acc_sc /= repeats as f64;
+            acc_bin /= repeats as f64;
+            BerPoint {
+                ber,
+                acc_sc,
+                acc_binary: acc_bin,
+                loss_sc: soft - acc_sc,
+                loss_binary: soft - acc_bin,
+            }
+        })
+        .collect();
     BerSweep { soft_accuracy: soft, points }
+}
+
+/// Accuracy of one engine over a labelled set (predict tags images by
+/// index, so faulted accuracy is schedule-independent).
+fn engine_accuracy(engine: &mut ScEngine, images: &[Tensor], labels: &[usize]) -> f64 {
+    let preds = engine.predict(images);
+    preds.iter().zip(labels).filter(|(p, l)| p == l).count() as f64
+        / labels.len().max(1) as f64
 }
 
 /// Flip bits across a whole image's worth of activation codes — utility
@@ -104,6 +185,7 @@ pub fn perturb_image(img: &Tensor, flip_fraction: f64, rng: &mut crate::util::Rn
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::data::SynthDigits;
@@ -130,6 +212,30 @@ mod tests {
         for p in &sweep.points {
             assert!((0.0..=1.0).contains(&p.acc_sc));
             assert!((0.0..=1.0).contains(&p.acc_binary));
+        }
+    }
+
+    #[test]
+    fn sweep_is_invariant_to_point_order() {
+        // Satellite contract: per-point seeds are pure functions of
+        // (seed, ber, repeat), so reversing the BER grid (and with it
+        // the parallel schedule) changes nothing per point.
+        let cfg = ModelCfg::tnn();
+        let mut rng = Rng::new(8);
+        let params = ModelParams::init(&cfg, &mut rng);
+        let prep = std::sync::Arc::new(Prepared::new(
+            &cfg,
+            &params,
+            QuantConfig { act_bsl: Some(2), weight_ternary: true, residual_bsl: None },
+        ));
+        let data = SynthDigits::new();
+        let (images, labels) = data.batch(Split::Test, 0, 8);
+        let fwd = ber_sweep_on(&prep, &images, &labels, &[1e-3, 1e-2], 2, 7);
+        let rev = ber_sweep_on(&prep, &images, &labels, &[1e-2, 1e-3], 2, 7);
+        for (a, b) in fwd.points.iter().zip(rev.points.iter().rev()) {
+            assert_eq!(a.ber, b.ber);
+            assert_eq!(a.acc_sc, b.acc_sc, "ber {}", a.ber);
+            assert_eq!(a.acc_binary, b.acc_binary, "ber {}", a.ber);
         }
     }
 

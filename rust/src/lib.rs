@@ -26,8 +26,10 @@
 //!   integer baseline executor, the packed **ternary/i8 GEMM core**
 //!   every accumulation site shares ([`nn::gemm`]), and the batched,
 //!   optionally multi-threaded serving engine ([`nn::ScEngine`]).
-//! * [`fault`] — bit-error-rate fault injection for SC and binary
-//!   datapaths (Fig 5).
+//! * [`fault`] — the datapath integrity layer: per-stage fault
+//!   injection for the SC and binary datapaths, count-domain integrity
+//!   guards with scalar re-execution (`scnn serve --guard`), and the
+//!   parallel BER-sweep harness (Fig 5, `scnn exp ber`).
 //! * [`data`] — deterministic synthetic datasets standing in for MNIST /
 //!   CIFAR (see DESIGN.md §Substitutions).
 //! * [`accel`] — the accelerator model: maps network layers onto BSN
@@ -58,7 +60,12 @@ pub mod coordinator;
 pub mod circuits;
 pub mod cost;
 pub mod data;
+// The experiment runners feed CI result artifacts and the fault layer
+// sits on the serving path (`--guard`, engine injection): same
+// no-new-panic-sites bar as the coordinator.
+#[deny(clippy::unwrap_used, clippy::expect_used)]
 pub mod exp;
+#[deny(clippy::unwrap_used, clippy::expect_used)]
 pub mod fault;
 pub mod gates;
 pub mod nn;

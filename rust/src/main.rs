@@ -5,7 +5,7 @@
 //! scnn train --model NAME [--steps N] [--act-bsl B] [--artifacts DIR]
 //! scnn serve --model NAME [--workers N] [--clients N] [--requests N]
 //!            [--backend auto|pjrt|synthetic|sc|binary] [--batch N]
-//!            [--threads N] [--seed N] [--shed] [--restart-budget N]
+//!            [--threads N] [--seed N] [--shed] [--restart-budget N] [--guard]
 //!            [--artifacts DIR] [--listen ADDR] [--models a,b|all]
 //!            [--tenant-quota N] [--duration SECS]
 //! scnn client --addr HOST:PORT [--model NAME] [--requests N]
@@ -86,10 +86,11 @@ fn main() -> Result<()> {
                  \n  train --model tnn|scnet10|scnet20 [--steps N] [--act-bsl B] [--res-bsl B]\n\
                  \n  serve --model NAME [--workers N] [--clients N] [--requests N] [--steps N]\n\
                  \n        [--backend auto|pjrt|synthetic|sc|binary] [--batch N] [--threads N]\n\
-                 \n        [--seed N] [--shed] [--restart-budget N]\n\
+                 \n        [--seed N] [--shed] [--restart-budget N] [--guard]\n\
                  \n        (--seed pins the sc/binary backends' deterministic model freeze;\n\
                  \n         --threads shards each sc-backend batch across N engine threads;\n\
-                 \n         --restart-budget caps worker respawns after panics, default 3)\n\
+                 \n         --restart-budget caps worker respawns after panics, default 3;\n\
+                 \n         --guard arms the sc backend's count-domain integrity checks)\n\
                  \n        [--listen ADDR] serve over TCP instead of an in-process loop:\n\
                  \n        [--models a,b|all] [--tenant-quota N] [--duration SECS]\n\
                  \n  client --addr HOST:PORT [--model NAME] [--requests N] [--tenant ID]\n\
@@ -176,6 +177,7 @@ fn serve_cfg(flags: &HashMap<String, String>, artifacts: &str, model: &str) -> S
     if let Some(r) = flags.get("restart-budget").and_then(|s| s.parse().ok()) {
         cfg.restart_budget = r;
     }
+    cfg.guard = flags.contains_key("guard");
     cfg
 }
 

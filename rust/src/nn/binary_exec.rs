@@ -15,6 +15,7 @@
 
 use std::sync::Arc;
 
+use crate::fault::inject;
 use crate::util::Rng;
 use super::layers;
 use super::model::{LayerCfg, ModelCfg, ModelParams};
@@ -145,8 +146,17 @@ impl BinaryExecutor {
     /// numerically identical to [`super::sc_exec::ScExecutor::forward`]
     /// (asserted in `rust/tests/sc_pipeline.rs`): the binary chip
     /// computes the same quantized network, just in binary words.
+    /// Equivalent to [`BinaryExecutor::forward_with_tag`] at tag 0.
     pub fn forward(&self, image: &Tensor) -> Vec<i64> {
-        let mut rng = self.fault.map(|f| Rng::new(f.seed));
+        self.forward_with_tag(image, 0)
+    }
+
+    /// Forward with an explicit image tag. The fault RNG is seeded from
+    /// `(seed, tag)` ([`inject::image_seed`]), so each image's draws are
+    /// independent of evaluation order — the reproducibility contract
+    /// shared with the SC fault path.
+    pub fn forward_with_tag(&self, image: &Tensor, tag: u64) -> Vec<i64> {
+        let mut rng = self.fault.map(|f| Rng::new(inject::image_seed(f.seed, tag)));
         let act_bsl = self.prep.act_bsl();
         let half = (act_bsl / 2) as f32;
         let mut main = CodeMap {
@@ -288,12 +298,14 @@ impl BinaryExecutor {
         (mm, rm)
     }
 
-    /// Predicted classes.
+    /// Predicted classes. Images are tagged by index, matching the SC
+    /// executor's convention.
     pub fn predict(&self, images: &[Tensor]) -> Vec<usize> {
         images
             .iter()
-            .map(|im| {
-                let l = self.forward(im);
+            .enumerate()
+            .map(|(i, im)| {
+                let l = self.forward_with_tag(im, i as u64);
                 l.iter().enumerate().max_by_key(|(_, &v)| v).map(|(i, _)| i).unwrap()
             })
             .collect()

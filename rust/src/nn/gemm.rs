@@ -77,6 +77,22 @@ pub fn gemm_naive(w: &[i8], rows: usize, k: usize, cols: &[i32], n: usize, out: 
     }
 }
 
+/// Column-sum vector of an im2col activation matrix:
+/// `out[i] = Σ_p cols[p·k + i]`. This is the checksum basis of the
+/// integrity guard ([`crate::fault::guard::DatapathGuard`]): by
+/// linearity, the counts of GEMM row `r` must sum to
+/// `row_dot_i64(r, out)`, so one `O(k)` dot verifies `npix` counts.
+pub fn column_sums(cols: &[i32], k: usize, out: &mut Vec<i64>) {
+    assert!(k > 0 && cols.len() % k == 0, "column_sums: cols not a multiple of k");
+    out.clear();
+    out.resize(k, 0);
+    for col in cols.chunks_exact(k) {
+        for (o, &v) in out.iter_mut().zip(col) {
+            *o += v as i64;
+        }
+    }
+}
+
 /// Ternary weight panel packed as per-row `+1` / `−1` index lists
 /// (CSR-like; zeros dropped at pack time). The multiplication
 /// disappears: a row dot is `Σ x[plus] − Σ x[minus]`.

@@ -44,17 +44,35 @@
 //!   worth it on wide layers (scnet-class models), mostly overhead on
 //!   tiny ones; the row path spawns once per batch.
 //!
-//! The engine is the fault-free serving path; fault injection (Fig 5)
-//! stays on [`super::sc_exec::ScExecutor`], which walks actual bit
-//! streams. Throughput floors live in DESIGN.md §Perf and are tracked
-//! by `rust/benches/sc_serve.rs` → `BENCH_sc.json`.
+//! The engine also serves **under injected faults**
+//! ([`ScEngine::set_fault`]): every circuit stage's bitflip mask
+//! ([`crate::fault::inject`]) is folded into the count domain exactly —
+//! a flip on a known stream lane changes the count by ±1, an SI tap on
+//! a corrupted lane is re-evaluated from the mask — so faulted logits
+//! are bit-identical to the stream-materializing
+//! [`super::sc_exec::ScExecutor`] fault path at packed speed
+//! (property-tested in `rust/tests/gemm.rs`, every thread count).
+//! One deviation from the zero-allocation rule: the faulted path keeps
+//! a few sparse mask vectors per `conv_block` call (they are `O(ber ·
+//! width)` and reused across the block's pixels).
+//!
+//! With a [`DatapathGuard`] attached ([`ScEngine::set_guard`]), every
+//! GEMM row block is checksum-verified and scalar-re-executed on
+//! violation before its counts reach the SI tables — the serving
+//! integrity layer behind `scnn serve --guard`.
+//!
+//! Throughput floors live in DESIGN.md §Perf and are tracked by
+//! `rust/benches/sc_serve.rs` → `BENCH_sc.json`.
 
 use std::sync::Arc;
 
-use crate::circuits::si;
+use crate::circuits::si::{self, SelTap};
+use crate::fault::guard::DatapathGuard;
+use crate::fault::inject::{self, Stage};
+use super::gemm::column_sums;
 use super::layers::im2col_i32_into;
 use super::model::LayerCfg;
-use super::sc_exec::{align_res_count, Prepared, PreparedConv};
+use super::sc_exec::{align_res_count, FaultCfg, Prepared, PreparedConv};
 use super::tensor::Tensor;
 
 /// Per-conv-layer execution plan: static geometry plus the synthesized
@@ -67,6 +85,9 @@ struct ConvPlan {
     ow: usize,
     /// Accumulation width (products per output pixel).
     acc_w: usize,
+    /// Activation BSL `L` (per-product stream length) — the fault
+    /// model's `Mult` stage spans `acc_w · L` lanes.
+    act_bsl: usize,
     /// Count-domain offset `acc_w · L/2` added to the dot product.
     base: i64,
     /// LUT row width: `bsn_width + 1` (one entry per possible count).
@@ -110,6 +131,9 @@ struct EngineScratch {
     res_b: Vec<i32>,
     /// Global-average-pool accumulator.
     gap: Vec<i64>,
+    /// Per-layer im2col column sums — the guard's checksum vector.
+    /// Grown on first guarded forward (empty when no guard runs).
+    colsum: Vec<i64>,
 }
 
 impl EngineScratch {
@@ -122,6 +146,7 @@ impl EngineScratch {
             res_a: vec![0; s.res],
             res_b: vec![0; s.res],
             gap: vec![0; s.ch],
+            colsum: Vec::new(),
         }
     }
 }
@@ -133,6 +158,11 @@ pub struct ScEngine {
     /// One scratch arena per shard thread (`scratch.len()` == the
     /// engine's thread knob; index 0 serves the sequential paths).
     scratch: Vec<EngineScratch>,
+    /// Fault injection (Fig 5): when set, every forward applies the
+    /// per-site stage masks in the count domain.
+    fault: Option<FaultCfg>,
+    /// Count-domain integrity guard; shared across every engine thread.
+    guard: Option<Arc<DatapathGuard>>,
 }
 
 impl ScEngine {
@@ -193,6 +223,7 @@ impl ScEngine {
                     oh,
                     ow,
                     acc_w,
+                    act_bsl,
                     base: acc_w as i64 * half,
                     lut_w,
                     si_main_lut,
@@ -212,7 +243,26 @@ impl ScEngine {
             }
         }
         let scratch = (0..threads.max(1)).map(|_| EngineScratch::new(&sizes)).collect();
-        Self { prep, plans, scratch }
+        Self { prep, plans, scratch, fault: None, guard: None }
+    }
+
+    /// Set (or clear) fault injection for subsequent forwards. With the
+    /// same `FaultCfg` and image tags, the engine's faulted logits are
+    /// bit-identical to [`super::sc_exec::ScExecutor::with_faults`].
+    pub fn set_fault(&mut self, fault: Option<FaultCfg>) {
+        self.fault = fault;
+    }
+
+    /// The active fault configuration.
+    pub fn fault(&self) -> Option<FaultCfg> {
+        self.fault
+    }
+
+    /// Attach (or detach) a count-domain integrity guard. The guard is
+    /// shared — pool workers pass clones of one `Arc` so detection /
+    /// recovery counters aggregate across the fleet.
+    pub fn set_guard(&mut self, guard: Option<Arc<DatapathGuard>>) {
+        self.guard = guard;
     }
 
     /// The frozen network.
@@ -247,10 +297,32 @@ impl ScEngine {
     /// [`super::sc_exec::ScExecutor::forward`]. On an engine with a
     /// thread knob > 1, each conv layer's output-channel blocks are
     /// computed by scoped threads (still bit-identical — the single
-    /// request latency win).
+    /// request latency win). Under fault injection the image carries
+    /// tag 0 — use [`ScEngine::forward_into_tagged`] to give each image
+    /// its own fault identity.
     pub fn forward_into(&mut self, image: &[f32], logits: &mut [i64]) {
-        let threads = self.scratch.len();
-        forward_one(&self.prep, &self.plans, &mut self.scratch[0], image, logits, threads);
+        self.forward_into_tagged(image, 0, logits);
+    }
+
+    /// Forward one image whose fault masks are derived from `tag`
+    /// (canonically the image's index; inert without a `FaultCfg`).
+    /// Same tag, same `FaultCfg` ⇒ same masks as
+    /// [`super::sc_exec::ScExecutor::forward_with_tag`], at any thread
+    /// count.
+    pub fn forward_into_tagged(&mut self, image: &[f32], tag: u64, logits: &mut [i64]) {
+        let Self { prep, plans, scratch, fault, guard } = self;
+        let threads = scratch.len();
+        forward_one(
+            prep,
+            plans,
+            &mut scratch[0],
+            image,
+            logits,
+            threads,
+            *fault,
+            tag,
+            guard.as_deref(),
+        );
     }
 
     /// Forward a flat batch (`batch · image_len` floats, NCHW) into a
@@ -267,15 +339,22 @@ impl ScEngine {
     /// accumulation and disjoint output slices make both dimensions
     /// order-safe: the logits are bit-identical to the sequential path
     /// at every thread count.
+    /// Under fault injection, row `b` of the batch carries image tag
+    /// `b` — the same convention as [`ScExecutor::predict`] — so logits
+    /// are independent of how the batch is sharded.
+    ///
+    /// [`ScExecutor::predict`]: super::sc_exec::ScExecutor::predict
     pub fn forward_batch_into(&mut self, x: &[f32], logits: &mut [i64]) {
         let il = self.image_len();
         let cl = self.classes();
         assert!(il > 0 && x.len() % il == 0, "batch input length must be a multiple of image_len");
         let batch = x.len() / il;
         assert_eq!(logits.len(), batch * cl, "logits buffer length mismatch");
-        let Self { prep, plans, scratch } = self;
+        let Self { prep, plans, scratch, fault, guard } = self;
         let prep: &Prepared = prep;
         let plans: &[ConvPlan] = plans;
+        let fault = *fault;
+        let guard = guard.as_deref();
         let nt = scratch.len().min(batch);
         if nt <= 1 {
             // Sequential engine — or a single row, where the only
@@ -283,8 +362,10 @@ impl ScEngine {
             // threads on its conv layers' output-channel blocks.
             let intra = if batch == 1 { scratch.len() } else { 1 };
             let s = &mut scratch[0];
-            for (xrow, lrow) in x.chunks_exact(il).zip(logits.chunks_exact_mut(cl)) {
-                forward_one(prep, plans, s, xrow, lrow, intra);
+            for (b, (xrow, lrow)) in
+                x.chunks_exact(il).zip(logits.chunks_exact_mut(cl)).enumerate()
+            {
+                forward_one(prep, plans, s, xrow, lrow, intra, fault, b as u64, guard);
             }
             return;
         }
@@ -300,6 +381,7 @@ impl ScEngine {
         std::thread::scope(|sc| {
             let mut xs = x;
             let mut ls = &mut logits[..];
+            let mut row0 = 0usize;
             for s in scratch[..nt].iter_mut() {
                 let take = per.min(xs.len() / il);
                 if take == 0 {
@@ -309,9 +391,14 @@ impl ScEngine {
                 let (la, lrest) = std::mem::take(&mut ls).split_at_mut(take * cl);
                 xs = xrest;
                 ls = lrest;
+                let base = row0;
+                row0 += take;
                 sc.spawn(move || {
-                    for (xrow, lrow) in xa.chunks_exact(il).zip(la.chunks_exact_mut(cl)) {
-                        forward_one(prep, plans, s, xrow, lrow, intra);
+                    for (k, (xrow, lrow)) in
+                        xa.chunks_exact(il).zip(la.chunks_exact_mut(cl)).enumerate()
+                    {
+                        let tag = (base + k) as u64;
+                        forward_one(prep, plans, s, xrow, lrow, intra, fault, tag, guard);
                     }
                 });
             }
@@ -325,20 +412,41 @@ impl ScEngine {
         logits
     }
 
-    /// Classify a batch; returns predicted classes.
+    /// Classify a batch; returns predicted classes. Images are tagged
+    /// by index — the shared fault-reproducibility convention.
     pub fn predict(&mut self, images: &[Tensor]) -> Vec<usize> {
+        let cl = self.classes();
+        let mut logits = vec![0i64; cl];
         images
             .iter()
-            .map(|im| {
-                let l = self.forward(im);
-                l.iter().enumerate().max_by_key(|(_, &v)| v).map(|(i, _)| i).unwrap()
+            .enumerate()
+            .map(|(i, im)| {
+                self.forward_into_tagged(im.data(), i as u64, &mut logits);
+                logits.iter().enumerate().max_by_key(|(_, &v)| v).map(|(i, _)| i).unwrap()
             })
             .collect()
     }
 }
 
+/// Per-layer fault/guard context handed down to [`conv_block`]: the
+/// coordinates that key the site-derived masks plus the shared guard
+/// and its per-layer checksum vector. `Copy` so scoped channel-block
+/// threads can each take one.
+#[derive(Clone, Copy)]
+struct BlockCtx<'a> {
+    /// Conv layer index (fault-site coordinate).
+    li: usize,
+    /// Image tag (fault-site coordinate).
+    tag: u64,
+    fault: Option<FaultCfg>,
+    guard: Option<&'a DatapathGuard>,
+    /// im2col column sums of this layer (empty when no guard runs).
+    colsum: &'a [i64],
+}
+
 /// One full image through the frozen network, entirely inside one
 /// scratch arena — the unit of work the batch sharding distributes.
+#[allow(clippy::too_many_arguments)]
 fn forward_one(
     prep: &Prepared,
     plans: &[ConvPlan],
@@ -346,8 +454,11 @@ fn forward_one(
     image: &[f32],
     logits: &mut [i64],
     threads: usize,
+    fault: Option<FaultCfg>,
+    tag: u64,
+    guard: Option<&DatapathGuard>,
 ) {
-    let EngineScratch { cols, acc, plane_a, plane_b, res_a, res_b, gap } = s;
+    let EngineScratch { cols, acc, plane_a, plane_b, res_a, res_b, gap, colsum } = s;
     let (c0, h0, w0) = prep.cfg.input;
     let n0 = c0 * h0 * w0;
     assert_eq!(image.len(), n0, "image length mismatch");
@@ -377,6 +488,15 @@ fn forward_one(
                     &mut cols[..npix * acc_w],
                 );
                 let cols_s = &cols[..npix * acc_w];
+                // The guard's checksum oracle: per-k column sums of the
+                // im2col matrix, computed once per layer (`row · colsum`
+                // must equal the row's count sum, by GEMM linearity).
+                if guard.is_some() {
+                    column_sums(cols_s, acc_w, colsum);
+                } else {
+                    colsum.clear();
+                }
+                let ctx = BlockCtx { li, tag, fault, guard, colsum: &colsum[..] };
                 let counts = &mut acc[..cout * npix];
                 let out_plane = &mut plane_b[..cout * npix];
                 // Residual planes are empty slices on layers without
@@ -387,7 +507,9 @@ fn forward_one(
                     if pc.si_res.is_some() { &mut res_b[..cout * npix] } else { &mut [] };
                 let nb = threads.min(cout).max(1);
                 if nb <= 1 {
-                    conv_block(pc, plan, rhalf, cols_s, res_src, 0, counts, out_plane, res_plane);
+                    conv_block(
+                        pc, plan, rhalf, cols_s, res_src, 0, counts, out_plane, res_plane, ctx,
+                    );
                 } else {
                     // Output-channel-block sharding: each scoped thread
                     // owns a disjoint channel range (GEMM rows + count
@@ -410,7 +532,7 @@ fn forward_one(
                             let (rc, rrest) = std::mem::take(&mut res_plane).split_at_mut(rlen);
                             res_plane = rrest;
                             sc.spawn(move || {
-                                conv_block(pc, plan, rhalf, cols_s, res_src, r0, cc, oc, rc);
+                                conv_block(pc, plan, rhalf, cols_s, res_src, r0, cc, oc, rc, ctx);
                             });
                             r0 += rows;
                         }
@@ -460,11 +582,12 @@ fn forward_one(
 
 /// One output-channel block of one conv layer — the sharding work
 /// unit: GEMM the panel rows `r0..r0+rows` over the shared im2col
-/// matrix, then push the counts through the per-channel SI/residual
-/// LUTs. `counts`/`out` are the block's disjoint `rows × npix` chunks;
-/// `res_src` is the full residual input plane (empty when the layer
-/// consumes none) and `res_out` the block's residual-tap chunk (empty
-/// when the layer produces none).
+/// matrix, verify them when a guard is attached, then push the counts
+/// through the per-channel SI/residual LUTs (or the faulted
+/// count-domain algebra). `counts`/`out` are the block's disjoint
+/// `rows × npix` chunks; `res_src` is the full residual input plane
+/// (empty when the layer consumes none) and `res_out` the block's
+/// residual-tap chunk (empty when the layer produces none).
 #[allow(clippy::too_many_arguments)]
 fn conv_block(
     pc: &PreparedConv,
@@ -476,10 +599,21 @@ fn conv_block(
     counts: &mut [i64],
     out: &mut [i32],
     res_out: &mut [i32],
+    ctx: BlockCtx<'_>,
 ) {
     let npix = plan.oh * plan.ow;
     let rows = counts.len() / npix.max(1);
     pc.panels.ternary.gemm_rows_into(r0, r0 + rows, cols, npix, counts);
+    // Guard the GEMM counts before anything downstream consumes them.
+    // Faults model the *circuit* stages and are folded in afterwards;
+    // the guard protects the accumulation itself.
+    if let Some(g) = ctx.guard {
+        g.verify_rows(&pc.panels.ternary, r0, rows, cols, npix, ctx.colsum, plan.base, counts);
+    }
+    if let Some(fc) = ctx.fault {
+        conv_block_faulted(pc, plan, rhalf, cols, res_src, r0, counts, out, res_out, ctx, fc);
+        return;
+    }
     for l in 0..rows {
         let co = r0 + l;
         let arow = &counts[l * npix..(l + 1) * npix];
@@ -509,6 +643,126 @@ fn conv_block(
             }
         }
     }
+}
+
+/// The faulted variant of [`conv_block`]'s SI loop: every circuit
+/// stage's site-derived bitflip mask ([`crate::fault::inject`]) is
+/// folded into the count domain *exactly*, without materializing a
+/// single bit stream:
+///
+/// * **Mult** — each product stream is a canonical ones-prefix of
+///   count `w·x + L/2`, so a flip at concatenated lane `g` (product
+///   `g/L`, offset `g%L`) is −1 below the prefix, +1 above it.
+/// * **Rescale** — the aligned residual stream is a canonical prefix
+///   over `res_bits` lanes; [`inject::prefix_flip_delta`] gives the
+///   popcount delta in one binary search.
+/// * **Bsn** — one shared mask corrupts the sorted stream feeding both
+///   SIs. A flip at lane `g` moves every tap reading `g`; that tap
+///   multiplicity is the count-table difference `lut[g+1] − lut[g]`.
+/// * **SiMain / SiRes** — output-lane flips re-evaluate the flipped
+///   tap against the *corrupted* sorted stream
+///   (`(c > q) XOR bsn_mask[q]`) to decide the ±1.
+///
+/// Bit-identical to the stream-materializing `ScExecutor` fault path
+/// (property-tested in `rust/tests/gemm.rs`). The sparse mask vectors
+/// live per call — the one deviation from the engine's zero-allocation
+/// steady state, sized `O(ber · stage width)`.
+#[allow(clippy::too_many_arguments)]
+fn conv_block_faulted(
+    pc: &PreparedConv,
+    plan: &ConvPlan,
+    rhalf: i64,
+    cols: &[i32],
+    res_src: &[i32],
+    r0: usize,
+    counts: &[i64],
+    out: &mut [i32],
+    res_out: &mut [i32],
+    ctx: BlockCtx<'_>,
+    fc: FaultCfg,
+) {
+    let npix = plan.oh * plan.ow;
+    let rows = counts.len() / npix.max(1);
+    let acc_w = plan.acc_w;
+    let bsl = plan.act_bsl;
+    let half = (bsl / 2) as i64;
+    // Sparse stage masks, reused across the block's (channel, pixel)
+    // sites.
+    let (mut m_mult, mut m_res, mut m_bsn, mut m_si) =
+        (Vec::new(), Vec::new(), Vec::new(), Vec::new());
+    for l in 0..rows {
+        let co = r0 + l;
+        let wrow = &pc.wq.values[co * acc_w..(co + 1) * acc_w];
+        let arow = &counts[l * npix..(l + 1) * npix];
+        let main_lut = &plan.si_main_lut[co * plan.lut_w..(co + 1) * plan.lut_w];
+        let res_lut = plan
+            .si_res_lut
+            .as_deref()
+            .map(|t| &t[co * plan.lut_w..(co + 1) * plan.lut_w]);
+        let res_in = plan
+            .align_lut
+            .as_deref()
+            .map(|lut| (lut, &res_src[co * npix..(co + 1) * npix]));
+        let main_taps = pc.si_main[co].taps();
+        let res_taps = pc.si_res.as_ref().map(|sis| sis[co].taps());
+        for p in 0..npix {
+            let mut rng = inject::site_rng(fc.seed, ctx.tag, ctx.li, co, p, Stage::Mult);
+            inject::fill_mask(&mut rng, fc.ber, acc_w * bsl, &mut m_mult);
+            let mut count = plan.base + arow[p];
+            let xrow = &cols[p * acc_w..(p + 1) * acc_w];
+            for &g in &m_mult {
+                let g = g as usize;
+                let prefix = wrow[g / bsl] as i64 * xrow[g / bsl] as i64 + half;
+                count += if ((g % bsl) as i64) < prefix { -1 } else { 1 };
+            }
+            if let Some((lut, rrow)) = res_in {
+                let aligned = lut[(rrow[p] as i64 + rhalf) as usize];
+                let mut rng = inject::site_rng(fc.seed, ctx.tag, ctx.li, co, p, Stage::Rescale);
+                inject::fill_mask(&mut rng, fc.ber, pc.res_bits, &mut m_res);
+                count += aligned + inject::prefix_flip_delta(&m_res, aligned as usize);
+            }
+            let c = (count.max(0) as usize).min(plan.lut_w - 1);
+            let mut rng = inject::site_rng(fc.seed, ctx.tag, ctx.li, co, p, Stage::Bsn);
+            inject::fill_mask(&mut rng, fc.ber, pc.bsn_width, &mut m_bsn);
+            let si_rng = inject::site_rng(fc.seed, ctx.tag, ctx.li, co, p, Stage::SiMain);
+            out[l * npix + p] = si_out_faulty(main_lut, main_taps, c, &m_bsn, fc, si_rng, &mut m_si);
+            if let (Some(rl), Some(rt)) = (res_lut, res_taps) {
+                let si_rng = inject::site_rng(fc.seed, ctx.tag, ctx.li, co, p, Stage::SiRes);
+                res_out[l * npix + p] = si_out_faulty(rl, rt, c, &m_bsn, fc, si_rng, &mut m_si);
+            }
+        }
+    }
+}
+
+/// One SI output under the shared BSN-lane mask plus its own
+/// output-lane mask, in the count domain. `lut` is the channel's
+/// signed count table (`lut[c]` = signed code on a clean sorted stream
+/// of count `c`), `taps` its tap configuration over the same stream.
+fn si_out_faulty(
+    lut: &[i32],
+    taps: &[SelTap],
+    c: usize,
+    m_bsn: &[u32],
+    fc: FaultCfg,
+    mut rng: crate::util::Rng,
+    m_si: &mut Vec<u32>,
+) -> i32 {
+    let mut v = lut[c] as i64;
+    for &g in m_bsn {
+        let g = g as usize;
+        let mult = (lut[g + 1] - lut[g]) as i64;
+        v += if g < c { -mult } else { mult };
+    }
+    inject::fill_mask(&mut rng, fc.ber, taps.len(), m_si);
+    for &j in m_si.iter() {
+        let bit = match taps[j as usize] {
+            SelTap::Zero => false,
+            SelTap::One => true,
+            SelTap::Bit(q) => (c > q) != inject::contains(m_bsn, q),
+        };
+        v += if bit { -1 } else { 1 };
+    }
+    v as i32
 }
 
 #[cfg(test)]

@@ -13,16 +13,23 @@
 //!   to the 5-gate cell), accumulation through BSN popcount semantics
 //!   (proven equal to the gate-level sorter), activation through SI tap
 //!   semantics (proven equal to bit selection on the sorted stream);
-//! * with a [`FaultCfg`], every bitstream bit flips with probability
-//!   `ber` — the Fig 5 experiment — using actual [`ThermCode`] bit
-//!   vectors rather than count shortcuts.
+//! * with a [`FaultCfg`], every circuit stage's output lanes take
+//!   bitflip faults at rate `ber` — the Fig 5 experiment — applied as
+//!   word-level masks to actual [`ThermCode`] bit vectors
+//!   ([`crate::fault::inject`]). Masks are derived per
+//!   `(image, layer, channel, pixel, stage)` site, so the packed
+//!   count-domain [`super::sc_engine::ScEngine`] reproduces this
+//!   stream-materializing path bit-for-bit (property-tested in
+//!   `rust/tests/gemm.rs`); use [`ScExecutor::forward_with_tag`] to
+//!   pin an image's fault identity.
 
 use std::sync::Arc;
 
 use crate::circuits::multiplier::TernaryMultiplier;
 use crate::circuits::rescale::RescaleBlock;
 use crate::circuits::si::{ActivationFn, SelectiveInterconnect};
-use crate::coding::{Ternary, ThermCode};
+use crate::coding::{BitVec, Ternary, ThermCode};
+use crate::fault::inject::{self, Stage};
 use crate::util::Rng;
 use super::gemm::WeightPanels;
 use super::layers::{im2col_i32_into, ConvShape};
@@ -31,6 +38,11 @@ use super::quant::{QuantConfig, TernaryTensor};
 use super::tensor::Tensor;
 
 /// Fault-injection configuration (Fig 5).
+///
+/// The seed anchors the per-site mask derivation of
+/// [`crate::fault::inject`]: two executors (or the packed engine) with
+/// the same `FaultCfg` and image tag draw identical faults at every
+/// circuit stage, independent of evaluation order or threading.
 #[derive(Clone, Copy, Debug)]
 pub struct FaultCfg {
     /// Per-bit flip probability on every SC bitstream.
@@ -66,6 +78,9 @@ pub struct PreparedConv {
     pub si_res: Option<Vec<SelectiveInterconnect>>,
     /// Total BSN input width in bits.
     pub bsn_width: usize,
+    /// Width of the aligned residual stream out of the rescale block
+    /// (0 when `!res_in`) — the `Rescale` fault-stage width.
+    pub res_bits: usize,
     /// Whether this layer consumes a residual.
     pub res_in: bool,
 }
@@ -173,6 +188,7 @@ impl Prepared {
                         si_main,
                         si_res,
                         bsn_width,
+                        res_bits,
                         res_in: *res_in,
                     });
                     alpha_in = alpha_out;
@@ -251,8 +267,16 @@ impl ScExecutor {
     }
 
     /// Forward one CHW image; returns per-class integer scores.
+    /// Under fault injection the image carries tag 0 — use
+    /// [`Self::forward_with_tag`] to give each image of a batch or
+    /// sweep its own fault identity.
     pub fn forward(&self, image: &Tensor) -> Vec<i64> {
-        let mut rng = self.fault.map(|f| Rng::new(f.seed));
+        self.forward_with_tag(image, 0)
+    }
+
+    /// Forward one CHW image whose fault masks are derived from `tag`
+    /// (canonically the image's index). Fault-free, the tag is inert.
+    pub fn forward_with_tag(&self, image: &Tensor, tag: u64) -> Vec<i64> {
         let act_bsl = self.prep.act_bsl();
         // Input encoding.
         let half = (act_bsl / 2) as f32;
@@ -283,9 +307,10 @@ impl ScExecutor {
                     let pc = &self.prep.convs[li];
                     let (m, r) = self.conv_layer(
                         pc,
+                        li,
+                        tag,
                         &main,
                         res.as_ref(),
-                        rng.as_mut(),
                         &mut cols,
                         &mut acc,
                         &mut scratch,
@@ -323,12 +348,15 @@ impl ScExecutor {
         panic!("model has no classifier layer");
     }
 
-    /// Classify a batch; returns predicted classes.
+    /// Classify a batch; returns predicted classes. Each image is
+    /// tagged with its index, so faults are per-image reproducible
+    /// regardless of how the batch is split or ordered.
     pub fn predict(&self, images: &[Tensor]) -> Vec<usize> {
         images
             .iter()
-            .map(|im| {
-                let l = self.forward(im);
+            .enumerate()
+            .map(|(i, im)| {
+                let l = self.forward_with_tag(im, i as u64);
                 l.iter()
                     .enumerate()
                     .max_by_key(|(_, &v)| v)
@@ -346,12 +374,20 @@ impl ScExecutor {
     }
 
     /// One conv layer in the count domain (or bit domain under faults).
+    ///
+    /// The fault path is the **gate-level reference** of the fault
+    /// model: it materializes each stage's real bit stream, XORs the
+    /// site-derived mask in, and counts — the packed engine's
+    /// count-domain algebra is property-tested equal to this, end to
+    /// end.
+    #[allow(clippy::too_many_arguments)]
     fn conv_layer(
         &self,
         pc: &PreparedConv,
+        li: usize,
+        tag: u64,
         main: &CodeMap,
         res: Option<&CodeMap>,
-        mut rng: Option<&mut Rng>,
         cols: &mut Vec<i32>,
         acc: &mut Vec<i64>,
         scratch: &mut FaultScratch,
@@ -375,7 +411,8 @@ impl ScExecutor {
         // per product (TernaryMultiplier semantics, proven equal to the
         // code path in unit tests), so the layer's counts are the GEMM
         // dot plus the constant offset `acc_w · L/2`.
-        if rng.is_none() {
+        let fault = self.fault;
+        if fault.is_none() {
             // Grow-only scratch, never cleared: gemm_into overwrites
             // every element it hands out, so stale counts from another
             // layer never survive into a read.
@@ -395,12 +432,14 @@ impl ScExecutor {
             let wrow = &pc.wq.values[co * acc_w..(co + 1) * acc_w];
             for p in 0..npix {
                 // Product counts through the ternary multiplier.
-                let mut count: i64 = if let Some(r) = rng.as_deref_mut() {
-                    // Bit-faithful path with fault injection, through
-                    // the reusable scratch codes (no per-product
-                    // allocation; same RNG draw order as before).
+                let mut count: i64 = if let Some(fc) = fault {
+                    // Mult stage: one mask over the acc_w·L concatenated
+                    // product streams; each product's slice lands at bit
+                    // g − i·L. Streams run through the reusable scratch
+                    // codes (no per-product allocation).
                     let xr = &cols[p * acc_w..(p + 1) * acc_w];
-                    let ber = self.fault.unwrap().ber;
+                    let mut r = inject::site_rng(fc.seed, tag, li, co, p, Stage::Mult);
+                    inject::fill_mask(&mut r, fc.ber, acc_w * act_bsl, &mut scratch.mask);
                     let mut c = 0i64;
                     for i in 0..acc_w {
                         ThermCode::encode_into(xr[i] as i64, act_bsl, &mut scratch.enc);
@@ -409,7 +448,12 @@ impl ScExecutor {
                             Ternary::from_i64(wrow[i] as i64),
                             scratch.prod.bits_mut(),
                         );
-                        flip_bits(&mut scratch.prod, ber, r);
+                        inject::apply_mask_range(
+                            &scratch.mask,
+                            i * act_bsl,
+                            (i + 1) * act_bsl,
+                            scratch.prod.bits_mut(),
+                        );
                         c += scratch.prod.count() as i64;
                     }
                     c
@@ -422,24 +466,57 @@ impl ScExecutor {
                     let rhalf = (rm.bsl / 2) as i64;
                     let rq = rm.q[co_res_index(rm, co, p, oh, ow)] as i64;
                     let rcount = (rq + rhalf) as usize;
-                    let aligned = align_res_count(rcount, rm.bsl, pc.res_shift);
+                    let mut aligned = align_res_count(rcount, rm.bsl, pc.res_shift);
+                    if let Some(fc) = fault {
+                        // Rescale stage: faults on the aligned residual
+                        // stream (canonical prefix of `aligned` ones over
+                        // `res_bits` lanes).
+                        let mut r = inject::site_rng(fc.seed, tag, li, co, p, Stage::Rescale);
+                        inject::fill_mask(&mut r, fc.ber, pc.res_bits, &mut scratch.mask);
+                        ThermCode::from_count_into(aligned, pc.res_bits, &mut scratch.sorted);
+                        inject::apply_mask(&scratch.mask, scratch.sorted.bits_mut());
+                        aligned = scratch.sorted.count();
+                    }
                     count += aligned as i64;
                 }
-                let count = count.max(0) as usize;
-                // SI taps.
-                let cmain = if let Some(r) = rng.as_deref_mut() {
-                    apply_si_faulty(&pc.si_main[co], count, self.fault.unwrap().ber, r, scratch)
+                let c_bsn = (count.max(0) as usize).min(pc.bsn_width);
+                // SI taps over the BSN's sorted stream.
+                let (cmain, cres) = if let Some(fc) = fault {
+                    // Bsn stage: ONE corrupted sorted stream feeds both
+                    // SIs (they tap the same physical lanes).
+                    let mut r = inject::site_rng(fc.seed, tag, li, co, p, Stage::Bsn);
+                    inject::fill_mask(&mut r, fc.ber, pc.bsn_width, &mut scratch.mask);
+                    ThermCode::from_count_into(c_bsn, pc.bsn_width, &mut scratch.sorted);
+                    inject::apply_mask(&scratch.mask, scratch.sorted.bits_mut());
+                    let cmain = apply_si_faulty(
+                        &pc.si_main[co],
+                        &scratch.sorted,
+                        fc,
+                        inject::site_rng(fc.seed, tag, li, co, p, Stage::SiMain),
+                        &mut scratch.mask2,
+                        &mut scratch.out_bits,
+                    );
+                    let cres = pc.si_res.as_ref().map(|sis| {
+                        apply_si_faulty(
+                            &sis[co],
+                            &scratch.sorted,
+                            fc,
+                            inject::site_rng(fc.seed, tag, li, co, p, Stage::SiRes),
+                            &mut scratch.mask2,
+                            &mut scratch.out_bits,
+                        )
+                    });
+                    (cmain, cres)
                 } else {
-                    pc.si_main[co].apply_count(count.min(pc.bsn_width))
+                    (
+                        pc.si_main[co].apply_count(c_bsn),
+                        pc.si_res.as_ref().map(|sis| sis[co].apply_count(c_bsn)),
+                    )
                 };
                 out_main[co * npix + p] =
                     cmain as i32 - (pc.si_main[co].out_bsl() / 2) as i32;
-                if let Some(ref sis) = pc.si_res {
-                    let cres = if let Some(r) = rng.as_deref_mut() {
-                        apply_si_faulty(&sis[co], count, self.fault.unwrap().ber, r, scratch)
-                    } else {
-                        sis[co].apply_count(count.min(pc.bsn_width))
-                    };
+                if let Some(cres) = cres {
+                    let sis = pc.si_res.as_ref().expect("cres implies si_res");
                     out_res.as_mut().unwrap()[co * npix + p] =
                         cres as i32 - (sis[co].out_bsl() / 2) as i32;
                 }
@@ -477,7 +554,10 @@ pub fn align_res_count(count: usize, bsl: usize, shift: i32) -> usize {
     }
 }
 
-/// Flip each bit of a code with probability `ber`.
+/// Flip each bit of a code with probability `ber` — the dense
+/// Bernoulli sampler kept for targeted robustness tests; the
+/// executors' fault path draws sparse masks via
+/// [`crate::fault::inject::fill_mask`] instead.
 pub fn flip_bits(code: &mut ThermCode, ber: f64, rng: &mut Rng) {
     if ber <= 0.0 {
         return;
@@ -492,14 +572,17 @@ pub fn flip_bits(code: &mut ThermCode, ber: f64, rng: &mut Rng) {
 }
 
 /// Reusable bitstream work area for the fault-injection path: the
-/// encoded activation, the multiplier product and the reconstructed
-/// sorted stream. All packed bit vectors, reset in place each use. (The
-/// SI tap output no longer needs a buffer — the fused
-/// [`SelectiveInterconnect::apply_bits_count`] counts taps directly.)
+/// encoded activation, the multiplier product, the reconstructed
+/// sorted (or aligned-residual) stream, the SI tap-output lanes, and
+/// two mask index buffers. All reset in place each use — the faulted
+/// forward allocates nothing per product or pixel.
 struct FaultScratch {
     enc: ThermCode,
     prod: ThermCode,
     sorted: ThermCode,
+    out_bits: BitVec,
+    mask: Vec<u32>,
+    mask2: Vec<u32>,
 }
 
 impl FaultScratch {
@@ -508,25 +591,28 @@ impl FaultScratch {
             enc: ThermCode::from_count(0, 2),
             prod: ThermCode::from_count(0, 2),
             sorted: ThermCode::from_count(0, 2),
+            out_bits: BitVec::zeros(0),
+            mask: Vec::new(),
+            mask2: Vec::new(),
         }
     }
 }
 
-/// SI application on a fault-corrupted sorted stream: build the sorted
-/// code from the count, flip stream bits, then tap — all in the
-/// caller's scratch buffers. The tap + popcount is fused
-/// ([`SelectiveInterconnect::apply_bits_count`]), so no tap-output
-/// vector is ever materialized.
+/// SI application on the (already corrupted) sorted stream, with
+/// output-lane faults: materialize the tap outputs, XOR the SI-stage
+/// mask in, and count.
 fn apply_si_faulty(
     si: &SelectiveInterconnect,
-    count: usize,
-    ber: f64,
-    rng: &mut Rng,
-    scratch: &mut FaultScratch,
+    sorted: &ThermCode,
+    fc: FaultCfg,
+    mut rng: Rng,
+    mask: &mut Vec<u32>,
+    out_bits: &mut BitVec,
 ) -> usize {
-    ThermCode::from_count_into(count.min(si.in_width()), si.in_width(), &mut scratch.sorted);
-    flip_bits(&mut scratch.sorted, ber, rng);
-    si.apply_bits_count(scratch.sorted.bits())
+    inject::fill_mask(&mut rng, fc.ber, si.out_bsl(), mask);
+    si.apply_bits_into(sorted.bits(), out_bits);
+    inject::apply_mask(mask, out_bits);
+    out_bits.popcount()
 }
 
 #[cfg(test)]

@@ -16,14 +16,24 @@
 //! * The serving pool honors `ServeConfig::threads` end to end: a
 //!   threaded `sc` pool answers with the same logits as a
 //!   single-threaded oracle over the same frozen model.
+//! * Under injected faults the packed engine's count-domain folding is
+//!   bit-identical to the scalar stream-materializing executor (same
+//!   `FaultCfg`, same image tags, every thread count) — and because CI
+//!   re-runs this suite under `SCNN_NO_SIMD=1`, the forced-scalar GEMM
+//!   arm is exercised under faults too.
+//! * The datapath guard detects and recovers 100% of chaos-corrupted
+//!   GEMM rows on the live engine, and a `--guard` pool serves clean
+//!   logits while reporting integrity counters through its metrics.
 
 use std::sync::Arc;
 
 use scnn::coordinator::{backend, Backend, Coordinator, ServeConfig};
+use scnn::fault::guard::{DatapathGuard, GuardCounters};
 use scnn::nn::gemm::{gemm_naive, I8Panel, TernaryPanel, WeightPanels, BLOCK_CO};
 use scnn::nn::model::{ModelCfg, ModelParams};
 use scnn::nn::quant::QuantConfig;
-use scnn::nn::sc_exec::Prepared;
+use scnn::nn::sc_exec::{FaultCfg, Prepared, ScExecutor};
+use scnn::nn::tensor::Tensor;
 use scnn::nn::ScEngine;
 use scnn::util::prop::check_simple;
 use scnn::util::simd::Dispatch;
@@ -307,4 +317,117 @@ fn sc_pool_honors_the_threads_knob() {
         assert_eq!(got, want_f, "request {i}");
     }
     coord.shutdown();
+}
+
+#[test]
+fn faulted_engine_matches_scalar_fault_network() {
+    // Tentpole acceptance: under injected faults the packed engine is
+    // bit-identical to the scalar stream-materializing executor — same
+    // `FaultCfg`, images tagged by index — for both model families
+    // (plain ternary and residual) at word-crossing stream widths, and
+    // at every thread count on both the batch and the tagged
+    // single-image paths.
+    let fc = FaultCfg { ber: 0.05, seed: 99 };
+    for family in ["tnn", "scnet10"] {
+        let (prep, il) = prep_family(family, 23);
+        let exec = ScExecutor::with_faults(prep.clone(), fc);
+        let (c, h, w) = prep.cfg.input;
+        let mut rng = Rng::new(31);
+        let batch = 4usize;
+        let x: Vec<f32> = (0..batch * il).map(|_| rng.normal() as f32 * 0.5).collect();
+        let mut expect = Vec::new();
+        for b in 0..batch {
+            let img = Tensor::from_vec(&[c, h, w], x[b * il..(b + 1) * il].to_vec());
+            expect.extend(exec.forward_with_tag(&img, b as u64));
+        }
+        for threads in [1usize, 2, 3, 6] {
+            let mut eng = ScEngine::with_threads(prep.clone(), threads);
+            eng.set_fault(Some(fc));
+            let cl = eng.classes();
+            let mut got = vec![0i64; batch * cl];
+            eng.forward_batch_into(&x, &mut got);
+            assert_eq!(got, expect, "{family} threads={threads} (batch path)");
+            let mut one = vec![0i64; cl];
+            for b in 0..batch {
+                eng.forward_into_tagged(&x[b * il..(b + 1) * il], b as u64, &mut one);
+                assert_eq!(
+                    one[..],
+                    expect[b * cl..(b + 1) * cl],
+                    "{family} threads={threads} image {b} (tagged path)"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn chaos_guard_detects_and_recovers_on_the_live_engine() {
+    // Guard acceptance: with the chaos knob corrupting *every* GEMM
+    // row block before the check, the served logits still equal the
+    // unguarded clean engine's — 100% detection, 100% recovery — and
+    // the faulted path is unaffected (the guard protects the GEMM
+    // stage; injected circuit faults apply after it).
+    let (prep, il) = prep_family("scnet10", 17);
+    let mut rng = Rng::new(3);
+    let x: Vec<f32> = (0..il).map(|_| rng.normal() as f32).collect();
+    let mut clean = ScEngine::new(prep.clone());
+    let cl = clean.classes();
+    let mut want = vec![0i64; cl];
+    clean.forward_into(&x, &mut want);
+    let counters = Arc::new(GuardCounters::default());
+    let mut eng = ScEngine::with_threads(prep.clone(), 2);
+    eng.set_guard(Some(Arc::new(DatapathGuard::with_chaos(counters.clone(), 1))));
+    let mut got = vec![0i64; cl];
+    eng.forward_into(&x, &mut got);
+    assert_eq!(got, want, "every chaos-corrupted row must be healed");
+    assert!(counters.detected() > 0, "chaos must have corrupted rows");
+    assert_eq!(counters.detected(), counters.recovered(), "recovery must be 100%");
+
+    // Production guard on clean hardware: nothing to detect, logits
+    // untouched; and guard + fault injection compose (guard first,
+    // stage faults after).
+    let fc = FaultCfg { ber: 0.02, seed: 5 };
+    let mut faulted = ScEngine::new(prep.clone());
+    faulted.set_fault(Some(fc));
+    let mut want_f = vec![0i64; cl];
+    faulted.forward_into(&x, &mut want_f);
+    let quiet = Arc::new(GuardCounters::default());
+    let mut guarded = ScEngine::new(prep);
+    guarded.set_guard(Some(Arc::new(DatapathGuard::new(quiet.clone()))));
+    guarded.set_fault(Some(fc));
+    let mut got_f = vec![0i64; cl];
+    guarded.forward_into(&x, &mut got_f);
+    assert_eq!(got_f, want_f, "a clean guard must not change faulted logits");
+    assert_eq!(quiet.detected(), 0);
+    assert_eq!(quiet.recovered(), 0);
+}
+
+#[test]
+fn guarded_sc_pool_serves_clean_logits_and_reports_metrics() {
+    // `ServeConfig::guard` end to end: a guarded threaded pool answers
+    // with the oracle's logits, and the integrity counter families show
+    // up (at zero — the hardware is healthy) in the metrics snapshot.
+    let mut cfg = ServeConfig::new("artifacts", "tnn");
+    cfg.workers = 2;
+    cfg.threads = 2;
+    cfg.batch = 4;
+    cfg.queue_depth = 32;
+    cfg.seed = 77;
+    cfg.guard = true;
+    let mut oracle = ScEngine::new(backend::prepared_for(&cfg).expect("freeze model"));
+    let il = oracle.image_len();
+    let coord = Coordinator::start_backend(Backend::Sc, cfg).expect("start guarded sc pool");
+    let client = coord.client();
+    let mut rng = Rng::new(9);
+    for i in 0..8 {
+        let x: Vec<f32> = (0..il).map(|_| rng.normal() as f32).collect();
+        let got = client.infer(x.clone()).expect("infer");
+        let mut want = vec![0i64; oracle.classes()];
+        oracle.forward_into(&x, &mut want);
+        let want_f: Vec<f32> = want.iter().map(|&v| v as f32).collect();
+        assert_eq!(got, want_f, "request {i}");
+    }
+    let m = coord.shutdown();
+    assert_eq!(m.integrity_detected, 0, "healthy hardware must trip no checks");
+    assert_eq!(m.integrity_recovered, 0);
 }

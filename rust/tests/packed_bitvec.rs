@@ -15,9 +15,14 @@
 //!    pitted against the always-available scalar arm over ragged word
 //!    counts and non-word-aligned funnel offsets — on this machine's
 //!    dispatched table AND under the `SCNN_NO_SIMD=1` forced-scalar
-//!    override (CI runs the suite both ways).
+//!    override (CI runs the suite both ways);
+//! 4. the fault-injection mask primitives (`fault::inject`) are pitted
+//!    against per-bit references at word-crossing widths: sorted/unique
+//!    mask sampling, XOR application, the prefix-flip count delta, and
+//!    windowed mask rebasing.
 
 use scnn::circuits::approx_bsn::{ApproxBsn, ApproxStage, SubSample};
+use scnn::fault::inject;
 use scnn::circuits::multiplier::TernaryMultiplier;
 use scnn::circuits::rescale::{RescaleBlock, DIV_PAD};
 use scnn::circuits::si::{SelTap, SelectiveInterconnect};
@@ -439,6 +444,126 @@ fn tail_invariant_violation_is_caught() {
     b.as_mut_words()[1] |= 1 << 10;
     assert!(!b.tail_is_zero());
     let _ = b.popcount();
+}
+
+/// Fault-mask sampling: sorted, unique, in range, deterministic in the
+/// RNG, with the BER edge cases pinned (0 ⇒ empty, 1 ⇒ every lane).
+#[test]
+fn prop_fault_mask_fill_is_sorted_unique_in_range() {
+    check_simple(
+        167,
+        200,
+        |rng| {
+            let width = rng.gen_index(200);
+            let ber = match rng.gen_index(4) {
+                0 => 0.0,
+                1 => 1.0,
+                2 => rng.f64(),
+                _ => 0.02,
+            };
+            (width, ber, rng.next_u64())
+        },
+        |(width, ber, seed)| {
+            let mut mask = Vec::new();
+            inject::fill_mask(&mut Rng::new(*seed), *ber, *width, &mut mask);
+            assert!(mask.windows(2).all(|w| w[0] < w[1]), "sorted and unique");
+            assert!(mask.iter().all(|&g| (g as usize) < *width), "in range");
+            if *ber >= 1.0 {
+                assert_eq!(mask.len(), *width, "BER 1 faults every lane");
+            }
+            if *ber <= 0.0 {
+                assert!(mask.is_empty(), "BER 0 faults nothing");
+            }
+            for &g in &mask {
+                assert!(inject::contains(&mask, g as usize), "contains its own lanes");
+            }
+            assert!(!inject::contains(&mask, *width), "never past the width");
+            // Same RNG state ⇒ same mask (the determinism the whole
+            // fault layer is built on).
+            let mut again = Vec::new();
+            inject::fill_mask(&mut Rng::new(*seed), *ber, *width, &mut again);
+            mask == again
+        },
+    );
+}
+
+/// Packed mask application equals the per-bit XOR reference at
+/// word-crossing widths.
+#[test]
+fn apply_mask_equals_per_bit_xor_reference() {
+    for width in [63usize, 64, 65, 127, 128, 130] {
+        let mut rng = Rng::new(width as u64 ^ 0xFA17);
+        let bits = rand_bools(&mut rng, width, 0.5);
+        let mut mask = Vec::new();
+        inject::fill_mask(&mut rng, 0.15, width, &mut mask);
+        let mut packed = to_bitvec(&bits);
+        inject::apply_mask(&mask, &mut packed);
+        let reference: Vec<bool> = bits
+            .iter()
+            .enumerate()
+            .map(|(i, &b)| b != inject::contains(&mask, i))
+            .collect();
+        assert_matches_ref(&packed, &reference, &format!("apply_mask width={width}"));
+        assert!(packed.tail_is_zero(), "width={width}: tail invariant survives masking");
+    }
+}
+
+/// The count-domain prefix-flip delta equals materializing the
+/// canonical stream, XOR-ing the mask in, and re-counting — the
+/// identity the engine's packed fault path rests on.
+#[test]
+fn prop_prefix_flip_delta_matches_materialized_stream() {
+    check_simple(
+        173,
+        200,
+        |rng| {
+            let width = 1 + rng.gen_index(200);
+            (width, rng.gen_index(width + 1), rng.next_u64())
+        },
+        |(width, count, seed)| {
+            let mut rng = Rng::new(*seed);
+            let mut mask = Vec::new();
+            inject::fill_mask(&mut rng, 0.1, *width, &mut mask);
+            let mut stream = BitVec::zeros(0);
+            stream.set_ones_prefix(*width, *count);
+            inject::apply_mask(&mask, &mut stream);
+            stream.popcount() as i64 - *count as i64 == inject::prefix_flip_delta(&mask, *count)
+        },
+    );
+}
+
+/// Applying the `[lo, hi)` window of a concatenated-stage mask equals
+/// filtering and rebasing the lane indices by hand — how per-product
+/// faults are carved out of one multiplier-stage mask.
+#[test]
+fn prop_apply_mask_range_is_a_rebased_sub_mask() {
+    check_simple(
+        179,
+        150,
+        |rng| {
+            let lanes = 1 + rng.gen_index(6);
+            let l = 1 + rng.gen_index(120);
+            (lanes, l, rng.gen_index(lanes), rng.next_u64())
+        },
+        |(lanes, l, which, seed)| {
+            let mut rng = Rng::new(*seed);
+            let mut mask = Vec::new();
+            inject::fill_mask(&mut rng, 0.1, lanes * l, &mut mask);
+            let bits = rand_bools(&mut rng, *l, 0.5);
+            let (lo, hi) = (which * l, (which + 1) * l);
+            let mut ranged = to_bitvec(&bits);
+            inject::apply_mask_range(&mask, lo, hi, &mut ranged);
+            let rebased: Vec<u32> = mask
+                .iter()
+                .copied()
+                .filter(|&g| (g as usize) >= lo && (g as usize) < hi)
+                .map(|g| g - lo as u32)
+                .collect();
+            let mut direct = to_bitvec(&bits);
+            inject::apply_mask(&rebased, &mut direct);
+            ranged == direct
+        },
+    );
 }
 
 /// Spatial-temporal BSN bit path with word-parallel chunk extraction
