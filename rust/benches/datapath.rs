@@ -15,7 +15,7 @@ use scnn::circuits::{BsnKind, ConvDatapath, DatapathConfig};
 use scnn::coding::Ternary;
 use scnn::fault::guard::{DatapathGuard, GuardCounters};
 use scnn::nn::model::{ModelCfg, ModelParams};
-use scnn::nn::quant::QuantConfig;
+use scnn::nn::quant::{Pruning, QuantConfig};
 use scnn::nn::sc_exec::{FaultCfg, Prepared};
 use scnn::nn::ScEngine;
 use scnn::util::bench::{Bench, JsonReport};
@@ -98,7 +98,12 @@ fn fault_overhead(report: &mut JsonReport, b: &Bench, rng: &mut Rng) {
     let prep = Arc::new(Prepared::new(
         &cfg,
         &params,
-        QuantConfig { act_bsl: Some(2), weight_ternary: true, residual_bsl: None },
+        QuantConfig {
+            act_bsl: Some(2),
+            weight_ternary: true,
+            residual_bsl: None,
+            pruning: Pruning::Off,
+        },
     ));
     let (c, h, w) = prep.cfg.input;
     let image: Vec<f32> = (0..c * h * w).map(|_| rng.normal() as f32 * 0.5).collect();

@@ -6,7 +6,7 @@ use std::sync::Arc;
 use scnn::data::{Dataset, Split, SynthCifar, SynthDigits};
 use scnn::nn::binary_exec::BinaryExecutor;
 use scnn::nn::model::{ModelCfg, ModelParams};
-use scnn::nn::quant::QuantConfig;
+use scnn::nn::quant::{Pruning, QuantConfig};
 use scnn::nn::sc_exec::{FaultCfg, Prepared, ScExecutor};
 use scnn::util::bench::Bench;
 use scnn::util::Rng;
@@ -23,7 +23,12 @@ fn main() {
     let prep = Arc::new(Prepared::new(
         &cfg,
         &params,
-        QuantConfig { act_bsl: Some(2), weight_ternary: true, residual_bsl: None },
+        QuantConfig {
+            act_bsl: Some(2),
+            weight_ternary: true,
+            residual_bsl: None,
+            pruning: Pruning::Off,
+        },
     ));
     let digits = SynthDigits::new();
     let (dimg, _) = digits.sample(Split::Test, 0);

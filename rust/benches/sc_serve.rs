@@ -1,5 +1,7 @@
 //! Native SC serving benchmarks (§Perf): the packed GEMM kernels vs
-//! the naive triple loop, the batched `ScEngine` vs the per-image
+//! the naive triple loop, the sparse (compressed-column) kernel vs
+//! dense across activation densities, the engine across the
+//! structured-pruning knob, the batched `ScEngine` vs the per-image
 //! `ScExecutor`, the engine's imgs/s at N threads, a worker-scaling
 //! sweep of the pool on the **real SC model** (backend `sc`) instead
 //! of the synthetic stand-in, and a chaos-degradation series (goodput
@@ -24,9 +26,9 @@ use scnn::coordinator::{
     SyntheticExecutor,
 };
 use scnn::data::{Dataset, Split, SynthCifar, SynthDigits};
-use scnn::nn::gemm::{gemm_naive, I8Panel, TernaryPanel};
+use scnn::nn::gemm::{gemm_naive, I8Panel, SparseCols, TernaryPanel};
 use scnn::nn::model::{ModelCfg, ModelParams};
-use scnn::nn::quant::QuantConfig;
+use scnn::nn::quant::{Pruning, QuantConfig};
 use scnn::nn::sc_engine::ScEngine;
 use scnn::nn::sc_exec::{Prepared, ScExecutor};
 use scnn::util::bench::{Bench, JsonReport};
@@ -137,6 +139,111 @@ fn gemm_simd_vs_scalar(report: &mut JsonReport) {
     report.add_scalar("gemm/simd/level_is_scalar", is_scalar, "bool");
 }
 
+/// Sparse (compressed-column) GEMM vs the dense ternary kernel across
+/// activation densities. Work items are the *dense* MAC count
+/// (rows·k·n) at every density, so the `gemm/sparse_{p}pct` MACs/s
+/// series reads directly as effective throughput and must rise with
+/// sparsity — the zero-skipping payoff. Outputs are asserted
+/// bit-identical to the dense kernel at every point.
+fn gemm_sparsity_sweep(report: &mut JsonReport) {
+    let b = if quick() { Bench::quick() } else { Bench::default() };
+    println!("\n== sparse vs dense ternary GEMM across activation density (scnet_rb2) ==");
+    let (rows, k, n) = (32usize, 288usize, 256usize);
+    let mut rng = Rng::new(0x5AC5);
+    let w: Vec<i8> = (0..rows * k).map(|_| rng.gen_range_i64(-1, 1) as i8).collect();
+    let ternary = TernaryPanel::pack(&w, rows, k);
+    let macs = (rows * k * n) as u64;
+    let mut dense_rate = 0.0f64;
+    for pct in [0u32, 25, 50, 75, 90] {
+        let cols: Vec<i32> = (0..n * k)
+            .map(|_| {
+                if rng.gen_bool(pct as f64 / 100.0) {
+                    0
+                } else {
+                    rng.gen_range_i64(-8, 9) as i32
+                }
+            })
+            .collect();
+        let mut expect = vec![0i64; rows * n];
+        ternary.gemm_into(&cols, n, &mut expect);
+        let sp = SparseCols::compress(&cols, n, k);
+        let mut out = vec![0i64; rows * n];
+        let m = b.run(&format!("sc_serve/gemm/sparse_{pct}pct"), macs, || {
+            ternary.gemm_sparse_into(&sp, &mut out);
+            out[0]
+        });
+        assert_eq!(out, expect, "{pct}% zeros: sparse kernel diverged from dense");
+        let rate = macs as f64 / m.median_s.max(1e-12);
+        if pct == 0 {
+            let md = b.run("sc_serve/gemm/sparse_dense_ref", macs, || {
+                ternary.gemm_into(&cols, n, &mut out);
+                out[0]
+            });
+            dense_rate = macs as f64 / md.median_s.max(1e-12);
+        }
+        println!(
+            "   -> {pct:>2}% zeros: {:.1}M effective MACs/s ({:.2}x dense-ref)",
+            rate / 1e6,
+            rate / dense_rate.max(1e-9)
+        );
+        report.add(&format!("gemm/sparse_{pct}pct"), &m, macs);
+        report.add_scalar(
+            &format!("gemm/sparse_{pct}pct_vs_dense"),
+            rate / dense_rate.max(1e-9),
+            "x",
+        );
+    }
+}
+
+/// Engine imgs/s across the structured-pruning knob: the end-to-end
+/// payoff of freeze-time N:M weight sparsity through the zero-skipping
+/// ternary panels (denser pruning → fewer packed weights → faster).
+fn engine_pruning_sweep(report: &mut JsonReport) {
+    let b = if quick() { Bench::quick() } else { Bench::default() };
+    println!("\n== engine forward vs structured weight pruning (tnn) ==");
+    let cfg = ModelCfg::tnn();
+    let mut rng = Rng::new(23);
+    let params = ModelParams::init(&cfg, &mut rng);
+    let img: Vec<f32> = {
+        let (c, h, w) = cfg.input;
+        (0..c * h * w).map(|_| rng.normal() as f32 * 0.5).collect()
+    };
+    let mut base_rate = 0.0f64;
+    for (label, pruning) in [
+        ("off", Pruning::Off),
+        ("3of4", Pruning::Nm { n: 3, m: 4 }),
+        ("2of4", Pruning::Nm { n: 2, m: 4 }),
+        ("1of4", Pruning::Nm { n: 1, m: 4 }),
+    ] {
+        let prep = Prepared::new(
+            &cfg,
+            &params,
+            QuantConfig { act_bsl: Some(2), weight_ternary: true, residual_bsl: None, pruning },
+        );
+        let mut engine = ScEngine::new(prep);
+        let cl = engine.classes();
+        let mut logits = vec![0i64; cl];
+        let m = b.run(&format!("sc_serve/engine/prune_{label}"), 1, || {
+            engine.forward_into(&img, &mut logits);
+            logits[0]
+        });
+        let rate = 1.0 / m.median_s.max(1e-12);
+        if label == "off" {
+            base_rate = rate;
+        }
+        println!(
+            "   -> prune {label}: {rate:.1} imgs/s ({:.2}x unpruned)",
+            rate / base_rate.max(1e-9)
+        );
+        report.add_scalar(&format!("engine/prune_{label}"), rate, "imgs/s");
+        report.add_scalar(
+            &format!("engine/prune_{label}_speedup"),
+            rate / base_rate.max(1e-9),
+            "x",
+        );
+    }
+}
+
 /// Engine throughput at N intra-engine threads (imgs/s on a fixed
 /// batch), with bit-identity asserted against the sequential engine.
 fn engine_threads_sweep(report: &mut JsonReport) {
@@ -148,7 +255,12 @@ fn engine_threads_sweep(report: &mut JsonReport) {
     let prep = std::sync::Arc::new(Prepared::new(
         &cfg,
         &params,
-        QuantConfig { act_bsl: Some(2), weight_ternary: true, residual_bsl: None },
+        QuantConfig {
+            act_bsl: Some(2),
+            weight_ternary: true,
+            residual_bsl: None,
+            pruning: Pruning::Off,
+        },
     ));
     let batch = if quick() { 8usize } else { 32usize };
     let mut seq = ScEngine::new(prep.clone());
@@ -208,7 +320,12 @@ fn engine_vs_executor(report: &mut JsonReport) {
         (
             "tnn",
             ModelCfg::tnn(),
-            QuantConfig { act_bsl: Some(2), weight_ternary: true, residual_bsl: None },
+            QuantConfig {
+                act_bsl: Some(2),
+                weight_ternary: true,
+                residual_bsl: None,
+                pruning: Pruning::Off,
+            },
             SynthDigits::new().sample(Split::Test, 0).0,
         ),
         (
@@ -367,6 +484,8 @@ fn main() {
     let mut report = JsonReport::new("sc_serve");
     gemm_vs_naive(&mut report);
     gemm_simd_vs_scalar(&mut report);
+    gemm_sparsity_sweep(&mut report);
+    engine_pruning_sweep(&mut report);
     engine_vs_executor(&mut report);
     engine_threads_sweep(&mut report);
     pool_sweep_sc(&mut report);

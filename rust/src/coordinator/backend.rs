@@ -24,9 +24,11 @@
 use std::sync::Arc;
 
 use crate::fault::guard::GuardCounters;
+use crate::nn::gemm::BLOCK_CO;
 use crate::nn::model::{ModelCfg, ModelParams};
-use crate::nn::quant::QuantConfig;
+use crate::nn::quant::{Pruning, QuantConfig};
 use crate::nn::sc_exec::Prepared;
+use crate::nn::SparsityCounters;
 use crate::runtime::artifacts_ready;
 use crate::runtime::trainer::Knobs;
 use crate::util::Rng;
@@ -102,16 +104,19 @@ impl Backend {
     /// trained-parameter blobs into the worker closure instead of
     /// deep-cloning them.
     pub fn factory(self, cfg: ServeConfig) -> Result<ExecutorFactory> {
-        self.factory_with(cfg, None)
+        self.factory_with(cfg, None, None)
     }
 
     /// [`Backend::factory`] with an optional datapath-guard counter
-    /// block (see [`ServeConfig::guard`]). Only the `sc` backend has a
-    /// count-domain datapath to guard; the other backends ignore it.
+    /// block (see [`ServeConfig::guard`]) and an optional sparsity
+    /// telemetry sink. Only the `sc` backend has a count-domain
+    /// datapath to guard or a sparse GEMM path to meter; the other
+    /// backends ignore both.
     pub fn factory_with(
         self,
         cfg: ServeConfig,
         guard: Option<Arc<GuardCounters>>,
+        sparsity: Option<Arc<SparsityCounters>>,
     ) -> Result<ExecutorFactory> {
         match self.resolve(&cfg.artifacts, &cfg.model) {
             Backend::Pjrt => {
@@ -131,6 +136,7 @@ impl Backend {
                 cfg.batch,
                 cfg.threads,
                 guard,
+                sparsity,
             )),
             Backend::Binary => Ok(BinaryBatchExecutor::factory(prepared_for(&cfg)?, cfg.batch)),
             Backend::Auto => unreachable!("resolve() never returns Auto"),
@@ -179,7 +185,37 @@ pub fn quant_from_knobs(k: &Knobs) -> Result<QuantConfig> {
     );
     let act_bsl = (k.act_half * 2.0).round() as usize;
     let residual_bsl = Some((k.res_half * 2.0).round() as usize);
-    Ok(QuantConfig { act_bsl: Some(act_bsl), weight_ternary: true, residual_bsl })
+    let pruning = pruning_from_knobs(k)?;
+    Ok(QuantConfig { act_bsl: Some(act_bsl), weight_ternary: true, residual_bsl, pruning })
+}
+
+/// Validate and map the pruning knobs onto [`Pruning`]. Invalid
+/// configurations — `N > M`, `N = 0`, a block size that does not divide
+/// the GEMM channel tile [`BLOCK_CO`], or both schemes at once — are
+/// typed errors here, not silently-dense panels.
+pub fn pruning_from_knobs(k: &Knobs) -> Result<Pruning> {
+    let (n, m, b) = (k.prune_n as usize, k.prune_m as usize, k.prune_block as usize);
+    let nm_on = n != 0 || m != 0;
+    let block_on = b != 0;
+    anyhow::ensure!(
+        !(nm_on && block_on),
+        "--prune and --prune-block are mutually exclusive (pick one pruning scheme)"
+    );
+    if nm_on {
+        anyhow::ensure!(
+            1 <= n && n <= m,
+            "invalid N:M pruning {n}:{m} — need 1 <= N <= M (e.g. --prune 2:4)"
+        );
+        return Ok(Pruning::Nm { n, m });
+    }
+    if block_on {
+        anyhow::ensure!(
+            BLOCK_CO % b == 0,
+            "invalid pruning block size {b} — must divide the GEMM channel tile {BLOCK_CO}"
+        );
+        return Ok(Pruning::Block { size: b });
+    }
+    Ok(Pruning::Off)
 }
 
 /// Freeze the served model for the native backends: deterministic
@@ -226,6 +262,25 @@ mod tests {
         // SC network and must be rejected, not silently served at R16.
         assert!(quant_from_knobs(&Knobs::quantized(2).with_res_bsl(None)).is_err());
         assert!(quant_from_knobs(&Knobs::quantized(2).with_float_res()).is_err());
+    }
+
+    #[test]
+    fn pruning_knobs_validate_and_map() {
+        let q = quant_from_knobs(&Knobs::quantized(2).with_pruning(2, 4)).unwrap();
+        assert_eq!(q.pruning, Pruning::Nm { n: 2, m: 4 });
+        let qb = quant_from_knobs(&Knobs::quantized(2).with_block_pruning(4)).unwrap();
+        assert_eq!(qb.pruning, Pruning::Block { size: 4 });
+        assert_eq!(quant_from_knobs(&Knobs::quantized(2)).unwrap().pruning, Pruning::Off);
+        // Invalid configs are typed errors, not silently-dense panels.
+        assert!(quant_from_knobs(&Knobs::quantized(2).with_pruning(4, 2)).is_err(), "N > M");
+        assert!(quant_from_knobs(&Knobs::quantized(2).with_pruning(0, 4)).is_err(), "N = 0");
+        assert!(
+            quant_from_knobs(&Knobs::quantized(2).with_block_pruning(3)).is_err(),
+            "3 does not divide the channel tile {BLOCK_CO}"
+        );
+        let mut both = Knobs::quantized(2).with_pruning(2, 4);
+        both.prune_block = 4.0;
+        assert!(quant_from_knobs(&both).is_err(), "two schemes at once");
     }
 
     #[test]

@@ -52,6 +52,7 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::fault::guard::GuardCounters;
+use crate::nn::SparsityCounters;
 use crate::runtime::trainer::Knobs;
 use crate::Result;
 use anyhow::Context;
@@ -526,6 +527,10 @@ pub struct Coordinator {
     /// Integrity counters of the datapath guard, when
     /// [`ServeConfig::guard`] armed one on the backend.
     guard: Option<Arc<GuardCounters>>,
+    /// Activation-sparsity telemetry of the SC backend's sparse GEMM
+    /// routing (always armed by [`Coordinator::start_backend`]; `None`
+    /// for pools started straight from a factory).
+    sparsity: Option<Arc<SparsityCounters>>,
 }
 
 impl Coordinator {
@@ -541,9 +546,13 @@ impl Coordinator {
             restart_budget: cfg.restart_budget,
         };
         let guard = cfg.guard.then(|| Arc::new(GuardCounters::default()));
-        let factory = backend.factory_with(cfg, guard.clone())?;
+        // Sparsity telemetry costs four relaxed atomic adds per batch,
+        // so it is always armed; non-SC backends simply never tick it.
+        let sparsity = Some(Arc::new(SparsityCounters::default()));
+        let factory = backend.factory_with(cfg, guard.clone(), sparsity.clone())?;
         let mut coord = Self::start_with(factory, pool)?;
         coord.guard = guard;
+        coord.sparsity = sparsity;
         Ok(coord)
     }
 
@@ -645,7 +654,15 @@ impl Coordinator {
             image_len: spec.image_len,
             classes: spec.classes,
         };
-        Ok(Self { client, workers, metrics, shared, batch: spec.batch, guard: None })
+        Ok(Self {
+            client,
+            workers,
+            metrics,
+            shared,
+            batch: spec.batch,
+            guard: None,
+            sparsity: None,
+        })
     }
 
     /// Run one worker under supervision: serve until the loop exits
@@ -902,6 +919,10 @@ impl Coordinator {
                 live_workers: self.shared.live_workers.load(Ordering::Relaxed),
                 integrity_detected: self.guard.as_ref().map_or(0, |g| g.detected()),
                 integrity_recovered: self.guard.as_ref().map_or(0, |g| g.recovered()),
+                sparse_gemm: self.sparsity.as_ref().map_or(0, |s| s.sparse_gemm()),
+                gemm_total: self.sparsity.as_ref().map_or(0, |s| s.gemm_total()),
+                act_nnz: self.sparsity.as_ref().map_or(0, |s| s.act_nnz()),
+                act_elems: self.sparsity.as_ref().map_or(0, |s| s.act_elems()),
             },
         )
     }

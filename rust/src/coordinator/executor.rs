@@ -21,7 +21,7 @@ use std::time::Duration;
 
 use crate::fault::guard::{DatapathGuard, GuardCounters};
 use crate::nn::binary_exec::BinaryExecutor;
-use crate::nn::sc_engine::ScEngine;
+use crate::nn::sc_engine::{ScEngine, SparsityCounters};
 use crate::nn::sc_exec::Prepared;
 use crate::nn::tensor::Tensor;
 use crate::runtime::{trainer::Knobs, Runtime, Trainer};
@@ -140,23 +140,26 @@ impl ScBatchExecutor {
     /// Factory for [`super::Coordinator::start_with`]: every worker
     /// shares `prep`, each builds its own engine in-thread.
     pub fn factory(prep: Arc<Prepared>, batch: usize, threads: usize) -> ExecutorFactory {
-        Self::factory_with(prep, batch, threads, None)
+        Self::factory_with(prep, batch, threads, None, None)
     }
 
     /// [`ScBatchExecutor::factory`] with the count-domain integrity
-    /// guard armed: one [`DatapathGuard`] (shared `Arc`) checks every
-    /// worker's GEMM row blocks, so detections and recoveries
-    /// aggregate across the fleet into the given counters.
+    /// guard armed and/or the sparsity telemetry sink attached: one
+    /// [`DatapathGuard`] (shared `Arc`) checks every worker's GEMM row
+    /// blocks, and one [`SparsityCounters`] block aggregates measured
+    /// activation density and sparse-path hit rate across the fleet.
     pub fn factory_with(
         prep: Arc<Prepared>,
         batch: usize,
         threads: usize,
         guard: Option<Arc<GuardCounters>>,
+        sparsity: Option<Arc<SparsityCounters>>,
     ) -> ExecutorFactory {
         let guard = guard.map(|c| Arc::new(DatapathGuard::new(c)));
         Box::new(move |_worker| {
             let mut exec = ScBatchExecutor::new(prep.clone(), batch, threads);
             exec.engine.set_guard(guard.clone());
+            exec.engine.set_sparsity_counters(sparsity.clone());
             Ok(Box::new(exec))
         })
     }
@@ -364,7 +367,7 @@ mod tests {
     #[test]
     fn sc_batch_executor_matches_sc_executor() {
         use crate::nn::model::{ModelCfg, ModelParams};
-        use crate::nn::quant::QuantConfig;
+        use crate::nn::quant::{Pruning, QuantConfig};
         use crate::nn::sc_exec::ScExecutor;
         use crate::util::Rng;
 
@@ -374,7 +377,12 @@ mod tests {
         let prep = Arc::new(Prepared::new(
             &cfg,
             &params,
-            QuantConfig { act_bsl: Some(2), weight_ternary: true, residual_bsl: None },
+            QuantConfig {
+                act_bsl: Some(2),
+                weight_ternary: true,
+                residual_bsl: None,
+                pruning: Pruning::Off,
+            },
         ));
         let mut be = ScBatchExecutor::new(prep.clone(), 2, 2);
         assert_eq!(be.spec(), ExecutorSpec { image_len: 784, batch: 2, classes: 10 });
@@ -398,7 +406,7 @@ mod tests {
     #[test]
     fn binary_batch_executor_matches_sc_on_clean_path() {
         use crate::nn::model::{ModelCfg, ModelParams};
-        use crate::nn::quant::QuantConfig;
+        use crate::nn::quant::{Pruning, QuantConfig};
         use crate::util::Rng;
 
         let cfg = ModelCfg::tnn();
@@ -407,7 +415,12 @@ mod tests {
         let prep = Arc::new(Prepared::new(
             &cfg,
             &params,
-            QuantConfig { act_bsl: Some(2), weight_ternary: true, residual_bsl: None },
+            QuantConfig {
+                act_bsl: Some(2),
+                weight_ternary: true,
+                residual_bsl: None,
+                pruning: Pruning::Off,
+            },
         ));
         let mut sc = ScBatchExecutor::new(prep.clone(), 1, 1);
         let mut bin = BinaryBatchExecutor::new(prep, 1);

@@ -201,6 +201,16 @@ pub struct PoolCounters {
     /// Guard-detected rows whose scalar re-execution restored a
     /// passing check.
     pub integrity_recovered: u64,
+    /// Conv GEMM dispatches routed through the compressed sparse
+    /// panel (subset of `gemm_total`).
+    pub sparse_gemm: u64,
+    /// Conv GEMM dispatches total (sparse + dense routes).
+    pub gemm_total: u64,
+    /// Non-zero activation entries seen by the im2col stage.
+    pub act_nnz: u64,
+    /// Total activation entries seen by the im2col stage
+    /// (denominator for the density gauge).
+    pub act_elems: u64,
 }
 
 /// A point-in-time snapshot aggregated over the whole pool.
@@ -252,6 +262,14 @@ pub struct MetricsSnapshot {
     /// Guard-detected rows healed by scalar re-execution. Equal to
     /// `integrity_detected` while recovery holds its 100% contract.
     pub integrity_recovered: u64,
+    /// Conv GEMM dispatches that took the sparse (compressed-panel)
+    /// route; zero for non-SC backends.
+    pub sparse_gemm: u64,
+    /// Conv GEMM dispatches total, dense and sparse.
+    pub gemm_total: u64,
+    /// Measured activation density in [0, 1] over all im2col panels
+    /// (non-zeros / total), 1.0 before any SC batch runs.
+    pub activation_density: f64,
     /// Full-lifetime latency histogram (bucket-wise sum over workers).
     pub hist: LatencyHistogram,
     /// Per-worker breakdown, indexed by worker.
@@ -366,6 +384,13 @@ impl ServerMetrics {
             live_workers: counters.live_workers,
             integrity_detected: counters.integrity_detected,
             integrity_recovered: counters.integrity_recovered,
+            sparse_gemm: counters.sparse_gemm,
+            gemm_total: counters.gemm_total,
+            activation_density: if counters.act_elems == 0 {
+                1.0
+            } else {
+                counters.act_nnz as f64 / counters.act_elems as f64
+            },
             hist,
             per_worker,
         }
@@ -490,6 +515,30 @@ pub fn prometheus_text(models: &[(&str, MetricsSnapshot)]) -> String {
         "Guard-detected rows healed by scalar re-execution.",
         &counter_rows(&|s| s.integrity_recovered),
     );
+    family(
+        &mut out,
+        "scnn_sparse_gemm_total",
+        "counter",
+        "Conv GEMM dispatches routed through the sparse panel.",
+        &counter_rows(&|s| s.sparse_gemm),
+    );
+    family(
+        &mut out,
+        "scnn_gemm_total",
+        "counter",
+        "Conv GEMM dispatches, dense and sparse routes combined.",
+        &counter_rows(&|s| s.gemm_total),
+    );
+    family(
+        &mut out,
+        "scnn_activation_density",
+        "gauge",
+        "Measured activation density over im2col panels (1.0 when idle).",
+        &models
+            .iter()
+            .map(|(m, s)| (label(m), s.activation_density.to_string()))
+            .collect::<Vec<_>>(),
+    );
     // Histogram family: cumulative buckets, then _sum and _count.
     let mut rows = Vec::new();
     for (m, s) in models {
@@ -584,6 +633,10 @@ mod tests {
             live_workers: 2,
             integrity_detected: 4,
             integrity_recovered: 4,
+            sparse_gemm: 6,
+            gemm_total: 9,
+            act_nnz: 25,
+            act_elems: 100,
         };
         let s = ServerMetrics::aggregate(&[a, b], 4, counters);
         assert_eq!(s.requests, 5);
@@ -598,6 +651,9 @@ mod tests {
         assert_eq!(s.live_workers, 2);
         assert_eq!(s.integrity_detected, 4);
         assert_eq!(s.integrity_recovered, 4);
+        assert_eq!(s.sparse_gemm, 6);
+        assert_eq!(s.gemm_total, 9);
+        assert!((s.activation_density - 0.25).abs() < 1e-12);
         assert!((s.occupancy - 5.0 / 8.0).abs() < 1e-9);
         assert_eq!(s.p99, Duration::from_micros(500));
         assert_eq!(s.per_worker[0].requests, 4);
@@ -694,6 +750,10 @@ mod tests {
         assert!(text.contains("scnn_workers_live{model=\"tnn\"} 1"), "{text}");
         assert!(text.contains("scnn_integrity_faults_detected_total{model=\"tnn\"} 0"), "{text}");
         assert!(text.contains("scnn_integrity_recovered_total{model=\"tnn\"} 0"), "{text}");
+        // Sparsity families are exposed too; density idles at 1.
+        assert!(text.contains("scnn_sparse_gemm_total{model=\"tnn\"} 0"), "{text}");
+        assert!(text.contains("scnn_gemm_total{model=\"tnn\"} 0"), "{text}");
+        assert!(text.contains("scnn_activation_density{model=\"tnn\"} 1"), "{text}");
         // Bucket series is cumulative: two samples ≤ 100 µs, all three
         // ≤ 50 ms and in +Inf.
         let bucket = |le: &str, n: u64| {

@@ -22,7 +22,7 @@ use anyhow::Context;
 use crate::data::{Dataset, Split, SynthDigits};
 use crate::fault;
 use crate::nn::model::{ModelCfg, ModelParams};
-use crate::nn::quant::QuantConfig;
+use crate::nn::quant::{Pruning, QuantConfig};
 use crate::nn::sc_exec::Prepared;
 use crate::nn::ScEngine;
 use crate::util::bench::JsonReport;
@@ -59,7 +59,12 @@ pub fn ber(opts: &Opts) -> Result<Report> {
         let prep = Arc::new(Prepared::new(
             &cfg,
             &params,
-            QuantConfig { act_bsl: Some(act_bsl), weight_ternary: true, residual_bsl: None },
+            QuantConfig {
+                act_bsl: Some(act_bsl),
+                weight_ternary: true,
+                residual_bsl: None,
+                pruning: Pruning::Off,
+            },
         ));
         // Self-labels: the clean engine's predictions become ground
         // truth, so soft accuracy is 1.0 by construction and every

@@ -24,6 +24,7 @@
 //! | fig8  | high-precision-residual ablation                 | [`accuracy_exp`] |
 //! | tab4  | W-A-R configs: area/ADP/accuracy                 | [`accuracy_exp`] |
 //! | ber   | engine BER sweep → `RESULTS_fault.json`          | [`fault_exp`] |
+//! | prune | pruning frontier → `RESULTS_prune.json`          | [`accuracy_exp`] |
 
 pub mod accuracy_exp;
 pub mod circuits_exp;
@@ -79,9 +80,9 @@ impl Report {
 }
 
 /// All experiment ids in run order.
-pub const ALL_IDS: [&str; 16] = [
+pub const ALL_IDS: [&str; 17] = [
     "tab2", "fig1", "fig4", "fig7", "fig9", "fig10", "fig11", "fig12", "tab5",
-    "fig13", "fig2", "fig5", "tab3", "fig8", "tab4", "ber",
+    "fig13", "fig2", "fig5", "tab3", "fig8", "tab4", "ber", "prune",
 ];
 
 /// Run one experiment by id.
@@ -103,6 +104,7 @@ pub fn run(id: &str, opts: &Opts) -> Result<Report> {
         "fig8" => accuracy_exp::fig8(opts),
         "tab4" => accuracy_exp::tab4(opts),
         "ber" => fault_exp::ber(opts),
+        "prune" => accuracy_exp::prune(opts),
         other => anyhow::bail!("unknown experiment id {other}; known: {ALL_IDS:?}"),
     }
 }

@@ -190,7 +190,7 @@ mod tests {
     use super::*;
     use crate::data::SynthDigits;
     use crate::nn::model::{ModelCfg, ModelParams};
-    use crate::nn::quant::QuantConfig;
+    use crate::nn::quant::{Pruning, QuantConfig};
     use crate::util::Rng;
 
     #[test]
@@ -201,7 +201,12 @@ mod tests {
         let prep = Prepared::new(
             &cfg,
             &params,
-            QuantConfig { act_bsl: Some(2), weight_ternary: true, residual_bsl: None },
+            QuantConfig {
+                act_bsl: Some(2),
+                weight_ternary: true,
+                residual_bsl: None,
+                pruning: Pruning::Off,
+            },
         );
         let data = SynthDigits::new();
         let sweep = ber_sweep(&prep, &data, &[1e-4, 1e-2], 12, 1, 42);
@@ -226,7 +231,12 @@ mod tests {
         let prep = std::sync::Arc::new(Prepared::new(
             &cfg,
             &params,
-            QuantConfig { act_bsl: Some(2), weight_ternary: true, residual_bsl: None },
+            QuantConfig {
+                act_bsl: Some(2),
+                weight_ternary: true,
+                residual_bsl: None,
+                pruning: Pruning::Off,
+            },
         ));
         let data = SynthDigits::new();
         let (images, labels) = data.batch(Split::Test, 0, 8);

@@ -6,6 +6,7 @@
 //! scnn serve --model NAME [--workers N] [--clients N] [--requests N]
 //!            [--backend auto|pjrt|synthetic|sc|binary] [--batch N]
 //!            [--threads N] [--seed N] [--shed] [--restart-budget N] [--guard]
+//!            [--prune N:M] [--prune-block S]
 //!            [--artifacts DIR] [--listen ADDR] [--models a,b|all]
 //!            [--tenant-quota N] [--duration SECS]
 //! scnn client --addr HOST:PORT [--model NAME] [--requests N]
@@ -87,10 +88,13 @@ fn main() -> Result<()> {
                  \n  serve --model NAME [--workers N] [--clients N] [--requests N] [--steps N]\n\
                  \n        [--backend auto|pjrt|synthetic|sc|binary] [--batch N] [--threads N]\n\
                  \n        [--seed N] [--shed] [--restart-budget N] [--guard]\n\
+                 \n        [--prune N:M] [--prune-block S]\n\
                  \n        (--seed pins the sc/binary backends' deterministic model freeze;\n\
                  \n         --threads shards each sc-backend batch across N engine threads;\n\
                  \n         --restart-budget caps worker respawns after panics, default 3;\n\
-                 \n         --guard arms the sc backend's count-domain integrity checks)\n\
+                 \n         --guard arms the sc backend's count-domain integrity checks;\n\
+                 \n         --prune keeps the N largest weights per aligned group of M,\n\
+                 \n         --prune-block drops whole weak weight blocks at freeze time)\n\
                  \n        [--listen ADDR] serve over TCP instead of an in-process loop:\n\
                  \n        [--models a,b|all] [--tenant-quota N] [--duration SECS]\n\
                  \n  client --addr HOST:PORT [--model NAME] [--requests N] [--tenant ID]\n\
@@ -120,7 +124,20 @@ fn knobs_from_flags(flags: &HashMap<String, String>) -> Knobs {
         Some(s) => s.parse().ok(),
         None => Some(16),
     };
-    Knobs::quantized(act_bsl).with_res_bsl(res_bsl)
+    let mut knobs = Knobs::quantized(act_bsl).with_res_bsl(res_bsl);
+    // `--prune N:M` (magnitude N-of-M weight pruning at freeze time)
+    // and `--prune-block S` (whole-block pruning) are mutually
+    // exclusive; the backend validates and reports bad combinations.
+    if let Some((n, m)) = flags.get("prune").and_then(|s| {
+        let (n, m) = s.split_once(':')?;
+        Some((n.trim().parse::<f32>().ok()?, m.trim().parse::<f32>().ok()?))
+    }) {
+        knobs = knobs.with_pruning(n, m);
+    }
+    if let Some(b) = flags.get("prune-block").and_then(|s| s.parse::<f32>().ok()) {
+        knobs = knobs.with_block_pruning(b);
+    }
+    knobs
 }
 
 fn cmd_train(flags: &HashMap<String, String>, artifacts: &str) -> Result<()> {

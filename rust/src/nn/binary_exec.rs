@@ -344,6 +344,7 @@ pub fn flip_word(v: i64, bits: u32, ber: f64, rng: &mut Rng) -> i64 {
 mod tests {
     use super::*;
     use crate::nn::model::ModelCfg;
+    use crate::nn::quant::Pruning;
     use crate::nn::sc_exec::ScExecutor;
 
     #[test]
@@ -400,7 +401,12 @@ mod tests {
         let prep = Prepared::new(
             &cfg,
             &params,
-            QuantConfig { act_bsl: Some(2), weight_ternary: true, residual_bsl: None },
+            QuantConfig {
+                act_bsl: Some(2),
+                weight_ternary: true,
+                residual_bsl: None,
+                pruning: Pruning::Off,
+            },
         );
         let clean = BinaryExecutor::new(prep.clone());
         let imgs: Vec<Tensor> = (0..24)

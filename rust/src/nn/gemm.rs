@@ -56,6 +56,110 @@ use crate::util::simd::Dispatch;
 /// registers, large enough to amortize the activation-row loads.
 pub const BLOCK_CO: usize = 8;
 
+/// Activation-density crossover of the sparse GEMM path: a layer whose
+/// measured im2col density (`nnz / (npix·k)`) is at or below this
+/// routes through [`SparseCols`] + `gemm_sparse_*`; denser layers stay
+/// on the dense kernels, whose contiguous loads win once most entries
+/// are nonzero anyway. The threshold only picks *which* exact-i64
+/// kernel runs — both produce identical counts — so it can be tuned
+/// freely without any accuracy consequence.
+pub const SPARSE_DENSITY_CROSSOVER: f64 = 0.5;
+
+/// CSR-style compressed im2col panel: per output pixel (one GEMM
+/// column) the nonzero activation codes and their positions within the
+/// `k`-wide accumulation. ReLU-quantized activations are mostly zeros
+/// at low BSL, and a zero contributes nothing to an exact integer
+/// count — so the sparse kernels skip them outright instead of
+/// streaming them. Column index lists are ascending by construction,
+/// which is what the gathered [`Dispatch::sparse_i8_dot`] arm and the
+/// merge-intersection of [`TernaryPanel::gemm_sparse_into`] rely on.
+#[derive(Clone, Debug, Default)]
+pub struct SparseCols {
+    n: usize,
+    k: usize,
+    /// Concatenated per-column nonzero values.
+    vals: Vec<i32>,
+    /// Positions of `vals` within their column (`< k`, ascending per
+    /// column).
+    idx: Vec<u32>,
+    /// Column starts into `vals`/`idx` (`n + 1` entries).
+    off: Vec<u32>,
+}
+
+impl SparseCols {
+    /// An empty panel (fill later with [`SparseCols::fill_from`]).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Compress an `n × k` row-major im2col matrix (one row per output
+    /// pixel, matching the dense kernels' `cols` layout).
+    pub fn compress(cols: &[i32], n: usize, k: usize) -> Self {
+        let mut s = Self::new();
+        s.fill_from(cols, n, k);
+        s
+    }
+
+    /// Re-fill from a dense im2col matrix, reusing the allocations —
+    /// the zero-alloc steady state of the engine's per-layer scratch.
+    pub fn fill_from(&mut self, cols: &[i32], n: usize, k: usize) {
+        assert_eq!(cols.len(), n * k, "SparseCols::fill_from: cols size mismatch");
+        assert!(k <= u32::MAX as usize, "SparseCols::fill_from: row width exceeds u32 indices");
+        self.n = n;
+        self.k = k;
+        self.vals.clear();
+        self.idx.clear();
+        self.off.clear();
+        self.off.push(0);
+        if k == 0 {
+            self.off.resize(n + 1, 0);
+            return;
+        }
+        for col in cols.chunks_exact(k) {
+            for (i, &v) in col.iter().enumerate() {
+                if v != 0 {
+                    self.vals.push(v);
+                    self.idx.push(i as u32);
+                }
+            }
+            self.off.push(self.vals.len() as u32);
+        }
+    }
+
+    /// Number of columns (output pixels).
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Column height (accumulation width).
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Total nonzero entries across all columns.
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Fraction of entries that are nonzero; `1.0` for an empty shape
+    /// (nothing to skip, so it reads as dense).
+    pub fn density(&self) -> f64 {
+        let total = self.n * self.k;
+        if total == 0 {
+            return 1.0;
+        }
+        self.vals.len() as f64 / total as f64
+    }
+
+    /// One column's `(values, positions)` pair.
+    #[inline]
+    pub fn col(&self, p: usize) -> (&[i32], &[u32]) {
+        let lo = self.off[p] as usize;
+        let hi = self.off[p + 1] as usize;
+        (&self.vals[lo..hi], &self.idx[lo..hi])
+    }
+}
+
 /// Reference GEMM: `out[r·n + p] = Σ_i w[r·k + i] · cols[p·k + i]`,
 /// the naive triple loop every packed kernel must reproduce exactly.
 /// `w` is `rows × k` row-major, `cols` is `n × k` row-major (one im2col
@@ -254,6 +358,98 @@ impl TernaryPanel {
             }
         }
     }
+
+    /// Sparse-activation GEMM: like [`TernaryPanel::gemm_into`] but
+    /// over a compressed [`SparseCols`] panel, intersecting each row's
+    /// `+1`/`−1` index lists with each column's nonzero positions —
+    /// `O(nnz_w + nnz_x)` per dot instead of touching all `k` slots.
+    /// Exact i64 accumulation over the same surviving terms, so the
+    /// counts are bit-identical to the dense path.
+    pub fn gemm_sparse_into(&self, sp: &SparseCols, out: &mut [i64]) {
+        self.gemm_sparse_rows_into(0, self.rows, sp, out);
+    }
+
+    /// [`TernaryPanel::gemm_sparse_into`] through an explicit kernel
+    /// table.
+    pub fn gemm_sparse_into_with(&self, d: &Dispatch, sp: &SparseCols, out: &mut [i64]) {
+        self.gemm_sparse_rows_into_with(d, 0, self.rows, sp, out);
+    }
+
+    /// [`TernaryPanel::gemm_sparse_into`] restricted to weight rows
+    /// `r0..r1` — the sparse twin of [`TernaryPanel::gemm_rows_into`],
+    /// sharing its output layout so the engine's channel-block
+    /// sharding can route either path per layer.
+    pub fn gemm_sparse_rows_into(&self, r0: usize, r1: usize, sp: &SparseCols, out: &mut [i64]) {
+        self.gemm_sparse_rows_into_with(Dispatch::active(), r0, r1, sp, out);
+    }
+
+    /// [`TernaryPanel::gemm_sparse_rows_into`] through an explicit
+    /// kernel table.
+    pub fn gemm_sparse_rows_into_with(
+        &self,
+        d: &Dispatch,
+        r0: usize,
+        r1: usize,
+        sp: &SparseCols,
+        out: &mut [i64],
+    ) {
+        assert!(r0 <= r1 && r1 <= self.rows, "TernaryPanel::gemm_sparse_rows_into: row range");
+        assert_eq!(sp.k(), self.k, "TernaryPanel::gemm_sparse_rows_into: column height");
+        assert_eq!(
+            out.len(),
+            (r1 - r0) * sp.n(),
+            "TernaryPanel::gemm_sparse_rows_into: out size mismatch"
+        );
+        let n = sp.n();
+        if self.k == 0 {
+            out.fill(0);
+            return;
+        }
+        for b0 in (r0..r1).step_by(BLOCK_CO) {
+            let b1 = (b0 + BLOCK_CO).min(r1);
+            for p in 0..n {
+                let (vals, idx) = sp.col(p);
+                if idx.len() == self.k {
+                    // Fully-dense column: its positions are exactly
+                    // 0..k, so `vals` *is* the dense column — take the
+                    // gathered dense kernel instead of intersecting.
+                    for r in b0..b1 {
+                        out[(r - r0) * n + p] = self.row_dot_with(d, r, vals);
+                    }
+                } else {
+                    for r in b0..b1 {
+                        let (plus, minus) = self.row_lists(r);
+                        out[(r - r0) * n + p] =
+                            intersect_sum(plus, vals, idx) - intersect_sum(minus, vals, idx);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// `Σ vals[j]` over the positions where the sorted weight-index `list`
+/// and the sorted nonzero-position list `idx` intersect — the
+/// two-pointer merge at the heart of the ternary sparse dot. Both
+/// lists are strictly ascending (pack order for weights, column order
+/// for activations), so one linear pass finds every surviving term.
+#[inline]
+fn intersect_sum(list: &[u32], vals: &[i32], idx: &[u32]) -> i64 {
+    let (mut a, mut b) = (0usize, 0usize);
+    let mut s = 0i64;
+    while a < list.len() && b < idx.len() {
+        let (la, ib) = (list[a], idx[b]);
+        if la == ib {
+            s += vals[b] as i64;
+            a += 1;
+            b += 1;
+        } else if la < ib {
+            a += 1;
+        } else {
+            b += 1;
+        }
+    }
+    s
 }
 
 /// Dense low-bit weight panel (row-major `i8`) with a 4×-wide unrolled
@@ -354,6 +550,39 @@ impl I8Panel {
             while p < n {
                 orow[p] = self.row_dot_with(d, r, &cols[p * k..(p + 1) * k]);
                 p += 1;
+            }
+        }
+    }
+
+    /// Sparse-activation GEMM over a compressed [`SparseCols`] panel:
+    /// each dot touches only a column's nonzeros, reaching the dense
+    /// weight row through [`Dispatch::sparse_i8_dot`] (gathered byte
+    /// loads on the vector arms). Bit-identical to [`I8Panel::gemm_into`]
+    /// — the skipped terms are exact zeros in an exact i64 sum.
+    pub fn gemm_sparse_into(&self, sp: &SparseCols, out: &mut [i64]) {
+        self.gemm_sparse_into_with(Dispatch::active(), sp, out);
+    }
+
+    /// [`I8Panel::gemm_sparse_into`] through an explicit kernel table.
+    pub fn gemm_sparse_into_with(&self, d: &Dispatch, sp: &SparseCols, out: &mut [i64]) {
+        assert_eq!(sp.k(), self.k, "I8Panel::gemm_sparse_into: column height");
+        assert_eq!(out.len(), self.rows * sp.n(), "I8Panel::gemm_sparse_into: out size mismatch");
+        let n = sp.n();
+        for r in 0..self.rows {
+            let wrow = self.row(r);
+            let orow = &mut out[r * n..(r + 1) * n];
+            for (p, o) in orow.iter_mut().enumerate() {
+                let (vals, idx) = sp.col(p);
+                *o = if idx.len() == self.k {
+                    // Fully-dense column: positions are 0..k, so
+                    // `vals` is the dense column — use the contiguous
+                    // multiply-accumulate kernel.
+                    d.i8_dot(wrow, vals)
+                } else {
+                    // SAFETY: SparseCols stores ascending positions
+                    // < k == wrow.len().
+                    unsafe { d.sparse_i8_dot(wrow, vals, idx) }
+                };
             }
         }
     }
@@ -501,6 +730,79 @@ mod tests {
         let p = WeightPanels::pack(&w, 2, 3);
         assert_eq!(p.ternary.rows(), p.dense.rows());
         assert_eq!(p.ternary.row_dot(1, &[1, 2, 3]), p.dense.row_dot(1, &[1, 2, 3]));
+    }
+
+    fn sparse_cols(rng: &mut Rng, n: usize, k: usize, zero_p: f64) -> Vec<i32> {
+        (0..n * k)
+            .map(|_| {
+                if rng.gen_bool(zero_p) {
+                    0
+                } else {
+                    rng.gen_range_i64(-8, 9) as i32
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn sparse_cols_roundtrip_and_density() {
+        let cols = vec![0, 3, 0, -2, 0, 0, 7, 0, 1, 0, 0, 0];
+        let sp = SparseCols::compress(&cols, 3, 4);
+        assert_eq!((sp.n(), sp.k(), sp.nnz()), (3, 4, 4));
+        assert!((sp.density() - 4.0 / 12.0).abs() < 1e-12);
+        assert_eq!(sp.col(0), (&[3, -2][..], &[1u32, 3][..]));
+        assert_eq!(sp.col(1), (&[7][..], &[2u32][..]));
+        assert_eq!(sp.col(2), (&[1][..], &[0u32][..]));
+        // fill_from reuses the panel across shapes.
+        let mut sp = sp;
+        sp.fill_from(&[5, 0], 1, 2);
+        assert_eq!((sp.n(), sp.nnz()), (1, 1));
+        assert_eq!(SparseCols::compress(&[], 3, 0).density(), 1.0);
+    }
+
+    #[test]
+    fn sparse_gemm_matches_naive_both_panels() {
+        let mut rng = Rng::new(6);
+        for &(rows, k, n) in
+            &[(1usize, 1usize, 1usize), (3, 7, 5), (8, 9, 16), (17, 72, 49), (5, 144, 3)]
+        {
+            for zero_p in [0.0, 0.5, 0.9, 1.0] {
+                let cols = sparse_cols(&mut rng, n, k, zero_p);
+                let sp = SparseCols::compress(&cols, n, k);
+                for ternary in [true, false] {
+                    let w = random_panel(&mut rng, rows, k, ternary);
+                    let mut expect = vec![0i64; rows * n];
+                    gemm_naive(&w, rows, k, &cols, n, &mut expect);
+                    let mut got = vec![i64::MIN; rows * n];
+                    if ternary {
+                        TernaryPanel::pack(&w, rows, k).gemm_sparse_into(&sp, &mut got);
+                    } else {
+                        I8Panel::pack(&w, rows, k).gemm_sparse_into(&sp, &mut got);
+                    }
+                    assert_eq!(
+                        got, expect,
+                        "ternary={ternary} rows={rows} k={k} n={n} zero_p={zero_p}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_row_ranges_assemble_the_full_result() {
+        let mut rng = Rng::new(7);
+        let (rows, k, n) = (11usize, 23usize, 9usize);
+        let w = random_panel(&mut rng, rows, k, true);
+        let cols = sparse_cols(&mut rng, n, k, 0.6);
+        let sp = SparseCols::compress(&cols, n, k);
+        let panel = TernaryPanel::pack(&w, rows, k);
+        let mut full = vec![0i64; rows * n];
+        panel.gemm_sparse_into(&sp, &mut full);
+        let mut sharded = vec![i64::MIN; rows * n];
+        for (r0, r1) in [(0usize, 4usize), (4, 5), (5, 11)] {
+            panel.gemm_sparse_rows_into(r0, r1, &sp, &mut sharded[r0 * n..r1 * n]);
+        }
+        assert_eq!(sharded, full);
     }
 
     #[test]

@@ -88,12 +88,54 @@ pub fn im2col_i32_into(
     cs: &ConvShape,
     out: &mut [i32],
 ) -> (usize, usize) {
+    im2col_i32_impl(x, (c, h, w), cs, out, None)
+}
+
+/// [`im2col_i32_into`] plus per-pixel nonzero counts: `nnz` is cleared
+/// and receives one entry per output pixel (the GEMM column's nnz over
+/// its `acc_width` entries). The counts fall out of the same fill pass
+/// that already touches every element, so the sparse-GEMM crossover
+/// heuristic in [`crate::nn::sc_engine::ScEngine`] gets its density
+/// measurement for free. The unfolded `out` buffer is identical to
+/// [`im2col_i32_into`]'s.
+pub fn im2col_i32_nnz_into(
+    x: &[i32],
+    (c, h, w): (usize, usize, usize),
+    cs: &ConvShape,
+    out: &mut [i32],
+    nnz: &mut Vec<u32>,
+) -> (usize, usize) {
+    im2col_i32_impl(x, (c, h, w), cs, out, Some(nnz))
+}
+
+/// Shared body of the two integer im2col entry points. Before the fill
+/// loop one pass over the input marks every all-zero `(ci, iy)` input
+/// row; those kernel rows short-circuit to a single `fill(0)` (no flank
+/// arithmetic, no copy) — ReLU-sparse feature maps hit this constantly.
+fn im2col_i32_impl(
+    x: &[i32],
+    (c, h, w): (usize, usize, usize),
+    cs: &ConvShape,
+    out: &mut [i32],
+    mut nnz: Option<&mut Vec<u32>>,
+) -> (usize, usize) {
     assert_eq!(c, cs.cin);
     assert_eq!(x.len(), c * h * w);
     let (oh, ow) = cs.out_hw(h, w);
     let cols = cs.acc_width();
     assert_eq!(out.len(), oh * ow * cols, "im2col_i32_into: buffer size mismatch");
+    if let Some(n) = nnz.as_deref_mut() {
+        n.clear();
+        n.reserve(oh * ow);
+    }
     let k = cs.k;
+    // Per-(ci, iy) all-zero flags, one pass over the input.
+    let mut row_zero = vec![false; c * h];
+    if w > 0 {
+        for (flag, irow) in row_zero.iter_mut().zip(x.chunks_exact(w)) {
+            *flag = irow.iter().all(|&v| v == 0);
+        }
+    }
     let mut rows = out.chunks_exact_mut(cols.max(1));
     for oy in 0..oh {
         for ox in 0..ow {
@@ -104,6 +146,7 @@ pub fn im2col_i32_into(
             let lo = (-x0).clamp(0, k as isize) as usize;
             let hi = (w as isize - x0).clamp(0, k as isize) as usize;
             let mut seg = row.chunks_exact_mut(k);
+            let mut count = 0u32;
             for ci in 0..c {
                 let plane = &x[ci * h * w..(ci + 1) * h * w];
                 for ky in 0..k {
@@ -113,11 +156,23 @@ pub fn im2col_i32_into(
                         dst.fill(0);
                         continue;
                     }
+                    let iy = iy as usize;
+                    if row_zero[ci * h + iy] {
+                        dst.fill(0);
+                        continue;
+                    }
                     dst[..lo].fill(0);
                     dst[hi..].fill(0);
-                    let src_at = iy as usize * w + (x0 + lo as isize) as usize;
-                    dst[lo..hi].copy_from_slice(&plane[src_at..src_at + (hi - lo)]);
+                    let src_at = iy * w + (x0 + lo as isize) as usize;
+                    let src = &plane[src_at..src_at + (hi - lo)];
+                    dst[lo..hi].copy_from_slice(src);
+                    if nnz.is_some() {
+                        count += src.iter().filter(|&&v| v != 0).count() as u32;
+                    }
                 }
+            }
+            if let Some(n) = nnz.as_deref_mut() {
+                n.push(count);
             }
         }
     }
@@ -298,6 +353,44 @@ mod tests {
         for (a, b) in cols_i.iter().zip(&cols_f) {
             assert_eq!(*a as f32, *b);
         }
+    }
+
+    #[test]
+    fn im2col_nnz_counts_match_buffer_and_zero_rows_short_circuit() {
+        let cs = ConvShape { cin: 2, cout: 1, k: 3, stride: 1, pad: 1 };
+        let (c, h, w) = (2usize, 5usize, 4usize);
+        // Zero out whole input rows so the short-circuit path runs, and
+        // sprinkle zeros inside live rows so counting is non-trivial.
+        let xq: Vec<i32> = (0..c * h * w)
+            .map(|i| {
+                let (iy, v) = ((i / w) % h, (i as i32 % 5) - 2);
+                if iy == 1 || iy == 3 {
+                    0
+                } else {
+                    v
+                }
+            })
+            .collect();
+        let mut dense = vec![99i32; 5 * 4 * cs.acc_width()];
+        let (oh, ow) = im2col_i32_into(&xq, (c, h, w), &cs, &mut dense);
+        let mut counted = vec![77i32; dense.len()];
+        let mut nnz = vec![123u32; 3];
+        let (oh2, ow2) = im2col_i32_nnz_into(&xq, (c, h, w), &cs, &mut counted, &mut nnz);
+        assert_eq!((oh, ow), (oh2, ow2));
+        assert_eq!(dense, counted, "nnz variant must fill the same buffer");
+        assert_eq!(nnz.len(), oh * ow, "one count per output pixel, stale entries cleared");
+        let acc = cs.acc_width();
+        for (p, &n) in nnz.iter().enumerate() {
+            let expect =
+                dense[p * acc..(p + 1) * acc].iter().filter(|&&v| v != 0).count() as u32;
+            assert_eq!(n, expect, "pixel {p}");
+        }
+        // All-zero input: every count is zero and the buffer is zeroed.
+        let zeros = vec![0i32; c * h * w];
+        let mut buf = vec![55i32; dense.len()];
+        im2col_i32_nnz_into(&zeros, (c, h, w), &cs, &mut buf, &mut nnz);
+        assert!(buf.iter().all(|&v| v == 0));
+        assert!(nnz.iter().all(|&n| n == 0));
     }
 
     #[test]

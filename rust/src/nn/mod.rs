@@ -28,6 +28,6 @@ pub mod sc_exec;
 pub mod tensor;
 
 pub use model::{LayerCfg, ModelCfg};
-pub use quant::QuantConfig;
-pub use sc_engine::ScEngine;
+pub use quant::{Pruning, QuantConfig};
+pub use sc_engine::{ScEngine, SparsityCounters};
 pub use tensor::Tensor;

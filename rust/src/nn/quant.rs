@@ -14,8 +14,37 @@
 use super::tensor::Tensor;
 use crate::coding::Ternary;
 
+/// Structured weight-pruning rule applied at freeze time, before panel
+/// packing. Pruning happens on the *float* magnitudes (so a weight that
+/// ternarizes to ±1 can still be pruned) and zeroes the ternary codes;
+/// [`crate::nn::gemm::TernaryPanel`] then drops the zeros from its
+/// index lists entirely, so pruned weights cost nothing at inference.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum Pruning {
+    /// No pruning (dense freeze).
+    #[default]
+    Off,
+    /// N:M semi-structured sparsity: in every aligned group of `m`
+    /// consecutive weights along the reduction axis, keep the `n`
+    /// largest-magnitude weights and zero the rest.
+    Nm {
+        /// Weights kept per group.
+        n: usize,
+        /// Group size along the reduction axis.
+        m: usize,
+    },
+    /// Block pruning: zero every aligned block of `size` consecutive
+    /// weights along the reduction axis whose mean float magnitude is
+    /// below half the ternary scale (the same `round(w/alpha)` rule the
+    /// element-wise ternarizer uses, applied at block granularity).
+    Block {
+        /// Block length along the reduction axis.
+        size: usize,
+    },
+}
+
 /// Quantization configuration of one network variant — the paper's
-/// `W-A-R/BSL` triple (Table IV).
+/// `W-A-R/BSL` triple (Table IV) plus the freeze-time pruning rule.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct QuantConfig {
     /// Activation BSL (2, 4, 8, 16) or `None` for float (ablations).
@@ -24,17 +53,29 @@ pub struct QuantConfig {
     pub weight_ternary: bool,
     /// Residual BSL; `None` = no residual path or float residual.
     pub residual_bsl: Option<usize>,
+    /// Structured weight pruning applied when freezing ternary panels.
+    pub pruning: Pruning,
 }
 
 impl QuantConfig {
     /// The paper's headline config: W2-A2-R16.
     pub fn w2a2r16() -> Self {
-        Self { act_bsl: Some(2), weight_ternary: true, residual_bsl: Some(16) }
+        Self {
+            act_bsl: Some(2),
+            weight_ternary: true,
+            residual_bsl: Some(16),
+            pruning: Pruning::Off,
+        }
     }
 
     /// Fully float baseline.
     pub fn float() -> Self {
-        Self { act_bsl: None, weight_ternary: false, residual_bsl: None }
+        Self {
+            act_bsl: None,
+            weight_ternary: false,
+            residual_bsl: None,
+            pruning: Pruning::Off,
+        }
     }
 }
 
@@ -59,6 +100,69 @@ impl TernaryTensor {
             .map(|&x| (x / alpha).round().clamp(-1.0, 1.0) as i8)
             .collect();
         Self { values, shape: w.shape().to_vec(), alpha }
+    }
+
+    /// Ternarize, then apply structured [`Pruning`] along the reduction
+    /// axis. `row_width` is the reduction length of one output row
+    /// (`acc_width` for conv panels, in-features for linear) and must
+    /// tile the tensor; groups and blocks are aligned within each row
+    /// so pruning never straddles two output channels. Selection uses
+    /// the *float* magnitudes (ties keep the earlier index), so a
+    /// weight that survives ternarization can still be pruned away.
+    pub fn quantize_pruned(w: &Tensor, row_width: usize, pruning: Pruning) -> Self {
+        let mut t = Self::quantize(w);
+        if pruning == Pruning::Off || row_width == 0 {
+            return t;
+        }
+        assert_eq!(
+            t.values.len() % row_width,
+            0,
+            "pruning row width {row_width} must tile {} weights",
+            t.values.len()
+        );
+        let mags = w.data();
+        match pruning {
+            Pruning::Off => {}
+            Pruning::Nm { n, m } => {
+                assert!(1 <= n && n <= m, "invalid N:M pruning {n}:{m}");
+                let mut order: Vec<usize> = Vec::with_capacity(m);
+                for (r, row) in t.values.chunks_mut(row_width).enumerate() {
+                    let rmags = &mags[r * row_width..(r + 1) * row_width];
+                    for g in (0..row_width).step_by(m) {
+                        let end = (g + m).min(row_width);
+                        if end - g <= n {
+                            continue; // tail group smaller than the keep budget
+                        }
+                        order.clear();
+                        order.extend(g..end);
+                        // Stable sort: equal magnitudes keep the earlier index.
+                        order.sort_by(|&a, &b| rmags[b].abs().total_cmp(&rmags[a].abs()));
+                        for &drop in &order[n..] {
+                            row[drop] = 0;
+                        }
+                    }
+                }
+            }
+            Pruning::Block { size } => {
+                assert!(size >= 1, "block pruning needs size >= 1");
+                // A block survives iff its mean float magnitude rounds
+                // to a nonzero ternary code — the element-wise rule
+                // `round(|w|/alpha) >= 1` lifted to block granularity.
+                let cut = 0.5 * t.alpha;
+                for (r, row) in t.values.chunks_mut(row_width).enumerate() {
+                    let rmags = &mags[r * row_width..(r + 1) * row_width];
+                    for b in (0..row_width).step_by(size) {
+                        let end = (b + size).min(row_width);
+                        let mean = rmags[b..end].iter().map(|v| v.abs()).sum::<f32>()
+                            / (end - b) as f32;
+                        if mean < cut {
+                            row[b..end].fill(0);
+                        }
+                    }
+                }
+            }
+        }
+        t
     }
 
     /// As [`Ternary`] symbols.
@@ -173,5 +277,56 @@ mod tests {
         assert_eq!(c.act_bsl, Some(2));
         assert!(c.weight_ternary);
         assert_eq!(c.residual_bsl, Some(16));
+        assert_eq!(c.pruning, Pruning::Off);
+    }
+
+    #[test]
+    fn nm_pruning_keeps_the_n_largest_per_group() {
+        // Two rows of width 8, 2:4 pruning: each aligned group of 4
+        // keeps its two largest float magnitudes.
+        let w = Tensor::from_vec(
+            &[2, 8],
+            vec![
+                0.9, -0.8, 0.05, 0.7, /* | */ 0.1, 0.2, -0.3, 0.4, //
+                0.5, 0.5, 0.5, 0.5, /* | */ -0.9, 0.0, 0.0, 0.9,
+            ],
+        );
+        let dense = TernaryTensor::quantize(&w);
+        let t = TernaryTensor::quantize_pruned(&w, 8, Pruning::Nm { n: 2, m: 4 });
+        assert_eq!(t.alpha, dense.alpha, "pruning must not move the scale");
+        // Row 0 group 0 keeps 0.9 and -0.8; group 1 keeps -0.3 and 0.4.
+        assert_eq!(
+            &t.values[..8],
+            &[dense.values[0], dense.values[1], 0, 0, 0, 0, dense.values[6], dense.values[7]]
+        );
+        // Row 1 group 0 is a four-way tie: earlier indices win.
+        assert_eq!(
+            &t.values[8..],
+            &[dense.values[8], dense.values[9], 0, 0, dense.values[12], 0, 0, dense.values[15]]
+        );
+        // n == m is a structural no-op.
+        let same = TernaryTensor::quantize_pruned(&w, 8, Pruning::Nm { n: 4, m: 4 });
+        assert_eq!(same.values, dense.values);
+    }
+
+    #[test]
+    fn block_pruning_zeros_weak_blocks_only() {
+        let w = Tensor::from_vec(
+            &[1, 8],
+            vec![0.9, 0.8, 0.9, 0.8, 0.01, 0.02, 0.01, 0.02],
+        );
+        let t = TernaryTensor::quantize_pruned(&w, 8, Pruning::Block { size: 4 });
+        let dense = TernaryTensor::quantize(&w);
+        assert_eq!(&t.values[..4], &dense.values[..4], "strong block survives");
+        assert_eq!(&t.values[4..], &[0, 0, 0, 0], "weak block is dropped whole");
+    }
+
+    #[test]
+    fn pruning_off_matches_plain_quantize() {
+        let w = Tensor::from_vec(&[3, 4], (0..12).map(|i| (i as f32 - 6.0) * 0.1).collect());
+        let a = TernaryTensor::quantize(&w);
+        let b = TernaryTensor::quantize_pruned(&w, 4, Pruning::Off);
+        assert_eq!(a.values, b.values);
+        assert_eq!(a.alpha, b.alpha);
     }
 }

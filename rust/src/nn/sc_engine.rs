@@ -13,6 +13,17 @@
 //!   zero-skipping add/sub index lists packed once at
 //!   [`Prepared`] build time — instead of a naive per-(channel, pixel)
 //!   scalar dot product (DESIGN.md §Perf, "Ternary GEMM + threading").
+//! * **Sparsity-aware routing.** The im2col pass counts nonzeros as it
+//!   fills (free — see [`im2col_i32_nnz_into`]); layers whose measured
+//!   column density falls at or below
+//!   [`SPARSE_DENSITY_CROSSOVER`](super::gemm::SPARSE_DENSITY_CROSSOVER)
+//!   are re-compressed into a [`SparseCols`] panel and run through the
+//!   zero-skipping `gemm_sparse_*` kernels. Both paths are exact i64
+//!   count accumulation, so the routing decision never changes a logit
+//!   — it only changes how fast the counts arrive (DESIGN.md §Perf,
+//!   "Sparsity"). Attach an [`ScEngine::set_sparsity_counters`] sink to
+//!   export measured density and sparse-path hit rate to serving
+//!   metrics.
 //! * **Pre-sized scratch arenas.** All intermediate state — im2col
 //!   column buffers, the GEMM count plane, ping-pong activation planes,
 //!   residual planes and the GAP accumulator — lives in
@@ -64,13 +75,14 @@
 //! Throughput floors live in DESIGN.md §Perf and are tracked by
 //! `rust/benches/sc_serve.rs` → `BENCH_sc.json`.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 use crate::circuits::si::{self, SelTap};
 use crate::fault::guard::DatapathGuard;
 use crate::fault::inject::{self, Stage};
-use super::gemm::column_sums;
-use super::layers::im2col_i32_into;
+use super::gemm::{column_sums, SparseCols, SPARSE_DENSITY_CROSSOVER};
+use super::layers::im2col_i32_nnz_into;
 use super::model::LayerCfg;
 use super::sc_exec::{align_res_count, FaultCfg, Prepared, PreparedConv};
 use super::tensor::Tensor;
@@ -134,6 +146,15 @@ struct EngineScratch {
     /// Per-layer im2col column sums — the guard's checksum vector.
     /// Grown on first guarded forward (empty when no guard runs).
     colsum: Vec<i64>,
+    /// Per-pixel nonzero counts from the im2col pass (the density
+    /// measurement driving the sparse-vs-dense routing).
+    nnz: Vec<u32>,
+    /// Compressed activation panel, refilled in place for each layer
+    /// that routes sparse (allocations reused across images).
+    sparse: SparseCols,
+    /// Sparsity telemetry accumulated by this arena's forwards, folded
+    /// into the shared [`SparsityCounters`] after each batch.
+    stat: SparsityStat,
 }
 
 impl EngineScratch {
@@ -147,7 +168,82 @@ impl EngineScratch {
             res_b: vec![0; s.res],
             gap: vec![0; s.ch],
             colsum: Vec::new(),
+            nnz: Vec::new(),
+            sparse: SparseCols::new(),
+            stat: SparsityStat::default(),
         }
+    }
+}
+
+/// One arena's sparsity tally (plain integers — the hot loop never
+/// touches an atomic; totals are folded into the shared
+/// [`SparsityCounters`] once per batch).
+#[derive(Clone, Copy, Debug, Default)]
+struct SparsityStat {
+    /// Conv-layer GEMMs executed.
+    gemm: u64,
+    /// Of those, how many routed through the sparse kernels.
+    sparse: u64,
+    /// Nonzero im2col entries observed.
+    nnz: u64,
+    /// Total im2col entries observed.
+    elems: u64,
+}
+
+/// Shared activation-sparsity telemetry: how many conv-layer GEMMs ran,
+/// how many of them took the sparse path, and the measured im2col
+/// density behind those decisions. Pool workers clone one `Arc` (the
+/// same pattern as [`crate::fault::guard::GuardCounters`]) so serving
+/// metrics aggregate across the fleet; see
+/// [`ScEngine::set_sparsity_counters`].
+#[derive(Debug, Default)]
+pub struct SparsityCounters {
+    gemm_total: AtomicU64,
+    sparse_gemm: AtomicU64,
+    act_nnz: AtomicU64,
+    act_elems: AtomicU64,
+}
+
+impl SparsityCounters {
+    /// Conv-layer GEMM executions observed (dense + sparse).
+    pub fn gemm_total(&self) -> u64 {
+        self.gemm_total.load(Ordering::Relaxed)
+    }
+
+    /// GEMMs that routed through the sparse kernels.
+    pub fn sparse_gemm(&self) -> u64 {
+        self.sparse_gemm.load(Ordering::Relaxed)
+    }
+
+    /// Nonzero im2col activation entries observed.
+    pub fn act_nnz(&self) -> u64 {
+        self.act_nnz.load(Ordering::Relaxed)
+    }
+
+    /// Total im2col activation entries observed.
+    pub fn act_elems(&self) -> u64 {
+        self.act_elems.load(Ordering::Relaxed)
+    }
+
+    /// Measured activation density `nnz / elems` (1.0 before any
+    /// forward has run).
+    pub fn density(&self) -> f64 {
+        let e = self.act_elems();
+        if e == 0 {
+            1.0
+        } else {
+            self.act_nnz() as f64 / e as f64
+        }
+    }
+
+    fn fold(&self, s: &SparsityStat) {
+        if s.gemm == 0 && s.elems == 0 {
+            return;
+        }
+        self.gemm_total.fetch_add(s.gemm, Ordering::Relaxed);
+        self.sparse_gemm.fetch_add(s.sparse, Ordering::Relaxed);
+        self.act_nnz.fetch_add(s.nnz, Ordering::Relaxed);
+        self.act_elems.fetch_add(s.elems, Ordering::Relaxed);
     }
 }
 
@@ -163,6 +259,8 @@ pub struct ScEngine {
     fault: Option<FaultCfg>,
     /// Count-domain integrity guard; shared across every engine thread.
     guard: Option<Arc<DatapathGuard>>,
+    /// Sparsity telemetry sink; shared across every engine thread.
+    sparsity: Option<Arc<SparsityCounters>>,
 }
 
 impl ScEngine {
@@ -243,7 +341,7 @@ impl ScEngine {
             }
         }
         let scratch = (0..threads.max(1)).map(|_| EngineScratch::new(&sizes)).collect();
-        Self { prep, plans, scratch, fault: None, guard: None }
+        Self { prep, plans, scratch, fault: None, guard: None, sparsity: None }
     }
 
     /// Set (or clear) fault injection for subsequent forwards. With the
@@ -263,6 +361,15 @@ impl ScEngine {
     /// recovery counters aggregate across the fleet.
     pub fn set_guard(&mut self, guard: Option<Arc<DatapathGuard>>) {
         self.guard = guard;
+    }
+
+    /// Attach (or detach) a sparsity telemetry sink. Like the guard,
+    /// the counters are shared: pool workers pass clones of one `Arc`
+    /// so density and sparse-path hit rate aggregate across the fleet.
+    /// The hot loop tallies into plain per-arena integers; the shared
+    /// atomics are touched once per batch.
+    pub fn set_sparsity_counters(&mut self, counters: Option<Arc<SparsityCounters>>) {
+        self.sparsity = counters;
     }
 
     /// The frozen network.
@@ -310,7 +417,7 @@ impl ScEngine {
     /// [`super::sc_exec::ScExecutor::forward_with_tag`], at any thread
     /// count.
     pub fn forward_into_tagged(&mut self, image: &[f32], tag: u64, logits: &mut [i64]) {
-        let Self { prep, plans, scratch, fault, guard } = self;
+        let Self { prep, plans, scratch, fault, guard, sparsity } = self;
         let threads = scratch.len();
         forward_one(
             prep,
@@ -323,6 +430,10 @@ impl ScEngine {
             tag,
             guard.as_deref(),
         );
+        if let Some(ctr) = sparsity.as_deref() {
+            ctr.fold(&scratch[0].stat);
+        }
+        scratch[0].stat = SparsityStat::default();
     }
 
     /// Forward a flat batch (`batch · image_len` floats, NCHW) into a
@@ -350,7 +461,7 @@ impl ScEngine {
         assert!(il > 0 && x.len() % il == 0, "batch input length must be a multiple of image_len");
         let batch = x.len() / il;
         assert_eq!(logits.len(), batch * cl, "logits buffer length mismatch");
-        let Self { prep, plans, scratch, fault, guard } = self;
+        let Self { prep, plans, scratch, fault, guard, sparsity } = self;
         let prep: &Prepared = prep;
         let plans: &[ConvPlan] = plans;
         let fault = *fault;
@@ -367,6 +478,10 @@ impl ScEngine {
             {
                 forward_one(prep, plans, s, xrow, lrow, intra, fault, b as u64, guard);
             }
+            if let Some(ctr) = sparsity.as_deref() {
+                ctr.fold(&s.stat);
+            }
+            s.stat = SparsityStat::default();
             return;
         }
         // Contiguous row chunks, one scoped thread per scratch arena —
@@ -403,6 +518,14 @@ impl ScEngine {
                 });
             }
         });
+        if let Some(ctr) = sparsity.as_deref() {
+            for s in scratch[..nt].iter() {
+                ctr.fold(&s.stat);
+            }
+        }
+        for s in scratch[..nt].iter_mut() {
+            s.stat = SparsityStat::default();
+        }
     }
 
     /// Convenience single-image forward (allocates the result vector).
@@ -442,6 +565,9 @@ struct BlockCtx<'a> {
     guard: Option<&'a DatapathGuard>,
     /// im2col column sums of this layer (empty when no guard runs).
     colsum: &'a [i64],
+    /// Compressed activation panel when this layer's measured density
+    /// cleared the crossover — the GEMM routes sparse; `None` = dense.
+    sparse: Option<&'a SparseCols>,
 }
 
 /// One full image through the frozen network, entirely inside one
@@ -458,7 +584,19 @@ fn forward_one(
     tag: u64,
     guard: Option<&DatapathGuard>,
 ) {
-    let EngineScratch { cols, acc, plane_a, plane_b, res_a, res_b, gap, colsum } = s;
+    let EngineScratch {
+        cols,
+        acc,
+        plane_a,
+        plane_b,
+        res_a,
+        res_b,
+        gap,
+        colsum,
+        nnz,
+        sparse,
+        stat,
+    } = s;
     let (c0, h0, w0) = prep.cfg.input;
     let n0 = c0 * h0 * w0;
     assert_eq!(image.len(), n0, "image length mismatch");
@@ -481,11 +619,12 @@ fn forward_one(
                 let npix = plan.oh * plan.ow;
                 let acc_w = plan.acc_w;
                 let cout = pc.shape.cout;
-                im2col_i32_into(
+                im2col_i32_nnz_into(
                     &plane_a[..cin * h * w],
                     (cin, h, w),
                     &pc.shape,
                     &mut cols[..npix * acc_w],
+                    nnz,
                 );
                 let cols_s = &cols[..npix * acc_w];
                 // The guard's checksum oracle: per-k column sums of the
@@ -496,7 +635,28 @@ fn forward_one(
                 } else {
                     colsum.clear();
                 }
-                let ctx = BlockCtx { li, tag, fault, guard, colsum: &colsum[..] };
+                // Sparse-vs-dense routing from the measured density.
+                // Both kernels are exact i64 accumulation, so this only
+                // decides speed — never a count.
+                let layer_nnz: u64 = nnz.iter().map(|&v| v as u64).sum();
+                let elems = (npix * acc_w) as u64;
+                let route_sparse =
+                    elems > 0 && (layer_nnz as f64) <= SPARSE_DENSITY_CROSSOVER * elems as f64;
+                if route_sparse {
+                    sparse.fill_from(cols_s, npix, acc_w);
+                }
+                stat.gemm += 1;
+                stat.sparse += route_sparse as u64;
+                stat.nnz += layer_nnz;
+                stat.elems += elems;
+                let ctx = BlockCtx {
+                    li,
+                    tag,
+                    fault,
+                    guard,
+                    colsum: &colsum[..],
+                    sparse: route_sparse.then_some(&*sparse),
+                };
                 let counts = &mut acc[..cout * npix];
                 let out_plane = &mut plane_b[..cout * npix];
                 // Residual planes are empty slices on layers without
@@ -603,7 +763,13 @@ fn conv_block(
 ) {
     let npix = plan.oh * plan.ow;
     let rows = counts.len() / npix.max(1);
-    pc.panels.ternary.gemm_rows_into(r0, r0 + rows, cols, npix, counts);
+    // Sparse or dense per the layer's routing decision — identical
+    // exact-i64 counts either way, so everything downstream (guard,
+    // faults, SI LUTs) is oblivious to which kernel ran.
+    match ctx.sparse {
+        Some(sp) => pc.panels.ternary.gemm_sparse_rows_into(r0, r0 + rows, sp, counts),
+        None => pc.panels.ternary.gemm_rows_into(r0, r0 + rows, cols, npix, counts),
+    }
     // Guard the GEMM counts before anything downstream consumes them.
     // Faults model the *circuit* stages and are folded in afterwards;
     // the guard protects the accumulation itself.
@@ -769,7 +935,7 @@ fn si_out_faulty(
 mod tests {
     use super::*;
     use crate::nn::model::{ModelCfg, ModelParams};
-    use crate::nn::quant::QuantConfig;
+    use crate::nn::quant::{Pruning, QuantConfig};
     use crate::nn::sc_exec::ScExecutor;
     use crate::util::Rng;
 
@@ -785,7 +951,12 @@ mod tests {
         for bsl in [2usize, 4, 8] {
             let prep = prep_for(
                 &cfg,
-                QuantConfig { act_bsl: Some(bsl), weight_ternary: true, residual_bsl: None },
+                QuantConfig {
+                    act_bsl: Some(bsl),
+                    weight_ternary: true,
+                    residual_bsl: None,
+                    pruning: Pruning::Off,
+                },
                 3,
             );
             let exec = ScExecutor::new(prep.clone());
@@ -822,7 +993,12 @@ mod tests {
         let cfg = ModelCfg::tnn();
         let prep = prep_for(
             &cfg,
-            QuantConfig { act_bsl: Some(2), weight_ternary: true, residual_bsl: None },
+            QuantConfig {
+                act_bsl: Some(2),
+                weight_ternary: true,
+                residual_bsl: None,
+                pruning: Pruning::Off,
+            },
             9,
         );
         let mut engine = ScEngine::new(prep);
@@ -845,7 +1021,12 @@ mod tests {
         let cfg = ModelCfg::tnn();
         let prep = prep_for(
             &cfg,
-            QuantConfig { act_bsl: Some(2), weight_ternary: true, residual_bsl: None },
+            QuantConfig {
+                act_bsl: Some(2),
+                weight_ternary: true,
+                residual_bsl: None,
+                pruning: Pruning::Off,
+            },
             31,
         );
         let mut seq = ScEngine::new(prep.clone());
@@ -873,7 +1054,12 @@ mod tests {
         for (cfg, quant, shape) in [
             (
                 ModelCfg::tnn(),
-                QuantConfig { act_bsl: Some(2), weight_ternary: true, residual_bsl: None },
+                QuantConfig {
+                    act_bsl: Some(2),
+                    weight_ternary: true,
+                    residual_bsl: None,
+                    pruning: Pruning::Off,
+                },
                 vec![1usize, 28, 28],
             ),
             (ModelCfg::scnet(10), QuantConfig::w2a2r16(), vec![3, 32, 32]),
@@ -892,11 +1078,55 @@ mod tests {
     }
 
     #[test]
+    fn sparse_routing_engages_and_stays_bit_identical() {
+        let cfg = ModelCfg::tnn();
+        let prep = prep_for(
+            &cfg,
+            QuantConfig {
+                act_bsl: Some(2),
+                weight_ternary: true,
+                residual_bsl: None,
+                pruning: Pruning::Off,
+            },
+            3,
+        );
+        let exec = ScExecutor::new(prep.clone());
+        let mut engine = ScEngine::new(prep);
+        let ctr = Arc::new(SparsityCounters::default());
+        engine.set_sparsity_counters(Some(ctr.clone()));
+        assert_eq!(ctr.density(), 1.0, "no forwards yet");
+        // A mostly-zero image keeps every layer below the crossover, so
+        // the sparse kernels carry the whole network; logits must still
+        // match the stream-semantics executor exactly.
+        let mut rng = Rng::new(61);
+        let img = Tensor::from_vec(
+            &[1, 28, 28],
+            (0..784)
+                .map(|i| if i % 19 == 0 { rng.normal() as f32 * 2.0 } else { 0.0 })
+                .collect(),
+        );
+        assert_eq!(engine.forward(&img), exec.forward(&img));
+        assert!(ctr.gemm_total() > 0);
+        assert!(ctr.sparse_gemm() > 0, "sparse path must engage on a sparse image");
+        assert!(ctr.density() < 1.0);
+        assert!(ctr.act_nnz() <= ctr.act_elems());
+        // Telemetry accumulates per forward and is schedule-independent.
+        let before = ctr.gemm_total();
+        assert_eq!(engine.forward(&img), exec.forward(&img));
+        assert_eq!(ctr.gemm_total(), 2 * before);
+    }
+
+    #[test]
     fn engine_shares_the_prepared() {
         let cfg = ModelCfg::tnn();
         let prep = prep_for(
             &cfg,
-            QuantConfig { act_bsl: Some(2), weight_ternary: true, residual_bsl: None },
+            QuantConfig {
+                act_bsl: Some(2),
+                weight_ternary: true,
+                residual_bsl: None,
+                pruning: Pruning::Off,
+            },
             1,
         );
         let a = ScEngine::new(prep.clone());

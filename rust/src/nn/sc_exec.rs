@@ -34,7 +34,7 @@ use crate::util::Rng;
 use super::gemm::WeightPanels;
 use super::layers::{im2col_i32_into, ConvShape};
 use super::model::{LayerCfg, ModelCfg, ModelParams};
-use super::quant::{QuantConfig, TernaryTensor};
+use super::quant::{Pruning, QuantConfig, TernaryTensor};
 use super::tensor::Tensor;
 
 /// Fault-injection configuration (Fig 5).
@@ -107,7 +107,11 @@ pub const RES_BSL: usize = 16;
 
 impl Prepared {
     /// Freeze a trained parameter set. `quant.act_bsl` must be set (the
-    /// SC datapath is always quantized).
+    /// SC datapath is always quantized). `quant.pruning` is applied
+    /// here, before panel packing, so pruned weights never enter the
+    /// ternary index lists — the sparse weight structure costs nothing
+    /// at inference (and the fault path, which walks `wq.values`
+    /// directly, sees the identical pruned codes).
     pub fn new(cfg: &ModelCfg, params: &ModelParams, quant: QuantConfig) -> Self {
         let act_bsl = quant.act_bsl.expect("SC executor requires quantized activations");
         let res_bsl = quant.residual_bsl.unwrap_or(RES_BSL);
@@ -119,7 +123,8 @@ impl Prepared {
             match l {
                 LayerCfg::Conv { shape, bn, relu, res_in, res_out } => {
                     let w = params.get(&format!("conv{ci}.w")).expect("conv weight");
-                    let wq = TernaryTensor::quantize(w);
+                    let wq =
+                        TernaryTensor::quantize_pruned(w, shape.acc_width(), quant.pruning);
                     let alpha_acc = alpha_in * wq.alpha;
                     let alpha_out =
                         params.scalar(&format!("conv{ci}.alpha_out")).expect("alpha_out");
@@ -199,7 +204,8 @@ impl Prepared {
                 LayerCfg::GlobalAvgPool => {}
             }
         }
-        let fc = TernaryTensor::quantize(params.get("fc.w").expect("fc.w"));
+        let fc_w = params.get("fc.w").expect("fc.w");
+        let fc = TernaryTensor::quantize_pruned(fc_w, fc_w.shape()[1], quant.pruning);
         let fc_panels = WeightPanels::pack(&fc.values, fc.shape[0], fc.shape[1]);
         Self {
             cfg: cfg.clone(),
@@ -627,8 +633,44 @@ mod tests {
         Prepared::new(
             &cfg,
             &params,
-            QuantConfig { act_bsl: Some(act_bsl), weight_ternary: true, residual_bsl: None },
+            QuantConfig {
+                act_bsl: Some(act_bsl),
+                weight_ternary: true,
+                residual_bsl: None,
+                pruning: Pruning::Off,
+            },
         )
+    }
+
+    #[test]
+    fn pruned_freeze_drops_weights_and_still_classifies() {
+        let cfg = ModelCfg::tnn();
+        let mut rng = Rng::new(3);
+        let params = ModelParams::init(&cfg, &mut rng);
+        let dense = tiny_prep(2);
+        let quant = QuantConfig { pruning: Pruning::Nm { n: 1, m: 4 }, ..dense.quant };
+        let pruned = Prepared::new(&cfg, &params, quant);
+        let nnz = |p: &Prepared| {
+            p.convs
+                .iter()
+                .flat_map(|c| c.wq.values.iter())
+                .chain(p.fc.values.iter())
+                .filter(|&&v| v != 0)
+                .count()
+        };
+        assert!(nnz(&pruned) < nnz(&dense), "1:4 pruning must drop weights");
+        // Panels are packed from the pruned codes, so the zero-skipping
+        // index lists shrink too.
+        let lists = |p: &Prepared| {
+            p.convs.iter().map(|c| c.panels.ternary.nnz()).sum::<usize>()
+        };
+        assert!(lists(&pruned) < lists(&dense));
+        let exec = ScExecutor::new(pruned);
+        let img = Tensor::from_vec(
+            &[1, 28, 28],
+            (0..784).map(|_| rng.normal() as f32).collect(),
+        );
+        assert_eq!(exec.forward(&img).len(), 10);
     }
 
     #[test]

@@ -32,6 +32,14 @@ pub struct Knobs {
     pub res_fp: f32,
     /// 0.0 disables residual adds entirely.
     pub res_on: f32,
+    /// N:M pruning: weights kept per group (0 = pruning off). Freeze-
+    /// time only — the exported HLO takes the 6 quantization scalars
+    /// and never sees pruning; see [`Knobs::flat`].
+    pub prune_n: f32,
+    /// N:M pruning: group size along the reduction axis (0 = off).
+    pub prune_m: f32,
+    /// Block pruning: block length along the reduction axis (0 = off).
+    pub prune_block: f32,
 }
 
 impl Knobs {
@@ -44,12 +52,43 @@ impl Knobs {
             res_half: 8.0,
             res_fp: 0.0,
             res_on: 1.0,
+            prune_n: 0.0,
+            prune_m: 0.0,
+            prune_block: 0.0,
         }
     }
 
     /// Float baseline.
     pub fn float() -> Self {
-        Self { act_half: 1.0, act_fp: 1.0, w_fp: 1.0, res_half: 8.0, res_fp: 1.0, res_on: 1.0 }
+        Self {
+            act_half: 1.0,
+            act_fp: 1.0,
+            w_fp: 1.0,
+            res_half: 8.0,
+            res_fp: 1.0,
+            res_on: 1.0,
+            prune_n: 0.0,
+            prune_m: 0.0,
+            prune_block: 0.0,
+        }
+    }
+
+    /// Freeze-time N:M pruning: keep the `n` largest-magnitude weights
+    /// in every aligned group of `m` along the reduction axis.
+    pub fn with_pruning(mut self, n: usize, m: usize) -> Self {
+        self.prune_n = n as f32;
+        self.prune_m = m as f32;
+        self.prune_block = 0.0;
+        self
+    }
+
+    /// Freeze-time block pruning: zero aligned blocks of `size`
+    /// consecutive weights whose mean magnitude rounds to zero.
+    pub fn with_block_pruning(mut self, size: usize) -> Self {
+        self.prune_n = 0.0;
+        self.prune_m = 0.0;
+        self.prune_block = size as f32;
+        self
     }
 
     /// Residual BSL override (paper Fig 8: residual precision sweep).

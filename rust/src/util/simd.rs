@@ -69,6 +69,7 @@ pub struct Dispatch {
     i8_dot4: fn(&[i8], [&[i32]; 4]) -> [i64; 4],
     gather_sub_i32: fn(&[u32], &[u32], &[i32]) -> i64,
     gather_sub_i64: fn(&[u32], &[u32], &[i64]) -> i64,
+    sparse_i8_dot: fn(&[i8], &[i32], &[u32]) -> i64,
 }
 
 /// The scalar reference table (also the fallback on unknown ISAs).
@@ -85,6 +86,7 @@ static SCALAR: Dispatch = Dispatch {
     i8_dot4: i8_dot4_scalar,
     gather_sub_i32: gather_sub_i32_scalar,
     gather_sub_i64: gather_sub_i64_scalar,
+    sparse_i8_dot: sparse_i8_dot_scalar,
 };
 
 impl Dispatch {
@@ -217,6 +219,25 @@ impl Dispatch {
     pub unsafe fn gather_sub_i64(&self, plus: &[u32], minus: &[u32], x: &[i64]) -> i64 {
         (self.gather_sub_i64)(plus, minus, x)
     }
+
+    /// `Σ w[idx[j]] · vals[j]` — one dense i8 weight row against one
+    /// compressed activation column (`vals`/`idx` are a CSR column's
+    /// nonzero values and their positions). The sparse-GEMM inner
+    /// kernel: only the nonzeros are touched, weights reached via
+    /// gathered byte loads on the vector arm.
+    ///
+    /// # Safety
+    ///
+    /// `idx` must be sorted ascending with every index `< w.len()`:
+    /// the vector arm issues hardware gathers without per-element
+    /// bounds checks and uses the chunk's last (largest) index as its
+    /// in-bounds witness. `SparseCols` columns satisfy both by
+    /// construction.
+    #[inline]
+    pub unsafe fn sparse_i8_dot(&self, w: &[i8], vals: &[i32], idx: &[u32]) -> i64 {
+        assert_eq!(vals.len(), idx.len(), "sparse_i8_dot: vals/idx length mismatch");
+        (self.sparse_i8_dot)(w, vals, idx)
+    }
 }
 
 #[cfg(target_arch = "x86_64")]
@@ -337,6 +358,15 @@ fn gather_sub_i64_scalar(plus: &[u32], minus: &[u32], x: &[i64]) -> i64 {
     pos - neg
 }
 
+fn sparse_i8_dot_scalar(w: &[i8], vals: &[i32], idx: &[u32]) -> i64 {
+    debug_assert_eq!(vals.len(), idx.len());
+    let mut s = 0i64;
+    for (&v, &i) in vals.iter().zip(idx) {
+        s += w[i as usize] as i64 * v as i64;
+    }
+    s
+}
+
 // ---------------------------------------------------------------------
 // AVX2 kernels (x86_64). Each `#[target_feature]` kernel is wrapped by
 // a safe entry fn; the wrapper's `unsafe` is justified by the dispatch
@@ -367,6 +397,7 @@ mod x86 {
             i8_dot4: i8_dot4_entry,
             gather_sub_i32: gather_sub_i32_entry,
             gather_sub_i64: gather_sub_i64_entry,
+            sparse_i8_dot: sparse_i8_dot_entry,
         }
     }
 
@@ -433,6 +464,15 @@ mod x86 {
         // SAFETY: AVX2 detected at init; `Dispatch::gather_sub_i64`'s
         // contract guarantees every index < x.len(), which fits i32.
         unsafe { gather_sum_i64(plus, x) - gather_sum_i64(minus, x) }
+    }
+
+    fn sparse_i8_dot_entry(w: &[i8], vals: &[i32], idx: &[u32]) -> i64 {
+        if w.len() > i32::MAX as usize {
+            return sparse_i8_dot_scalar(w, vals, idx);
+        }
+        // SAFETY: AVX2 detected at init; `Dispatch::sparse_i8_dot`'s
+        // contract guarantees ascending indices < w.len().
+        unsafe { sparse_i8_dot_avx2(w, vals, idx) }
     }
 
     /// Horizontal sum of the four i64 lanes.
@@ -662,6 +702,37 @@ mod x86 {
         s
     }
 
+    /// `Σ w[idx[j]] · vals[j]` with i8 weights fetched through 8-wide
+    /// byte gathers (`scale = 1`, low byte of each 4-byte load, sign-
+    /// extended by a 24-bit shift pair). A 4-byte gather at index `j`
+    /// reads `w[j..j+4]`, so the vector loop only runs while the
+    /// chunk's **last** index — the largest, since the contract says
+    /// ascending — leaves 4 readable bytes; every later chunk's
+    /// indices are at least as large, so one failed witness ends the
+    /// vector phase and the scalar tail finishes exactly.
+    #[target_feature(enable = "avx2")]
+    unsafe fn sparse_i8_dot_avx2(w: &[i8], vals: &[i32], idx: &[u32]) -> i64 {
+        debug_assert_eq!(vals.len(), idx.len());
+        let base = w.as_ptr().cast::<i32>();
+        let mut acc = _mm256_setzero_si256();
+        let mut i = 0usize;
+        while i + 8 <= idx.len() && idx[i + 7] as usize + 4 <= w.len() {
+            let iv = _mm256_loadu_si256(idx.as_ptr().add(i).cast());
+            let g = _mm256_i32gather_epi32::<1>(base, iv);
+            // Sign-extend the gathered low byte into the full i32 lane.
+            let wv = _mm256_srai_epi32::<24>(_mm256_slli_epi32::<24>(g));
+            let vv = _mm256_loadu_si256(vals.as_ptr().add(i).cast());
+            acc = _mm256_add_epi64(acc, mul_i32_pairs(wv, vv));
+            i += 8;
+        }
+        let mut s = hsum_i64(acc);
+        while i < idx.len() {
+            s += w[idx[i] as usize] as i64 * vals[i] as i64;
+            i += 1;
+        }
+        s
+    }
+
     /// `Σ x[idx]` over i64 values via 4-wide hardware gathers; same
     /// contract as [`gather_sum_i32`].
     #[target_feature(enable = "avx2")]
@@ -707,6 +778,7 @@ mod neon {
             i8_dot4: i8_dot4_entry,
             gather_sub_i32: gather_sub_i32_scalar,
             gather_sub_i64: gather_sub_i64_scalar,
+            sparse_i8_dot: sparse_i8_dot_scalar,
         }
     }
 
@@ -984,6 +1056,23 @@ mod tests {
                         a5.gather_sub_i64(&plus, &minus, &x64),
                         sc.gather_sub_i64(&plus, &minus, &x64),
                         "gather_sub_i64 k={k}"
+                    );
+                }
+                // Sparse dot: ascending index list (dupes allowed by
+                // the contract), always ending at k-1 so the vector
+                // arm's tail-of-row bounds witness is exercised.
+                let mut sidx: Vec<u32> =
+                    (0..rng.gen_index(2 * k)).map(|_| rng.gen_index(k) as u32).collect();
+                sidx.push(k as u32 - 1);
+                sidx.sort_unstable();
+                let svals: Vec<i32> =
+                    (0..sidx.len()).map(|_| rng.gen_range_i64(-1000, 1000) as i32).collect();
+                // SAFETY: sorted above, every index < k.
+                unsafe {
+                    assert_eq!(
+                        a5.sparse_i8_dot(&w, &svals, &sidx),
+                        sc.sparse_i8_dot(&w, &svals, &sidx),
+                        "sparse_i8_dot k={k}"
                     );
                 }
             }

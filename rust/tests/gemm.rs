@@ -21,17 +21,24 @@
 //!   `FaultCfg`, same image tags, every thread count) — and because CI
 //!   re-runs this suite under `SCNN_NO_SIMD=1`, the forced-scalar GEMM
 //!   arm is exercised under faults too.
+//! * The sparse (compressed-column) kernels are **exactly** the naive
+//!   loop and the dense panels at every activation density — ragged
+//!   shapes, zero/full-density extremes, word-crossing widths, forced
+//!   scalar — and the engine's density-based sparse routing is
+//!   bit-identical to the executor at every thread count (pruned
+//!   freezes included).
 //! * The datapath guard detects and recovers 100% of chaos-corrupted
-//!   GEMM rows on the live engine, and a `--guard` pool serves clean
-//!   logits while reporting integrity counters through its metrics.
+//!   GEMM rows on the live engine — on the sparse route too — and a
+//!   `--guard` pool serves clean logits while reporting integrity
+//!   counters through its metrics.
 
 use std::sync::Arc;
 
 use scnn::coordinator::{backend, Backend, Coordinator, ServeConfig};
 use scnn::fault::guard::{DatapathGuard, GuardCounters};
-use scnn::nn::gemm::{gemm_naive, I8Panel, TernaryPanel, WeightPanels, BLOCK_CO};
+use scnn::nn::gemm::{gemm_naive, I8Panel, SparseCols, TernaryPanel, WeightPanels, BLOCK_CO};
 use scnn::nn::model::{ModelCfg, ModelParams};
-use scnn::nn::quant::QuantConfig;
+use scnn::nn::quant::{Pruning, QuantConfig};
 use scnn::nn::sc_exec::{FaultCfg, Prepared, ScExecutor};
 use scnn::nn::tensor::Tensor;
 use scnn::nn::ScEngine;
@@ -249,11 +256,138 @@ fn dispatched_gemm_matches_forced_scalar() {
     );
 }
 
+/// Zero out entries of `cols` with probability `zero_p`.
+fn sparsify(rng: &mut Rng, cols: &mut [i32], zero_p: f64) {
+    for v in cols.iter_mut() {
+        if rng.gen_bool(zero_p) {
+            *v = 0;
+        }
+    }
+}
+
+#[test]
+fn sparse_gemm_equals_naive_and_dense_on_random_shapes() {
+    // Tentpole acceptance: the compressed-column kernels are exactly
+    // the naive loop (and therefore the dense panels) on random ragged
+    // shapes at every density, through both the dispatched and the
+    // pinned-scalar tables.
+    let sc = Dispatch::scalar();
+    check_simple(
+        0x5BA5,
+        60,
+        |rng| {
+            let mut c = gen_case(rng, true);
+            let zero_p = [0.0, 0.25, 0.5, 0.75, 0.9, 1.0][rng.gen_index(6)];
+            sparsify(rng, &mut c.cols, zero_p);
+            c
+        },
+        |c| {
+            let mut expect = vec![0i64; c.rows * c.n];
+            gemm_naive(&c.w, c.rows, c.k, &c.cols, c.n, &mut expect);
+            let sp = SparseCols::compress(&c.cols, c.n, c.k);
+            let panel = TernaryPanel::pack(&c.w, c.rows, c.k);
+            let mut got = vec![i64::MIN; c.rows * c.n];
+            panel.gemm_sparse_into(&sp, &mut got);
+            assert_eq!(got, expect, "ternary sparse (dispatched)");
+            let mut got_s = vec![i64::MIN; c.rows * c.n];
+            panel.gemm_sparse_into_with(sc, &sp, &mut got_s);
+            assert_eq!(got_s, expect, "ternary sparse (forced scalar)");
+            true
+        },
+    );
+    check_simple(
+        0x5BA6,
+        60,
+        |rng| {
+            let mut c = gen_case(rng, false);
+            let zero_p = [0.0, 0.25, 0.5, 0.75, 0.9, 1.0][rng.gen_index(6)];
+            sparsify(rng, &mut c.cols, zero_p);
+            c
+        },
+        |c| {
+            let mut expect = vec![0i64; c.rows * c.n];
+            gemm_naive(&c.w, c.rows, c.k, &c.cols, c.n, &mut expect);
+            let sp = SparseCols::compress(&c.cols, c.n, c.k);
+            let panel = I8Panel::pack(&c.w, c.rows, c.k);
+            let mut got = vec![i64::MIN; c.rows * c.n];
+            panel.gemm_sparse_into(&sp, &mut got);
+            assert_eq!(got, expect, "dense-panel sparse (dispatched)");
+            let mut got_s = vec![i64::MIN; c.rows * c.n];
+            panel.gemm_sparse_into_with(sc, &sp, &mut got_s);
+            assert_eq!(got_s, expect, "dense-panel sparse (forced scalar)");
+            true
+        },
+    );
+}
+
+#[test]
+fn sparse_gemm_extremes_and_word_crossing_widths() {
+    // Pinned shapes: empty reduction (k = 0), single pixels, k
+    // straddling the 8-wide gather chunk, rows straddling the channel
+    // block — each at zero, half, and full density.
+    let sc = Dispatch::scalar();
+    let mut rng = Rng::new(41);
+    let shapes = [
+        (3usize, 0usize, 4usize),
+        (1, 1, 1),
+        (4, 7, 5),
+        (4, 8, 5),
+        (4, 9, 5),
+        (3, 15, 2),
+        (3, 16, 2),
+        (3, 17, 2),
+        (BLOCK_CO + 1, 33, 4),
+        (13, 37, 19),
+    ];
+    for (rows, k, n) in shapes {
+        for zero_p in [0.0, 0.5, 1.0] {
+            for ternary in [true, false] {
+                let w: Vec<i8> = (0..rows * k)
+                    .map(|_| {
+                        if ternary {
+                            rng.gen_range_i64(-1, 1) as i8
+                        } else {
+                            rng.gen_range_i64(-128, 127) as i8
+                        }
+                    })
+                    .collect();
+                let mut cols: Vec<i32> =
+                    (0..n * k).map(|_| rng.gen_range_i64(-100, 101) as i32).collect();
+                sparsify(&mut rng, &mut cols, zero_p);
+                let mut expect = vec![0i64; rows * n];
+                gemm_naive(&w, rows, k, &cols, n, &mut expect);
+                let sp = SparseCols::compress(&cols, n, k);
+                if zero_p == 1.0 {
+                    assert_eq!(sp.nnz(), 0, "full-zero panel must compress to empty");
+                }
+                let mut got = vec![i64::MIN; rows * n];
+                let mut got_s = vec![i64::MIN; rows * n];
+                if ternary {
+                    let p = TernaryPanel::pack(&w, rows, k);
+                    p.gemm_sparse_into(&sp, &mut got);
+                    p.gemm_sparse_into_with(sc, &sp, &mut got_s);
+                } else {
+                    let p = I8Panel::pack(&w, rows, k);
+                    p.gemm_sparse_into(&sp, &mut got);
+                    p.gemm_sparse_into_with(sc, &sp, &mut got_s);
+                }
+                assert_eq!(got, expect, "ternary={ternary} rows={rows} k={k} n={n} p={zero_p}");
+                assert_eq!(got_s, expect, "scalar ternary={ternary} k={k} n={n} p={zero_p}");
+            }
+        }
+    }
+}
+
 fn prep_family(family: &str, seed: u64) -> (Arc<Prepared>, usize) {
     let (cfg, quant) = match family {
         "tnn" => (
             ModelCfg::tnn(),
-            QuantConfig { act_bsl: Some(2), weight_ternary: true, residual_bsl: None },
+            QuantConfig {
+                act_bsl: Some(2),
+                weight_ternary: true,
+                residual_bsl: None,
+                pruning: Pruning::Off,
+            },
         ),
         "scnet10" => (ModelCfg::scnet(10), QuantConfig::w2a2r16()),
         other => panic!("unknown family {other}"),
@@ -430,4 +564,110 @@ fn guarded_sc_pool_serves_clean_logits_and_reports_metrics() {
     let m = coord.shutdown();
     assert_eq!(m.integrity_detected, 0, "healthy hardware must trip no checks");
     assert_eq!(m.integrity_recovered, 0);
+}
+
+/// A mostly-zero image batch: every `stride`-th pixel carries signal,
+/// the rest are exact zeros, so the measured activation density drives
+/// the engine onto the sparse route.
+fn sparse_batch(rng: &mut Rng, batch: usize, il: usize, stride: usize) -> Vec<f32> {
+    let mut x = vec![0f32; batch * il];
+    for v in x.iter_mut().step_by(stride) {
+        *v = rng.normal() as f32 * 2.0;
+    }
+    x
+}
+
+#[test]
+fn sparse_routing_bit_identical_to_executor_at_every_thread_count() {
+    // Tentpole acceptance: on images sparse enough to engage the
+    // compressed-panel route, the engine's logits equal the per-image
+    // executor's at every thread count, and repeat passes over the
+    // reused scratch arenas (including the recycled `SparseCols`
+    // buffers) reproduce the same bits.
+    for family in ["tnn", "scnet10"] {
+        let (prep, il) = prep_family(family, 53);
+        let exec = ScExecutor::new(prep.clone());
+        let (c, h, w) = prep.cfg.input;
+        let batch = 4usize;
+        let mut rng = Rng::new(61);
+        let x = sparse_batch(&mut rng, batch, il, 17);
+        let mut expect = Vec::new();
+        for b in 0..batch {
+            let img = Tensor::from_vec(&[c, h, w], x[b * il..(b + 1) * il].to_vec());
+            expect.extend(exec.forward(&img));
+        }
+        let cl = expect.len() / batch;
+        for threads in [1usize, 2, 3, 6] {
+            let mut eng = ScEngine::with_threads(prep.clone(), threads);
+            let mut got = vec![0i64; batch * cl];
+            eng.forward_batch_into(&x, &mut got);
+            assert_eq!(got, expect, "{family} threads={threads} (sparse route)");
+            let mut again = vec![0i64; batch * cl];
+            eng.forward_batch_into(&x, &mut again);
+            assert_eq!(again, expect, "{family} threads={threads} (second pass)");
+        }
+    }
+}
+
+#[test]
+fn pruned_engine_matches_executor_at_every_thread_count() {
+    // Structured weight pruning happens at freeze time, so engine and
+    // executor share the identical pruned panels — logits must stay
+    // bit-identical across thread counts for both pruning schemes.
+    let cfg = ModelCfg::tnn();
+    let mut rng = Rng::new(67);
+    let params = ModelParams::init(&cfg, &mut rng);
+    for pruning in [Pruning::Nm { n: 2, m: 4 }, Pruning::Block { size: 4 }] {
+        let prep = Arc::new(Prepared::new(
+            &cfg,
+            &params,
+            QuantConfig {
+                act_bsl: Some(2),
+                weight_ternary: true,
+                residual_bsl: None,
+                pruning,
+            },
+        ));
+        let exec = ScExecutor::new(prep.clone());
+        let (c, h, w) = prep.cfg.input;
+        let il = c * h * w;
+        let batch = 3usize;
+        let x: Vec<f32> = (0..batch * il).map(|_| rng.normal() as f32 * 0.5).collect();
+        let mut expect = Vec::new();
+        for b in 0..batch {
+            let img = Tensor::from_vec(&[c, h, w], x[b * il..(b + 1) * il].to_vec());
+            expect.extend(exec.forward(&img));
+        }
+        let cl = expect.len() / batch;
+        for threads in [1usize, 2, 5] {
+            let mut eng = ScEngine::with_threads(prep.clone(), threads);
+            let mut got = vec![0i64; batch * cl];
+            eng.forward_batch_into(&x, &mut got);
+            assert_eq!(got, expect, "{pruning:?} threads={threads}");
+        }
+    }
+}
+
+#[test]
+fn chaos_guard_recovers_on_the_sparse_route() {
+    // Satellite acceptance: the guard's count-domain checksums are
+    // computed from the dense im2col panel, which the sparse route
+    // still fills — so with chaos corrupting every row block on a
+    // sparse image, detection and recovery stay 100% and the served
+    // logits equal the clean engine's.
+    let (prep, il) = prep_family("tnn", 71);
+    let mut rng = Rng::new(73);
+    let x = sparse_batch(&mut rng, 1, il, 19);
+    let mut clean = ScEngine::new(prep.clone());
+    let cl = clean.classes();
+    let mut want = vec![0i64; cl];
+    clean.forward_into(&x, &mut want);
+    let counters = Arc::new(GuardCounters::default());
+    let mut eng = ScEngine::with_threads(prep, 2);
+    eng.set_guard(Some(Arc::new(DatapathGuard::with_chaos(counters.clone(), 1))));
+    let mut got = vec![0i64; cl];
+    eng.forward_into(&x, &mut got);
+    assert_eq!(got, want, "sparse-route chaos corruption must be healed");
+    assert!(counters.detected() > 0, "chaos must have corrupted rows");
+    assert_eq!(counters.detected(), counters.recovered(), "recovery must be 100%");
 }

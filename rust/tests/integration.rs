@@ -11,7 +11,7 @@ use scnn::data::{Dataset, Split, SynthCifar, SynthDigits};
 use scnn::exp::{self, Opts};
 use scnn::nn::binary_exec::{accuracy_float, BinaryExecutor};
 use scnn::nn::model::{ModelCfg, ModelParams};
-use scnn::nn::quant::QuantConfig;
+use scnn::nn::quant::{Pruning, QuantConfig};
 use scnn::nn::sc_exec::{FaultCfg, Prepared, ScExecutor};
 use scnn::util::Rng;
 
@@ -83,6 +83,7 @@ fn executors_agree_across_configs() {
                 act_bsl: Some(act_bsl),
                 weight_ternary: true,
                 residual_bsl: if has_res { Some(16) } else { None },
+                pruning: Pruning::Off,
             };
             let prep = Prepared::new(&cfg, &params, quant);
             let sc = ScExecutor::new(prep.clone());
@@ -114,7 +115,12 @@ fn fault_injection_determinism() {
     let prep = Prepared::new(
         &cfg,
         &params,
-        QuantConfig { act_bsl: Some(2), weight_ternary: true, residual_bsl: None },
+        QuantConfig {
+            act_bsl: Some(2),
+            weight_ternary: true,
+            residual_bsl: None,
+            pruning: Pruning::Off,
+        },
     );
     let data = SynthDigits::new();
     let (imgs, _) = data.batch(Split::Test, 0, 4);
@@ -140,8 +146,18 @@ fn float_reference_all_quant_configs() {
     let (imgs, labels) = data.batch(Split::Test, 0, 8);
     for quant in [
         QuantConfig::float(),
-        QuantConfig { act_bsl: None, weight_ternary: true, residual_bsl: None },
-        QuantConfig { act_bsl: Some(2), weight_ternary: false, residual_bsl: None },
+        QuantConfig {
+            act_bsl: None,
+            weight_ternary: true,
+            residual_bsl: None,
+            pruning: Pruning::Off,
+        },
+        QuantConfig {
+            act_bsl: Some(2),
+            weight_ternary: false,
+            residual_bsl: None,
+            pruning: Pruning::Off,
+        },
         QuantConfig::w2a2r16(),
     ] {
         let acc = accuracy_float(&cfg, &params, quant, &imgs, &labels);

@@ -79,6 +79,7 @@ fn frozen_params_run_in_sc_simulator() {
             act_bsl: Some(2),
             weight_ternary: true,
             residual_bsl: None,
+            pruning: scnn::nn::quant::Pruning::Off,
         },
     );
     let sc = scnn::nn::sc_exec::ScExecutor::new(prep.clone());

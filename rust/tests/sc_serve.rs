@@ -13,7 +13,7 @@ use std::sync::Arc;
 use scnn::coordinator::{backend, Backend, Coordinator, ServeConfig};
 use scnn::data::{Dataset, Split, SynthDigits};
 use scnn::nn::model::{ModelCfg, ModelParams};
-use scnn::nn::quant::QuantConfig;
+use scnn::nn::quant::{Pruning, QuantConfig};
 use scnn::nn::sc_engine::ScEngine;
 use scnn::nn::sc_exec::{Prepared, ScExecutor};
 use scnn::nn::Tensor;
@@ -32,7 +32,12 @@ fn prop_engine_logits_bit_identical_to_executor_tnn() {
     for bsl in [2usize, 4, 8] {
         let prep = frozen(
             &cfg,
-            QuantConfig { act_bsl: Some(bsl), weight_ternary: true, residual_bsl: None },
+            QuantConfig {
+                act_bsl: Some(bsl),
+                weight_ternary: true,
+                residual_bsl: None,
+                pruning: Pruning::Off,
+            },
             100 + bsl as u64,
         );
         let exec = ScExecutor::new(prep.clone());
